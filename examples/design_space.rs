@@ -1,0 +1,88 @@
+//! Design-space exploration: the Fig-20 experiment generalized — sweep
+//! the number of SF-MMCN units across all three models and report
+//! latency / power / efficiency-factor trade-offs, in parallel on the
+//! from-scratch thread pool.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use anyhow::Result;
+
+use sf_mmcn::compiler::analyze_graph;
+use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
+use sf_mmcn::sim::array::AcceleratorConfig;
+use sf_mmcn::sim::energy::CAL_40NM;
+use sf_mmcn::util::pool::ThreadPool;
+
+const REF_PES: f64 = 72.0;
+
+fn main() -> Result<()> {
+    println!("=== SF-MMCN design-space sweep (units x models) ===\n");
+    let models: Vec<(&str, ModelGraph)> = vec![
+        ("vgg16@224", vgg16(224, 1000)),
+        ("resnet18@224", resnet18(224, 1000)),
+        ("unet16", unet(UnetConfig::default())),
+    ];
+    let unit_counts = [1usize, 2, 4, 8, 16, 32];
+
+    // Build the work list: (model name, graph clone, units)
+    let mut work = Vec::new();
+    for (name, g) in &models {
+        for &u in &unit_counts {
+            work.push((name.to_string(), g.clone(), u));
+        }
+    }
+
+    let pool = ThreadPool::new(std::thread::available_parallelism()?.get().min(8));
+    let results = pool.map(work, |(name, g, units)| {
+        let cfg = AcceleratorConfig::with_units(units);
+        let a = analyze_graph(&cfg, &g, 0.45);
+        let rep = CAL_40NM.report(&a.totals, units as u64);
+        // fixed-reference nu (the Fig-20 design-selection metric)
+        let u_ref =
+            a.totals.pe.active_cycles as f64 / (a.totals.cycles as f64 * REF_PES);
+        let nu_ref = rep.core_power_w / u_ref;
+        (name, units, a.total_cycles(), rep, nu_ref)
+    });
+
+    println!(
+        "{:<14} {:>6} {:>13} {:>9} {:>9} {:>8} {:>9} {:>10}",
+        "model", "units", "cycles", "ms@400", "mW", "GOPs", "U_PE", "nu(72ref)"
+    );
+    let mut last_model = String::new();
+    for (name, units, cycles, rep, nu_ref) in &results {
+        if *name != last_model {
+            println!();
+            last_model = name.clone();
+        }
+        println!(
+            "{:<14} {:>6} {:>13} {:>9.2} {:>9.1} {:>8.1} {:>8.1}% {:>10.4}",
+            name,
+            units,
+            cycles,
+            rep.runtime_s * 1e3,
+            rep.core_power_w * 1e3,
+            rep.gops,
+            rep.u_pe * 100.0,
+            nu_ref
+        );
+    }
+
+    // The paper's conclusion: 8 units is the knee.
+    for (name, _g) in &models {
+        let series: Vec<&(String, usize, u64, _, f64)> = results
+            .iter()
+            .filter(|r| &r.0 == name)
+            .collect();
+        let nu8 = series.iter().find(|r| r.1 == 8).unwrap().4;
+        let nu4 = series.iter().find(|r| r.1 == 4).unwrap().4;
+        let nu16 = series.iter().find(|r| r.1 == 16).unwrap().4;
+        assert!(nu8 < nu4, "{name}: 8 units must beat 4 on nu");
+        assert!(
+            (nu4 - nu8) > (nu8 - nu16),
+            "{name}: diminishing returns past 8 units"
+        );
+    }
+    println!("\nknee at 8 units on every model (the paper's shipped config)");
+    println!("design_space OK");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels: the SF-MMCN compute hot-spot.
+
+`sf_conv` implements the server-flow fused conv+branch dataflow; `ref`
+holds the pure-jnp oracles the kernels are validated against (pytest +
+hypothesis in python/tests/).
+"""
+
+from . import pool, ref, sf_conv  # noqa: F401

@@ -1,0 +1,79 @@
+"""Pallas kernels for the peripheral units of Fig 18: the pooling unit
+and the decoder's upsampler.
+
+These are not server-flow layers (no PE_9 branch), but lowering them as
+Pallas kernels keeps the *whole* U-net inside the same VMEM-tiled
+schedule — one grid step per 8-channel tile, matching `sf_conv.py`.
+Validated against `ref.maxpool2` / `ref.upsample2` in
+python/tests/test_pool_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sf_conv import OC_TILE
+
+
+def _maxpool2_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    c, h, w = x.shape
+    o_ref[...] = x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def maxpool2(x):
+    """2x2/2 max pool, CHW, channel-tiled. Channels must tile by 8."""
+    c, h, w = x.shape
+    assert c % OC_TILE == 0, f"channels {c} must tile by {OC_TILE}"
+    assert h % 2 == 0 and w % 2 == 0, "even spatial dims required"
+    return pl.pallas_call(
+        _maxpool2_kernel,
+        grid=(c // OC_TILE,),
+        in_specs=[pl.BlockSpec((OC_TILE, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((OC_TILE, h // 2, w // 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h // 2, w // 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _upsample2_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def upsample2(x):
+    """Nearest-neighbour 2x upsample, CHW, channel-tiled."""
+    c, h, w = x.shape
+    assert c % OC_TILE == 0, f"channels {c} must tile by {OC_TILE}"
+    return pl.pallas_call(
+        _upsample2_kernel,
+        grid=(c // OC_TILE,),
+        in_specs=[pl.BlockSpec((OC_TILE, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((OC_TILE, h * 2, w * 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h * 2, w * 2), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _gap_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = x.mean(axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def global_avg_pool(x):
+    """Global average pool to [C] (ResNet head), channel-tiled."""
+    c, h, w = x.shape
+    assert c % OC_TILE == 0, f"channels {c} must tile by {OC_TILE}"
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(c // OC_TILE,),
+        in_specs=[pl.BlockSpec((OC_TILE, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((OC_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *unfused two-pass* references: main conv as one pass, the
+parallel branch (identity skip / 1x1 residual conv / time bias) as a
+second pass. The SF kernel must match them bit-for-close while doing the
+work in a single fused pass — that is exactly the paper's claim, restated
+numerically.
+
+All tensors are CHW (batch size is 1 throughout, per the paper §III.D).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x, w, b=None, stride=1, pad=1):
+    """Plain 2-D convolution. x: [C,H,W]; w: [O,C,k,k]; b: [O]."""
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        out = out + b[:, None, None]
+    return out
+
+
+def sf_conv_residual(x, w, b, skip):
+    """Conv + identity skip (SF ResidualIdentity mode, Fig 6b)."""
+    return conv2d(x, w, b) + skip
+
+
+def sf_conv_residual_conv(x, w, b, skip, w_res):
+    """Conv + 1x1-conv skip (SF ResidualConv mode, Fig 6c).
+
+    skip: [Cs,H,W]; w_res: [O,Cs] — the 1x1 conv PE_9 computes.
+    """
+    res = jnp.einsum("oc,chw->ohw", w_res, skip)
+    return conv2d(x, w, b) + res
+
+
+def sf_conv_time(x, w, b, t_emb, w_time):
+    """Conv + time-parameter dense bias (SF DenseTime mode, Figs 14-16).
+
+    t_emb: [T]; w_time: [O,T]; the dense output biases each channel.
+    """
+    tb = w_time @ t_emb
+    return conv2d(x, w, b) + tb[:, None, None]
+
+
+def dense(x, w, b):
+    """Dense layer. x: [I]; w: [O,I]; b: [O]."""
+    return w @ x + b
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x):
+    """2x2/2 max pool, CHW."""
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+
+
+def upsample2(x):
+    """Nearest-neighbour 2x upsample, CHW."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)

@@ -1,0 +1,200 @@
+"""The SF-MMCN Pallas kernel: server-flow fused convolution.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's insight
+is that the parallel branch of a residual/U-net block costs *zero extra
+passes* because PE_9 serves it inside the main convolution's schedule. On
+a TPU-shaped machine the analogue is **fusion inside one VMEM-resident
+grid step**: each grid step brings one 8-output-channel tile of weights
+(the "8 worker PEs") plus the input tile and the branch tile into VMEM,
+and computes
+
+    out_tile = conv3x3(x, w_tile) + branch_tile          (identity skip)
+    out_tile = conv3x3(x, w_tile) + w_res_tile @ skip    (1x1 residual conv)
+    out_tile = conv3x3(x, w_tile) + w_time_tile @ t_emb  (time dense)
+
+in a single pass — one HBM->VMEM round-trip instead of two kernels.
+The 3x3 conv itself is expressed as 9 shifted (8xC)@(CxHW) matmuls, which
+is the MXU-systolic-array shape (the analogue of the paper's "8 PEs
+deliver 8 outputs at once"); the Q8.8 datapath of the silicon maps to
+bf16/f32 MXU accumulation here.
+
+Kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (vs `ref.py`) is what is being
+reproduced. The BlockSpec structure is still the TPU schedule; DESIGN.md
+§Perf estimates its VMEM footprint and MXU utilization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-channel tile: one "SF-MMCN unit group" of 8 worker lanes.
+OC_TILE = 8
+
+
+def _conv3x3_tile(x_pad, w_tile, h, wd):
+    """3x3 conv of a padded CHW input against an [8,C,3,3] weight tile,
+    as 9 MXU matmuls: for each tap (ky,kx), (8xC) @ (CxH*W)."""
+    acc = jnp.zeros((OC_TILE, h * wd), dtype=jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = jax.lax.dynamic_slice(
+                x_pad, (0, ky, kx), (x_pad.shape[0], h, wd)
+            ).reshape(x_pad.shape[0], h * wd)
+            acc = acc + jnp.dot(
+                w_tile[:, :, ky, kx], patch, preferred_element_type=jnp.float32
+            )
+    return acc.reshape(OC_TILE, h, wd)
+
+
+def _sf_kernel_identity(x_ref, w_ref, b_ref, skip_ref, o_ref):
+    """Fused conv3x3 + identity skip (SF ResidualIdentity)."""
+    x = x_ref[...]
+    c, hp, wp = x.shape
+    h, wd = hp - 2, wp - 2
+    out = _conv3x3_tile(x, w_ref[...], h, wd)
+    o_ref[...] = out + b_ref[...][:, None, None] + skip_ref[...]
+
+
+def _sf_kernel_resconv(x_ref, w_ref, b_ref, skip_ref, wres_ref, o_ref):
+    """Fused conv3x3 + 1x1-conv skip (SF ResidualConv): PE_9's matmul."""
+    x = x_ref[...]
+    c, hp, wp = x.shape
+    h, wd = hp - 2, wp - 2
+    out = _conv3x3_tile(x, w_ref[...], h, wd)
+    skip = skip_ref[...]
+    res = jnp.dot(
+        wres_ref[...],
+        skip.reshape(skip.shape[0], h * wd),
+        preferred_element_type=jnp.float32,
+    ).reshape(OC_TILE, h, wd)
+    o_ref[...] = out + b_ref[...][:, None, None] + res
+
+
+def _sf_kernel_time(x_ref, w_ref, b_ref, temb_ref, wtime_ref, o_ref):
+    """Fused conv3x3 + time-parameter dense bias (SF DenseTime)."""
+    x = x_ref[...]
+    c, hp, wp = x.shape
+    h, wd = hp - 2, wp - 2
+    out = _conv3x3_tile(x, w_ref[...], h, wd)
+    tb = jnp.dot(wtime_ref[...], temb_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = out + (b_ref[...] + tb)[:, None, None]
+
+
+def _pad_hw(x):
+    return jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+
+
+def _check(x, w, b):
+    c, h, wd = x.shape
+    o = w.shape[0]
+    assert w.shape == (o, c, 3, 3), f"weights {w.shape} not [O,{c},3,3]"
+    assert b.shape == (o,), f"bias {b.shape}"
+    assert o % OC_TILE == 0, f"output channels {o} must tile by {OC_TILE}"
+    return c, h, wd, o
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sf_conv3x3(x, w, b, skip):
+    """conv3x3(x, w) + b + skip, fused. x: [C,H,W]; w: [O,C,3,3];
+    skip: [O,H,W]. Grid over output-channel tiles of 8."""
+    c, h, wd, o = _check(x, w, b)
+    assert skip.shape == (o, h, wd), f"skip {skip.shape}"
+    x_pad = _pad_hw(x)
+    grid = (o // OC_TILE,)
+    return pl.pallas_call(
+        _sf_kernel_identity,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, h + 2, wd + 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((OC_TILE, c, 3, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((OC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((OC_TILE, h, wd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((OC_TILE, h, wd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, h, wd), jnp.float32),
+        interpret=True,
+    )(x_pad, w, b, skip)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sf_conv3x3_resconv(x, w, b, skip, w_res):
+    """conv3x3(x, w) + b + (w_res @ skip), fused. skip: [Cs,H,W];
+    w_res: [O,Cs] — PE_9's 1x1 residual conv."""
+    c, h, wd, o = _check(x, w, b)
+    cs = skip.shape[0]
+    assert skip.shape == (cs, h, wd)
+    assert w_res.shape == (o, cs)
+    x_pad = _pad_hw(x)
+    grid = (o // OC_TILE,)
+    return pl.pallas_call(
+        _sf_kernel_resconv,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, h + 2, wd + 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((OC_TILE, c, 3, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((OC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((cs, h, wd), lambda i: (0, 0, 0)),
+            pl.BlockSpec((OC_TILE, cs), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((OC_TILE, h, wd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, h, wd), jnp.float32),
+        interpret=True,
+    )(x_pad, w, b, skip, w_res)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sf_conv3x3_time(x, w, b, t_emb, w_time):
+    """conv3x3(x, w) + b + (w_time @ t_emb) per-channel bias, fused.
+    t_emb: [T]; w_time: [O,T] — PE_9's time-parameter dense."""
+    c, h, wd, o = _check(x, w, b)
+    t = t_emb.shape[0]
+    assert w_time.shape == (o, t)
+    x_pad = _pad_hw(x)
+    grid = (o // OC_TILE,)
+    return pl.pallas_call(
+        _sf_kernel_time,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, h + 2, wd + 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((OC_TILE, c, 3, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((OC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((OC_TILE, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((OC_TILE, h, wd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, h, wd), jnp.float32),
+        interpret=True,
+    )(x_pad, w, b, t_emb, w_time)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sf_conv3x3_plain(x, w, b):
+    """Series-mode conv (PE_9 idle): conv3x3 + b, same tiling."""
+    c, h, wd, o = _check(x, w, b)
+    zero_skip = jnp.zeros((o, h, wd), dtype=jnp.float32)
+    return sf_conv3x3(x, w, b, zero_skip)
+
+
+def vmem_footprint_bytes(c, h, w, cs=0, t=0, dtype_bytes=4):
+    """Static VMEM estimate for one grid step (DESIGN.md §Perf):
+    input tile + weight tile + branch tile + output tile."""
+    x_tile = c * (h + 2) * (w + 2)
+    w_tile = OC_TILE * c * 9
+    branch = max(cs, OC_TILE) * h * w if cs else OC_TILE * h * w
+    time = OC_TILE * t + t
+    out = OC_TILE * h * w
+    return (x_tile + w_tile + branch + time + out) * dtype_bytes
+
+
+def mxu_utilization_estimate(c, h, w):
+    """Fraction of MXU 128x128 lanes engaged by the (8xC)@(Cx(H*W))
+    matmuls — the structural efficiency measure we report in lieu of
+    silicon timings (interpret=True timing is meaningless)."""
+    m, k, n = OC_TILE, c, h * w
+    eff_m = min(m, 128) / 128.0
+    eff_k = min(k, 128) / 128.0
+    eff_n = min(n, 128) / 128.0
+    return eff_m * eff_k * eff_n

@@ -1,0 +1,263 @@
+"""L2: the diffusion U-net and SF blocks in JAX, calling the L1 kernels.
+
+The graph structure mirrors `rust/src/models/unet.rs` node for node: every
+U-net block is conv1 (+time dense on "PE_9") then conv2 (+block skip) —
+the two SF parallel modes. Parameters are created deterministically and
+exported in a canonical flat order so the rust runtime can stream them
+from `artifacts/unet_params.bin` (see aot.py).
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text once; the rust coordinator never imports python.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pool, ref, sf_conv
+
+
+@dataclass(frozen=True)
+class UnetCfg:
+    """Mirror of rust `UnetConfig` (keep in sync)."""
+
+    img_channels: int = 1
+    img: int = 16
+    base_c: int = 16
+    levels: int = 2
+    time_dim: int = 32
+
+
+def time_embedding(t, dim):
+    """Sinusoidal time embedding for scalar timestep `t` (float)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = t * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, o, c, k=3):
+    wkey, bkey = jax.random.split(key)
+    scale = (2.0 / (c * k * k)) ** 0.5
+    return (
+        jax.random.normal(wkey, (o, c, k, k)) * scale,
+        jax.random.normal(bkey, (o,)) * 0.01,
+    )
+
+
+def _block_param_names(tag, c_in, c_out):
+    names = [f"{tag}.w1", f"{tag}.b1", f"{tag}.wt", f"{tag}.w2", f"{tag}.b2"]
+    if c_in != c_out:
+        names.append(f"{tag}.wres")
+    return names
+
+
+def init_params(cfg: UnetCfg, seed: int = 0):
+    """Deterministic parameter dict, keyed by canonical names."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def nk():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def block(tag, c_in, c_out):
+        w1, b1 = _conv_init(nk(), c_out, c_in)
+        params[f"{tag}.w1"] = w1
+        params[f"{tag}.b1"] = b1
+        params[f"{tag}.wt"] = (
+            jax.random.normal(nk(), (c_out, cfg.time_dim))
+            * (2.0 / cfg.time_dim) ** 0.5
+        )
+        w2, b2 = _conv_init(nk(), c_out, c_out)
+        params[f"{tag}.w2"] = w2
+        params[f"{tag}.b2"] = b2
+        if c_in != c_out:
+            params[f"{tag}.wres"] = (
+                jax.random.normal(nk(), (c_out, c_in)) * (2.0 / c_in) ** 0.5
+            )
+
+    w, b = _conv_init(nk(), cfg.base_c, cfg.img_channels)
+    params["stem.w"], params["stem.b"] = w, b
+
+    c = cfg.base_c
+    for lvl in range(cfg.levels):
+        c_out = cfg.base_c << lvl
+        block(f"enc{lvl}", c, c_out)
+        c = c_out
+    block("mid", c, cfg.base_c << cfg.levels)
+    c = cfg.base_c << cfg.levels
+    for lvl in reversed(range(cfg.levels)):
+        c_skip = cfg.base_c << lvl
+        block(f"dec{lvl}", c + c_skip, c_skip)
+        c = c_skip
+    w, b = _conv_init(nk(), cfg.img_channels, c)
+    params["head.w"], params["head.b"] = w, b
+    return params
+
+
+def param_order(cfg: UnetCfg):
+    """Canonical flat ordering of parameter names (the rust side indexes
+    artifact inputs by this order)."""
+    names = ["stem.w", "stem.b"]
+    c = cfg.base_c
+    for lvl in range(cfg.levels):
+        c_out = cfg.base_c << lvl
+        names += _block_param_names(f"enc{lvl}", c, c_out)
+        c = c_out
+    names += _block_param_names("mid", c, cfg.base_c << cfg.levels)
+    c = cfg.base_c << cfg.levels
+    for lvl in reversed(range(cfg.levels)):
+        c_skip = cfg.base_c << lvl
+        names += _block_param_names(f"dec{lvl}", c + c_skip, c_skip)
+        c = c_skip
+    names += ["head.w", "head.b"]
+    return names
+
+
+def flatten_params(params, cfg: UnetCfg):
+    return [params[n] for n in param_order(cfg)]
+
+
+def unflatten_params(flat, cfg: UnetCfg):
+    return dict(zip(param_order(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _use_kernel(c_out):
+    return c_out % sf_conv.OC_TILE == 0
+
+
+def _block_apply(params, tag, x, t_emb, c_in, c_out):
+    """One U-net block via the two SF kernel modes."""
+    w1, b1 = params[f"{tag}.w1"], params[f"{tag}.b1"]
+    wt = params[f"{tag}.wt"]
+    h = sf_conv.sf_conv3x3_time(x, w1, b1, t_emb, wt)
+    h = ref.silu(h)
+    w2, b2 = params[f"{tag}.w2"], params[f"{tag}.b2"]
+    if c_in == c_out:
+        return sf_conv.sf_conv3x3(h, w2, b2, x)
+    return sf_conv.sf_conv3x3_resconv(h, w2, b2, x, params[f"{tag}.wres"])
+
+
+def unet_apply(params, x, t_emb, cfg: UnetCfg):
+    """Noise prediction eps_theta(x, t). x: [C,H,W]; t_emb: [time_dim]."""
+    # Stem and head have non-tileable channel counts (img_channels=1), so
+    # they lower as plain XLA convs — they are series layers, not SF ones.
+    h = ref.silu(ref.conv2d(x, params["stem.w"], params["stem.b"]))
+
+    skips = []
+    c = cfg.base_c
+    for lvl in range(cfg.levels):
+        c_out = cfg.base_c << lvl
+        h = _block_apply(params, f"enc{lvl}", h, t_emb, c, c_out)
+        skips.append(h)
+        # pooling unit as a channel-tiled pallas kernel (kernels/pool.py)
+        h = pool.maxpool2(h) if c_out % 8 == 0 else ref.maxpool2(h)
+        c = c_out
+
+    h = _block_apply(params, "mid", h, t_emb, c, cfg.base_c << cfg.levels)
+    c = cfg.base_c << cfg.levels
+
+    for lvl in reversed(range(cfg.levels)):
+        h = pool.upsample2(h) if c % 8 == 0 else ref.upsample2(h)
+        h = jnp.concatenate([h, skips[lvl]], axis=0)
+        c_skip = cfg.base_c << lvl
+        h = _block_apply(params, f"dec{lvl}", h, t_emb, c + c_skip, c_skip)
+        c = c_skip
+
+    return ref.conv2d(h, params["head.w"], params["head.b"])
+
+
+def denoise_step(params, x_t, t_emb, c1, c2, sigma, noise, cfg: UnetCfg):
+    """One DDPM reverse step with coefficients supplied by the caller
+    (the rust coordinator owns the beta schedule):
+
+        x_{t-1} = c1 * (x_t - c2 * eps_theta(x_t, t)) + sigma * noise
+    """
+    eps = unet_apply(params, x_t, t_emb, cfg)
+    return c1 * (x_t - c2 * eps) + sigma * noise
+
+
+def denoise_scan(params, x_t, t_embs, coeffs, noises, cfg: UnetCfg):
+    """The whole reverse process fused into one executable (§Perf, L2):
+    `lax.scan` over T steps keeps x device-resident and removes the
+    per-step dispatch overhead of the step-at-a-time artifact.
+
+    t_embs: [T, time_dim]; coeffs: [T, 3] (c1, c2, sigma); noises:
+    [T, C, H, W] — all precomputed by the rust coordinator, ordered from
+    t = T-1 down to t = 0.
+    """
+    import jax
+
+    def step(x, inp):
+        t_emb, coeff, noise = inp
+        eps = unet_apply(params, x, t_emb, cfg)
+        x2 = coeff[0] * (x - coeff[1] * eps) + coeff[2] * noise
+        return x2, ()
+
+    x0, _ = jax.lax.scan(step, x_t, (t_embs, coeffs, noises))
+    return x0
+
+
+# ---------------------------------------------------------------------------
+# Reference implementation of the whole net (no pallas) for testing
+# ---------------------------------------------------------------------------
+
+def unet_apply_ref(params, x, t_emb, cfg: UnetCfg):
+    """Oracle: same network with two-pass ref ops everywhere."""
+
+    def block(tag, x, c_in, c_out):
+        h = ref.sf_conv_time(
+            x, params[f"{tag}.w1"], params[f"{tag}.b1"], t_emb, params[f"{tag}.wt"]
+        )
+        h = ref.silu(h)
+        if c_in == c_out:
+            return ref.sf_conv_residual(h, params[f"{tag}.w2"], params[f"{tag}.b2"], x)
+        return ref.sf_conv_residual_conv(
+            h, params[f"{tag}.w2"], params[f"{tag}.b2"], x, params[f"{tag}.wres"]
+        )
+
+    h = ref.silu(ref.conv2d(x, params["stem.w"], params["stem.b"]))
+    skips = []
+    c = cfg.base_c
+    for lvl in range(cfg.levels):
+        c_out = cfg.base_c << lvl
+        h = block(f"enc{lvl}", h, c, c_out)
+        skips.append(h)
+        h = ref.maxpool2(h)
+        c = c_out
+    h = block("mid", h, c, cfg.base_c << cfg.levels)
+    c = cfg.base_c << cfg.levels
+    for lvl in reversed(range(cfg.levels)):
+        h = ref.upsample2(h)
+        h = jnp.concatenate([h, skips[lvl]], axis=0)
+        c_skip = cfg.base_c << lvl
+        h = block(f"dec{lvl}", h, c + c_skip, c_skip)
+        c = c_skip
+    return ref.conv2d(h, params["head.w"], params["head.b"])
+
+
+# ---------------------------------------------------------------------------
+# Standalone SF blocks (quickstart / resnet-style artifacts)
+# ---------------------------------------------------------------------------
+
+def sf_block(x, w, b, skip):
+    """A single fused SF conv+skip block (the quickstart artifact)."""
+    return sf_conv.sf_conv3x3(x, w, b, skip)
+
+
+def resnet_block(x, w1, b1, w2, b2):
+    """A ResNet basic block: relu(conv2(relu(conv1(x))) + x), with the
+    skip fused into conv2 via the SF kernel."""
+    h = ref.relu(sf_conv.sf_conv3x3_plain(x, w1, b1))
+    return ref.relu(sf_conv.sf_conv3x3(h, w2, b2, x))

@@ -1,0 +1,102 @@
+"""Build-time DDPM training of the small U-net on synthetic data.
+
+The serving demo needs a *meaningful* de-noiser: an untrained eps-net
+feeds back through the reverse process and diverges. We train for a few
+hundred Adam steps on a synthetic 2-D Gaussian-blob dataset (the kind of
+tiny corpus the de-noise figures in diffusion papers start from), log the
+loss curve, and bake the trained weights into `unet_params.bin`.
+
+Training differentiates through `unet_apply_ref` (pure jnp — pallas
+interpret kernels do not define a VJP); the pallas net is numerically
+identical to it (pytest: test_kernel_net_matches_ref_net), so the weights
+transfer exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .model import UnetCfg
+
+
+def synth_batch(key, n, img):
+    """Synthetic images: 1-3 Gaussian blobs on a [-1, 1] canvas."""
+    keys = jax.random.split(key, 4)
+    yy, xx = jnp.mgrid[0:img, 0:img]
+    centers = jax.random.uniform(keys[0], (n, 3, 2), minval=2.0, maxval=img - 2.0)
+    widths = jax.random.uniform(keys[1], (n, 3), minval=1.0, maxval=3.0)
+    amps = jax.random.uniform(keys[2], (n, 3), minval=0.5, maxval=1.0)
+    alive = jax.random.bernoulli(keys[3], 0.7, (n, 3)).astype(jnp.float32)
+    d2 = (
+        (yy[None, None] - centers[..., 0, None, None]) ** 2
+        + (xx[None, None] - centers[..., 1, None, None]) ** 2
+    )
+    blobs = (amps * alive)[..., None, None] * jnp.exp(
+        -d2 / (2.0 * widths[..., None, None] ** 2)
+    )
+    imgs = blobs.sum(axis=1)
+    return (imgs * 2.0 - 1.0).clip(-1.0, 1.0)[:, None]  # [n,1,H,W]
+
+
+def ddpm_schedule(t_max, beta_lo=1e-4, beta_hi=0.02):
+    """Must match rust `DdpmSchedule::linear` exactly."""
+    if t_max == 1:
+        betas = jnp.array([beta_lo])
+    else:
+        betas = beta_lo + (beta_hi - beta_lo) * jnp.arange(t_max) / (t_max - 1)
+    alphas = 1.0 - betas
+    alpha_bars = jnp.cumprod(alphas)
+    return betas, alphas, alpha_bars
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_unet(cfg: UnetCfg, t_max=50, steps=300, batch=8, seed=0, lr=2e-3):
+    """Train; returns (params, loss_history)."""
+    params = model.init_params(cfg, seed=seed)
+    _, _, alpha_bars = ddpm_schedule(t_max)
+
+    def loss_fn(p, x0, t, noise):
+        ab = alpha_bars[t]
+        x_t = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * noise
+        t_emb = model.time_embedding(t.astype(jnp.float32), cfg.time_dim)
+        eps_hat = model.unet_apply_ref(p, x_t, t_emb, cfg)
+        return jnp.mean((eps_hat - noise) ** 2)
+
+    def batch_loss(p, x0s, ts, noises):
+        losses = jax.vmap(lambda x0, t, n: loss_fn(p, x0, t, n))(x0s, ts, noises)
+        return losses.mean()
+
+    @jax.jit
+    def train_step(p, opt, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        x0s = synth_batch(k1, batch, cfg.img)
+        ts = jax.random.randint(k2, (batch,), 0, t_max)
+        noises = jax.random.normal(k3, (batch, cfg.img_channels, cfg.img, cfg.img))
+        l, grads = jax.value_and_grad(batch_loss)(p, x0s, ts, noises)
+        p2, opt2 = adam_step(p, grads, opt, lr=lr)
+        return p2, opt2, l
+
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed + 1234)
+    losses = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, l = train_step(params, opt, sub)
+        losses.append(float(l))
+        if i % 50 == 0 or i == steps - 1:
+            print(f"train step {i:4d}  loss {float(l):.4f}")
+    return params, losses

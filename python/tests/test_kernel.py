@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas SF kernels vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: the fused
+single-pass kernel must match the unfused two-pass reference. Hypothesis
+sweeps shapes; fixed cases pin the exact modes the paper draws in Fig 6.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sf_conv
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestIdentityMode:
+    """SF ResidualIdentity (Fig 6b): conv + served skip."""
+
+    def test_basic(self):
+        x = rnd(0, (4, 8, 8))
+        w = rnd(1, (8, 4, 3, 3), 0.2)
+        b = jnp.arange(8.0) * 0.1
+        skip = rnd(2, (8, 8, 8))
+        got = sf_conv.sf_conv3x3(x, w, b, skip)
+        want = ref.sf_conv_residual(x, w, b, skip)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_zero_skip_equals_plain_conv(self):
+        x = rnd(3, (4, 8, 8))
+        w = rnd(4, (8, 4, 3, 3), 0.2)
+        b = rnd(5, (8,), 0.1)
+        got = sf_conv.sf_conv3x3_plain(x, w, b)
+        want = ref.conv2d(x, w, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        c=st.integers(1, 12),
+        hw=st.integers(3, 14),
+        octiles=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, c, hw, octiles, seed):
+        o = octiles * sf_conv.OC_TILE
+        x = rnd(seed, (c, hw, hw))
+        w = rnd(seed + 1, (o, c, 3, 3), 0.2)
+        b = rnd(seed + 2, (o,), 0.1)
+        skip = rnd(seed + 3, (o, hw, hw))
+        got = sf_conv.sf_conv3x3(x, w, b, skip)
+        want = ref.sf_conv_residual(x, w, b, skip)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_rejects_untiled_channels(self):
+        x = rnd(0, (4, 8, 8))
+        w = rnd(1, (7, 4, 3, 3))
+        b = jnp.zeros(7)
+        skip = rnd(2, (7, 8, 8))
+        with pytest.raises(AssertionError):
+            sf_conv.sf_conv3x3(x, w, b, skip)
+
+
+class TestResidualConvMode:
+    """SF ResidualConv (Fig 6c): PE_9's 1x1 conv on the skip branch."""
+
+    def test_basic(self):
+        x = rnd(0, (4, 8, 8))
+        w = rnd(1, (8, 4, 3, 3), 0.2)
+        b = rnd(2, (8,), 0.1)
+        skip = rnd(3, (6, 8, 8))
+        w_res = rnd(4, (8, 6), 0.3)
+        got = sf_conv.sf_conv3x3_resconv(x, w, b, skip, w_res)
+        want = ref.sf_conv_residual_conv(x, w, b, skip, w_res)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        c=st.integers(1, 10),
+        cs=st.integers(1, 10),
+        hw=st.integers(3, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, c, cs, hw, seed):
+        o = sf_conv.OC_TILE
+        x = rnd(seed, (c, hw, hw))
+        w = rnd(seed + 1, (o, c, 3, 3), 0.2)
+        b = rnd(seed + 2, (o,), 0.1)
+        skip = rnd(seed + 3, (cs, hw, hw))
+        w_res = rnd(seed + 4, (o, cs), 0.3)
+        got = sf_conv.sf_conv3x3_resconv(x, w, b, skip, w_res)
+        want = ref.sf_conv_residual_conv(x, w, b, skip, w_res)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_1x1_matches_einsum(self):
+        # the branch alone: zero main weights isolate PE_9's contribution
+        x = jnp.zeros((4, 6, 6))
+        w = jnp.zeros((8, 4, 3, 3))
+        b = jnp.zeros(8)
+        skip = rnd(7, (5, 6, 6))
+        w_res = rnd(8, (8, 5))
+        got = sf_conv.sf_conv3x3_resconv(x, w, b, skip, w_res)
+        want = jnp.einsum("oc,chw->ohw", w_res, skip)
+        np.testing.assert_allclose(got, want, **TOL)
+
+
+class TestTimeDenseMode:
+    """SF DenseTime (Figs 14-16): PE_9's time-parameter dense."""
+
+    def test_basic(self):
+        x = rnd(0, (4, 8, 8))
+        w = rnd(1, (8, 4, 3, 3), 0.2)
+        b = rnd(2, (8,), 0.1)
+        t_emb = rnd(3, (16,))
+        w_time = rnd(4, (8, 16), 0.2)
+        got = sf_conv.sf_conv3x3_time(x, w, b, t_emb, w_time)
+        want = ref.sf_conv_time(x, w, b, t_emb, w_time)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        c=st.integers(1, 8),
+        t=st.integers(1, 48),
+        hw=st.integers(3, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, c, t, hw, seed):
+        o = sf_conv.OC_TILE
+        x = rnd(seed, (c, hw, hw))
+        w = rnd(seed + 1, (o, c, 3, 3), 0.2)
+        b = rnd(seed + 2, (o,), 0.1)
+        t_emb = rnd(seed + 3, (t,))
+        w_time = rnd(seed + 4, (o, t), 0.2)
+        got = sf_conv.sf_conv3x3_time(x, w, b, t_emb, w_time)
+        want = ref.sf_conv_time(x, w, b, t_emb, w_time)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_time_bias_is_per_channel_constant(self):
+        x = rnd(0, (2, 6, 6))
+        w = rnd(1, (8, 2, 3, 3), 0.2)
+        b = jnp.zeros(8)
+        t_emb = rnd(2, (4,))
+        w_time = rnd(3, (8, 4))
+        with_t = sf_conv.sf_conv3x3_time(x, w, b, t_emb, w_time)
+        without = sf_conv.sf_conv3x3_plain(x, w, b)
+        diff = with_t - without
+        # spatially constant per channel
+        per_ch = diff.reshape(8, -1)
+        np.testing.assert_allclose(
+            per_ch, per_ch[:, :1] * jnp.ones_like(per_ch), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestStructuralEstimates:
+    def test_vmem_footprint_monotone_in_channels(self):
+        a = sf_conv.vmem_footprint_bytes(8, 16, 16)
+        b = sf_conv.vmem_footprint_bytes(64, 16, 16)
+        assert b > a
+
+    def test_vmem_fits_16mb_for_paper_shapes(self):
+        # U-net 16x16 tiles must fit a TPU core's ~16 MiB VMEM easily
+        assert sf_conv.vmem_footprint_bytes(64, 16, 16) < 16 * 2**20
+
+    def test_mxu_estimate_bounds(self):
+        for c, h, w in [(1, 4, 4), (64, 16, 16), (128, 32, 32), (256, 64, 64)]:
+            u = sf_conv.mxu_utilization_estimate(c, h, w)
+            assert 0.0 < u <= 1.0
+
+    def test_mxu_improves_with_spatial_size(self):
+        assert sf_conv.mxu_utilization_estimate(64, 16, 16) > sf_conv.mxu_utilization_estimate(
+            64, 4, 4
+        )

@@ -1,0 +1,61 @@
+"""Peripheral-unit Pallas kernels vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pool, ref
+
+
+def rnd(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestMaxPool:
+    def test_basic(self):
+        x = rnd(0, (8, 8, 8))
+        np.testing.assert_allclose(pool.maxpool2(x), ref.maxpool2(x), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        ct=st.integers(1, 4),
+        hw=st.sampled_from([2, 4, 6, 10, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, ct, hw, seed):
+        x = rnd(seed, (8 * ct, hw, hw))
+        got = pool.maxpool2(x)
+        assert got.shape == (8 * ct, hw // 2, hw // 2)
+        np.testing.assert_allclose(got, ref.maxpool2(x), rtol=1e-6)
+
+    def test_picks_maxima(self):
+        x = jnp.zeros((8, 4, 4)).at[:, 1, 1].set(9.0)
+        out = pool.maxpool2(x)
+        assert float(out[0, 0, 0]) == 9.0
+
+
+class TestUpsample:
+    def test_basic(self):
+        x = rnd(1, (8, 4, 4))
+        np.testing.assert_allclose(pool.upsample2(x), ref.upsample2(x), rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(hw=st.sampled_from([1, 2, 5, 8]), seed=st.integers(0, 2**16))
+    def test_shape_sweep(self, hw, seed):
+        x = rnd(seed, (8, hw, hw))
+        got = pool.upsample2(x)
+        assert got.shape == (8, hw * 2, hw * 2)
+        np.testing.assert_allclose(got, ref.upsample2(x), rtol=1e-6)
+
+    def test_pool_inverts_upsample(self):
+        x = rnd(2, (8, 4, 4))
+        np.testing.assert_allclose(pool.maxpool2(pool.upsample2(x)), x, rtol=1e-6)
+
+
+class TestGap:
+    def test_matches_mean(self):
+        x = rnd(3, (16, 7, 7))
+        got = pool.global_avg_pool(x)
+        want = x.mean(axis=(1, 2))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

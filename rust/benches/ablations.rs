@@ -1,0 +1,24 @@
+//! Bench: design-choice ablations (zero gating, reuse registers, server
+//! flow, buffer sizing) — the knobs DESIGN.md calls out.
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use sf_mmcn::report::{ablation_suite, fig19};
+use sf_mmcn::util::bench::Bencher;
+
+fn main() {
+    println!("==================== ABLATIONS ====================\n");
+    let (text, rows) = ablation_suite();
+    println!("{text}");
+    assert!(rows.len() >= 9);
+
+    // Fig 19 rides along here (it is a dataflow illustration, not a sweep)
+    let (text, (trad, sf)) = fig19();
+    println!("{text}");
+    assert!(sf < trad, "SF schedule must be shorter");
+
+    println!("--- harness timings ---");
+    let b = Bencher::quick();
+    b.report("ablation_suite()", ablation_suite);
+    println!("\nablations bench OK");
+}

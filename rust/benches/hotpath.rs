@@ -1,0 +1,179 @@
+//! Bench: hot paths of the three layers, for the §Perf optimization pass.
+//!
+//! * L3 simulator: micro-sim conv groups / full small nets (events/sec).
+//! * L3 analytic: full-model analysis throughput (the bench workhorse).
+//! * L3 runtime: PJRT execute latency for the SF block and the full U-net
+//!   denoise step (the serving hot path), when artifacts are present.
+//!
+//! Run: `cargo bench --bench hotpath`. Before/after numbers are recorded
+//! in EXPERIMENTS.md §Perf.
+
+use sf_mmcn::compiler::analyze_graph;
+use sf_mmcn::coordinator::ddpm::time_embedding;
+use sf_mmcn::coordinator::UnetParams;
+use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, Residual, TensorShape};
+use sf_mmcn::models::{resnet18, unet, vgg16, UnetConfig};
+use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
+use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
+use sf_mmcn::sim::unit::{ConvGroup, ServerTask, SfMmcnUnit};
+use sf_mmcn::quant::Fixed;
+use sf_mmcn::util::bench::{fmt_rate, Bencher};
+use sf_mmcn::util::{Rng, Tensor};
+
+fn bench_unit_group(b: &Bencher) {
+    let w: Vec<Fixed> = (0..9).map(|i| Fixed::from_f32(0.1 * i as f32)).collect();
+    let wins: Vec<Vec<Fixed>> = (0..8)
+        .map(|i| (0..9).map(|j| Fixed::from_f32((i + j) as f32 * 0.05)).collect())
+        .collect();
+    let mut unit = SfMmcnUnit::new();
+    let r = b.report("unit::run_group 3x3 series (72 MACs)", || {
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 42,
+        };
+        unit.run_group(&g)
+    });
+    println!(
+        "  -> simulated MAC rate: {}",
+        fmt_rate(72.0 / (r.mean_ns / 1e9))
+    );
+}
+
+fn bench_micro_sim(b: &Bencher) {
+    let mut bld = GraphBuilder::new("bench", TensorShape::new(16, 32, 32));
+    bld.add(Layer::Conv {
+        c_in: 16,
+        c_out: 16,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::Relu,
+        residual: Residual::None,
+        time_dense: None,
+    })
+    .unwrap();
+    bld.add(Layer::Conv {
+        c_in: 16,
+        c_out: 16,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::None,
+        residual: Residual::Identity { from: 0 },
+        time_dense: None,
+    })
+    .unwrap();
+    let g = bld.build();
+    let ws = WeightStore::random(&g, 1);
+    let mut rng = Rng::new(2);
+    let x = Tensor::from_fn(&[16, 32, 32], |_| rng.normal() * 0.4);
+    let macs = g.total_macs();
+    let r = b.report("micro-sim residual pair 16ch@32 (9.4 M MACs)", || {
+        let mut acc = Accelerator::new(AcceleratorConfig::default());
+        acc.run_graph(&g, &x, &ws, None).unwrap()
+    });
+    println!(
+        "  -> simulated MAC rate: {}",
+        fmt_rate(macs as f64 / (r.mean_ns / 1e9))
+    );
+}
+
+fn bench_analytic(b: &Bencher) {
+    let vgg = vgg16(224, 1000);
+    let rn = resnet18(224, 1000);
+    let un = unet(UnetConfig::default());
+    let cfg = AcceleratorConfig::default();
+    b.report("analyze_graph vgg16@224", || analyze_graph(&cfg, &vgg, 0.45));
+    b.report("analyze_graph resnet18@224", || analyze_graph(&cfg, &rn, 0.45));
+    b.report("analyze_graph unet16", || analyze_graph(&cfg, &un, 0.45));
+}
+
+fn bench_runtime(b: &Bencher) {
+    let store = ArtifactStore::default_store();
+    let Ok(spec) = store.resolve("sf_block_16") else {
+        println!("(artifacts missing — skipping PJRT hot-path benches; run `make artifacts`)");
+        return;
+    };
+    let mut exe = Executor::new().expect("pjrt client");
+    exe.load_hlo_text("sf_block", &spec.path).expect("compile");
+    let x = TensorBuf::new(vec![8, 16, 16], vec![0.3; 2048]).unwrap();
+    let w = TensorBuf::new(vec![8, 8, 3, 3], vec![0.1; 576]).unwrap();
+    let bias = TensorBuf::new(vec![8], vec![0.0; 8]).unwrap();
+    let skip = TensorBuf::new(vec![8, 16, 16], vec![0.5; 2048]).unwrap();
+    b.report("pjrt execute sf_block_16", || {
+        exe.run("sf_block", &[x.clone(), w.clone(), bias.clone(), skip.clone()])
+            .unwrap()
+    });
+
+    if let Ok(spec) = store.resolve("unet_denoise_16") {
+        let params = UnetParams::load(store.root(), "unet_params").expect("params");
+        exe.load_hlo_text("denoise", &spec.path).expect("compile denoise");
+        let img = TensorBuf::new(vec![1, 16, 16], vec![0.1; 256]).unwrap();
+        let emb = TensorBuf::new(vec![32], time_embedding(5.0, 32)).unwrap();
+        let noise = TensorBuf::zeros(&[1, 16, 16]);
+        let mut inputs = vec![
+            img,
+            emb,
+            TensorBuf::scalar(1.01),
+            TensorBuf::scalar(0.05),
+            TensorBuf::scalar(0.1),
+            noise,
+        ];
+        inputs.extend(params.tensors.iter().cloned());
+        let r = b.report("pjrt execute unet_denoise_16 (naive: convert all 39)", || {
+            exe.run("denoise", &inputs).unwrap()
+        });
+        // §Perf variant: params pre-converted once, 6 dynamic tensors/step
+        let prepared = exe.prepare(&params.tensors).unwrap();
+        let dynamic = inputs[..6].to_vec();
+        let r2 = b.report("pjrt execute unet_denoise_16 (prepared params)", || {
+            exe.run_prepared("denoise", &dynamic, &prepared).unwrap()
+        });
+        println!(
+            "  -> serving ceiling: naive {:.1} -> prepared {:.1} steps/s/worker ({:+.1}%)",
+            1e9 / r.mean_ns,
+            1e9 / r2.mean_ns,
+            100.0 * (r.mean_ns / r2.mean_ns - 1.0)
+        );
+
+        // §Perf L2: the fused 50-step scan artifact — one dispatch for the
+        // whole reverse process.
+        if let Ok(spec) = store.resolve("unet_denoise_scan50_16") {
+            exe.load_hlo_text("scan", &spec.path).expect("compile scan");
+            let t = 50usize;
+            let mut t_embs = Vec::new();
+            let mut coeffs = Vec::new();
+            for s in (0..t).rev() {
+                t_embs.extend(time_embedding(s as f32, 32));
+                coeffs.extend([1.01f32, 0.05, if s > 0 { 0.1 } else { 0.0 }]);
+            }
+            let dynamic = vec![
+                TensorBuf::new(vec![1, 16, 16], vec![0.1; 256]).unwrap(),
+                TensorBuf::new(vec![t, 32], t_embs).unwrap(),
+                TensorBuf::new(vec![t, 3], coeffs).unwrap(),
+                TensorBuf::new(vec![t, 1, 16, 16], vec![0.0; t * 256]).unwrap(),
+            ];
+            let r3 = b.report("pjrt execute unet_denoise_scan50 (50 steps fused)", || {
+                exe.run_prepared("scan", &dynamic, &prepared).unwrap()
+            });
+            println!(
+                "  -> fused per-step: {:.3} ms vs step-at-a-time {:.3} ms (x{:.2})",
+                r3.mean_ns / 50.0 / 1e6,
+                r2.mean_ns / 1e6,
+                r2.mean_ns / (r3.mean_ns / 50.0)
+            );
+        }
+    }
+}
+
+fn main() {
+    println!("==================== HOT-PATH BENCH ====================\n");
+    let b = Bencher::default();
+    bench_unit_group(&b);
+    bench_micro_sim(&Bencher::quick());
+    bench_analytic(&Bencher::quick());
+    bench_runtime(&Bencher::quick());
+    println!("\nhotpath bench OK");
+}

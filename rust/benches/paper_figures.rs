@@ -1,0 +1,66 @@
+//! Bench: regenerate Figures 20-25 with shape assertions and timings.
+//!
+//! Run: `cargo bench --bench paper_figures` (or `make bench`).
+//! Output is recorded in EXPERIMENTS.md.
+
+use sf_mmcn::report;
+use sf_mmcn::util::bench::Bencher;
+
+fn main() {
+    println!("==================== PAPER FIGURES ====================\n");
+
+    // --- Fig 20 -------------------------------------------------------------
+    let (text, nu) = report::fig20();
+    println!("{text}");
+    let m: std::collections::HashMap<usize, f64> = nu.into_iter().collect();
+    assert!(m[&8] < m[&4] && m[&8] < m[&2], "8 units beats 2/4 on nu");
+    assert!(m[&16] <= m[&8], "16 marginally best (paper's observation)");
+
+    // --- Fig 21 --------------------------------------------------------------
+    let (text, (vgg, rn)) = report::fig21();
+    println!("{text}");
+    assert_eq!(vgg.len(), 13);
+    assert_eq!(rn.len(), 17);
+    let vgg_first = vgg[0];
+    assert!(
+        vgg[1..].iter().all(|&u| u > vgg_first),
+        "VGG first layer lowest utilization (3-channel input)"
+    );
+    let rn_best = rn.iter().cloned().fold(0.0, f64::max);
+    assert!(rn_best > 0.95, "ResNet residual layers reach ~100%");
+
+    // --- Fig 22 --------------------------------------------------------------
+    let (text, s22) = report::fig22();
+    println!("{text}");
+    assert!(s22.iter().all(|&(n, sf, ca)| sf == 9 && ca == 3 * n));
+
+    // --- Fig 23 -------------------------------------------------------------
+    let (text, s23) = report::fig23();
+    println!("{text}");
+    assert!(s23.iter().all(|&(_, _, so, _, co)| so == 8 && co == 1));
+
+    // --- Fig 24 -------------------------------------------------------------
+    let (text, s24) = report::fig24();
+    println!("{text}");
+    assert!(s24.iter().all(|r| r.3 > 1.0), "SF-MMCN always faster than MMCN");
+    assert!(
+        s24.last().unwrap().3 > s24.first().unwrap().3,
+        "gap grows on the diffusion model"
+    );
+
+    // --- Fig 25 --------------------------------------------------------------
+    let (text, _series, combined) = report::fig25();
+    println!("{text}");
+    assert!(combined > 10.0);
+
+    // --- timings ---------------------------------------------------------
+    println!("--- harness timings ---");
+    let b = Bencher::quick();
+    b.report("fig20 (4-point unit sweep, ResNet-18@224)", report::fig20);
+    b.report("fig21 (per-layer U_PE, both models @224)", report::fig21);
+    b.report("fig22 (first-output sweep)", report::fig22);
+    b.report("fig23 (filter-shape sweep)", report::fig23);
+    b.report("fig24 (MMCN latency comparison)", report::fig24);
+    b.report("fig25 (U-net block throughput)", report::fig25);
+    println!("\npaper_figures bench OK");
+}

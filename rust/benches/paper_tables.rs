@@ -1,0 +1,50 @@
+//! Bench: regenerate Tables I, II, III and the §IV headline ratios, with
+//! timing of the underlying full-model analyses.
+//!
+//! Run: `cargo bench --bench paper_tables` (or `make bench`).
+//! Output is recorded in EXPERIMENTS.md.
+
+use sf_mmcn::report;
+use sf_mmcn::util::bench::Bencher;
+
+fn main() {
+    println!("==================== PAPER TABLES ====================\n");
+
+    // --- Table I ---------------------------------------------------------
+    let (text, sim) = report::table1(224);
+    println!("{text}");
+    // sanity: shapes the paper claims
+    let sf = &sim[0].report;
+    assert!(sf.core_power_w * 1e3 < 30.0, "SF core power stays ~tens of mW");
+    assert!(
+        sim[1..]
+            .iter()
+            .all(|r| sf.gops_per_w > r.report.gops_per_w),
+        "SF wins energy efficiency against every simulated baseline"
+    );
+
+    // --- Table II ----------------------------------------------------------
+    let (text, rows) = report::table2();
+    println!("{text}");
+    assert!(rows.iter().all(|r| (r.speedup - 8.0 / 3.0).abs() < 1e-9));
+
+    // --- Table III ----------------------------------------------------------
+    let (text, rep) = report::table3();
+    println!("{text}");
+    assert!((0.3..0.6).contains(&rep.area_mm2));
+
+    // --- headline ratios ------------------------------------------------
+    let (text, h) = report::headline_ratios(224);
+    println!("{text}");
+    assert!(h.power_reduction_vs_parallel > 0.6);
+    assert!(h.area_reduction_vs_parallel > 0.55);
+
+    // --- timings -----------------------------------------------------------
+    println!("--- harness timings (full-model analytic sweeps) ---");
+    let b = Bencher::quick();
+    b.report("table1(img=224)", || report::table1(224));
+    b.report("table2()", report::table2);
+    b.report("table3()", report::table3);
+    b.report("headline_ratios(224)", || report::headline_ratios(224));
+    println!("\npaper_tables bench OK");
+}

@@ -1,0 +1,29 @@
+//! Baseline accelerators the paper compares against, modelled under the
+//! *same* event-energy framework as SF-MMCN so the Table-I ratios are
+//! apples-to-apples (see DESIGN.md §1 on why ratios survive the
+//! silicon→simulation substitution).
+//!
+//! * [`carla`] — CARLA [15]-like row-stationary array, using the *paper's
+//!   own characterization* of CARLA's dataflow (Table II, Figs 22-23).
+//! * [`mmcn`] — the authors' previous MMCN [24]: same MAC core idea but a
+//!   series strategy for parallel structures and no data-reuse registers.
+//! * [`pe_array`] — a traditional parallel PE array: executes residual
+//!   branches concurrently on extra silicon (the "parallel strategy").
+//! * [`published`] — the as-published Table-I rows for accelerators we do
+//!   not simulate ([19], [28], [29], [30]).
+
+pub mod carla;
+pub mod mmcn;
+pub mod pe_array;
+pub mod published;
+
+use crate::sim::energy::EventCounts;
+
+/// A named simulated baseline run, ready for PPA pricing.
+#[derive(Debug, Clone)]
+pub struct BaselineRun {
+    pub name: &'static str,
+    pub counts: EventCounts,
+    /// Organisational unit count (for the area model).
+    pub units: u64,
+}

@@ -1,0 +1,155 @@
+//! Traditional parallel PE array — the "parallel strategy" strawman of
+//! §I: executes parallel branches *concurrently on extra silicon*. Good
+//! latency, but the branch hardware idles on series layers, which is
+//! exactly the redundancy the efficiency factor nu exposes.
+//!
+//! Organisation: a 16x16 output-stationary MAC array (256 PEs) plus a
+//! dedicated 64-PE branch array (residual / time path) — 320 PEs total.
+
+use crate::models::graph::{Layer, ModelGraph, Residual};
+use crate::sim::energy::EventCounts;
+
+use super::BaselineRun;
+
+/// Main-array MAC lanes.
+pub const MAIN_PES: u64 = 256;
+/// Dedicated parallel-branch lanes.
+pub const BRANCH_PES: u64 = 64;
+/// Total PEs in the design.
+pub const TOTAL_PES: u64 = MAIN_PES + BRANCH_PES;
+
+/// Analytic event counts for a graph on the parallel PE array.
+pub fn analyze_graph(g: &ModelGraph) -> BaselineRun {
+    let mut c = EventCounts {
+        total_pes: TOTAL_PES,
+        // dense array without the SF mode/zero gating of idle lanes
+        coarse_idle: true,
+        ..Default::default()
+    };
+    for node in &g.nodes {
+        match &node.layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                residual,
+                time_dense,
+                ..
+            } => {
+                let macs =
+                    node.out_shape.elems() * (*k * *k * *c_in) as u64;
+                // output-stationary: engage min(256, 8 * c_out) lanes
+                let engaged = MAIN_PES.min(8 * *c_out as u64).max(1);
+                let cycles = macs.div_ceil(engaged);
+                c.cycles += cycles;
+                c.pe.macs += macs;
+                c.pe.active_cycles += macs;
+                c.pe.writebacks += node.out_shape.elems();
+                // branch array runs *concurrently* -> no extra cycles
+                match residual {
+                    Residual::None => {}
+                    Residual::Identity { .. } => {
+                        let elems = node.out_shape.elems();
+                        c.pe.residual_adds += elems;
+                        c.pe.active_cycles += elems; // branch lanes
+                        c.mem.output_buf_reads += elems;
+                    }
+                    Residual::Conv { from, .. } => {
+                        let cs = g.nodes[*from].out_shape.c as u64;
+                        let rmacs = node.out_shape.elems() * cs;
+                        c.pe.macs += rmacs;
+                        c.pe.active_cycles += rmacs;
+                        c.pe.residual_adds += node.out_shape.elems();
+                        c.mem.output_buf_reads += node.out_shape.elems() * cs;
+                        // branch may be slower than the main conv tile:
+                        let branch_cycles = rmacs.div_ceil(BRANCH_PES);
+                        if branch_cycles > cycles {
+                            c.cycles += branch_cycles - cycles;
+                        }
+                    }
+                }
+                if let Some(td) = time_dense {
+                    let dmacs = (*td * node.out_shape.c) as u64;
+                    c.pe.macs += dmacs;
+                    c.pe.active_cycles += dmacs;
+                }
+                // modest reuse (systolic forwarding): half the taps re-read
+                let reads = macs / 2;
+                c.unit.buffer_reads += reads;
+                c.unit.buffer_reads_no_reuse += macs;
+                c.unit.reuse_reg_writes += macs - reads;
+                c.unit.weight_reads += (*k * *k * *c_in * *c_out) as u64;
+                c.mem.dram_reads +=
+                    node.in_shape.elems() + (*c_out * *c_in * *k * *k) as u64;
+                c.mem.input_buf_writes += node.in_shape.elems();
+                c.mem.output_buf_writes += node.out_shape.elems();
+            }
+            Layer::Dense { in_f, out_f, .. } => {
+                let macs = (*in_f * *out_f) as u64;
+                c.cycles += macs.div_ceil(MAIN_PES);
+                c.pe.macs += macs;
+                c.pe.active_cycles += macs;
+                c.unit.buffer_reads += macs / 2;
+                c.unit.buffer_reads_no_reuse += macs;
+                c.mem.dram_reads += macs + *in_f as u64;
+                c.mem.output_buf_writes += *out_f as u64;
+            }
+            _ => {
+                let elems = node.out_shape.elems();
+                c.cycles += elems.div_ceil(64);
+                c.mem.input_buf_reads += node.in_shape.elems();
+                c.mem.output_buf_writes += elems;
+            }
+        }
+    }
+    BaselineRun {
+        name: "pe-array",
+        counts: c,
+        units: 16, // 16 rows as organisational units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{resnet18, vgg16};
+    use crate::sim::array::AcceleratorConfig;
+    use crate::sim::energy::CAL_40NM;
+
+    #[test]
+    fn fast_but_inefficient() {
+        let g = resnet18(32, 10);
+        let pa = analyze_graph(&g);
+        let sf = crate::compiler::analyze_graph(&AcceleratorConfig::default(), &g, 0.0);
+        // more PEs -> fewer cycles...
+        assert!(pa.counts.cycles < sf.total_cycles());
+        // ...but worse efficiency factor (nu): idle branch silicon
+        let rep_pa = CAL_40NM.report(&pa.counts, pa.units);
+        let rep_sf = CAL_40NM.report(&sf.totals, 8);
+        assert!(
+            rep_pa.nu > rep_sf.nu,
+            "pe-array nu {} must exceed SF nu {}",
+            rep_pa.nu,
+            rep_sf.nu
+        );
+    }
+
+    #[test]
+    fn branch_array_idles_on_series_models() {
+        let g = vgg16(32, 10);
+        let pa = analyze_graph(&g);
+        // utilization includes the idle 64-lane branch array
+        assert!(
+            pa.counts.u_pe() < 0.85,
+            "u_pe = {} should reflect idle branch lanes",
+            pa.counts.u_pe()
+        );
+    }
+
+    #[test]
+    fn area_larger_than_sf() {
+        let pa_area = CAL_40NM.area_mm2(TOTAL_PES, 16);
+        let sf_area = CAL_40NM.area_mm2(72, 8);
+        assert!(pa_area > 2.0 * sf_area);
+    }
+}

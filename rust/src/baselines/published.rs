@@ -1,0 +1,173 @@
+//! As-published Table-I rows for the accelerators we do not simulate.
+//! The paper itself quotes these from the cited references; we do the
+//! same so the regenerated Table I carries every column.
+
+/// One row of Table I.
+#[derive(Debug, Clone)]
+pub struct PublishedRow {
+    pub name: &'static str,
+    pub reference: &'static str,
+    pub freq_mhz: &'static str,
+    pub tech: &'static str,
+    pub area_mm2: Option<f64>,
+    pub gate_count: Option<&'static str>,
+    pub precision_bits: &'static str,
+    pub num_pes: Option<u64>,
+    pub models: &'static str,
+    pub power_mw: &'static str,
+    pub throughput_gops: &'static str,
+    pub energy_eff_gops_w: &'static str,
+    pub area_eff_gops_mm2: Option<f64>,
+    pub nu: Option<f64>,
+}
+
+/// Every non-simulated row of Table I, as printed in the paper.
+pub fn table1_rows() -> Vec<PublishedRow> {
+    vec![
+        PublishedRow {
+            name: "CARLA",
+            reference: "TCASI'21 [15]",
+            freq_mhz: "200",
+            tech: "65nm",
+            area_mm2: Some(6.2),
+            gate_count: Some("938k"),
+            precision_bits: "16",
+            num_pes: Some(196),
+            models: "VGG-16 / ResNet-50",
+            power_mw: "247",
+            throughput_gops: "77.4 / 75.4",
+            energy_eff_gops_w: "0.31k / 0.3k",
+            area_eff_gops_mm2: Some(12.48),
+            nu: Some(82.3),
+        },
+        PublishedRow {
+            name: "IECA",
+            reference: "TCASI'21 [28]",
+            freq_mhz: "250",
+            tech: "55nm",
+            area_mm2: Some(2.75),
+            gate_count: None,
+            precision_bits: "16",
+            num_pes: Some(168),
+            models: "VGG-16 / AlexNet",
+            power_mw: "114.6",
+            throughput_gops: "84.0",
+            energy_eff_gops_w: "n/a",
+            area_eff_gops_mm2: Some(30.55),
+            nu: None,
+        },
+        PublishedRow {
+            name: "Interlayer-compress",
+            reference: "TCASI'22 [29]",
+            freq_mhz: "700",
+            tech: "28nm",
+            area_mm2: None,
+            gate_count: Some("1.12M"),
+            precision_bits: "16",
+            num_pes: Some(288),
+            models: "VGG-16",
+            power_mw: "186.6",
+            throughput_gops: "403",
+            energy_eff_gops_w: "2.1k",
+            area_eff_gops_mm2: None,
+            nu: Some(0.64),
+        },
+        PublishedRow {
+            name: "QNAP",
+            reference: "ISSCC'21 [19]",
+            freq_mhz: "100-470",
+            tech: "28nm",
+            area_mm2: Some(1.9),
+            gate_count: None,
+            precision_bits: "8",
+            num_pes: Some(144),
+            models: "AlexNet/VGG/GoogleNet/ResNet",
+            power_mw: "19.4 - 131.6",
+            throughput_gops: "n/a",
+            energy_eff_gops_w: "12.1k",
+            area_eff_gops_mm2: Some(745.1),
+            nu: None,
+        },
+        PublishedRow {
+            name: "Scalable-precision",
+            reference: "ISSCC'23 [30]",
+            freq_mhz: "20-400",
+            tech: "28nm",
+            area_mm2: Some(7.29),
+            gate_count: None,
+            precision_bits: "1-8",
+            num_pes: Some(8),
+            models: "Eff.N-L0 / ViT-T / M.Mxr-B",
+            power_mw: "2.06-231.7",
+            throughput_gops: "1870-18900",
+            energy_eff_gops_w: "907k-551k",
+            area_eff_gops_mm2: Some(2600.0),
+            nu: None,
+        },
+        PublishedRow {
+            name: "MMCN",
+            reference: "MCSoC'23 [24]",
+            freq_mhz: "200",
+            tech: "90nm",
+            area_mm2: Some(0.36),
+            gate_count: None,
+            precision_bits: "16",
+            num_pes: Some(32),
+            models: "VGG-16",
+            power_mw: "3.58 (core)",
+            throughput_gops: "2572.184 (different OP accounting)",
+            energy_eff_gops_w: "718k",
+            area_eff_gops_mm2: None,
+            nu: Some(0.11),
+        },
+    ]
+}
+
+/// The paper's own "This work" row (the calibration target).
+pub fn paper_this_work() -> PublishedRow {
+    PublishedRow {
+        name: "SF-MMCN (paper)",
+        reference: "this work (paper)",
+        freq_mhz: "400",
+        tech: "40nm",
+        area_mm2: Some(1.9),
+        gate_count: Some("211k"),
+        precision_bits: "16",
+        num_pes: Some(72),
+        models: "VGG-16 / ResNet-18",
+        power_mw: "18",
+        throughput_gops: "437.9",
+        energy_eff_gops_w: "24.3k",
+        area_eff_gops_mm2: Some(230.47),
+        nu: Some(0.02),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_quoted_rows() {
+        assert_eq!(table1_rows().len(), 6);
+    }
+
+    #[test]
+    fn carla_row_matches_paper_ratios() {
+        let rows = table1_rows();
+        let carla = &rows[0];
+        let this = paper_this_work();
+        // headline claims: ~81x energy efficiency, ~18.42x area efficiency
+        let eff_ratio = 24.3e3 / 0.3e3;
+        assert!((80.0..82.0).contains(&eff_ratio));
+        let area_ratio = this.area_eff_gops_mm2.unwrap() / carla.area_eff_gops_mm2.unwrap();
+        assert!((18.0..19.0).contains(&area_ratio), "{area_ratio}");
+    }
+
+    #[test]
+    fn nu_ratio_sf_vs_carla() {
+        let carla_nu = table1_rows()[0].nu.unwrap();
+        let sf_nu = paper_this_work().nu.unwrap();
+        assert!(carla_nu / sf_nu > 4000.0);
+    }
+}

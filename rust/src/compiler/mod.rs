@@ -1,0 +1,15 @@
+//! The model "compiler": maps a [`crate::models::ModelGraph`] onto the
+//! SF-MMCN array *analytically* — a closed-form mirror of the cycle
+//! simulator in [`crate::sim`].
+//!
+//! Why both exist: the micro simulator executes every MAC (real numerics,
+//! exact counts) but full-resolution VGG-16 is ~15.5 G MACs — far too slow
+//! to sweep in benches. The schedule model computes the identical counts in
+//! O(H·W) per layer. `rust/tests/schedule_vs_sim.rs` property-tests the two
+//! against each other on randomized small layers in every SF mode; that
+//! equivalence is what licenses using the analytic model for the paper's
+//! full-size figures (Figs 20, 21, 24, 25; Table I).
+
+pub mod schedule;
+
+pub use schedule::{analyze_graph, analyze_node, GraphAnalysis, LayerAnalysis};

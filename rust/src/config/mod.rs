@@ -1,0 +1,8 @@
+//! Configuration system: a from-scratch TOML-subset parser plus the typed
+//! configs the launcher consumes (accelerator, model, serving, sweep).
+
+mod toml_lite;
+mod types;
+
+pub use toml_lite::{parse_toml, Value};
+pub use types::{ModelChoice, RunConfig, ServeConfig, SweepConfig};

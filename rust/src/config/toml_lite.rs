@@ -1,0 +1,298 @@
+//! TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / flat array values, `#` comments, blank lines.
+//! Unsupported (rejected with line numbers): nested tables, multi-line
+//! strings, dates, inline tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; keys before any `[section]` land in `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                bail!(
+                    "line {}: unsupported section name `{name}` (no nesting)",
+                    lineno + 1
+                );
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(val.trim())
+            .with_context(|| format!("line {}: bad value for `{key}`", lineno + 1))?;
+        doc.get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting string quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse `{s}`")
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Convenience getters over a parsed document.
+pub trait DocExt {
+    fn get_val(&self, section: &str, key: &str) -> Option<&Value>;
+    fn get_str_or(&self, section: &str, key: &str, default: &str) -> String;
+    fn get_int_or(&self, section: &str, key: &str, default: i64) -> i64;
+    fn get_float_or(&self, section: &str, key: &str, default: f64) -> f64;
+    fn get_bool_or(&self, section: &str, key: &str, default: bool) -> bool;
+}
+
+impl DocExt for Doc {
+    fn get_val(&self, section: &str, key: &str) -> Option<&Value> {
+        self.get(section).and_then(|s| s.get(key))
+    }
+
+    fn get_str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get_val(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    fn get_int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get_val(section, key)
+            .and_then(|v| v.as_int())
+            .unwrap_or(default)
+    }
+
+    fn get_float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get_val(section, key)
+            .and_then(|v| v.as_float())
+            .unwrap_or(default)
+    }
+
+    fn get_bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get_val(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+# top comment
+title = "sf-mmcn"
+
+[accelerator]
+units = 8
+freq_mhz = 400.0
+zero_gate = true
+sizes = [2, 4, 8, 16]
+
+[serve]
+steps = 200  # ddpm steps
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"], Value::Str("sf-mmcn".into()));
+        assert_eq!(doc["accelerator"]["units"], Value::Int(8));
+        assert_eq!(doc["accelerator"]["freq_mhz"], Value::Float(400.0));
+        assert_eq!(doc["accelerator"]["zero_gate"], Value::Bool(true));
+        assert_eq!(
+            doc["accelerator"]["sizes"],
+            Value::Array(vec![
+                Value::Int(2),
+                Value::Int(4),
+                Value::Int(8),
+                Value::Int(16)
+            ])
+        );
+        assert_eq!(doc["serve"]["steps"], Value::Int(200));
+    }
+
+    #[test]
+    fn string_with_hash_not_truncated() {
+        let doc = parse_toml(r##"k = "a # b""##).unwrap();
+        assert_eq!(doc[""]["k"], Value::Str("a # b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_toml("x = ").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(parse_toml("[a.b]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse_toml("n = 1_000_000").unwrap();
+        assert_eq!(doc[""]["n"], Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn doc_ext_defaults() {
+        let doc = parse_toml("[s]\nx = 3").unwrap();
+        assert_eq!(doc.get_int_or("s", "x", 0), 3);
+        assert_eq!(doc.get_int_or("s", "missing", 7), 7);
+        assert_eq!(doc.get_str_or("nosect", "k", "d"), "d");
+        assert!(doc.get_bool_or("s", "b", true));
+        assert_eq!(doc.get_float_or("s", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn empty_array_and_string_array() {
+        let doc = parse_toml(r#"a = []
+b = ["x", "y"]"#)
+            .unwrap();
+        assert_eq!(doc[""]["a"], Value::Array(vec![]));
+        assert_eq!(
+            doc[""]["b"],
+            Value::Array(vec![Value::Str("x".into()), Value::Str("y".into())])
+        );
+    }
+}

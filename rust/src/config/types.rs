@@ -1,0 +1,265 @@
+//! Typed configuration the launcher consumes, loadable from TOML files
+//! (see `configs/*.toml`) with CLI overrides applied on top.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::sim::array::AcceleratorConfig;
+
+use super::toml_lite::{parse_toml, DocExt};
+
+/// Which network to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelChoice {
+    Vgg16,
+    Resnet18,
+    Unet,
+}
+
+impl ModelChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "vgg16" | "vgg" | "vgg-16" => ModelChoice::Vgg16,
+            "resnet18" | "resnet" | "resnet-18" => ModelChoice::Resnet18,
+            "unet" | "u-net" => ModelChoice::Unet,
+            other => bail!("unknown model `{other}` (vgg16|resnet18|unet)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelChoice::Vgg16 => "vgg16",
+            ModelChoice::Resnet18 => "resnet18",
+            ModelChoice::Unet => "unet",
+        }
+    }
+}
+
+/// `sf-mmcn run` configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: ModelChoice,
+    pub img: usize,
+    pub accel: AcceleratorConfig,
+    /// Post-ReLU activation sparsity assumed by the analytic model.
+    pub sparsity: f64,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelChoice::Vgg16,
+            img: 224,
+            accel: AcceleratorConfig::default(),
+            sparsity: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// `sf-mmcn serve` (diffusion) configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// DDPM reverse steps per request.
+    pub steps: usize,
+    /// Number of requests the workload generator submits.
+    pub requests: usize,
+    /// Worker threads pulling from the request queue.
+    pub workers: usize,
+    /// Max batch gathered per dispatch (the chip's batch is 1; batching
+    /// here amortizes queueing, each image still runs solo — §III.D).
+    pub max_batch: usize,
+    pub seed: u64,
+    /// Artifact name for the denoise step.
+    pub artifact: String,
+    /// Co-simulate the accelerator (cycles/energy) alongside PJRT.
+    pub cosim: bool,
+    /// Use the fused T-step scan artifact (`unet_denoise_scan<T>_16`)
+    /// instead of step-at-a-time execution (§Perf, L2).
+    pub fused: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            steps: 50,
+            requests: 8,
+            workers: 2,
+            max_batch: 4,
+            seed: 7,
+            artifact: "unet_denoise_16".into(),
+            cosim: true,
+            fused: false,
+        }
+    }
+}
+
+/// `sf-mmcn sweep` (design space) configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub unit_counts: Vec<usize>,
+    pub model: ModelChoice,
+    pub img: usize,
+    pub sparsity: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            unit_counts: vec![2, 4, 8, 16],
+            model: ModelChoice::Resnet18,
+            img: 224,
+            sparsity: 0.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        cfg.model = ModelChoice::parse(&doc.get_str_or("run", "model", cfg.model.name()))?;
+        cfg.img = doc.get_int_or("run", "img", cfg.img as i64) as usize;
+        cfg.sparsity = doc.get_float_or("run", "sparsity", cfg.sparsity);
+        cfg.seed = doc.get_int_or("run", "seed", cfg.seed as i64) as u64;
+        cfg.accel.units =
+            doc.get_int_or("accelerator", "units", cfg.accel.units as i64) as usize;
+        cfg.accel.input_buf_elems = doc.get_int_or(
+            "accelerator",
+            "input_buf_elems",
+            cfg.accel.input_buf_elems as i64,
+        ) as u64;
+        cfg.accel.weight_buf_elems = doc.get_int_or(
+            "accelerator",
+            "weight_buf_elems",
+            cfg.accel.weight_buf_elems as i64,
+        ) as u64;
+        cfg.accel.zero_gate = doc.get_bool_or("accelerator", "zero_gate", cfg.accel.zero_gate);
+        cfg.accel.data_reuse =
+            doc.get_bool_or("accelerator", "data_reuse", cfg.accel.data_reuse);
+        if cfg.accel.units == 0 {
+            bail!("accelerator.units must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&cfg.sparsity) {
+            bail!("run.sparsity must be in [0,1]");
+        }
+        Ok(cfg)
+    }
+}
+
+impl ServeConfig {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        cfg.steps = doc.get_int_or("serve", "steps", cfg.steps as i64) as usize;
+        cfg.requests = doc.get_int_or("serve", "requests", cfg.requests as i64) as usize;
+        cfg.workers = doc.get_int_or("serve", "workers", cfg.workers as i64) as usize;
+        cfg.max_batch = doc.get_int_or("serve", "max_batch", cfg.max_batch as i64) as usize;
+        cfg.seed = doc.get_int_or("serve", "seed", cfg.seed as i64) as u64;
+        cfg.artifact = doc.get_str_or("serve", "artifact", &cfg.artifact);
+        cfg.cosim = doc.get_bool_or("serve", "cosim", cfg.cosim);
+        cfg.fused = doc.get_bool_or("serve", "fused", cfg.fused);
+        if cfg.steps == 0 || cfg.workers == 0 || cfg.max_batch == 0 {
+            bail!("serve.steps/workers/max_batch must be >= 1");
+        }
+        Ok(cfg)
+    }
+}
+
+impl SweepConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get_val("sweep", "unit_counts") {
+            let arr = v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("sweep.unit_counts must be an array"))?;
+            cfg.unit_counts = arr
+                .iter()
+                .map(|x| x.as_int().map(|i| i as usize))
+                .collect::<Option<_>>()
+                .ok_or_else(|| anyhow::anyhow!("sweep.unit_counts must be integers"))?;
+        }
+        cfg.model = ModelChoice::parse(&doc.get_str_or("sweep", "model", cfg.model.name()))?;
+        cfg.img = doc.get_int_or("sweep", "img", cfg.img as i64) as usize;
+        cfg.sparsity = doc.get_float_or("sweep", "sparsity", cfg.sparsity);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_config_roundtrip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+model = "resnet18"
+img = 32
+sparsity = 0.4
+
+[accelerator]
+units = 4
+data_reuse = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, ModelChoice::Resnet18);
+        assert_eq!(cfg.img, 32);
+        assert_eq!(cfg.accel.units, 4);
+        assert!(!cfg.accel.data_reuse);
+        assert!((cfg.sparsity - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_preserved_for_missing_keys() {
+        let cfg = RunConfig::from_toml("[run]\nmodel = \"unet\"\n").unwrap();
+        assert_eq!(cfg.model, ModelChoice::Unet);
+        assert_eq!(cfg.accel.units, 8);
+    }
+
+    #[test]
+    fn bad_model_rejected() {
+        assert!(RunConfig::from_toml("[run]\nmodel = \"alexnet\"\n").is_err());
+    }
+
+    #[test]
+    fn bad_sparsity_rejected() {
+        assert!(RunConfig::from_toml("[run]\nsparsity = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn serve_config_validation() {
+        assert!(ServeConfig::from_toml("[serve]\nsteps = 0\n").is_err());
+        let cfg = ServeConfig::from_toml("[serve]\nsteps = 10\nworkers = 3\n").unwrap();
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.workers, 3);
+    }
+
+    #[test]
+    fn sweep_config_array() {
+        let cfg = SweepConfig::from_toml("[sweep]\nunit_counts = [2, 8]\n").unwrap();
+        assert_eq!(cfg.unit_counts, vec![2, 8]);
+    }
+
+    #[test]
+    fn model_choice_aliases() {
+        assert_eq!(ModelChoice::parse("VGG-16").unwrap(), ModelChoice::Vgg16);
+        assert_eq!(ModelChoice::parse("u-net").unwrap(), ModelChoice::Unet);
+    }
+}

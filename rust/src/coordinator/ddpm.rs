@@ -1,0 +1,149 @@
+//! DDPM (Ho et al. 2020) reverse-process schedule.
+//!
+//! The coordinator owns the schedule; each reverse step feeds the AOT
+//! artifact three scalars:
+//!
+//! * `c1 = 1 / sqrt(alpha_t)`
+//! * `c2 = beta_t / sqrt(1 - alpha_bar_t)`
+//! * `sigma_t = sqrt(beta_t)` (posterior-variance choice), 0 at t = 0
+//!
+//! so `x_{t-1} = c1 * (x_t - c2 * eps_theta(x_t, t)) + sigma_t * z`.
+
+/// Precomputed schedule for `t_max` steps.
+#[derive(Debug, Clone)]
+pub struct DdpmSchedule {
+    pub betas: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub alpha_bars: Vec<f64>,
+}
+
+impl DdpmSchedule {
+    /// Linear beta schedule from `beta_lo` to `beta_hi` (DDPM defaults:
+    /// 1e-4 .. 0.02 over 1000 steps; scaled ranges work for fewer steps).
+    pub fn linear(t_max: usize, beta_lo: f64, beta_hi: f64) -> Self {
+        assert!(t_max >= 1);
+        assert!(0.0 < beta_lo && beta_lo <= beta_hi && beta_hi < 1.0);
+        let betas: Vec<f64> = (0..t_max)
+            .map(|t| {
+                if t_max == 1 {
+                    beta_lo
+                } else {
+                    beta_lo + (beta_hi - beta_lo) * t as f64 / (t_max - 1) as f64
+                }
+            })
+            .collect();
+        let alphas: Vec<f64> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut alpha_bars = Vec::with_capacity(t_max);
+        let mut acc = 1.0;
+        for a in &alphas {
+            acc *= a;
+            alpha_bars.push(acc);
+        }
+        Self {
+            betas,
+            alphas,
+            alpha_bars,
+        }
+    }
+
+    /// Standard schedule for `t_max` steps.
+    pub fn standard(t_max: usize) -> Self {
+        Self::linear(t_max, 1e-4, 0.02)
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Reverse-step coefficients `(c1, c2, sigma)` for step `t`.
+    pub fn coefficients(&self, t: usize) -> (f32, f32, f32) {
+        assert!(t < self.t_max());
+        let c1 = 1.0 / self.alphas[t].sqrt();
+        let c2 = self.betas[t] / (1.0 - self.alpha_bars[t]).sqrt();
+        let sigma = if t == 0 { 0.0 } else { self.betas[t].sqrt() };
+        (c1 as f32, c2 as f32, sigma as f32)
+    }
+
+    /// Forward-process factors for adding noise at level `t`:
+    /// `x_t = sqrt(alpha_bar_t) * x_0 + sqrt(1 - alpha_bar_t) * eps`.
+    pub fn forward_factors(&self, t: usize) -> (f32, f32) {
+        let ab = self.alpha_bars[t];
+        (ab.sqrt() as f32, (1.0 - ab).sqrt() as f32)
+    }
+}
+
+/// Sinusoidal time embedding — must match `python/compile/model.py::
+/// time_embedding` exactly (the artifact was lowered against it).
+pub fn time_embedding(t: f32, dim: usize) -> Vec<f32> {
+    assert!(dim >= 2 && dim % 2 == 0);
+    let half = dim / 2;
+    let mut out = vec![0.0f32; dim];
+    for i in 0..half {
+        let freq = (-(10000.0f64.ln()) * i as f64 / (half - 1) as f64).exp();
+        let ang = t as f64 * freq;
+        out[i] = ang.sin() as f32;
+        out[half + i] = ang.cos() as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_monotone() {
+        let s = DdpmSchedule::standard(100);
+        assert_eq!(s.t_max(), 100);
+        for t in 1..100 {
+            assert!(s.betas[t] >= s.betas[t - 1]);
+            assert!(s.alpha_bars[t] < s.alpha_bars[t - 1]);
+        }
+        assert!(s.alpha_bars[99] > 0.0 && s.alpha_bars[99] < 1.0);
+    }
+
+    #[test]
+    fn coefficients_sane() {
+        let s = DdpmSchedule::standard(50);
+        let (c1, c2, sigma0) = s.coefficients(0);
+        assert!(c1 >= 1.0 && c1 < 1.1);
+        assert!(c2 > 0.0);
+        assert_eq!(sigma0, 0.0, "no noise injected at the last step");
+        let (_, _, sigma_mid) = s.coefficients(25);
+        assert!(sigma_mid > 0.0);
+    }
+
+    #[test]
+    fn forward_factors_interpolate() {
+        let s = DdpmSchedule::standard(100);
+        let (a0, b0) = s.forward_factors(0);
+        let (a99, b99) = s.forward_factors(99);
+        assert!(a0 > a99, "signal decays with t");
+        assert!(b0 < b99, "noise grows with t");
+        for t in 0..100 {
+            let (a, b) = s.forward_factors(t);
+            assert!((a * a + b * b - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn time_embedding_matches_python_formula() {
+        // spot-check against numpy-computed values for t=3, dim=8:
+        // freqs = exp(-ln(1e4) * [0,1,2,3] / 3)
+        let e = time_embedding(3.0, 8);
+        let freqs: Vec<f64> = (0..4)
+            .map(|i| (-(10000.0f64.ln()) * i as f64 / 3.0).exp())
+            .collect();
+        for i in 0..4 {
+            let ang = 3.0 * freqs[i];
+            assert!((e[i] as f64 - ang.sin()).abs() < 1e-6, "sin {i}");
+            assert!((e[4 + i] as f64 - ang.cos()).abs() < 1e-6, "cos {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_beta_range() {
+        let _ = DdpmSchedule::linear(10, 0.5, 0.2);
+    }
+}

@@ -1,0 +1,116 @@
+//! Serving metrics: wall-clock latency/throughput plus the co-simulated
+//! accelerator's cycles/energy for the same work.
+
+use std::time::Duration;
+
+use crate::sim::energy::{EnergyModel, EventCounts, PpaReport};
+use crate::util::stats::LatencyHist;
+
+/// Aggregated results of one serving session.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    /// Per-request end-to-end latency.
+    pub request_latency: LatencyHist,
+    /// Per-denoise-step latency.
+    pub step_latency: LatencyHist,
+    pub requests_done: usize,
+    pub steps_done: usize,
+    pub wall: Duration,
+    /// Co-simulated accelerator counts for all served work (if enabled).
+    pub sim_counts: Option<EventCounts>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            request_latency: LatencyHist::new(),
+            step_latency: LatencyHist::new(),
+            requests_done: 0,
+            steps_done: 0,
+            wall: Duration::ZERO,
+            sim_counts: None,
+        }
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.requests_done as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn steps_per_s(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.steps_done as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Price the co-simulated counts under an energy model.
+    pub fn sim_report(&self, model: &EnergyModel, units: u64) -> Option<PpaReport> {
+        self.sim_counts.as_ref().map(|c| model.report(c, units))
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: {} in {:.2}s  ({:.2} req/s, {:.1} steps/s)\n",
+            self.requests_done,
+            self.wall.as_secs_f64(),
+            self.requests_per_s(),
+            self.steps_per_s()
+        ));
+        s.push_str(&format!(
+            "request latency: mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}\n",
+            self.request_latency.mean_us() / 1e3,
+            self.request_latency.percentile_us(50.0) / 1e3,
+            self.request_latency.percentile_us(95.0) / 1e3,
+            self.request_latency.percentile_us(99.0) / 1e3,
+        ));
+        s.push_str(&format!(
+            "step latency: mean {:.3} ms  p95 {:.3} ms\n",
+            self.step_latency.mean_us() / 1e3,
+            self.step_latency.percentile_us(95.0) / 1e3,
+        ));
+        s
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_computed() {
+        let mut m = ServeMetrics::new();
+        m.requests_done = 10;
+        m.steps_done = 500;
+        m.wall = Duration::from_secs(5);
+        assert!((m.requests_per_s() - 2.0).abs() < 1e-9);
+        assert!((m.steps_per_s() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_key_lines() {
+        let mut m = ServeMetrics::new();
+        m.requests_done = 1;
+        m.wall = Duration::from_millis(100);
+        m.request_latency.record_us(1000.0);
+        let s = m.render();
+        assert!(s.contains("requests: 1"));
+        assert!(s.contains("request latency"));
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.requests_per_s(), 0.0);
+    }
+}

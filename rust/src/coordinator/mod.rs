@@ -1,0 +1,28 @@
+//! L3 coordinator: the diffusion-model *serving* layer.
+//!
+//! The paper pitches SF-MMCN as a diffusion accelerator: "the accelerator
+//! has to conduct thousands ... of times to get the output figure" (§II).
+//! This module is the system around that loop:
+//!
+//! * [`ddpm`] — the DDPM beta schedule and per-step coefficients (owned by
+//!   rust; the AOT artifact takes them as scalar inputs, so the python
+//!   side never needs re-lowering to change schedules).
+//! * [`params`] — loads `artifacts/unet_params.{bin,manifest}` into the
+//!   input layout the artifact expects.
+//! * [`server`] — request queue → batcher → worker threads, each owning a
+//!   PJRT executor; per-request de-noise loops; co-simulation of the
+//!   SF-MMCN accelerator for cycles/energy alongside the functional run.
+//! * [`metrics`] — latency histograms + simulated PPA aggregation.
+//!
+//! Python never runs here: workers execute `artifacts/*.hlo.txt` through
+//! the PJRT C API only.
+
+pub mod ddpm;
+pub mod metrics;
+pub mod params;
+pub mod server;
+
+pub use ddpm::DdpmSchedule;
+pub use metrics::ServeMetrics;
+pub use params::UnetParams;
+pub use server::{DenoiseRequest, DenoiseResult, DiffusionServer};

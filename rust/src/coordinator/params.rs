@@ -1,0 +1,141 @@
+//! Loader for the U-net weight blob produced by `python/compile/aot.py`.
+//!
+//! Format: `unet_params.manifest` has one `name d0 d1 ...` line per
+//! tensor (in the canonical order the artifact's trailing inputs expect);
+//! `unet_params.bin` is the little-endian f32 concatenation.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::TensorBuf;
+
+/// The loaded parameter set.
+#[derive(Debug, Clone)]
+pub struct UnetParams {
+    pub names: Vec<String>,
+    pub tensors: Vec<TensorBuf>,
+}
+
+impl UnetParams {
+    /// Load `<stem>.manifest` + `<stem>.bin` from a directory.
+    pub fn load(dir: &Path, stem: &str) -> Result<Self> {
+        let man_path = dir.join(format!("{stem}.manifest"));
+        let bin_path = dir.join(format!("{stem}.bin"));
+        let manifest = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let blob = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut off = 0usize;
+        for (lineno, line) in manifest.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .with_context(|| format!("manifest line {}", lineno + 1))?;
+            let dims: Vec<usize> = parts
+                .map(|d| d.parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .with_context(|| format!("manifest line {}: bad dims", lineno + 1))?;
+            let n: usize = dims.iter().product::<usize>().max(1);
+            let nbytes = 4 * n;
+            if off + nbytes > blob.len() {
+                bail!(
+                    "blob too small: `{name}` wants {nbytes} bytes at offset {off}, \
+                     blob is {} bytes",
+                    blob.len()
+                );
+            }
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &blob[off + 4 * i..off + 4 * i + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += nbytes;
+            names.push(name.to_string());
+            tensors.push(TensorBuf::new(dims, data)?);
+        }
+        if off != blob.len() {
+            bail!(
+                "blob has {} trailing bytes not covered by the manifest",
+                blob.len() - off
+            );
+        }
+        if tensors.is_empty() {
+            bail!("empty parameter manifest");
+        }
+        Ok(Self { names, tensors })
+    }
+
+    pub fn count(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Total parameter scalars.
+    pub fn total_values(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("p.manifest"), "a 2 2\nb 3\n").unwrap();
+        let mut blob = Vec::new();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("p.bin"), blob).unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("sfmmcn_params_test");
+        write_fixture(&dir);
+        let p = UnetParams::load(&dir, "p").unwrap();
+        assert_eq!(p.count(), 2);
+        assert_eq!(p.names, vec!["a", "b"]);
+        assert_eq!(p.tensors[0].shape, vec![2, 2]);
+        assert_eq!(p.tensors[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.tensors[1].data, vec![5.0, 6.0, 7.0]);
+        assert_eq!(p.total_values(), 7);
+    }
+
+    #[test]
+    fn rejects_short_blob() {
+        let dir = std::env::temp_dir().join("sfmmcn_params_short");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("p.manifest"), "a 4\n").unwrap();
+        std::fs::write(dir.join("p.bin"), [0u8; 8]).unwrap();
+        assert!(UnetParams::load(&dir, "p").is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let dir = std::env::temp_dir().join("sfmmcn_params_trail");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("p.manifest"), "a 1\n").unwrap();
+        std::fs::write(dir.join("p.bin"), [0u8; 12]).unwrap();
+        assert!(UnetParams::load(&dir, "p").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new("artifacts");
+        if dir.join("unet_params.manifest").exists() {
+            let p = UnetParams::load(dir, "unet_params").unwrap();
+            assert_eq!(p.count(), 33, "canonical U-net has 33 tensors");
+            assert_eq!(p.names[0], "stem.w");
+            assert_eq!(p.names.last().unwrap(), "head.b");
+        }
+    }
+}

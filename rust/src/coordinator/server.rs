@@ -1,0 +1,334 @@
+//! The diffusion serving loop: request queue → batcher → worker lanes.
+//!
+//! Each worker thread owns its *own* PJRT executor (the `xla` handles are
+//! not shared across threads) and compiles the denoise artifact once at
+//! startup; the request path afterwards is pure rust + PJRT — python never
+//! runs. Batch size per execution is 1, as on the chip (§III.D); the
+//! batcher amortizes queue overhead by handing workers runs of requests.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::ddpm::{time_embedding, DdpmSchedule};
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::params::UnetParams;
+use crate::models::{unet, UnetConfig};
+use crate::runtime::{ArtifactStore, Executor, TensorBuf};
+use crate::sim::array::AcceleratorConfig;
+use crate::sim::energy::EventCounts;
+use crate::util::Rng;
+
+/// One de-noising request (generate an image from noise).
+#[derive(Debug, Clone)]
+pub struct DenoiseRequest {
+    pub id: u64,
+    pub seed: u64,
+    /// Reverse steps (defaults to the server's schedule length).
+    pub steps: usize,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct DenoiseResult {
+    pub id: u64,
+    pub image: TensorBuf,
+    pub latency: Duration,
+    pub steps: usize,
+}
+
+/// Serving coordinator.
+pub struct DiffusionServer {
+    cfg: ServeConfig,
+    artifact_path: PathBuf,
+    params: Arc<UnetParams>,
+    schedule: Arc<DdpmSchedule>,
+    img_shape: Vec<usize>,
+    time_dim: usize,
+}
+
+impl DiffusionServer {
+    /// Build a server for the given config; resolves the artifact and
+    /// loads the weight blob (but defers PJRT setup to the workers).
+    pub fn new(mut cfg: ServeConfig, store: &ArtifactStore) -> Result<Self> {
+        if cfg.fused {
+            // the fused artifact bakes T into its name and signature
+            cfg.artifact = format!("unet_denoise_scan{}_16", cfg.steps);
+        }
+        let spec = store.resolve(&cfg.artifact)?;
+        let params = UnetParams::load(store.root(), "unet_params")
+            .context("loading unet params blob")?;
+        let ucfg = UnetConfig::default();
+        let schedule = DdpmSchedule::standard(cfg.steps);
+        Ok(Self {
+            cfg,
+            artifact_path: spec.path,
+            params: Arc::new(params),
+            schedule: Arc::new(schedule),
+            img_shape: vec![ucfg.img_channels, ucfg.img, ucfg.img],
+            time_dim: ucfg.time_dim,
+        })
+    }
+
+    /// Fused path (§Perf, L2): the whole reverse process in one PJRT
+    /// dispatch. Noise draws follow the same order as the step-at-a-time
+    /// loop (initial x, then one map per step t = T-1..1; none at t = 0),
+    /// so the two modes generate the same images up to XLA re-association.
+    #[allow(clippy::too_many_arguments)]
+    fn denoise_one_fused(
+        exe: &Executor,
+        artifact: &str,
+        prepared: &crate::runtime::PreparedInputs,
+        schedule: &DdpmSchedule,
+        img_shape: &[usize],
+        time_dim: usize,
+        req: &DenoiseRequest,
+        step_latency_us: &mut Vec<f64>,
+    ) -> Result<DenoiseResult> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(req.seed);
+        let n: usize = img_shape.iter().product();
+        let steps = schedule.t_max();
+        let x = TensorBuf::new(img_shape.to_vec(), rng.normal_vec(n))?;
+        let mut t_embs = Vec::with_capacity(steps * time_dim);
+        let mut coeffs = Vec::with_capacity(steps * 3);
+        let mut noises = Vec::with_capacity(steps * n);
+        for t in (0..steps).rev() {
+            t_embs.extend(time_embedding(t as f32, time_dim));
+            let (c1, c2, sigma) = schedule.coefficients(t);
+            coeffs.extend([c1, c2, sigma]);
+            if t > 0 {
+                noises.extend(rng.normal_vec(n));
+            } else {
+                noises.extend(std::iter::repeat_n(0.0f32, n));
+            }
+        }
+        let mut full_shape = vec![steps];
+        full_shape.extend_from_slice(img_shape);
+        let dynamic = vec![
+            x,
+            TensorBuf::new(vec![steps, time_dim], t_embs)?,
+            TensorBuf::new(vec![steps, 3], coeffs)?,
+            TensorBuf::new(full_shape, noises)?,
+        ];
+        let out = exe.run_prepared(artifact, &dynamic, prepared)?;
+        let image = out.into_iter().next().context("scan returned nothing")?;
+        let total = t0.elapsed();
+        step_latency_us.push(total.as_micros() as f64 / steps as f64);
+        Ok(DenoiseResult {
+            id: req.id,
+            image,
+            latency: total,
+            steps,
+        })
+    }
+
+    /// Run one de-noise request on a prepared executor.
+    ///
+    /// §Perf: the 33 weight tensors (~530 KB) are pre-converted once per
+    /// worker ([`Executor::prepare`]); each step only converts the six
+    /// small per-step tensors (~1.3 KB).
+    #[allow(clippy::too_many_arguments)]
+    fn denoise_one(
+        exe: &Executor,
+        artifact: &str,
+        prepared: &crate::runtime::PreparedInputs,
+        schedule: &DdpmSchedule,
+        img_shape: &[usize],
+        time_dim: usize,
+        req: &DenoiseRequest,
+        step_latency_us: &mut Vec<f64>,
+    ) -> Result<DenoiseResult> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(req.seed);
+        let n: usize = img_shape.iter().product();
+        let mut x = TensorBuf::new(img_shape.to_vec(), rng.normal_vec(n))?;
+        let steps = req.steps.min(schedule.t_max());
+        let mut dynamic: Vec<TensorBuf> = vec![
+            x.clone(),
+            TensorBuf::zeros(&[time_dim]),
+            TensorBuf::scalar(0.0),
+            TensorBuf::scalar(0.0),
+            TensorBuf::scalar(0.0),
+            TensorBuf::zeros(img_shape),
+        ];
+        for t in (0..steps).rev() {
+            let s0 = Instant::now();
+            let (c1, c2, sigma) = schedule.coefficients(t);
+            dynamic[0] = x;
+            dynamic[1] = TensorBuf::new(vec![time_dim], time_embedding(t as f32, time_dim))?;
+            dynamic[2] = TensorBuf::scalar(c1);
+            dynamic[3] = TensorBuf::scalar(c2);
+            dynamic[4] = TensorBuf::scalar(sigma);
+            dynamic[5] = if t > 0 {
+                TensorBuf::new(img_shape.to_vec(), rng.normal_vec(n))?
+            } else {
+                TensorBuf::zeros(img_shape)
+            };
+            let out = exe.run_prepared(artifact, &dynamic, prepared)?;
+            x = out.into_iter().next().context("artifact returned nothing")?;
+            step_latency_us.push(s0.elapsed().as_micros() as f64);
+        }
+        Ok(DenoiseResult {
+            id: req.id,
+            image: x,
+            latency: t0.elapsed(),
+            steps,
+        })
+    }
+
+    /// Serve a batch of requests across `cfg.workers` threads; returns the
+    /// results (in completion order) and aggregated metrics.
+    pub fn serve(&self, requests: Vec<DenoiseRequest>) -> Result<(Vec<DenoiseResult>, ServeMetrics)> {
+        let t0 = Instant::now();
+        let (req_tx, req_rx): (Sender<DenoiseRequest>, Receiver<DenoiseRequest>) = channel();
+        let req_rx = Arc::new(Mutex::new(req_rx));
+        let (res_tx, res_rx) = channel::<Result<(DenoiseResult, Vec<f64>)>>();
+
+        let n_requests = requests.len();
+        for r in requests {
+            req_tx.send(r).expect("queue open");
+        }
+        drop(req_tx);
+
+        let mut handles = Vec::new();
+        for w in 0..self.cfg.workers {
+            let req_rx = Arc::clone(&req_rx);
+            let res_tx = res_tx.clone();
+            let params = Arc::clone(&self.params);
+            let schedule = Arc::clone(&self.schedule);
+            let artifact_path = self.artifact_path.clone();
+            let artifact = self.cfg.artifact.clone();
+            let img_shape = self.img_shape.clone();
+            let time_dim = self.time_dim;
+            let max_batch = self.cfg.max_batch;
+            let fused = self.cfg.fused;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sfmmcn-serve-{w}"))
+                    .spawn(move || {
+                        // Each worker owns a PJRT client + compiled artifact.
+                        let mut exe = match Executor::new() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                let _ = res_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        if let Err(e) = exe.load_hlo_text(&artifact, &artifact_path) {
+                            let _ = res_tx.send(Err(e));
+                            return;
+                        }
+                        // pre-convert the weights once per worker (§Perf)
+                        let prepared = match exe.prepare(&params.tensors) {
+                            Ok(p) => p,
+                            Err(e) => {
+                                let _ = res_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        loop {
+                            // batcher: take up to max_batch requests at once
+                            let batch: Vec<DenoiseRequest> = {
+                                let rx = req_rx.lock().unwrap();
+                                let mut b = Vec::new();
+                                while b.len() < max_batch {
+                                    match rx.try_recv() {
+                                        Ok(r) => b.push(r),
+                                        Err(_) => break,
+                                    }
+                                }
+                                if b.is_empty() {
+                                    // queue empty: one blocking attempt
+                                    match rx.recv() {
+                                        Ok(r) => b.push(r),
+                                        Err(_) => return, // closed: done
+                                    }
+                                }
+                                b
+                            };
+                            for req in batch {
+                                let mut steps_us = Vec::new();
+                                let r = if fused {
+                                    Self::denoise_one_fused(
+                                        &exe,
+                                        &artifact,
+                                        &prepared,
+                                        &schedule,
+                                        &img_shape,
+                                        time_dim,
+                                        &req,
+                                        &mut steps_us,
+                                    )
+                                } else {
+                                    Self::denoise_one(
+                                        &exe,
+                                        &artifact,
+                                        &prepared,
+                                        &schedule,
+                                        &img_shape,
+                                        time_dim,
+                                        &req,
+                                        &mut steps_us,
+                                    )
+                                };
+                                let _ = res_tx.send(r.map(|res| (res, steps_us)));
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        drop(res_tx);
+
+        let mut results = Vec::with_capacity(n_requests);
+        let mut metrics = ServeMetrics::new();
+        for msg in res_rx {
+            let (res, steps_us) = msg?;
+            metrics
+                .request_latency
+                .record_us(res.latency.as_micros() as f64);
+            for us in steps_us {
+                metrics.step_latency.record_us(us);
+            }
+            metrics.steps_done += res.steps;
+            metrics.requests_done += 1;
+            results.push(res);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        metrics.wall = t0.elapsed();
+
+        // Co-simulation: the SF-MMCN accelerator's counts for the same
+        // work — one analytic U-net pass per executed step.
+        if self.cfg.cosim {
+            let g = unet(UnetConfig::default());
+            let a = crate::compiler::analyze_graph(&AcceleratorConfig::default(), &g, 0.0);
+            let mut totals = EventCounts {
+                total_pes: AcceleratorConfig::default().total_pes(),
+                ..Default::default()
+            };
+            for _ in 0..metrics.steps_done {
+                totals.merge_run(&a.totals);
+            }
+            metrics.sim_counts = Some(totals);
+        }
+        Ok((results, metrics))
+    }
+
+    /// Generate a deterministic workload of `n` requests.
+    pub fn workload(&self, n: usize) -> Vec<DenoiseRequest> {
+        (0..n)
+            .map(|i| DenoiseRequest {
+                id: i as u64,
+                seed: self.cfg.seed.wrapping_add(i as u64 * 7919),
+                steps: self.cfg.steps,
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,37 @@
+//! # SF-MMCN — Server-Flow Multi-Mode CNN / Diffusion Accelerator
+//!
+//! A full-system reproduction of *"SF-MMCN: Low-Power Server Flow Multi-Mode
+//! Diffusion Model Accelerator"* (Hsu, Wey, Teo — 2024).
+//!
+//! The paper describes a silicon CNN accelerator (TSMC 40 nm). This crate
+//! reproduces the *system* in software as three layers:
+//!
+//! * **L3 (this crate)** — a cycle-accurate simulator of the SF-MMCN
+//!   micro-architecture (9-PE server-flow units, zero-gating, pipelining,
+//!   data-reuse registers), an energy/area model calibrated to the paper's
+//!   synthesis numbers, a layer-graph compiler/mapper, baseline accelerators
+//!   (CARLA-like row-stationary, MMCN series-mode, dense PE array), and a
+//!   diffusion-serving coordinator that drives functional numerics through
+//!   PJRT-compiled XLA executables.
+//! * **L2 (python/compile)** — JAX model definitions (VGG-16, ResNet-18,
+//!   U-Net with time embedding, DDPM de-noise step), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels implementing the
+//!   server-flow fused conv+residual dataflow, validated against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs at serving time: `make artifacts` lowers everything
+//! once; the rust binary loads `artifacts/*.hlo.txt` through the PJRT C API.
+
+pub mod baselines;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,314 @@
+//! `sf-mmcn` — the launcher.
+//!
+//! Subcommands:
+//! * `run`       — map a model onto the accelerator (analytic) and print
+//!                 per-layer cycles/utilization plus the PPA report.
+//! * `simulate`  — run the cycle-accurate micro simulator (with real
+//!                 fixed-point numerics) on a small model instance.
+//! * `serve`     — diffusion de-noise serving demo over PJRT artifacts.
+//! * `sweep`     — design-space sweep (units vs nu / power / latency).
+//! * `report`    — regenerate a paper table/figure (table1..3, fig20..25).
+//! * `artifacts` — list AOT artifacts.
+
+use anyhow::{bail, Result};
+
+use sf_mmcn::baselines::mmcn;
+use sf_mmcn::compiler::analyze_graph;
+use sf_mmcn::config::{ModelChoice, RunConfig, ServeConfig};
+use sf_mmcn::coordinator::DiffusionServer;
+use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
+use sf_mmcn::report;
+use sf_mmcn::runtime::ArtifactStore;
+use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
+use sf_mmcn::sim::energy::CAL_40NM;
+use sf_mmcn::util::cli::Args;
+use sf_mmcn::util::{Rng, Tensor};
+
+const SUBCOMMANDS: &[&str] = &["run", "simulate", "serve", "sweep", "report", "artifacts"];
+
+const USAGE: &str = "\
+sf-mmcn — Server-Flow Multi-Mode CNN / diffusion accelerator
+
+USAGE: sf-mmcn <subcommand> [options]
+
+  run       --model vgg16|resnet18|unet [--img 224] [--units 8]
+            [--sparsity 0.45] [--config file.toml]
+  simulate  --model unet [--img 16] [--units 8] [--seed 42]
+  serve     [--steps 50] [--requests 8] [--workers 2] [--fused]
+            [--config file.toml]
+  sweep     [--model resnet18] [--img 224]
+  report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
+            headlines|all
+  artifacts [--dir artifacts]
+";
+
+fn build_model(model: ModelChoice, img: usize) -> ModelGraph {
+    match model {
+        ModelChoice::Vgg16 => vgg16(img, 1000),
+        ModelChoice::Resnet18 => resnet18(img, 1000),
+        ModelChoice::Unet => unet(UnetConfig {
+            img,
+            ..UnetConfig::default()
+        }),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelChoice::parse(m)?;
+    }
+    cfg.img = args.get_usize("img", cfg.img)?;
+    cfg.accel.units = args.get_usize("units", cfg.accel.units)?;
+    cfg.sparsity = args.get_f64("sparsity", cfg.sparsity)?;
+
+    let g = build_model(cfg.model, cfg.img);
+    let a = analyze_graph(&cfg.accel, &g, cfg.sparsity);
+    println!(
+        "model {} @ {}  ({:.2} GMACs, {} nodes, {} parallel)",
+        g.name,
+        cfg.img,
+        g.total_macs() as f64 / 1e9,
+        g.nodes.len(),
+        g.parallel_nodes()
+    );
+    println!("{:<6} {:<42} {:>12} {:>8}", "node", "layer", "cycles", "U_PE");
+    for l in &a.layers {
+        println!(
+            "{:<6} {:<42} {:>12} {:>7.1}%",
+            l.node_idx,
+            l.label,
+            l.cycles,
+            l.u_pe * 100.0
+        );
+    }
+    let rep = CAL_40NM.report(&a.totals, cfg.accel.units as u64);
+    println!(
+        "\ntotal: {} cycles  {:.3} ms @ {:.0} MHz",
+        a.total_cycles(),
+        rep.runtime_s * 1e3,
+        rep.freq_hz / 1e6
+    );
+    println!(
+        "PPA: {:.1} mW core ({:.1} mW with DRAM)  {:.1} GOPs  {:.2} kGOPs/W  \
+         {:.2} mm2  {:.1} GOPs/mm2  U_PE {:.1}%  nu {:.4}",
+        rep.core_power_w * 1e3,
+        rep.total_power_w * 1e3,
+        rep.gops,
+        rep.gops_per_w / 1e3,
+        rep.area_mm2,
+        rep.gops_per_mm2,
+        rep.u_pe * 100.0,
+        rep.nu
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = ModelChoice::parse(args.get_or("model", "unet"))?;
+    let img = args.get_usize("img", 16)?;
+    let units = args.get_usize("units", 8)?;
+    let seed = args.get_u64("seed", 42)?;
+    if img > 64 {
+        bail!("micro simulation is cycle-accurate; use --img <= 64 (or `run`)");
+    }
+    let g = build_model(model, img);
+    let ws = WeightStore::random(&g, seed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| rng.normal() * 0.5);
+    let emb: Option<Vec<f32>> = if matches!(model, ModelChoice::Unet) {
+        Some(
+            (0..UnetConfig::default().time_dim)
+                .map(|_| rng.normal() * 0.5)
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let mut acc = Accelerator::new(AcceleratorConfig::with_units(units));
+    let run = acc.run_graph(&g, &x, &ws, emb.as_deref())?;
+    println!("micro-simulated {} @ {img} with {units} units", g.name);
+    for l in &run.layers {
+        println!(
+            "{:<6} {:<42} {:>12} {:>7.1}%",
+            l.node_idx,
+            l.label,
+            l.cycles,
+            l.u_pe * 100.0
+        );
+    }
+    let rep = CAL_40NM.report(&run.totals, units as u64);
+    println!(
+        "\ntotal {} cycles; output shape {:?}; output sparsity {:.2}; \
+         {:.2} mW core",
+        run.total_cycles(),
+        run.output.shape(),
+        run.output.sparsity(),
+        rep.core_power_w * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(std::path::Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.requests = args.get_usize("requests", cfg.requests)?;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    if args.flag("fused") {
+        cfg.fused = true;
+    }
+
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store)?;
+    println!(
+        "serving {} denoise requests ({} steps each) on {} workers{} …",
+        cfg.requests,
+        cfg.steps,
+        cfg.workers,
+        if cfg.fused { " [fused scan]" } else { "" }
+    );
+    let reqs = server.workload(cfg.requests);
+    let (results, metrics) = server.serve(reqs)?;
+    println!("{}", metrics.render());
+    if let Some(rep) = metrics.sim_report(&CAL_40NM, 8) {
+        println!(
+            "co-simulated SF-MMCN: {} cycles  {:.3} ms @400 MHz  {:.1} mW core  \
+             {:.1} GOPs  U_PE {:.1}%",
+            rep.cycles,
+            rep.runtime_s * 1e3,
+            rep.core_power_w * 1e3,
+            rep.gops,
+            rep.u_pe * 100.0
+        );
+    }
+    if let Some(r) = results.first() {
+        let mean: f32 = r.image.data.iter().sum::<f32>() / r.image.len() as f32;
+        println!(
+            "sample image: id {} shape {:?} mean {:.4}",
+            r.id, r.image.shape, mean
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = ModelChoice::parse(args.get_or("model", "resnet18"))?;
+    let img = args.get_usize("img", 224)?;
+    let g = build_model(model, img);
+    println!(
+        "{:<6} {:>12} {:>10} {:>10} {:>8} {:>8}",
+        "units", "cycles", "mW", "GOPs", "U_PE", "nu"
+    );
+    for units in [1usize, 2, 4, 8, 16, 32] {
+        let cfg = AcceleratorConfig::with_units(units);
+        let a = analyze_graph(&cfg, &g, 0.45);
+        let rep = CAL_40NM.report(&a.totals, units as u64);
+        println!(
+            "{:<6} {:>12} {:>10.1} {:>10.1} {:>7.1}% {:>8.4}",
+            units,
+            a.total_cycles(),
+            rep.core_power_w * 1e3,
+            rep.gops,
+            rep.u_pe * 100.0,
+            rep.nu
+        );
+    }
+    let mm = mmcn::analyze_graph(&g, 0.45);
+    println!(
+        "mmcn   {:>12}   (series strategy, no reuse)",
+        mm.counts.cycles
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let img = args.get_usize("img", 224)?;
+    let mut emitted = false;
+    let want = |k: &str| what == k || what == "all";
+    if want("table1") {
+        println!("{}", report::table1(img).0);
+        emitted = true;
+    }
+    if want("table2") {
+        println!("{}", report::table2().0);
+        emitted = true;
+    }
+    if want("table3") {
+        println!("{}", report::table3().0);
+        emitted = true;
+    }
+    if want("headlines") {
+        println!("{}", report::headline_ratios(img).0);
+        emitted = true;
+    }
+    if want("fig20") {
+        println!("{}", report::fig20().0);
+        emitted = true;
+    }
+    if want("fig21") {
+        println!("{}", report::fig21().0);
+        emitted = true;
+    }
+    if want("fig22") {
+        println!("{}", report::fig22().0);
+        emitted = true;
+    }
+    if want("fig23") {
+        println!("{}", report::fig23().0);
+        emitted = true;
+    }
+    if want("fig24") {
+        println!("{}", report::fig24().0);
+        emitted = true;
+    }
+    if want("fig25") {
+        println!("{}", report::fig25().0);
+        emitted = true;
+    }
+    if !emitted {
+        bail!("unknown report `{what}` — see `sf-mmcn` usage");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("dir", "artifacts");
+    let store = ArtifactStore::new(dir);
+    let list = store.list()?;
+    if list.is_empty() {
+        println!("no artifacts in {dir} — run `make artifacts`");
+        return Ok(());
+    }
+    for a in list {
+        let size = std::fs::metadata(&a.path).map(|m| m.len()).unwrap_or(0);
+        println!("{:<24} {:>10} bytes  {}", a.name, size, a.path.display());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(SUBCOMMANDS)?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("report") => cmd_report(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,475 @@
+//! Layer-graph IR.
+//!
+//! A [`ModelGraph`] is a topologically-ordered list of [`Node`]s. Skip
+//! connections are expressed *on the consuming conv* (`Residual::Identity`
+//! / `Residual::Conv`), mirroring how SF-MMCN fuses the skip into the main
+//! convolution via PE_9 — the graph says "this conv also absorbs the skip
+//! from node `from`", exactly what the hardware executes in one pass.
+
+use anyhow::{bail, Result};
+
+/// CHW feature-map shape (batch is always 1 — §III.D: "the batch size of
+/// the proposed SF-MMCN is 1 because of the high-speed ... requirement").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    pub fn elems(&self) -> u64 {
+        (self.c * self.h * self.w) as u64
+    }
+}
+
+/// Activation applied at the layer output (in the dedicated activation
+/// unit of Fig 18 — free in cycles, priced as buffer traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    /// SiLU-ish smooth activation used by the U-net blocks; numerics only.
+    Silu,
+}
+
+/// Skip-branch handling for a conv layer (the SF modes of Fig 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residual {
+    /// No parallel branch — series mode, PE_9 idle.
+    None,
+    /// Identity skip from the output of node `from` (Fig 6b).
+    Identity { from: usize },
+    /// 1x1 conv skip from node `from` with `stride` (Fig 6c) — PE_9
+    /// computes it. Channel count is implied by this conv's c_out.
+    Conv { from: usize, stride: usize },
+}
+
+/// One layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        act: Act,
+        residual: Residual,
+        /// U-net: this conv's unit-group also runs the time-parameter dense
+        /// on PE_9 (Fig 14 block 1 overlapped with block 2).
+        time_dense: Option<usize>, // embedding width
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    /// Global average pool to 1x1 (ResNet head).
+    GlobalAvgPool,
+    Dense {
+        in_f: usize,
+        out_f: usize,
+        act: Act,
+    },
+    /// Nearest-neighbour 2x upsample (U-net decoder).
+    Upsample2x,
+    /// Channel concat with the output of node `from` (U-net skip).
+    ConcatSkip { from: usize },
+}
+
+/// A node: a layer plus its resolved input/output shapes.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub layer: Layer,
+    pub in_shape: TensorShape,
+    pub out_shape: TensorShape,
+}
+
+impl Node {
+    /// MAC count of this node (model work, not hardware slots).
+    pub fn macs(&self) -> u64 {
+        match &self.layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                residual,
+                time_dense,
+                ..
+            } => {
+                let main = self.out_shape.h as u64
+                    * self.out_shape.w as u64
+                    * *c_out as u64
+                    * (*k * *k * *c_in) as u64;
+                let skip = match residual {
+                    Residual::Conv { .. } => {
+                        self.out_shape.h as u64
+                            * self.out_shape.w as u64
+                            * *c_out as u64
+                            * *c_in as u64
+                    }
+                    _ => 0,
+                };
+                let td = time_dense
+                    .map(|e| (e * self.out_shape.c) as u64)
+                    .unwrap_or(0);
+                main + skip + td
+            }
+            Layer::Dense { in_f, out_f, .. } => (*in_f * *out_f) as u64,
+            _ => 0,
+        }
+    }
+
+    /// True if this node has a parallel branch (drives SF mode selection).
+    pub fn is_parallel(&self) -> bool {
+        matches!(
+            &self.layer,
+            Layer::Conv {
+                residual: Residual::Identity { .. } | Residual::Conv { .. },
+                ..
+            } | Layer::Conv {
+                time_dense: Some(_),
+                ..
+            }
+        )
+    }
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input: TensorShape,
+    pub nodes: Vec<Node>,
+}
+
+/// Builder that performs shape inference as layers are appended.
+pub struct GraphBuilder {
+    name: String,
+    input: TensorShape,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input: TensorShape) -> Self {
+        Self {
+            name: name.to_string(),
+            input,
+            nodes: Vec::new(),
+        }
+    }
+
+    fn cur_shape(&self) -> TensorShape {
+        self.nodes
+            .last()
+            .map(|n| n.out_shape)
+            .unwrap_or(self.input)
+    }
+
+    /// Index the next node will get (for residual `from` references).
+    pub fn next_index(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Output shape of an already-added node.
+    pub fn shape_of(&self, idx: usize) -> TensorShape {
+        self.nodes[idx].out_shape
+    }
+
+    pub fn add(&mut self, layer: Layer) -> Result<usize> {
+        let in_shape = self.cur_shape();
+        let out_shape = self.infer(&layer, in_shape)?;
+        self.nodes.push(Node {
+            layer,
+            in_shape,
+            out_shape,
+        });
+        Ok(self.nodes.len() - 1)
+    }
+
+    fn infer(&self, layer: &Layer, s: TensorShape) -> Result<TensorShape> {
+        Ok(match layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                stride,
+                pad,
+                residual,
+                ..
+            } => {
+                if *c_in != s.c {
+                    bail!("conv expects {c_in} channels, input has {}", s.c);
+                }
+                if *k == 0 || *stride == 0 {
+                    bail!("conv k/stride must be positive");
+                }
+                if s.h + 2 * pad < *k || s.w + 2 * pad < *k {
+                    bail!("conv kernel {k} larger than padded input {}x{}", s.h, s.w);
+                }
+                let h = (s.h + 2 * pad - k) / stride + 1;
+                let w = (s.w + 2 * pad - k) / stride + 1;
+                let out = TensorShape::new(*c_out, h, w);
+                match residual {
+                    Residual::None => {}
+                    Residual::Identity { from } => {
+                        let fs = self.check_from(*from)?;
+                        if fs != out {
+                            bail!(
+                                "identity skip from node {from} shape {fs:?} \
+                                 != conv output {out:?}"
+                            );
+                        }
+                    }
+                    Residual::Conv { from, stride } => {
+                        let fs = self.check_from(*from)?;
+                        let rh = (fs.h - 1) / stride + 1;
+                        let rw = (fs.w - 1) / stride + 1;
+                        if (rh, rw) != (out.h, out.w) {
+                            bail!(
+                                "residual conv from node {from}: {rh}x{rw} \
+                                 != conv output {}x{}",
+                                out.h,
+                                out.w
+                            );
+                        }
+                    }
+                }
+                out
+            }
+            Layer::MaxPool { k, stride } => {
+                if s.h < *k || s.w < *k {
+                    bail!("pool kernel {k} larger than input {}x{}", s.h, s.w);
+                }
+                TensorShape::new(s.c, (s.h - k) / stride + 1, (s.w - k) / stride + 1)
+            }
+            Layer::GlobalAvgPool => TensorShape::new(s.c, 1, 1),
+            Layer::Dense { in_f, out_f, .. } => {
+                if *in_f != (s.c * s.h * s.w) {
+                    bail!(
+                        "dense expects {in_f} inputs, tensor has {}",
+                        s.c * s.h * s.w
+                    );
+                }
+                TensorShape::new(*out_f, 1, 1)
+            }
+            Layer::Upsample2x => TensorShape::new(s.c, s.h * 2, s.w * 2),
+            Layer::ConcatSkip { from } => {
+                let fs = self.check_from(*from)?;
+                if (fs.h, fs.w) != (s.h, s.w) {
+                    bail!(
+                        "concat skip from node {from}: {}x{} != {}x{}",
+                        fs.h,
+                        fs.w,
+                        s.h,
+                        s.w
+                    );
+                }
+                TensorShape::new(s.c + fs.c, s.h, s.w)
+            }
+        })
+    }
+
+    fn check_from(&self, from: usize) -> Result<TensorShape> {
+        if from >= self.nodes.len() {
+            bail!(
+                "skip references node {from}, but only {} nodes exist",
+                self.nodes.len()
+            );
+        }
+        Ok(self.nodes[from].out_shape)
+    }
+
+    pub fn build(self) -> ModelGraph {
+        ModelGraph {
+            name: self.name,
+            input: self.input,
+            nodes: self.nodes,
+        }
+    }
+}
+
+impl ModelGraph {
+    /// Total model MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    /// Total model ops (2 per MAC) — the paper's "OPs ~ FLOPs".
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Indices of conv nodes (the layers the accelerator computes).
+    pub fn conv_indices(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.layer, Layer::Conv { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of nodes with a parallel branch.
+    pub fn parallel_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_parallel()).count()
+    }
+
+    /// Weight-parameter count.
+    pub fn total_weights(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match &n.layer {
+                Layer::Conv {
+                    c_in,
+                    c_out,
+                    k,
+                    residual,
+                    time_dense,
+                    ..
+                } => {
+                    let main = (c_out * c_in * k * k + c_out) as u64;
+                    let skip = match residual {
+                        Residual::Conv { .. } => (c_out * c_in) as u64,
+                        _ => 0,
+                    };
+                    let td = time_dense.map(|e| (e * n.out_shape.c) as u64).unwrap_or(0);
+                    main + skip + td
+                }
+                Layer::Dense { in_f, out_f, .. } => (in_f * out_f + out_f) as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(c_in: usize, c_out: usize, k: usize, stride: usize, pad: usize) -> Layer {
+        Layer::Conv {
+            c_in,
+            c_out,
+            k,
+            stride,
+            pad,
+            act: Act::Relu,
+            residual: Residual::None,
+            time_dense: None,
+        }
+    }
+
+    #[test]
+    fn shape_inference_conv_pool_dense() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(3, 32, 32));
+        b.add(conv(3, 16, 3, 1, 1)).unwrap();
+        assert_eq!(b.cur_shape(), TensorShape::new(16, 32, 32));
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+        assert_eq!(b.cur_shape(), TensorShape::new(16, 16, 16));
+        b.add(Layer::Dense {
+            in_f: 16 * 16 * 16,
+            out_f: 10,
+            act: Act::None,
+        })
+        .unwrap();
+        let g = b.build();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[2].out_shape, TensorShape::new(10, 1, 1));
+    }
+
+    #[test]
+    fn channel_mismatch_rejected() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(3, 8, 8));
+        assert!(b.add(conv(4, 8, 3, 1, 1)).is_err());
+    }
+
+    #[test]
+    fn identity_skip_shape_checked() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(8, 16, 16));
+        let first = b.add(conv(8, 8, 3, 1, 1)).unwrap();
+        // matching skip ok
+        b.add(Layer::Conv {
+            c_in: 8,
+            c_out: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::Relu,
+            residual: Residual::Identity { from: first },
+            time_dense: None,
+        })
+        .unwrap();
+        // mismatched skip rejected (stride changes spatial size)
+        let r = b.add(Layer::Conv {
+            c_in: 8,
+            c_out: 8,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            act: Act::Relu,
+            residual: Residual::Identity { from: first },
+            time_dense: None,
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(8, 16, 16));
+        let r = b.add(Layer::Conv {
+            c_in: 8,
+            c_out: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::Relu,
+            residual: Residual::Identity { from: 5 },
+            time_dense: None,
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn mac_counting_conv() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(2, 4, 4));
+        b.add(conv(2, 3, 3, 1, 1)).unwrap();
+        let g = b.build();
+        // 4*4 spatial * 3 out-ch * (3*3*2) taps = 864
+        assert_eq!(g.total_macs(), 864);
+        assert_eq!(g.total_ops(), 1728);
+    }
+
+    #[test]
+    fn concat_and_upsample_shapes() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(4, 8, 8));
+        let skip = b.add(conv(4, 4, 3, 1, 1)).unwrap();
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+        b.add(Layer::Upsample2x).unwrap();
+        b.add(Layer::ConcatSkip { from: skip }).unwrap();
+        assert_eq!(b.cur_shape(), TensorShape::new(8, 8, 8));
+    }
+
+    #[test]
+    fn time_dense_counts_macs() {
+        let mut b = GraphBuilder::new("t", TensorShape::new(4, 8, 8));
+        b.add(Layer::Conv {
+            c_in: 4,
+            c_out: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::Relu,
+            residual: Residual::None,
+            time_dense: Some(16),
+        })
+        .unwrap();
+        let g = b.build();
+        let conv_macs = 8 * 8 * 4 * (3 * 3 * 4);
+        assert_eq!(g.total_macs(), conv_macs as u64 + 16 * 4);
+    }
+}

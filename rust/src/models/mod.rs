@@ -1,0 +1,13 @@
+//! Network descriptions: a small layer-graph IR plus the three models the
+//! paper evaluates — VGG-16 (series), ResNet-18 (parallel/residual) and the
+//! diffusion U-net (parallel + time-parameter dense).
+
+pub mod graph;
+pub mod resnet;
+pub mod unet;
+pub mod vgg;
+
+pub use graph::{Act, Layer, ModelGraph, Node, Residual, TensorShape};
+pub use resnet::resnet18;
+pub use unet::{unet, UnetConfig};
+pub use vgg::vgg16;

@@ -1,0 +1,207 @@
+//! The de-noising diffusion U-net (paper Figs 13-16).
+//!
+//! Each U-net block follows the paper's 4-group decomposition (Fig 14):
+//! * Block 1 — time-parameter dense layer  ──┐ run concurrently: PE_9
+//! * Block 2 — conv + activation            ──┘ serves the dense while
+//!   PE_1..PE_8 convolve (`time_dense: Some(_)`).
+//! * Block 3 — conv without activation.
+//! * Block 4 — "final logic": the skip around the block, fused into
+//!   Block 3's conv via `Residual::{Identity,Conv}` — SF mode again.
+//!
+//! Encoder levels downsample with max-pool; decoder levels upsample and
+//! concat the encoder skip (the long U-net skips), then run a block.
+
+use super::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
+
+/// Configuration of the small diffusion U-net.
+#[derive(Debug, Clone, Copy)]
+pub struct UnetConfig {
+    /// Input/output channels of the image (1 for grayscale).
+    pub img_channels: usize,
+    /// Input resolution (square).
+    pub img: usize,
+    /// Base channel width; doubles per level.
+    pub base_c: usize,
+    /// Number of down/up levels (>= 1).
+    pub levels: usize,
+    /// Time-embedding width fed to each block's dense layer.
+    pub time_dim: usize,
+}
+
+impl Default for UnetConfig {
+    fn default() -> Self {
+        Self {
+            img_channels: 1,
+            img: 16,
+            base_c: 16,
+            levels: 2,
+            time_dim: 32,
+        }
+    }
+}
+
+/// One paper-style U-net block: conv(+time dense on PE_9) then conv with
+/// the block skip fused. Returns the index of the block's output node.
+fn unet_block(b: &mut GraphBuilder, c_in: usize, c_out: usize, time_dim: usize) -> usize {
+    let block_input = b.next_index().checked_sub(1);
+    b.add(Layer::Conv {
+        c_in,
+        c_out,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::Silu,
+        residual: Residual::None,
+        time_dense: Some(time_dim),
+    })
+    .expect("unet block conv1");
+    let residual = match block_input {
+        Some(from) if c_in == c_out => Residual::Identity { from },
+        Some(from) => Residual::Conv { from, stride: 1 },
+        None => Residual::None, // block opens the graph: no skip source
+    };
+    b.add(Layer::Conv {
+        c_in: c_out,
+        c_out,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::None,
+        residual,
+        time_dense: None,
+    })
+    .expect("unet block conv2")
+}
+
+/// Build the U-net graph.
+pub fn unet(cfg: UnetConfig) -> ModelGraph {
+    assert!(cfg.levels >= 1, "need at least one level");
+    assert!(
+        cfg.img % (1 << cfg.levels) == 0,
+        "img {} not divisible by 2^levels",
+        cfg.img
+    );
+    let mut b = GraphBuilder::new(
+        "unet",
+        TensorShape::new(cfg.img_channels, cfg.img, cfg.img),
+    );
+
+    // Stem: lift image to base_c channels.
+    b.add(Layer::Conv {
+        c_in: cfg.img_channels,
+        c_out: cfg.base_c,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::Silu,
+        residual: Residual::None,
+        time_dense: None,
+    })
+    .expect("stem");
+
+    // Encoder.
+    let mut skips = Vec::new();
+    let mut c = cfg.base_c;
+    for lvl in 0..cfg.levels {
+        let c_out = cfg.base_c << lvl;
+        let out = unet_block(&mut b, c, c_out, cfg.time_dim);
+        skips.push(out);
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).expect("down");
+        c = c_out;
+    }
+
+    // Bottleneck.
+    let c_mid = cfg.base_c << cfg.levels;
+    unet_block(&mut b, c, c_mid, cfg.time_dim);
+    c = c_mid;
+
+    // Decoder.
+    for lvl in (0..cfg.levels).rev() {
+        b.add(Layer::Upsample2x).expect("up");
+        let skip = skips[lvl];
+        b.add(Layer::ConcatSkip { from: skip }).expect("concat");
+        let c_skip = cfg.base_c << lvl;
+        let c_out = cfg.base_c << lvl;
+        unet_block(&mut b, c + c_skip, c_out, cfg.time_dim);
+        c = c_out;
+    }
+
+    // Head: project back to image channels (predicts the noise).
+    b.add(Layer::Conv {
+        c_in: c,
+        c_out: cfg.img_channels,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::None,
+        residual: Residual::None,
+        time_dense: None,
+    })
+    .expect("head");
+
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::graph::Layer as L;
+
+    #[test]
+    fn default_unet_shapes() {
+        let g = unet(UnetConfig::default());
+        let last = g.nodes.last().unwrap();
+        assert_eq!(last.out_shape, TensorShape::new(1, 16, 16));
+    }
+
+    #[test]
+    fn every_block_has_time_dense_and_skip() {
+        let g = unet(UnetConfig::default());
+        let time_convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.layer, L::Conv { time_dense: Some(_), .. }))
+            .count();
+        // levels=2: 2 encoder + 1 bottleneck + 2 decoder = 5 blocks
+        assert_eq!(time_convs, 5);
+        assert_eq!(g.parallel_nodes(), 10, "conv1 (time) + conv2 (skip) per block");
+    }
+
+    #[test]
+    fn concat_adds_skip_channels() {
+        let g = unet(UnetConfig::default());
+        let mut seen = 0;
+        for n in &g.nodes {
+            if let L::ConcatSkip { from } = n.layer {
+                assert_eq!(
+                    n.out_shape.c,
+                    n.in_shape.c + g.nodes[from].out_shape.c
+                );
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 2, "one concat per decoder level");
+    }
+
+    #[test]
+    fn deeper_unet_builds() {
+        let g = unet(UnetConfig {
+            img: 32,
+            levels: 3,
+            base_c: 8,
+            ..Default::default()
+        });
+        assert!(g.total_macs() > 0);
+        assert_eq!(g.nodes.last().unwrap().out_shape.h, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn rejects_odd_resolution() {
+        let _ = unet(UnetConfig {
+            img: 18,
+            levels: 2,
+            ..Default::default()
+        });
+    }
+}

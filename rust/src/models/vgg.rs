@@ -1,0 +1,97 @@
+//! VGG-16 (Simonyan & Zisserman) — the paper's *series* evaluation model.
+//! All 3x3/s1/p1 convs + 2x2 max-pools + 3 dense layers; no parallel
+//! structure, so PE_9 only performs data-reuse service (Fig 21a).
+
+use super::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
+
+fn conv3(c_in: usize, c_out: usize) -> Layer {
+    Layer::Conv {
+        c_in,
+        c_out,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::Relu,
+        residual: Residual::None,
+        time_dense: None,
+    }
+}
+
+/// VGG-16 for `img` x `img` RGB inputs with `classes` outputs.
+/// The canonical configuration is `vgg16(224, 1000)`.
+pub fn vgg16(img: usize, classes: usize) -> ModelGraph {
+    assert!(img % 32 == 0, "vgg16 needs input divisible by 32, got {img}");
+    let mut b = GraphBuilder::new("vgg16", TensorShape::new(3, img, img));
+    let blocks: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut c_in = 3;
+    for &(c_out, reps) in blocks {
+        for _ in 0..reps {
+            b.add(conv3(c_in, c_out)).expect("vgg conv");
+            c_in = c_out;
+        }
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).expect("vgg pool");
+    }
+    let spatial = img / 32;
+    b.add(Layer::Dense {
+        in_f: 512 * spatial * spatial,
+        out_f: 4096,
+        act: Act::Relu,
+    })
+    .expect("fc1");
+    b.add(Layer::Dense {
+        in_f: 4096,
+        out_f: 4096,
+        act: Act::Relu,
+    })
+    .expect("fc2");
+    b.add(Layer::Dense {
+        in_f: 4096,
+        out_f: classes,
+        act: Act::None,
+    })
+    .expect("fc3");
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_224_structure() {
+        let g = vgg16(224, 1000);
+        // 13 convs + 5 pools + 3 dense = 21 nodes
+        assert_eq!(g.nodes.len(), 21);
+        assert_eq!(g.conv_indices().len(), 13);
+        assert_eq!(g.parallel_nodes(), 0, "VGG is a pure series model");
+    }
+
+    #[test]
+    fn vgg16_224_macs_match_literature() {
+        let g = vgg16(224, 1000);
+        // VGG-16 @224 is ~15.5 G MACs (30.9 GFLOPs at 2 ops/MAC)
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((15.2..15.8).contains(&gmacs), "VGG-16 GMACs = {gmacs}");
+    }
+
+    #[test]
+    fn vgg16_weights_match_literature() {
+        let g = vgg16(224, 1000);
+        // ~138 M parameters
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((135.0..142.0).contains(&m), "VGG-16 params = {m} M");
+    }
+
+    #[test]
+    fn small_input_variant() {
+        let g = vgg16(32, 10);
+        assert_eq!(g.nodes.len(), 21);
+        assert_eq!(g.nodes.last().unwrap().out_shape.c, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible by 32")]
+    fn rejects_bad_input_size() {
+        let _ = vgg16(100, 10);
+    }
+}

@@ -1,0 +1,133 @@
+//! Q8.8 fixed point: the numeric format of the simulated datapath.
+
+/// Number of fractional bits in the Q8.8 format.
+pub const FRAC_BITS: u32 = 8;
+/// Fixed-point representation of 1.0.
+pub const ONE: i16 = 1 << FRAC_BITS;
+
+/// A Q8.8 fixed-point value stored in an `i16`, as held in the chip's
+/// input/weight registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fixed(pub i16);
+
+impl Fixed {
+    pub const ZERO: Fixed = Fixed(0);
+    pub const MAX: Fixed = Fixed(i16::MAX);
+    pub const MIN: Fixed = Fixed(i16::MIN);
+
+    /// Quantize an `f32` with round-to-nearest and saturation.
+    pub fn from_f32(x: f32) -> Self {
+        let scaled = (x * ONE as f32).round();
+        Fixed(scaled.clamp(i16::MIN as f32, i16::MAX as f32) as i16)
+    }
+
+    /// Dequantize back to `f32`.
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / ONE as f32
+    }
+
+    /// True iff the stored pattern is exactly zero — the condition the
+    /// zero-gate unit detects to clock-gate the multiplier.
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// 16x16 -> 32-bit product, as produced by the PE multiplier.
+    /// The product of two Q8.8 values is Q16.16 in an i32.
+    #[inline]
+    pub fn mul_wide(self, rhs: Fixed) -> i32 {
+        self.0 as i32 * rhs.0 as i32
+    }
+
+    /// Saturating writeback of a Q16.16 accumulator to Q8.8.
+    pub fn from_acc(acc: i64) -> Fixed {
+        // acc is Q16.16 (possibly grown by accumulation); shift with
+        // round-to-nearest, then saturate into i16.
+        let rounded = (acc + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        Fixed(rounded.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    /// Saturating add in Q8.8 (the residual adder near the PEs).
+    pub fn sat_add(self, rhs: Fixed) -> Fixed {
+        Fixed(self.0.saturating_add(rhs.0))
+    }
+}
+
+/// Quantize an f32 slice.
+pub fn quantize(xs: &[f32]) -> Vec<Fixed> {
+    xs.iter().map(|&x| Fixed::from_f32(x)).collect()
+}
+
+/// Dequantize a Fixed slice.
+pub fn dequantize(xs: &[Fixed]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, -0.25, 3.125, -7.875] {
+            let q = Fixed::from_f32(x);
+            assert!(
+                (q.to_f32() - x).abs() <= 1.0 / ONE as f32 / 2.0 + 1e-6,
+                "{x} -> {}",
+                q.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        assert_eq!(Fixed::from_f32(1000.0), Fixed::MAX);
+        assert_eq!(Fixed::from_f32(-1000.0), Fixed::MIN);
+    }
+
+    #[test]
+    fn zero_detection() {
+        assert!(Fixed::from_f32(0.0).is_zero());
+        assert!(!Fixed::from_f32(0.01).is_zero());
+        // values below half an LSB quantize to zero -> gated
+        assert!(Fixed::from_f32(0.001).is_zero());
+    }
+
+    #[test]
+    fn mac_matches_float_within_lsb() {
+        let a = Fixed::from_f32(1.5);
+        let b = Fixed::from_f32(-2.25);
+        let acc = a.mul_wide(b) as i64; // Q16.16
+        let back = Fixed::from_acc(acc).to_f32();
+        assert!((back - (1.5 * -2.25)).abs() < 2.0 / ONE as f32, "{back}");
+    }
+
+    #[test]
+    fn accumulate_nine_products() {
+        // a 3x3 window of 0.5 * 0.5 = nine products of 0.25 -> 2.25
+        let x = Fixed::from_f32(0.5);
+        let w = Fixed::from_f32(0.5);
+        let mut acc: i64 = 0;
+        for _ in 0..9 {
+            acc += x.mul_wide(w) as i64;
+        }
+        assert!((Fixed::from_acc(acc).to_f32() - 2.25).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        assert_eq!(Fixed::MAX.sat_add(Fixed::from_f32(1.0)), Fixed::MAX);
+        let a = Fixed::from_f32(1.0).sat_add(Fixed::from_f32(2.0));
+        assert!((a.to_f32() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantize_dequantize_slice() {
+        let xs = [0.0f32, 0.5, -0.5, 2.0];
+        let back = dequantize(&quantize(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-2);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Fixed-point arithmetic matching the chip's 16-bit datapath.
+//!
+//! The paper sets "the bit-width of weight, input images data, and bias
+//! data ... to 16 bits fixed point" (§IV). We use Q8.8 (1 sign + 7 integer
+//! + 8 fraction bits) with a 32-bit accumulator and saturating writeback —
+//! the standard arrangement for a 16x16 MAC datapath.
+
+mod fixed;
+
+pub use fixed::{dequantize, quantize, Fixed, FRAC_BITS, ONE};

@@ -1,0 +1,353 @@
+//! Figures 20-25: the paper's evaluation plots, regenerated as data
+//! series (printed as aligned text + ASCII bars).
+
+use crate::baselines::{carla, mmcn};
+use crate::compiler::analyze_graph;
+use crate::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
+use crate::sim::array::AcceleratorConfig;
+use crate::sim::energy::CAL_40NM;
+
+use super::render_table;
+use super::tables::DEFAULT_SPARSITY;
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(n), ".".repeat(width - n))
+}
+
+/// Fig 19: dataflow comparison — traditional serialized schedule vs the
+/// SF-MMCN schedule, as an ASCII waveform (the paper draws this as a
+/// timing diagram). Workload: a residual block (Conv_0 -> Conv_1 with a
+/// skip), 3x3 filters, one 8-output group per conv.
+pub fn fig19() -> (String, (u64, u64)) {
+    use crate::sim::trace::Trace;
+    let taps = 9u64;
+    // Traditional (series strategy): conv_0, conv_1, then the residual
+    // add as its own pass (+ the memory round-trip it implies).
+    let mut trad = Trace::new(512);
+    for t in 0..taps {
+        trad.push(t, "Conv_0", "M");
+        trad.push(taps + 1 + t, "Conv_1", "M");
+    }
+    for t in 0..8 {
+        trad.push(2 * (taps + 1) + t, "Residual_0", "A");
+    }
+    let trad_cycles = 2 * (taps + 1) + 8;
+
+    // SF-MMCN: Conv_1 and the residual run in the same cycles — PE_9
+    // serves while PE_1..8 MAC (Fig 6b).
+    let mut sf = Trace::new(512);
+    for t in 0..taps {
+        sf.push(t, "Conv_0", "M");
+        sf.push(taps + 1 + t, "Conv_1", "M");
+        sf.push(taps + 1 + t, "PE_9 serve", "S");
+    }
+    let sf_cycles = 2 * (taps + 1);
+
+    let text = format!(
+        "FIG 19 — dataflow: traditional (serialized) vs SF-MMCN\n\
+         traditional ({trad_cycles} cycles):\n{}\n\
+         SF-MMCN ({sf_cycles} cycles — residual absorbed into Conv_1):\n{}\n\
+         paper shape: the residual pass disappears from the schedule\n",
+        trad.render(trad_cycles + 2),
+        sf.render(sf_cycles + 2)
+    );
+    (text, (trad_cycles, sf_cycles))
+}
+
+/// Fig 20: number of SF-MMCN units vs efficiency factor nu.
+///
+/// nu here follows the paper's design-selection reading: power divided by
+/// utilization *of the full design's hierarchy* — the memory system and
+/// control are sized once, so a small MAC core leaves that hierarchy
+/// under-used ("a small MAC core unbalances the distribution of each
+/// hierarchy", §IV.A). Utilization is therefore normalized against the
+/// shipped 8-unit (72-PE) reference; with it, 2/4 units price badly,
+/// 8 sits near the asymptote and 16 is marginally best — the paper's
+/// exact argument for shipping 8.
+pub fn fig20() -> (String, Vec<(usize, f64)>) {
+    let g = resnet18(224, 1000);
+    const REF_PES: f64 = 72.0;
+    let mut series = Vec::new();
+    for units in [2usize, 4, 8, 16] {
+        let cfg = AcceleratorConfig::with_units(units);
+        let a = analyze_graph(&cfg, &g, DEFAULT_SPARSITY);
+        let rep = CAL_40NM.report(&a.totals, units as u64);
+        let u_ref = a.totals.pe.active_cycles as f64
+            / (a.totals.cycles as f64 * REF_PES);
+        let nu = rep.core_power_w / u_ref;
+        series.push((units, nu));
+    }
+    let max_nu = series.iter().map(|(_, n)| *n).fold(0.0, f64::max);
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(u, nu)| {
+            vec![
+                u.to_string(),
+                format!("{nu:.4}"),
+                bar(nu / max_nu, 40),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "FIG 20 — number of SF-MMCN units vs efficiency factor nu (ResNet-18)\n{}\
+         paper shape: 2 and 4 units unfavourable; 8 good; 16 best nu but\n\
+         worst absolute power/PE count (the paper ships 8)\n",
+        render_table(&["units", "nu (72-PE ref)", ""], &rows)
+    );
+    (text, series)
+}
+
+/// Fig 21: per-conv-layer PE utilization on VGG-16 (a) and ResNet-18 (b).
+pub fn fig21() -> (String, (Vec<f64>, Vec<f64>)) {
+    let cfg = AcceleratorConfig::default();
+    let render = |g: &ModelGraph| -> (Vec<f64>, Vec<Vec<String>>) {
+        let a = analyze_graph(&cfg, g, 0.0);
+        let mut utils = Vec::new();
+        let mut rows = Vec::new();
+        for l in a.layers.iter().filter(|l| l.label.starts_with("conv")) {
+            utils.push(l.u_pe);
+            rows.push(vec![
+                format!("L{}", l.node_idx),
+                l.label.clone(),
+                format!("{:.1}%", l.u_pe * 100.0),
+                bar(l.u_pe, 30),
+            ]);
+        }
+        (utils, rows)
+    };
+    let (vgg_u, vgg_rows) = render(&vgg16(224, 1000));
+    let (rn_u, rn_rows) = render(&resnet18(224, 1000));
+    let text = format!(
+        "FIG 21a — PE utilization per conv layer, VGG-16 @224\n{}\n\
+         FIG 21b — PE utilization per conv layer, ResNet-18 @224\n{}\
+         paper shape: first layer lowest (3-channel input -> 6 of 8 units);\n\
+         series layers ~89% (PE_9 idle); residual layers ~100% (PE_9 serving)\n",
+        render_table(&["layer", "shape", "U_PE", ""], &vgg_rows),
+        render_table(&["layer", "shape", "U_PE", ""], &rn_rows)
+    );
+    (text, (vgg_u, rn_u))
+}
+
+/// Fig 22: cycles to the first conv output vs input size N.
+pub fn fig22() -> (String, Vec<(u64, u64, u64)>) {
+    let mut series = Vec::new();
+    for n in [4u64, 8, 16, 28, 32, 64, 112, 224] {
+        let sf = 9u64; // SF: first outputs after the 9 MAC cycles
+        let ca = carla::first_output_cycles(n, 3);
+        series.push((n, sf, ca));
+    }
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(n, sf, ca)| {
+            vec![
+                n.to_string(),
+                sf.to_string(),
+                ca.to_string(),
+                format!("x{:.1}", *ca as f64 / *sf as f64),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "FIG 22 — cycles to first conv output vs input size (3x3 filter)\n{}\
+         paper shape: SF flat at 9; CARLA 3N, diverging with input size\n",
+        render_table(&["N", "SF-MMCN", "CARLA [15]", "ratio"], &rows)
+    );
+    (text, series)
+}
+
+/// Fig 23: cycles and outputs per filter shape Wh x Ww.
+pub fn fig23() -> (String, Vec<(usize, u64, u64, u64, u64)>) {
+    let mut series = Vec::new();
+    for k in [1usize, 3, 5, 7] {
+        let taps = (k * k) as u64;
+        // SF: one group of 8 self-computed outputs per `taps` cycles
+        let sf_cycles = taps;
+        let sf_outputs = 8u64;
+        // CARLA per the paper: "CARLA only provides one convolution
+        // output in the same cycle [window]" — 1 output per Wh*Ww window
+        let ca_cycles = taps;
+        let ca_outputs = 1u64;
+        series.push((k, sf_cycles, sf_outputs, ca_cycles, ca_outputs));
+    }
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(k, sc, so, cc, co)| {
+            vec![
+                format!("{k}x{k}"),
+                sc.to_string(),
+                so.to_string(),
+                cc.to_string(),
+                co.to_string(),
+                format!("x{:.1}", (*so as f64 / *sc as f64) / (*co as f64 / *cc as f64)),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "FIG 23 — efficiency vs weight shape (outputs delivered per cycle window)\n{}\
+         paper shape: SF delivers a full 8-output group per Wh*Ww cycles at any\n\
+         filter shape; CARLA's row dataflow delivers ~1 output per k cycles\n",
+        render_table(
+            &["WhxWw", "SF cyc", "SF outs", "CARLA cyc", "CARLA outs", "adv"],
+            &rows
+        )
+    );
+    (text, series)
+}
+
+/// Fig 24: latency, MMCN [24] vs SF-MMCN, on series and parallel models.
+pub fn fig24() -> (String, Vec<(String, u64, u64, f64)>) {
+    let cfg = AcceleratorConfig::default();
+    let models: Vec<(&str, ModelGraph)> = vec![
+        ("vgg16@32 (series)", vgg16(32, 10)),
+        ("resnet18@32 (residual)", resnet18(32, 10)),
+        ("unet16 (diffusion)", unet(UnetConfig::default())),
+    ];
+    let mut series = Vec::new();
+    for (name, g) in &models {
+        let sf = analyze_graph(&cfg, g, DEFAULT_SPARSITY).total_cycles();
+        let mm = mmcn::analyze_graph(g, DEFAULT_SPARSITY).counts.cycles;
+        series.push((name.to_string(), sf, mm, mm as f64 / sf as f64));
+    }
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(n, sf, mm, r)| {
+            vec![
+                n.clone(),
+                format!("{sf}"),
+                format!("{mm}"),
+                format!("x{r:.2}"),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "FIG 24 — latency (cycles): MMCN [24] vs SF-MMCN\n{}\
+         paper shape: SF-MMCN latency strictly lower; the gap grows on\n\
+         parallel-structure models (residual / U-net)\n",
+        render_table(&["model", "SF-MMCN", "MMCN", "MMCN/SF"], &rows)
+    );
+    (text, series)
+}
+
+/// Fig 25: per-block throughput of the U-net on SF-MMCN.
+pub fn fig25() -> (String, Vec<(String, f64)>, f64) {
+    let g = unet(UnetConfig::default());
+    let cfg = AcceleratorConfig::default();
+    let a = analyze_graph(&cfg, &g, 0.0);
+    // Block mapping per Fig 14: Block1 = time dense (rides on conv1),
+    // Block2 = conv+act(+time), Block3 = conv(+skip), Block4 = final logic
+    // (the fused skip add). We report per-layer GOPs grouped by kind.
+    let mut series = Vec::new();
+    let mut total_ops = 0.0;
+    let mut total_cycles = 0.0;
+    for l in &a.layers {
+        if !l.label.starts_with("conv") {
+            continue;
+        }
+        let ops = 2.0 * l.macs as f64;
+        let secs = l.cycles as f64 / CAL_40NM.freq_hz;
+        let gops = ops / secs / 1e9;
+        let kind = if l.label.contains("+time") {
+            "B1+B2 (conv+time)"
+        } else if l.label.contains("+skip") {
+            "B3+B4 (conv+skip)"
+        } else {
+            "stem/head"
+        };
+        series.push((format!("{kind} {}", l.label), gops));
+        total_ops += ops;
+        total_cycles += l.cycles as f64;
+    }
+    let combined = total_ops / (total_cycles / CAL_40NM.freq_hz) / 1e9;
+    let max = series.iter().map(|(_, g)| *g).fold(0.0, f64::max);
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(n, g)| vec![n.clone(), format!("{g:.1}"), bar(g / max, 30)])
+        .collect();
+    let text = format!(
+        "FIG 25 — U-net per-block throughput on SF-MMCN (GOPs, datapath accounting)\n{}\
+         combined conv throughput: {combined:.1} GOPs (datapath)\n\
+         paper: 437.976 GOPs under its OP accounting (see EXPERIMENTS.md on\n\
+         the accounting difference); shape: B2/B3 conv blocks dominate,\n\
+         B1/B4 are light\n",
+        render_table(&["block / layer", "GOPs", ""], &rows)
+    );
+    (text, series, combined)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig20_eight_units_beats_2_and_4() {
+        let (_, s) = fig20();
+        let nu: std::collections::HashMap<usize, f64> = s.into_iter().collect();
+        assert!(nu[&8] < nu[&4], "8 units: {} vs 4: {}", nu[&8], nu[&4]);
+        assert!(nu[&8] < nu[&2]);
+        // 16 has the best nu, matching the paper's observation...
+        assert!(nu[&16] <= nu[&8]);
+        // ...but only marginally: the knee is at 8 (why the paper ships 8)
+        let gain_4_to_8 = nu[&4] - nu[&8];
+        let gain_8_to_16 = nu[&8] - nu[&16];
+        assert!(gain_4_to_8 > gain_8_to_16, "diminishing returns after 8");
+    }
+
+    #[test]
+    fn fig21_shapes() {
+        let (_, (vgg, rn)) = fig21();
+        assert_eq!(vgg.len(), 13);
+        assert_eq!(rn.len(), 17);
+        // first layer lowest on both
+        let vgg_min = vgg.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((vgg[0] - vgg_min).abs() < 1e-9, "VGG L1 lowest");
+        let rn_min = rn.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((rn[0] - rn_min).abs() < 1e-9, "ResNet L1 lowest");
+        // VGG series plateau near 8/9
+        for u in &vgg[1..] {
+            assert!((0.84..0.93).contains(u), "{u}");
+        }
+    }
+
+    #[test]
+    fn fig22_sf_flat_carla_linear() {
+        let (_, s) = fig22();
+        for (n, sf, ca) in s {
+            assert_eq!(sf, 9);
+            assert_eq!(ca, 3 * n);
+        }
+    }
+
+    #[test]
+    fn fig23_sf_advantage_constant() {
+        let (_, s) = fig23();
+        for (_, sc, so, cc, co) in s {
+            let adv = (so as f64 / sc as f64) / (co as f64 / cc as f64);
+            assert!(adv >= 8.0 - 1e-9, "SF delivers 8x outputs per window");
+        }
+    }
+
+    #[test]
+    fn fig24_gap_grows_with_parallelism() {
+        let (_, s) = fig24();
+        let vgg_ratio = s[0].3;
+        let unet_ratio = s[2].3;
+        assert!(s.iter().all(|r| r.3 > 1.0), "SF always faster");
+        assert!(unet_ratio > vgg_ratio, "gap grows on the diffusion model");
+    }
+
+    #[test]
+    fn fig25_conv_blocks_dominate() {
+        let (_, series, combined) = fig25();
+        assert!(combined > 10.0, "combined {combined} GOPs");
+        let best = series
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(
+            best.0.contains("B1+B2") || best.0.contains("B3+B4"),
+            "a U-net block layer must dominate, got {}",
+            best.0
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§IV): Tables I-III, Figures 20-25, and the §IV headline ratios.
+//!
+//! Each function returns a rendered text block *and* structured data so
+//! the benches can assert the paper-shape properties (who wins, by what
+//! factor) and EXPERIMENTS.md can record paper-vs-measured side by side.
+
+pub mod figures;
+pub mod tables;
+
+pub mod ablations;
+
+pub use ablations::ablation_suite;
+pub use figures::{fig19, fig20, fig21, fig22, fig23, fig24, fig25};
+pub use tables::{headline_ratios, table1, table2, table3};
+
+/// Right-pad or truncate a cell to a fixed width.
+pub(crate) fn cell(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s[..w].to_string()
+    } else {
+        format!("{s:<w$}")
+    }
+}
+
+/// Render an aligned table from rows of cells.
+pub(crate) fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let hdr: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| cell(h, widths[i]))
+        .collect();
+    out.push_str(&hdr.join("  "));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| cell(c, widths[i]))
+            .collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let s = render_table(
+            &["name", "v"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("longer"));
+    }
+}

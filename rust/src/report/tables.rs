@@ -1,0 +1,370 @@
+//! Tables I, II, III and the §IV headline ratios.
+
+use crate::baselines::{carla, mmcn, pe_array, published};
+use crate::compiler::analyze_graph;
+use crate::models::{resnet18, unet, vgg16, UnetConfig};
+use crate::sim::array::AcceleratorConfig;
+use crate::sim::energy::{PpaReport, CAL_40NM, CAL_40NM_LAYOUT};
+
+use super::render_table;
+
+/// The post-ReLU activation sparsity assumed for full-model energy runs
+/// (typical measured VGG/ResNet mid-network sparsity; the zero-gate unit
+/// is what makes this matter).
+pub const DEFAULT_SPARSITY: f64 = 0.45;
+
+/// Structured Table-I row for the simulated machines.
+#[derive(Debug, Clone)]
+pub struct SimRow {
+    pub name: String,
+    pub pes: u64,
+    pub report: PpaReport,
+}
+
+/// Simulated Table-I data: SF-MMCN + the three baselines on VGG-16 and
+/// ResNet-18 at the given resolution (224 for the paper's setting).
+pub fn table1_sim_rows(img: usize) -> Vec<SimRow> {
+    let vgg = vgg16(img, 1000);
+    let rn = resnet18(img, 1000);
+    let cfg = AcceleratorConfig::default();
+
+    // SF-MMCN: run both models back-to-back (the paper's evaluation set).
+    let mut sf = analyze_graph(&cfg, &vgg, DEFAULT_SPARSITY).totals;
+    let sf_rn = analyze_graph(&cfg, &rn, DEFAULT_SPARSITY).totals;
+    sf.merge_run(&sf_rn);
+    let sf_report = CAL_40NM.report(&sf, cfg.units as u64);
+
+    let mut rows = vec![SimRow {
+        name: "SF-MMCN (sim, this repo)".into(),
+        pes: cfg.total_pes(),
+        report: sf_report,
+    }];
+
+    let mut mm = mmcn::analyze_graph(&vgg, DEFAULT_SPARSITY).counts;
+    mm.merge_run(&mmcn::analyze_graph(&rn, DEFAULT_SPARSITY).counts);
+    rows.push(SimRow {
+        name: "MMCN (sim)".into(),
+        pes: mm.total_pes,
+        report: CAL_40NM.report(&mm, mmcn::MMCN_UNITS as u64),
+    });
+
+    let mut ca = carla::analyze_graph(&vgg).counts;
+    ca.merge_run(&carla::analyze_graph(&rn).counts);
+    rows.push(SimRow {
+        name: "CARLA-like (sim)".into(),
+        pes: ca.total_pes,
+        report: CAL_40NM.report(&ca, carla::CARLA_COLUMNS),
+    });
+
+    let mut pa = pe_array::analyze_graph(&vgg).counts;
+    pa.merge_run(&pe_array::analyze_graph(&rn).counts);
+    rows.push(SimRow {
+        name: "PE-array (sim)".into(),
+        pes: pa.total_pes,
+        report: CAL_40NM.report(&pa, 16),
+    });
+
+    rows
+}
+
+/// Render Table I: simulated rows under the common 40 nm model, then the
+/// as-published rows the paper quotes.
+pub fn table1(img: usize) -> (String, Vec<SimRow>) {
+    let sim = table1_sim_rows(img);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for r in &sim {
+        rows.push(vec![
+            r.name.clone(),
+            format!("{:.0}", r.report.freq_hz / 1e6),
+            r.report.tech.into(),
+            format!("{:.2}", r.report.area_mm2),
+            "16".into(),
+            r.pes.to_string(),
+            format!("{:.1}", r.report.core_power_w * 1e3),
+            format!("{:.1}", r.report.gops),
+            format!("{:.2}k", r.report.gops_per_w / 1e3),
+            format!("{:.1}", r.report.gops_per_mm2),
+            format!("{:.1}%", r.report.u_pe * 100.0),
+            format!("{:.3}", r.report.nu),
+        ]);
+    }
+    rows.push(vec!["--- published rows (quoted, as in the paper) ---".into()]);
+    for p in published::table1_rows() {
+        rows.push(vec![
+            format!("{} {}", p.name, p.reference),
+            p.freq_mhz.into(),
+            p.tech.into(),
+            p.area_mm2.map(|a| format!("{a:.2}")).unwrap_or("n/a".into()),
+            p.precision_bits.into(),
+            p.num_pes.map(|n| n.to_string()).unwrap_or("n/a".into()),
+            p.power_mw.into(),
+            p.throughput_gops.into(),
+            p.energy_eff_gops_w.into(),
+            p.area_eff_gops_mm2
+                .map(|a| format!("{a:.1}"))
+                .unwrap_or("n/a".into()),
+            "-".into(),
+            p.nu.map(|n| format!("{n}")).unwrap_or("-".into()),
+        ]);
+    }
+    let paper = published::paper_this_work();
+    rows.push(vec![
+        format!("{} {}", paper.name, paper.reference),
+        paper.freq_mhz.into(),
+        paper.tech.into(),
+        format!("{:.1}", paper.area_mm2.unwrap()),
+        paper.precision_bits.into(),
+        paper.num_pes.unwrap().to_string(),
+        paper.power_mw.into(),
+        paper.throughput_gops.into(),
+        paper.energy_eff_gops_w.into(),
+        format!("{:.2}", paper.area_eff_gops_mm2.unwrap()),
+        "-".into(),
+        format!("{}", paper.nu.unwrap()),
+    ]);
+    let text = format!(
+        "TABLE I — comparison with other accelerators (VGG-16 + ResNet-18 @ {img})\n{}",
+        render_table(
+            &[
+                "design", "MHz", "tech", "mm2", "bits", "PEs", "mW", "GOPs", "GOPs/W",
+                "GOPs/mm2", "U_PE", "nu"
+            ],
+            &rows
+        )
+    );
+    (text, sim)
+}
+
+/// Table II: operation-efficiency comparison vs CARLA (pixel sweep).
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub pixel: u64,
+    pub carla_cycles_per_conv: u64,
+    pub sf_cycles_per_conv: u64,
+    pub carla_macs_per_cycle: f64,
+    pub sf_macs_per_cycle: f64,
+    pub speedup: f64,
+}
+
+pub fn table2_rows() -> Vec<Table2Row> {
+    // Derivation (see EXPERIMENTS.md): per unit, SF finishes 8 outputs
+    // every 9 cycles -> 8/9 outputs/cycle; CARLA delivers one output per 3
+    // cycles (k = 3). The normalized speedup is (8/9)/(1/3) = 8/3 = 2.67 —
+    // exactly the paper's constant column. The paper's "No. of MAC" column
+    // scales with the row width N; it is the MAC work in flight for an
+    // N-pixel row at each machine's rate.
+    [28u64, 32, 224]
+        .iter()
+        .map(|&n| {
+            let carla_cycles = carla::first_output_cycles(n, 3);
+            let sf_cycles = 9;
+            let carla_rate = n as f64 * 9.0 / (3.0 * n as f64); // 3 MACs/cyc
+            let sf_rate = 8.0; // 8 self-computing PEs per unit
+            Table2Row {
+                pixel: n,
+                carla_cycles_per_conv: carla_cycles,
+                sf_cycles_per_conv: sf_cycles,
+                carla_macs_per_cycle: carla_rate,
+                sf_macs_per_cycle: sf_rate,
+                speedup: sf_rate / carla_rate,
+            }
+        })
+        .collect()
+}
+
+pub fn table2() -> (String, Vec<Table2Row>) {
+    let rows = table2_rows();
+    let table = render_table(
+        &[
+            "pixel",
+            "cycles/CONV [15]",
+            "cycles/CONV SF",
+            "MAC/cyc [15]",
+            "MAC/cyc SF",
+            "speedup (norm)",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.pixel.to_string(),
+                    r.carla_cycles_per_conv.to_string(),
+                    r.sf_cycles_per_conv.to_string(),
+                    format!("{:.0}", r.carla_macs_per_cycle),
+                    format!("{:.0}", r.sf_macs_per_cycle),
+                    format!("x{:.2}", r.speedup),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    (
+        format!(
+            "TABLE II — operation efficiency vs CARLA [15]\n{table}\
+             paper: 84/96/672 vs 9 cycles, speedup x2.67 at every pixel size\n"
+        ),
+        rows,
+    )
+}
+
+/// Table III: the post-layout chip operating point on the U-net workload.
+pub fn table3() -> (String, PpaReport) {
+    let g = unet(UnetConfig::default());
+    let cfg = AcceleratorConfig::default();
+    let a = analyze_graph(&cfg, &g, DEFAULT_SPARSITY);
+    let rep = CAL_40NM_LAYOUT.report(&a.totals, cfg.units as u64);
+    let text = format!(
+        "TABLE III — SF-MMCN chip operating point (post-layout model, U-net workload)\n\
+         {}\n\
+         paper: 40 nm, 200 MHz, 0.9 V, 16-bit, core 0.39 mm2, 116.7 mW total,\n\
+         3.75 GOPs/mW, 3752.36 GOPs/mm2 (paper OP accounting)\n",
+        render_table(
+            &["metric", "measured (sim)"],
+            &[
+                vec!["technology".into(), rep.tech.into()],
+                vec!["frequency".into(), format!("{:.0} MHz", rep.freq_hz / 1e6)],
+                vec!["bit-width".into(), "16 bits".into()],
+                vec!["core area".into(), format!("{:.2} mm2", rep.area_mm2)],
+                vec![
+                    "core power".into(),
+                    format!("{:.1} mW", rep.core_power_w * 1e3)
+                ],
+                vec![
+                    "total power (+DRAM)".into(),
+                    format!("{:.1} mW", rep.total_power_w * 1e3)
+                ],
+                vec!["throughput".into(), format!("{:.1} GOPs", rep.gops)],
+                vec![
+                    "efficiency".into(),
+                    format!("{:.3} GOPs/mW", rep.gops_per_w / 1e3)
+                ],
+                vec![
+                    "area efficiency".into(),
+                    format!("{:.1} GOPs/mm2", rep.gops_per_mm2)
+                ],
+            ]
+        )
+    );
+    (text, rep)
+}
+
+/// §IV headline claims, measured under the consistent simulation model.
+#[derive(Debug, Clone)]
+pub struct Headlines {
+    /// Power reduction vs the parallel PE array (paper: 92%).
+    pub power_reduction_vs_parallel: f64,
+    /// Area reduction vs the parallel PE array (paper: 70%).
+    pub area_reduction_vs_parallel: f64,
+    /// Energy-efficiency ratio vs CARLA-sim (paper quotes 81x against
+    /// CARLA's published 0.31 kGOPs/W using the paper's OP accounting).
+    pub eff_ratio_vs_carla_sim: f64,
+    /// Area-efficiency ratio vs CARLA published (paper: 18.42x).
+    pub area_eff_ratio_vs_carla_published: f64,
+    /// nu ratio CARLA-sim / SF-sim (paper: 82.3 / 0.02).
+    pub nu_ratio_vs_carla_sim: f64,
+}
+
+pub fn headline_ratios(img: usize) -> (String, Headlines) {
+    let sim = table1_sim_rows(img);
+    let sf = &sim[0].report;
+    let carla_sim = &sim[2].report;
+    let pa = &sim[3].report;
+    let carla_pub_area_eff = published::table1_rows()[0].area_eff_gops_mm2.unwrap();
+    let h = Headlines {
+        power_reduction_vs_parallel: 1.0 - sf.core_power_w / pa.core_power_w,
+        area_reduction_vs_parallel: 1.0 - sf.area_mm2 / pa.area_mm2,
+        eff_ratio_vs_carla_sim: sf.gops_per_w / carla_sim.gops_per_w,
+        area_eff_ratio_vs_carla_published: sf.gops_per_mm2 / carla_pub_area_eff,
+        nu_ratio_vs_carla_sim: carla_sim.nu / sf.nu,
+    };
+    let text = format!(
+        "HEADLINE RATIOS (consistent simulation accounting)\n\
+         power reduction vs parallel PE array: {:.0}%   (paper: 92%)\n\
+         area  reduction vs parallel PE array: {:.0}%   (paper: 70%)\n\
+         energy-eff ratio vs CARLA-sim:        {:.1}x  (paper: 81x, using its OP accounting)\n\
+         area-eff ratio vs CARLA published:    {:.1}x  (paper: 18.42x)\n\
+         nu ratio CARLA-sim / SF-sim:          {:.0}x  (paper: 82.3/0.02 = 4115x)\n",
+        h.power_reduction_vs_parallel * 100.0,
+        h.area_reduction_vs_parallel * 100.0,
+        h.eff_ratio_vs_carla_sim,
+        h.area_eff_ratio_vs_carla_published,
+        h.nu_ratio_vs_carla_sim,
+    );
+    (text, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper_numbers() {
+        let rows = table2_rows();
+        assert_eq!(rows[0].carla_cycles_per_conv, 84);
+        assert_eq!(rows[1].carla_cycles_per_conv, 96);
+        assert_eq!(rows[2].carla_cycles_per_conv, 672);
+        for r in &rows {
+            assert_eq!(r.sf_cycles_per_conv, 9);
+            assert!((r.speedup - 8.0 / 3.0).abs() < 1e-9, "x2.67 exactly");
+        }
+    }
+
+    #[test]
+    fn table1_sim_sf_power_near_paper() {
+        let sim = table1_sim_rows(32); // small img for test speed
+        let sf = &sim[0].report;
+        let mw = sf.core_power_w * 1e3;
+        assert!((8.0..30.0).contains(&mw), "SF core power {mw} mW");
+        assert!((1.7..2.1).contains(&sf.area_mm2), "area {}", sf.area_mm2);
+    }
+
+    #[test]
+    fn table1_sf_wins_every_fom() {
+        let sim = table1_sim_rows(32);
+        let sf = &sim[0].report;
+        for other in &sim[1..] {
+            assert!(
+                sf.gops_per_w > other.report.gops_per_w,
+                "SF must win GOPs/W vs {}",
+                other.name
+            );
+            // area efficiency: the paper's claim is vs CARLA (18.42x);
+            // vs the parallel array the claim is raw area/power reduction
+            // (covered by headline_shapes_hold).
+            if other.name.starts_with("CARLA") {
+                assert!(
+                    sf.gops_per_mm2 > other.report.gops_per_mm2,
+                    "SF must win GOPs/mm2 vs {}",
+                    other.name
+                );
+            }
+            // nu: SF beats the traditional arrays. MMCN-sim is exempt:
+            // the published MMCN nu (0.11) reflects a measured ~3%
+            // utilization our charitable model does not reproduce — see
+            // EXPERIMENTS.md "MMCN nu" note.
+            if other.name != "MMCN (sim)" {
+                assert!(
+                    sf.nu < other.report.nu,
+                    "SF must have the smallest nu vs {}",
+                    other.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn headline_shapes_hold() {
+        let (_, h) = headline_ratios(32);
+        assert!(h.power_reduction_vs_parallel > 0.6, "{h:?}");
+        assert!(h.area_reduction_vs_parallel > 0.55, "{h:?}");
+        assert!(h.eff_ratio_vs_carla_sim > 3.0, "{h:?}");
+        assert!(h.nu_ratio_vs_carla_sim > 40.0, "{h:?}");
+    }
+
+    #[test]
+    fn table3_operating_point() {
+        let (text, rep) = table3();
+        assert!(text.contains("TABLE III"));
+        assert!((0.3..0.6).contains(&rep.area_mm2), "core {}", rep.area_mm2);
+        assert_eq!(rep.freq_hz, 200e6);
+    }
+}

@@ -1,0 +1,105 @@
+//! Artifact discovery: map artifact names to `artifacts/*.hlo.txt` files
+//! produced by `make artifacts` (python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// Description of one AOT artifact the runtime may load.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Logical name, e.g. `"unet_denoise_16"`.
+    pub name: String,
+    /// File path, e.g. `artifacts/unet_denoise_16.hlo.txt`.
+    pub path: PathBuf,
+}
+
+/// A directory of `*.hlo.txt` artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    /// The default store: `$SF_MMCN_ARTIFACTS` or `./artifacts`.
+    pub fn default_store() -> Self {
+        let root = std::env::var("SF_MMCN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(root)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path for a named artifact (does not check existence).
+    pub fn path_for(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Resolve a named artifact, failing with a build hint if missing.
+    pub fn resolve(&self, name: &str) -> Result<ArtifactSpec> {
+        let path = self.path_for(name);
+        if !path.exists() {
+            bail!(
+                "artifact `{name}` not found at {} — run `make artifacts` first",
+                path.display()
+            );
+        }
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            path,
+        })
+    }
+
+    /// Enumerate all artifacts present in the store.
+    pub fn list(&self) -> Result<Vec<ArtifactSpec>> {
+        let mut out = Vec::new();
+        if !self.root.exists() {
+            return Ok(out);
+        }
+        for entry in std::fs::read_dir(&self.root)? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    out.push(ArtifactSpec {
+                        name: stem.to_string(),
+                        path: path.clone(),
+                    });
+                }
+            }
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_naming() {
+        let s = ArtifactStore::new("/tmp/arts");
+        assert_eq!(
+            s.path_for("unet"),
+            PathBuf::from("/tmp/arts/unet.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_artifact_hints_make() {
+        let s = ArtifactStore::new("/nonexistent-dir-xyz");
+        let err = s.resolve("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn list_empty_when_absent() {
+        let s = ArtifactStore::new("/nonexistent-dir-xyz");
+        assert!(s.list().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,210 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! One [`Executor`] holds the PJRT client plus every compiled executable
+//! keyed by artifact name. All jax functions are lowered with
+//! `return_tuple=True`, so execution results are unwrapped as tuples.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A host-side tensor: row-major `f32` data plus its shape.
+///
+/// This is the only tensor type that crosses the runtime boundary; the
+/// simulator works in fixed-point (`crate::quant`) and converts at the edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorBuf {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        let lit = xla::Literal::vec1(&self.data);
+        if dims.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims_i64)?)
+        }
+    }
+}
+
+/// Compiled-executable cache over a single PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a PJRT CPU client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// True if an executable has been loaded under `name`.
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute artifact `name` on the given inputs; returns the tuple of
+    /// outputs as host tensors.
+    pub fn run(&self, name: &str, inputs: &[TensorBuf]) -> Result<Vec<TensorBuf>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.execute_refs(name, &refs)
+    }
+
+    /// Pre-convert static inputs (e.g. model weights) to device literals
+    /// once, so the serving hot loop only converts the per-step tensors.
+    /// §Perf: cut the U-net denoise step's host-side input preparation
+    /// from 39 tensors (~530 KB) to 6 small ones per step.
+    pub fn prepare(&self, tensors: &[TensorBuf]) -> Result<PreparedInputs> {
+        Ok(PreparedInputs {
+            lits: tensors
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Execute with `dynamic` per-call inputs followed by `prepared`
+    /// static inputs (in artifact argument order: dynamic first).
+    pub fn run_prepared(
+        &self,
+        name: &str,
+        dynamic: &[TensorBuf],
+        prepared: &PreparedInputs,
+    ) -> Result<Vec<TensorBuf>> {
+        let dyn_lits: Vec<xla::Literal> = dynamic
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> =
+            dyn_lits.iter().chain(prepared.lits.iter()).collect();
+        self.execute_refs(name, &refs)
+    }
+
+    fn execute_refs(&self, name: &str, refs: &[&xla::Literal]) -> Result<Vec<TensorBuf>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not loaded"))?;
+        let mut result = exe.execute::<&xla::Literal>(refs)?[0][0].to_literal_sync()?;
+        // All artifacts are lowered with return_tuple=True.
+        let parts = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            out.push(TensorBuf { shape: dims, data });
+        }
+        Ok(out)
+    }
+}
+
+/// Pre-converted static inputs (see [`Executor::prepare`]).
+pub struct PreparedInputs {
+    lits: Vec<xla::Literal>,
+}
+
+impl PreparedInputs {
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_buf_shape_checked() {
+        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 4]).is_ok());
+        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_buf_zeros() {
+        let t = TensorBuf::zeros(&[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+}

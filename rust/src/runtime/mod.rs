@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (not a serialized `HloModuleProto`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactSpec, ArtifactStore};
+pub use executor::{Executor, PreparedInputs, TensorBuf};

@@ -1,0 +1,342 @@
+//! Event-energy + area model, calibrated to the paper's TSMC 40 nm numbers.
+//!
+//! The paper evaluates silicon (Design Compiler synthesis + Innovus P&R).
+//! We cannot tape out, so every architecture simulated in this crate is
+//! priced by the *same* event-energy model below; the paper's headline
+//! claims are ratios between architectures, and ratios survive this
+//! substitution (see DESIGN.md §1).
+//!
+//! Calibration targets (Table I, "This work" column):
+//! 40 nm, 400 MHz, 72 PEs, 16-bit — core power ~= 18 mW, area ~= 1.9 mm²,
+//! nu ~= 0.02. Sanity: 18 mW / 400 MHz = 45 pJ per cycle for the whole
+//! core; with 72 MACs/cycle that implies ~0.45 pJ/MAC + buffers + control,
+//! which is squarely in the published range for 16-bit MACs at 40 nm.
+//!
+//! nu (eq. 4) is defined as `P_total [W] / U_PE [fraction]`: this is the
+//! only reading consistent with every ratio in Table I (SF-MMCN:
+//! 0.018 W / 0.90 = 0.02; CARLA: 0.247 W / 0.003 = 82.3).
+
+use super::memory::MemoryStats;
+use super::pe::PeStats;
+use super::unit::UnitStats;
+
+/// Per-event energies (picojoules) and per-block areas (mm²).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Technology label for reports.
+    pub tech: &'static str,
+    /// Clock frequency in Hz.
+    pub freq_hz: f64,
+    // --- event energies, pJ ---
+    /// One 16x16-bit MAC (multiplier + accumulator update).
+    pub e_mac: f64,
+    /// A zero-gated MAC slot (clock + zero-detect only).
+    pub e_gated_mac: f64,
+    /// Residual adder firing.
+    pub e_resadd: f64,
+    /// PE output-register writeback.
+    pub e_writeback: f64,
+    /// 32-bit reuse-register write.
+    pub e_reuse_reg: f64,
+    /// One element (16-bit) read/written at an on-chip SRAM buffer.
+    pub e_sram: f64,
+    /// One element (16-bit) moved to/from off-chip DRAM.
+    pub e_dram: f64,
+    /// Per-unit control overhead per active cycle.
+    pub e_unit_ctrl: f64,
+    /// Top-controller overhead per cycle.
+    pub e_top_ctrl: f64,
+    /// Idle PE per cycle when fine-grained clock gating exists (the
+    /// SF-MMCN zero-gate/mode-gate path).
+    pub e_pe_idle: f64,
+    /// Idle PE per cycle *without* fine-grained gating — the clock tree
+    /// still toggles the PE's registers (traditional arrays like CARLA's
+    /// row-stationary design or a dense PE array).
+    pub e_pe_idle_ungated: f64,
+    /// Static leakage for the whole core, per cycle.
+    pub e_leak_cycle: f64,
+    // --- areas, mm² ---
+    /// One PE (MAC + pipeline counter + zero gate + residual adder + regs).
+    pub a_pe: f64,
+    /// Per-unit overhead (server bus, mode muxes, reuse registers).
+    pub a_unit_overhead: f64,
+    /// Buffers + pooling + activation + top control, per design.
+    pub a_periphery: f64,
+}
+
+/// TSMC 40 nm @ 400 MHz calibration (Table I operating point).
+pub const CAL_40NM: EnergyModel = EnergyModel {
+    tech: "40nm",
+    freq_hz: 400e6,
+    e_mac: 0.38,
+    e_gated_mac: 0.04,
+    e_resadd: 0.08,
+    e_writeback: 0.10,
+    e_reuse_reg: 0.08,
+    e_sram: 0.35,
+    e_dram: 160.0,
+    e_unit_ctrl: 0.30,
+    e_top_ctrl: 1.00,
+    e_pe_idle: 0.02,
+    e_pe_idle_ungated: 0.25,
+    e_leak_cycle: 1.20,
+    a_pe: 0.0125,
+    a_unit_overhead: 0.022,
+    a_periphery: 0.82,
+};
+
+/// TSMC 40 nm @ 200 MHz, 0.9 V post-layout point (Table III). Same event
+/// energies; lower frequency and post-layout density (the paper's Table
+/// III reports a 0.39 mm² placed core vs Table I's 1.9 mm² synthesis
+/// estimate — we carry both operating points).
+pub const CAL_40NM_LAYOUT: EnergyModel = EnergyModel {
+    freq_hz: 200e6,
+    a_pe: 0.0042,
+    a_unit_overhead: 0.008,
+    a_periphery: 0.075,
+    ..CAL_40NM
+};
+
+/// Aggregated event counts for one run (any simulated architecture).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventCounts {
+    /// Wall-clock cycles of the run.
+    pub cycles: u64,
+    /// PEs instantiated in the design (for U_PE and idle pricing).
+    pub total_pes: u64,
+    /// True when the design lacks fine-grained clock gating of idle PEs
+    /// (traditional arrays); idle PEs then cost `e_pe_idle_ungated`.
+    pub coarse_idle: bool,
+    pub pe: PeStats,
+    pub unit: UnitStats,
+    pub mem: MemoryStats,
+}
+
+impl EventCounts {
+    pub fn merge_run(&mut self, o: &EventCounts) {
+        // Sequential composition: cycles add, design size must match.
+        assert_eq!(self.total_pes, o.total_pes, "merging different designs");
+        self.cycles += o.cycles;
+        self.pe.merge(&o.pe);
+        self.unit.merge(&o.unit);
+        self.mem.merge(&o.mem);
+    }
+
+    /// Utilization of PEs (paper eqs. 1-2) as a fraction in [0, 1]:
+    /// active PE-cycles over total PE-cycles.
+    pub fn u_pe(&self) -> f64 {
+        if self.cycles == 0 || self.total_pes == 0 {
+            return 0.0;
+        }
+        self.pe.active_cycles as f64 / (self.cycles as f64 * self.total_pes as f64)
+    }
+
+    /// MAC operations including zero-gated slots — the *model's* MACs
+    /// (gating saves energy, not work).
+    pub fn model_macs(&self) -> u64 {
+        self.pe.mac_slots()
+    }
+}
+
+/// Power/performance/area report for one run under one energy model.
+#[derive(Debug, Clone)]
+pub struct PpaReport {
+    pub tech: &'static str,
+    pub freq_hz: f64,
+    pub cycles: u64,
+    pub runtime_s: f64,
+    /// Core energy (datapath + buffers + control + leakage), joules.
+    pub core_energy_j: f64,
+    /// Off-chip DRAM energy, joules (reported separately: the paper's
+    /// "Power (mW)" rows are core power).
+    pub dram_energy_j: f64,
+    pub core_power_w: f64,
+    pub total_power_w: f64,
+    /// Giga-ops (1 MAC = 2 ops) per second, from model MACs over runtime.
+    pub gops: f64,
+    pub gops_per_w: f64,
+    pub area_mm2: f64,
+    pub gops_per_mm2: f64,
+    /// PE utilization, fraction.
+    pub u_pe: f64,
+    /// Efficiency factor nu = P_total[W] / U_PE (paper eq. 4).
+    pub nu: f64,
+}
+
+impl EnergyModel {
+    /// Area of a design with `units` server-flow units of `pes_per_unit`
+    /// PEs (baselines pass their own organisations through here too).
+    pub fn area_mm2(&self, total_pes: u64, units: u64) -> f64 {
+        self.a_pe * total_pes as f64
+            + self.a_unit_overhead * units as f64
+            + self.a_periphery
+    }
+
+    /// Core energy (pJ) for the given counts — everything but DRAM.
+    pub fn core_energy_pj(&self, c: &EventCounts) -> f64 {
+        let pe = &c.pe;
+        let u = &c.unit;
+        let m = &c.mem;
+        let idle_pe_cycles = pe.idle_cycles as f64
+            + (c.total_pes as f64 * c.cycles as f64 - pe.active_cycles as f64 - pe.idle_cycles as f64)
+                .max(0.0); // PEs outside any group are also idle-clocked
+        let e_idle = if c.coarse_idle {
+            self.e_pe_idle_ungated
+        } else {
+            self.e_pe_idle
+        };
+        pe.macs as f64 * self.e_mac
+            + pe.gated_macs as f64 * self.e_gated_mac
+            + pe.residual_adds as f64 * self.e_resadd
+            + pe.writebacks as f64 * self.e_writeback
+            + u.reuse_reg_writes as f64 * self.e_reuse_reg
+            // core-issued SRAM reads (input taps + weight broadcasts) plus
+            // the memory system's fills/spills
+            + (u.buffer_reads + u.weight_reads) as f64 * self.e_sram
+            + (m.buffer_traffic() as f64) * self.e_sram
+            + idle_pe_cycles * e_idle
+            + u.cycles as f64 * self.e_unit_ctrl
+            + c.cycles as f64 * (self.e_top_ctrl + self.e_leak_cycle)
+    }
+
+    /// DRAM energy (pJ).
+    pub fn dram_energy_pj(&self, c: &EventCounts) -> f64 {
+        c.mem.dram_traffic() as f64 * self.e_dram
+    }
+
+    /// Build the full PPA report for a run.
+    pub fn report(&self, c: &EventCounts, units: u64) -> PpaReport {
+        let runtime_s = c.cycles as f64 / self.freq_hz;
+        let core_pj = self.core_energy_pj(c);
+        let dram_pj = self.dram_energy_pj(c);
+        let core_energy_j = core_pj * 1e-12;
+        let dram_energy_j = dram_pj * 1e-12;
+        let core_power_w = if runtime_s > 0.0 {
+            core_energy_j / runtime_s
+        } else {
+            0.0
+        };
+        let total_power_w = if runtime_s > 0.0 {
+            (core_energy_j + dram_energy_j) / runtime_s
+        } else {
+            0.0
+        };
+        let ops = 2.0 * c.model_macs() as f64;
+        let gops = if runtime_s > 0.0 {
+            ops / runtime_s / 1e9
+        } else {
+            0.0
+        };
+        let area = self.area_mm2(c.total_pes, units);
+        let u_pe = c.u_pe();
+        PpaReport {
+            tech: self.tech,
+            freq_hz: self.freq_hz,
+            cycles: c.cycles,
+            runtime_s,
+            core_energy_j,
+            dram_energy_j,
+            core_power_w,
+            total_power_w,
+            gops,
+            gops_per_w: if core_power_w > 0.0 { gops / core_power_w } else { 0.0 },
+            area_mm2: area,
+            gops_per_mm2: if area > 0.0 { gops / area } else { 0.0 },
+            u_pe,
+            nu: if u_pe > 0.0 { core_power_w / u_pe } else { f64::INFINITY },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic fully-busy run: 72 PEs MAC-ing every cycle.
+    fn busy_counts(cycles: u64) -> EventCounts {
+        let mut c = EventCounts {
+            cycles,
+            total_pes: 72,
+            ..Default::default()
+        };
+        c.pe.active_cycles = 72 * cycles;
+        c.pe.macs = 72 * cycles;
+        c.pe.writebacks = 8 * cycles / 9 * 8;
+        // reuse-reduced buffer traffic: ~3.33 reads/cycle/unit x 8 units
+        c.mem.input_buf_reads = cycles * 27;
+        c.mem.weight_buf_reads = cycles * 8;
+        c.unit.cycles = 8 * cycles;
+        c
+    }
+
+    #[test]
+    fn calibrated_core_power_near_18mw() {
+        let c = busy_counts(1_000_000);
+        let r = CAL_40NM.report(&c, 8);
+        let mw = r.core_power_w * 1e3;
+        assert!(
+            (14.0..=22.0).contains(&mw),
+            "core power {mw} mW out of the Table-I band"
+        );
+    }
+
+    #[test]
+    fn calibrated_area_near_1_9mm2() {
+        let a = CAL_40NM.area_mm2(72, 8);
+        assert!((1.7..=2.1).contains(&a), "area {a} mm²");
+    }
+
+    #[test]
+    fn u_pe_full_when_all_pes_always_active() {
+        let c = busy_counts(1000);
+        assert!((c.u_pe() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nu_matches_paper_magnitude() {
+        let c = busy_counts(1_000_000);
+        let r = CAL_40NM.report(&c, 8);
+        // paper: nu = 0.02 at 18 mW / 0.9 utilization
+        assert!(r.nu > 0.005 && r.nu < 0.05, "nu = {}", r.nu);
+    }
+
+    #[test]
+    fn gops_counts_two_ops_per_mac() {
+        let c = busy_counts(400_000_000); // one second at 400 MHz
+        let r = CAL_40NM.report(&c, 8);
+        // 72 MACs/cycle * 2 ops * 400 MHz = 57.6 GOPs
+        assert!((r.gops - 57.6).abs() < 0.1, "gops = {}", r.gops);
+    }
+
+    #[test]
+    fn dram_separated_from_core() {
+        let mut c = busy_counts(1000);
+        c.mem.dram_reads = 1_000_000;
+        let r = CAL_40NM.report(&c, 8);
+        assert!(r.total_power_w > r.core_power_w);
+        assert!(r.dram_energy_j > 0.0);
+    }
+
+    #[test]
+    fn zero_cycle_run_is_safe() {
+        let c = EventCounts {
+            total_pes: 72,
+            ..Default::default()
+        };
+        let r = CAL_40NM.report(&c, 8);
+        assert_eq!(r.gops, 0.0);
+        assert_eq!(r.core_power_w, 0.0);
+    }
+
+    #[test]
+    fn gating_saves_energy() {
+        let dense = busy_counts(100_000);
+        let mut sparse = busy_counts(100_000);
+        // move half the MACs to gated slots
+        sparse.pe.macs /= 2;
+        sparse.pe.gated_macs = dense.pe.macs / 2;
+        let ed = CAL_40NM.core_energy_pj(&dense);
+        let es = CAL_40NM.core_energy_pj(&sparse);
+        assert!(es < ed * 0.85, "gating should cut energy: {es} vs {ed}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Memory-hierarchy traffic accounting: off-chip DRAM, on-chip input /
+//! weight / output SRAM buffers (paper Fig 18).
+//!
+//! The paper (citing [19]) notes that "data transmission between core and
+//! memories has the most power of a chip" — the SF data-reuse registers
+//! exist precisely to cut buffer traffic, and the serialized-parallel
+//! strategies differ mainly in DRAM refetches. So the simulator tracks
+//! every element moved at each level; the energy model prices them.
+
+/// Traffic counters in *elements* (one element = one 16-bit word).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    /// Elements read from off-chip DRAM.
+    pub dram_reads: u64,
+    /// Elements written to off-chip DRAM.
+    pub dram_writes: u64,
+    /// Elements read from the on-chip input buffer.
+    pub input_buf_reads: u64,
+    /// Elements written into the on-chip input buffer (fills from DRAM).
+    pub input_buf_writes: u64,
+    /// Elements read from the on-chip weight buffer.
+    pub weight_buf_reads: u64,
+    /// Elements written into the on-chip weight buffer.
+    pub weight_buf_writes: u64,
+    /// Elements written to the output buffer.
+    pub output_buf_writes: u64,
+    /// Elements read back from the output buffer (e.g. residual skip reads).
+    pub output_buf_reads: u64,
+}
+
+impl MemoryStats {
+    pub fn merge(&mut self, o: &MemoryStats) {
+        self.dram_reads += o.dram_reads;
+        self.dram_writes += o.dram_writes;
+        self.input_buf_reads += o.input_buf_reads;
+        self.input_buf_writes += o.input_buf_writes;
+        self.weight_buf_reads += o.weight_buf_reads;
+        self.weight_buf_writes += o.weight_buf_writes;
+        self.output_buf_writes += o.output_buf_writes;
+        self.output_buf_reads += o.output_buf_reads;
+    }
+
+    /// Total off-chip traffic in elements.
+    pub fn dram_traffic(&self) -> u64 {
+        self.dram_reads + self.dram_writes
+    }
+
+    /// Total on-chip buffer traffic in elements.
+    pub fn buffer_traffic(&self) -> u64 {
+        self.input_buf_reads
+            + self.input_buf_writes
+            + self.weight_buf_reads
+            + self.weight_buf_writes
+            + self.output_buf_writes
+            + self.output_buf_reads
+    }
+}
+
+/// Double-buffered on-chip memory system with capacity-driven refetch.
+///
+/// Layer inputs that fit in the input buffer are fetched from DRAM once and
+/// re-read from SRAM on every output-channel iteration; inputs that do
+/// not fit are re-streamed from DRAM each iteration (the behaviour that
+/// makes reuse-less designs like MMCN expensive on big parallel layers).
+#[derive(Debug, Clone)]
+pub struct MemorySystem {
+    /// Input buffer capacity in elements.
+    pub input_buf_capacity: u64,
+    /// Weight buffer capacity in elements.
+    pub weight_buf_capacity: u64,
+    pub stats: MemoryStats,
+}
+
+impl MemorySystem {
+    pub fn new(input_buf_capacity: u64, weight_buf_capacity: u64) -> Self {
+        Self {
+            input_buf_capacity,
+            weight_buf_capacity,
+            stats: MemoryStats::default(),
+        }
+    }
+
+    /// Account for streaming a layer's input feature map.
+    ///
+    /// * `ifm_elems` — input feature-map size.
+    /// * `iterations` — output-channel iterations that each need the IFM.
+    /// * `core_reads` — reads the compute core actually issued against the
+    ///   input buffer (already reuse-reduced by the SF registers).
+    pub fn stream_input(&mut self, ifm_elems: u64, iterations: u64, core_reads: u64) {
+        if ifm_elems <= self.input_buf_capacity {
+            // Fits: one DRAM fill, SRAM serves every iteration.
+            self.stats.dram_reads += ifm_elems;
+            self.stats.input_buf_writes += ifm_elems;
+        } else {
+            // Doesn't fit: re-stream from DRAM per iteration.
+            self.stats.dram_reads += ifm_elems * iterations;
+            self.stats.input_buf_writes += ifm_elems * iterations;
+        }
+        self.stats.input_buf_reads += core_reads;
+    }
+
+    /// Account for a layer's weights (always DRAM -> weight buffer once;
+    /// weights are stationary per output-channel iteration).
+    pub fn stream_weights(&mut self, w_elems: u64, core_reads: u64) {
+        if w_elems <= self.weight_buf_capacity {
+            self.stats.dram_reads += w_elems;
+            self.stats.weight_buf_writes += w_elems;
+        } else {
+            // Spill: stream in two passes (ping-pong) — still one DRAM read
+            // per element, but double the buffer writes.
+            self.stats.dram_reads += w_elems;
+            self.stats.weight_buf_writes += 2 * w_elems;
+        }
+        self.stats.weight_buf_reads += core_reads;
+    }
+
+    /// Account for writing a layer's outputs. `spill_to_dram` is true when
+    /// the next consumer cannot keep them on-chip (e.g. final layer or a
+    /// skip connection crossing many layers).
+    pub fn write_output(&mut self, ofm_elems: u64, spill_to_dram: bool) {
+        self.stats.output_buf_writes += ofm_elems;
+        if spill_to_dram {
+            self.stats.dram_writes += ofm_elems;
+        }
+    }
+
+    /// Account for reading a residual skip branch from the output buffer
+    /// (the SF path) — the traffic PE_9 serves.
+    pub fn read_skip(&mut self, elems: u64) {
+        self.stats.output_buf_reads += elems;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitting_input_fetched_once() {
+        let mut m = MemorySystem::new(10_000, 10_000);
+        m.stream_input(5_000, 4, 1_000);
+        assert_eq!(m.stats.dram_reads, 5_000);
+        assert_eq!(m.stats.input_buf_writes, 5_000);
+        assert_eq!(m.stats.input_buf_reads, 1_000);
+    }
+
+    #[test]
+    fn oversized_input_refetched_per_iteration() {
+        let mut m = MemorySystem::new(1_000, 10_000);
+        m.stream_input(5_000, 4, 2_000);
+        assert_eq!(m.stats.dram_reads, 20_000);
+    }
+
+    #[test]
+    fn weights_one_dram_pass_even_on_spill() {
+        let mut m = MemorySystem::new(0, 100);
+        m.stream_weights(1_000, 500);
+        assert_eq!(m.stats.dram_reads, 1_000);
+        assert_eq!(m.stats.weight_buf_writes, 2_000);
+    }
+
+    #[test]
+    fn output_spill_hits_dram() {
+        let mut m = MemorySystem::new(0, 0);
+        m.write_output(100, false);
+        assert_eq!(m.stats.dram_writes, 0);
+        m.write_output(100, true);
+        assert_eq!(m.stats.dram_writes, 100);
+        assert_eq!(m.stats.output_buf_writes, 200);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = MemoryStats {
+            dram_reads: 1,
+            dram_writes: 2,
+            input_buf_reads: 3,
+            input_buf_writes: 4,
+            weight_buf_reads: 5,
+            weight_buf_writes: 6,
+            output_buf_writes: 7,
+            output_buf_reads: 8,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.dram_traffic(), 6);
+        assert_eq!(a.buffer_traffic(), 66);
+    }
+}

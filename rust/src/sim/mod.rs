@@ -1,0 +1,35 @@
+//! Cycle-accurate simulator of the SF-MMCN micro-architecture.
+//!
+//! Hierarchy mirrors the paper's Figures 4, 5 and 18:
+//!
+//! * [`pe`] — one processing element: 16-bit MAC datapath with pipeline
+//!   counter, zero-gate unit, residual adder and output mux (Fig 4).
+//! * [`unit`] — one SF-MMCN unit: PE_1..PE_8 plus the PE_9 "server",
+//!   server-flow mode control (Figs 5-6, 12), small-input split (Fig 11),
+//!   and the 8 x 32-bit data-reuse registers (Fig 17).
+//! * [`array`] — the implementation architecture: N units, TOP CTRL,
+//!   input/weight buffers, pooling + activation units (Fig 18).
+//! * [`memory`] — off-chip DRAM + on-chip buffer traffic accounting.
+//! * [`energy`] — event-energy and area model calibrated to the paper's
+//!   TSMC 40 nm synthesis results (Table I / Table III).
+//! * [`trace`] — optional cycle/event trace (the software analogue of the
+//!   paper's waveform figures 7 and 19a).
+//!
+//! The micro simulator computes *real fixed-point numerics* along with the
+//! cycle/energy counts, so correctness and performance come from the same
+//! code path. Full-network sweeps use the closed-form model in
+//! [`crate::compiler::schedule`], which is property-tested against this
+//! simulator on randomized small layers.
+
+pub mod array;
+pub mod energy;
+pub mod memory;
+pub mod pe;
+pub mod trace;
+pub mod unit;
+
+pub use array::{Accelerator, AcceleratorConfig, LayerRun};
+pub use energy::{EnergyModel, EventCounts, PpaReport, CAL_40NM};
+pub use memory::MemoryStats;
+pub use pe::{Pe, PeMode, PeStats};
+pub use unit::{SfMmcnUnit, UnitMode, UnitStats};

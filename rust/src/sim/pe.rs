@@ -1,0 +1,321 @@
+//! A single SF-MMCN processing element (paper Fig 4).
+//!
+//! The PE owns a 16x16-bit multiplier, a 32-bit accumulator, a pipeline
+//! counter, a zero-gate unit on the activation input, an output register,
+//! and — the SF-MMCN addition — a residual adder plus an output mux that
+//! selects between the plain MAC result and `MAC + residual`.
+//!
+//! Thanks to the pipeline counter a PE *self-computes* a complete
+//! convolution: it consumes one (activation, weight) pair per cycle and
+//! raises `done` after `k` MAC cycles (k = filter taps). The writeback
+//! cycle overlaps the first MAC of the next convolution, giving the
+//! paper's steady-state "8 outputs per 9 cycles" per unit.
+
+use crate::quant::Fixed;
+
+/// Operating mode of a PE, set by the unit's mode-select lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeMode {
+    /// Plain convolution: output <- MAC result.
+    Normal,
+    /// Residual: output <- MAC result + residual input (from PE_9's bus).
+    ResidualAdd,
+    /// PE is clock-gated (e.g. PE_9 during series layers).
+    Idle,
+}
+
+/// Event counters for one PE. Pure data — the energy model prices these.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeStats {
+    /// Cycles in which the PE was enabled (clock running).
+    pub active_cycles: u64,
+    /// Cycles spent clock-gated / idle.
+    pub idle_cycles: u64,
+    /// MAC operations actually executed (multiplier fired).
+    pub macs: u64,
+    /// MAC slots where the zero-gate unit suppressed the multiplier.
+    pub gated_macs: u64,
+    /// Residual-adder firings.
+    pub residual_adds: u64,
+    /// Output-register writebacks.
+    pub writebacks: u64,
+}
+
+impl PeStats {
+    pub fn merge(&mut self, o: &PeStats) {
+        self.active_cycles += o.active_cycles;
+        self.idle_cycles += o.idle_cycles;
+        self.macs += o.macs;
+        self.gated_macs += o.gated_macs;
+        self.residual_adds += o.residual_adds;
+        self.writebacks += o.writebacks;
+    }
+
+    /// Total MAC slots (fired + gated).
+    pub fn mac_slots(&self) -> u64 {
+        self.macs + self.gated_macs
+    }
+}
+
+/// One processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    mode: PeMode,
+    /// Q16.16 accumulator (32-bit in silicon; i64 here so tests can assert
+    /// no silicon-width overflow occurs — see `acc_fits_hw`).
+    acc: i64,
+    /// Pipeline counter: MAC cycles completed for the in-flight conv.
+    counter: u32,
+    /// Number of taps for the in-flight convolution (e.g. 9 for 3x3).
+    taps: u32,
+    /// Latched output of the last completed convolution.
+    out: Fixed,
+    /// Whether `out` is fresh (set by writeback, cleared by take_output).
+    done: bool,
+    pub stats: PeStats,
+}
+
+impl Default for Pe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pe {
+    pub fn new() -> Self {
+        Self {
+            mode: PeMode::Normal,
+            acc: 0,
+            counter: 0,
+            taps: 9,
+            out: Fixed::ZERO,
+            done: false,
+            stats: PeStats::default(),
+        }
+    }
+
+    pub fn set_mode(&mut self, mode: PeMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> PeMode {
+        self.mode
+    }
+
+    /// Begin a convolution of `taps` MAC cycles (filter height x width,
+    /// possibly x channels when accumulating across input channels).
+    pub fn begin_conv(&mut self, taps: u32) {
+        assert!(taps > 0, "convolution needs at least one tap");
+        self.acc = 0;
+        self.counter = 0;
+        self.taps = taps;
+        self.done = false;
+    }
+
+    /// Run a whole convolution worker-major: `begin_conv` + one
+    /// [`Self::mac_cycle`] per tap, without per-call dispatch overhead.
+    /// Identical stats/numerics to the cycle-major path — PEs are
+    /// independent within a group (§Perf hot path).
+    pub fn run_conv_taps(&mut self, window: &[Fixed], weights: &[Fixed]) {
+        debug_assert_eq!(window.len(), weights.len());
+        self.begin_conv(window.len() as u32);
+        let mut acc = self.acc;
+        let mut macs = 0u64;
+        let mut gated = 0u64;
+        for (&x, &w) in window.iter().zip(weights) {
+            if x.is_zero() {
+                gated += 1;
+            } else {
+                acc += x.mul_wide(w) as i64;
+                macs += 1;
+            }
+        }
+        self.acc = acc;
+        self.stats.active_cycles += window.len() as u64;
+        self.stats.macs += macs;
+        self.stats.gated_macs += gated;
+        self.counter = self.taps; // all taps consumed
+        self.finish(Fixed::ZERO);
+    }
+
+    /// One MAC cycle: consume an (activation, weight) pair.
+    ///
+    /// The zero-gate unit checks the *activation* (paper: "if input image
+    /// data is zero, the zero gate unit will turn off a multiplier").
+    /// A gated slot still consumes the cycle — only the multiplier energy
+    /// is saved — which is why gating shows up in power, not cycles.
+    #[inline]
+    pub fn mac_cycle(&mut self, x: Fixed, w: Fixed) {
+        debug_assert!(
+            self.mode != PeMode::Idle,
+            "MAC issued to an idle PE — unit control bug"
+        );
+        self.stats.active_cycles += 1;
+        if x.is_zero() {
+            self.stats.gated_macs += 1;
+        } else {
+            self.acc += x.mul_wide(w) as i64;
+            self.stats.macs += 1;
+        }
+        self.counter += 1;
+        if self.counter == self.taps {
+            // Pipeline writeback: overlaps the next conv's first MAC, so it
+            // costs a register write, not an extra cycle (Fig 7: 10 cycles
+            // for a lone conv, 9 per conv in steady state).
+            self.finish(Fixed::ZERO);
+        }
+    }
+
+    /// Complete the in-flight convolution, applying the residual input if
+    /// the PE is in residual mode. `residual` is the value PE_9 serves on
+    /// the shared bus; ignored in `Normal` mode.
+    fn finish(&mut self, _server_residual: Fixed) {
+        let mac_out = Fixed::from_acc(self.acc);
+        self.out = mac_out;
+        self.done = true;
+        self.stats.writebacks += 1;
+        self.acc = 0;
+        self.counter = 0;
+    }
+
+    /// Apply the residual served by PE_9 (residual modes only). In silicon
+    /// this is the adder stage between the MAC output and the output
+    /// register (Fig 4); it fires in the writeback cycle.
+    pub fn apply_residual(&mut self, residual: Fixed) {
+        debug_assert_eq!(self.mode, PeMode::ResidualAdd);
+        self.out = self.out.sat_add(residual);
+        self.stats.residual_adds += 1;
+    }
+
+    /// One idle (clock-gated) cycle.
+    pub fn idle_cycle(&mut self) {
+        self.stats.idle_cycles += 1;
+    }
+
+    /// True when a finished convolution output is waiting.
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Take the completed output (clears `done`).
+    pub fn take_output(&mut self) -> Fixed {
+        debug_assert!(self.done, "take_output before conv finished");
+        self.done = false;
+        self.out
+    }
+
+    /// MAC cycles completed for the in-flight convolution.
+    pub fn counter(&self) -> u32 {
+        self.counter
+    }
+
+    /// Check the accumulator still fits the silicon's 32-bit register.
+    /// (Q8.8 x Q8.8 products accumulated <= 1024 taps stay well inside.)
+    pub fn acc_fits_hw(&self) -> bool {
+        self.acc >= i32::MIN as i64 && self.acc <= i32::MAX as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx(x: f32) -> Fixed {
+        Fixed::from_f32(x)
+    }
+
+    #[test]
+    fn conv3x3_numerics() {
+        let mut pe = Pe::new();
+        pe.begin_conv(9);
+        // window = all 0.5, weights = all 0.25 -> 9 * 0.125 = 1.125
+        for _ in 0..9 {
+            pe.mac_cycle(fx(0.5), fx(0.25));
+        }
+        assert!(pe.done());
+        let out = pe.take_output().to_f32();
+        assert!((out - 1.125).abs() < 1e-2, "{out}");
+        assert_eq!(pe.stats.macs, 9);
+        assert_eq!(pe.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn zero_gate_skips_multiplier_not_cycle() {
+        let mut pe = Pe::new();
+        pe.begin_conv(9);
+        for i in 0..9 {
+            let x = if i % 3 == 0 { fx(0.0) } else { fx(1.0) };
+            pe.mac_cycle(x, fx(1.0));
+        }
+        assert!(pe.done());
+        assert_eq!(pe.stats.gated_macs, 3);
+        assert_eq!(pe.stats.macs, 6);
+        assert_eq!(pe.stats.active_cycles, 9); // gated slots still cost cycles
+        assert!((pe.take_output().to_f32() - 6.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn residual_mode_adds_served_value() {
+        let mut pe = Pe::new();
+        pe.set_mode(PeMode::ResidualAdd);
+        pe.begin_conv(9);
+        for _ in 0..9 {
+            pe.mac_cycle(fx(1.0), fx(0.5));
+        }
+        assert!(pe.done());
+        pe.apply_residual(fx(2.0));
+        let out = pe.take_output().to_f32();
+        assert!((out - (4.5 + 2.0)).abs() < 1e-2, "{out}");
+        assert_eq!(pe.stats.residual_adds, 1);
+    }
+
+    #[test]
+    fn pipeline_back_to_back_convs() {
+        let mut pe = Pe::new();
+        for conv in 0..5 {
+            pe.begin_conv(9);
+            for _ in 0..9 {
+                pe.mac_cycle(fx(1.0), fx(1.0));
+            }
+            assert!(pe.done(), "conv {conv} not done");
+            let out = pe.take_output().to_f32();
+            assert!((out - 9.0).abs() < 1e-2);
+        }
+        // 5 convs x 9 cycles, no extra writeback cycles in steady state
+        assert_eq!(pe.stats.active_cycles, 45);
+        assert_eq!(pe.stats.writebacks, 5);
+    }
+
+    #[test]
+    fn variable_tap_counts() {
+        for taps in [1u32, 4, 9, 25, 49] {
+            let mut pe = Pe::new();
+            pe.begin_conv(taps);
+            for _ in 0..taps {
+                pe.mac_cycle(fx(1.0), fx(1.0));
+            }
+            assert!(pe.done());
+            assert!((pe.take_output().to_f32() - taps as f32).abs() < taps as f32 * 1e-2);
+        }
+    }
+
+    #[test]
+    fn accumulator_fits_hw_for_deep_channel_convs() {
+        let mut pe = Pe::new();
+        // worst case: 512-channel 3x3 accumulation at max magnitude inputs
+        pe.begin_conv(9 * 64);
+        for _ in 0..9 * 64 {
+            pe.mac_cycle(fx(1.0), fx(1.0));
+            assert!(pe.acc_fits_hw());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "take_output before conv finished")]
+    fn take_before_done_panics_in_debug() {
+        let mut pe = Pe::new();
+        pe.begin_conv(9);
+        pe.mac_cycle(fx(1.0), fx(1.0));
+        let _ = pe.take_output();
+    }
+}

@@ -1,0 +1,112 @@
+//! Cycle/event trace — the software analogue of the paper's waveform
+//! figures (Fig 7 and Fig 19a). Mostly used by the quickstart example and
+//! the dataflow-comparison bench to *show* where the SF cycles go.
+
+use std::fmt::Write as _;
+
+/// One traced event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub lane: String,
+    pub what: String,
+}
+
+/// An append-only trace with a bounded capacity (drops beyond the cap so
+/// full-model runs can keep tracing enabled cheaply).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            events: Vec::new(),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, cycle: u64, lane: &str, what: &str) {
+        if self.events.len() < self.cap {
+            self.events.push(TraceEvent {
+                cycle,
+                lane: lane.to_string(),
+                what: what.to_string(),
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Render an ASCII waveform: one row per lane, one column per cycle.
+    /// Events are marked with the first character of `what`.
+    pub fn render(&self, max_cycles: u64) -> String {
+        let mut lanes: Vec<String> = Vec::new();
+        for e in &self.events {
+            if !lanes.contains(&e.lane) {
+                lanes.push(e.lane.clone());
+            }
+        }
+        let width = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:w$} | cycle 0..{}",
+            "lane",
+            max_cycles.min(120),
+            w = width
+        );
+        for lane in &lanes {
+            let mut row = vec![b'.'; max_cycles.min(120) as usize];
+            for e in self.events.iter().filter(|e| &e.lane == lane) {
+                if (e.cycle as usize) < row.len() {
+                    row[e.cycle as usize] = e.what.bytes().next().unwrap_or(b'*');
+                }
+            }
+            let _ = writeln!(
+                out,
+                "{:w$} | {}",
+                lane,
+                String::from_utf8_lossy(&row),
+                w = width
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_until_cap_then_drops() {
+        let mut t = Trace::new(3);
+        for i in 0..5 {
+            t.push(i, "pe1", "M");
+        }
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn render_contains_lanes_and_marks() {
+        let mut t = Trace::new(100);
+        t.push(0, "PE_1", "M");
+        t.push(1, "PE_1", "M");
+        t.push(0, "PE_9", "S");
+        let s = t.render(10);
+        assert!(s.contains("PE_1"));
+        assert!(s.contains("PE_9"));
+        assert!(s.contains("MM"));
+        assert!(s.contains('S'));
+    }
+}

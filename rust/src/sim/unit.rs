@@ -1,0 +1,780 @@
+//! One SF-MMCN unit: PE_1..PE_8 plus the PE_9 *server* (paper Figs 5-6).
+//!
+//! The unit's whole point is that a parallel branch (residual skip, 1x1
+//! residual conv, or the U-net time-parameter dense layer) completes in the
+//! *same cycles* as the main convolution, because PE_9 prepares/serves the
+//! branch value while PE_1..PE_8 run their MAC pipelines:
+//!
+//! * **Series** (Fig 6a): PE_9 clock-gated; outputs bypass the residual
+//!   adder. Plain conv: 8 outputs per `taps` cycles.
+//! * **ResidualIdentity** (Fig 6b): PE_9 streams the previous conv outputs
+//!   (the skip branch) from its registers to the adders of PE_1..PE_8.
+//! * **ResidualConv** (Fig 6c): PE_9 *computes* the 1x1 residual conv with
+//!   its own MAC and serves the result. A 1x1xC filter is at most C taps
+//!   against the main conv's 9C, so PE_9 always finishes in time — the
+//!   synchronization argument of §III.C.
+//! * **DenseTime** (Figs 14-16): PE_9 runs time-embedding dense MACs while
+//!   PE_1..PE_8 convolve — the U-net block-1/block-2 overlap.
+//! * **Small-input split** (Figs 11-12): for tiny feature maps the PE array
+//!   splits into two 4-PE channel groups; PE_9 serves channel N during the
+//!   first half-taps and channel N+1 during the second.
+//!
+//! Data-reuse registers (Fig 17): 8 x 32-bit registers hold the input
+//! values shared between the overlapping windows of the 8 PEs (upper
+//! 16 bits are free to hold the residual value in residual mode). The unit
+//! counts buffer reads with and without reuse so the memory/energy model
+//! can price the saving.
+
+use crate::quant::Fixed;
+
+use super::pe::{Pe, PeMode, PeStats};
+
+/// Number of worker PEs per unit (PE_1..PE_8).
+pub const WORKERS: usize = 8;
+/// Total PEs per unit including the PE_9 server.
+pub const PES_PER_UNIT: usize = WORKERS + 1;
+
+/// Server-flow operating mode for a convolution group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitMode {
+    /// Plain series convolution; PE_9 idle.
+    Series,
+    /// Residual block without conv on the skip: PE_9 serves stored values.
+    ResidualIdentity,
+    /// Residual block with a 1x1 conv on the skip: PE_9 computes it.
+    ResidualConv,
+    /// U-net block: PE_9 computes time-parameter dense MACs concurrently.
+    DenseTime,
+}
+
+/// Counters for one unit (beyond the per-PE stats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UnitStats {
+    /// Total cycles the unit spent executing groups.
+    pub cycles: u64,
+    /// Convolution outputs produced by PE_1..PE_8.
+    pub conv_outputs: u64,
+    /// Values served by PE_9 over the server bus.
+    pub served_values: u64,
+    /// Input-buffer reads actually issued (with reuse registers).
+    pub buffer_reads: u64,
+    /// Input-buffer reads a reuse-less design would have issued.
+    pub buffer_reads_no_reuse: u64,
+    /// Weight-buffer reads (weights broadcast once per tap to all PEs).
+    pub weight_reads: u64,
+    /// Writes of reused values into the 32-bit reuse registers.
+    pub reuse_reg_writes: u64,
+}
+
+impl UnitStats {
+    pub fn merge(&mut self, o: &UnitStats) {
+        self.cycles += o.cycles;
+        self.conv_outputs += o.conv_outputs;
+        self.served_values += o.served_values;
+        self.buffer_reads += o.buffer_reads;
+        self.buffer_reads_no_reuse += o.buffer_reads_no_reuse;
+        self.weight_reads += o.weight_reads;
+        self.reuse_reg_writes += o.reuse_reg_writes;
+    }
+
+    /// Buffer reads avoided by the reuse registers.
+    pub fn reads_saved(&self) -> u64 {
+        self.buffer_reads_no_reuse - self.buffer_reads
+    }
+}
+
+/// What PE_9 serves during a group.
+#[derive(Debug, Clone)]
+pub enum ServerTask<'a> {
+    /// Nothing (series mode) — PE_9 clock-gated.
+    Idle,
+    /// Serve these skip-branch values (one per worker output).
+    ServeIdentity(&'a [Fixed]),
+    /// Compute a 1x1(xC) residual conv per worker output: for output `i`,
+    /// `windows[i]` dot `weights` — then serve it.
+    ServeConv {
+        windows: &'a [Vec<Fixed>],
+        weights: &'a [Fixed],
+    },
+    /// Run dense (time-embedding) MACs: `x` dot `w`, independent of the
+    /// workers; the scalar result is latched for the caller.
+    Dense { x: &'a [Fixed], w: &'a [Fixed] },
+}
+
+/// One convolution group: up to 8 worker windows sharing one filter.
+#[derive(Debug, Clone)]
+pub struct ConvGroup<'a> {
+    /// Per-worker input windows, each `weights.len()` taps. Fewer than 8
+    /// windows leaves the remaining workers idle (edge tiles).
+    pub windows: &'a [Vec<Fixed>],
+    /// The shared filter taps (broadcast to all workers).
+    pub weights: &'a [Fixed],
+    /// PE_9's task for this group.
+    pub server: ServerTask<'a>,
+    /// How many of each window's values were already present in the reuse
+    /// registers (overlap with the previous group / neighbouring windows).
+    pub reused_inputs: u64,
+}
+
+/// Result of executing one group.
+#[derive(Debug, Clone)]
+pub struct GroupResult {
+    /// One output per supplied window.
+    pub outputs: Vec<Fixed>,
+    /// Dense result if the server ran a `Dense` task.
+    pub dense_out: Option<Fixed>,
+    /// Cycles this group consumed.
+    pub cycles: u64,
+}
+
+/// One SF-MMCN unit.
+#[derive(Debug, Clone)]
+pub struct SfMmcnUnit {
+    workers: Vec<Pe>,
+    server: Pe,
+    pub stats: UnitStats,
+    /// Steady-state pipelining: true once a group has run, so subsequent
+    /// groups overlap their writeback with the next group's first MAC.
+    pipeline_warm: bool,
+}
+
+impl Default for SfMmcnUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SfMmcnUnit {
+    pub fn new() -> Self {
+        Self {
+            workers: (0..WORKERS).map(|_| Pe::new()).collect(),
+            server: Pe::new(),
+            stats: UnitStats::default(),
+            pipeline_warm: false,
+        }
+    }
+
+    /// Aggregate PE stats: (workers, server).
+    pub fn pe_stats(&self) -> (PeStats, PeStats) {
+        let mut w = PeStats::default();
+        for pe in &self.workers {
+            w.merge(&pe.stats);
+        }
+        (w, self.server.stats)
+    }
+
+    /// Reset pipeline state between layers (a new layer cannot overlap the
+    /// previous layer's writeback — Fig 7 shows the +1 cycle on the first
+    /// conv of a burst).
+    pub fn flush_pipeline(&mut self) {
+        self.pipeline_warm = false;
+    }
+
+    /// Execute one convolution group cycle-by-cycle.
+    pub fn run_group(&mut self, g: &ConvGroup) -> GroupResult {
+        let taps = g.weights.len();
+        assert!(taps > 0, "empty filter");
+        assert!(
+            g.windows.len() <= WORKERS,
+            "at most {WORKERS} windows per group"
+        );
+        for (i, win) in g.windows.iter().enumerate() {
+            assert_eq!(
+                win.len(),
+                taps,
+                "window {i} has {} taps, filter has {taps}",
+                win.len()
+            );
+        }
+
+        let mode = match &g.server {
+            ServerTask::Idle => UnitMode::Series,
+            ServerTask::ServeIdentity(_) => UnitMode::ResidualIdentity,
+            ServerTask::ServeConv { .. } => UnitMode::ResidualConv,
+            ServerTask::Dense { .. } => UnitMode::DenseTime,
+        };
+
+        // Configure PEs.
+        let residual_mode = matches!(
+            mode,
+            UnitMode::ResidualIdentity | UnitMode::ResidualConv
+        );
+        for (i, pe) in self.workers.iter_mut().enumerate() {
+            if i < g.windows.len() {
+                pe.set_mode(if residual_mode {
+                    PeMode::ResidualAdd
+                } else {
+                    PeMode::Normal
+                });
+                pe.begin_conv(taps as u32);
+            } else {
+                pe.set_mode(PeMode::Idle);
+            }
+        }
+
+        // PE_9 server setup.
+        let mut server_results: Vec<Fixed> = Vec::new();
+        let mut dense_out = None;
+        match &g.server {
+            ServerTask::Idle => self.server.set_mode(PeMode::Idle),
+            ServerTask::ServeIdentity(vals) => {
+                assert_eq!(
+                    vals.len(),
+                    g.windows.len(),
+                    "one residual value per worker output"
+                );
+                self.server.set_mode(PeMode::Normal);
+            }
+            ServerTask::ServeConv { windows, weights } => {
+                assert_eq!(windows.len(), g.windows.len());
+                let rtaps = weights.len();
+                // Synchronization invariant from §III.C: PE_9 must finish
+                // all residual convs within the main conv's taps.
+                assert!(
+                    rtaps * windows.len() <= taps * WORKERS,
+                    "PE_9 cannot prepare residual conv in time: \
+                     {rtaps} taps x {} outputs vs {taps} main-conv cycles",
+                    windows.len()
+                );
+                self.server.set_mode(PeMode::Normal);
+            }
+            ServerTask::Dense { x, w } => {
+                assert_eq!(x.len(), w.len(), "dense operands must match");
+                self.server.set_mode(PeMode::Normal);
+            }
+        }
+
+        // ---- execution ------------------------------------------------------
+        // §Perf: worker-major execution. Within a group the PEs never
+        // interact until writeback, so running each worker's whole tap
+        // stream contiguously produces identical stats and numerics to the
+        // cycle-major interleaving while being ~3x faster to simulate.
+        for (i, pe) in self.workers.iter_mut().enumerate() {
+            if i < g.windows.len() {
+                pe.run_conv_taps(&g.windows[i], g.weights);
+            } else {
+                pe.stats.idle_cycles += taps as u64;
+            }
+        }
+
+        // PE_9: batched form of the per-cycle schedule (one serve/MAC per
+        // cycle, engaged-but-done cycles count as active in serving modes,
+        // idle in series/after-dense — same totals as the cycle loop).
+        let mut extra_cycles = 0u64;
+        match &g.server {
+            ServerTask::Idle => self.server.stats.idle_cycles += taps as u64,
+            ServerTask::ServeIdentity(vals) => {
+                // One value per cycle; PE_9 engaged for the whole group
+                // (the paper counts the server's data transmission as
+                // utilization — residual layers hit ~100%, §IV.B.1).
+                server_results.extend_from_slice(vals);
+                self.stats.served_values += vals.len() as u64;
+                self.server.stats.active_cycles += taps as u64;
+            }
+            ServerTask::ServeConv { windows, weights } => {
+                for win in windows.iter() {
+                    self.server.run_conv_taps(win, weights);
+                    server_results.push(self.server.take_output());
+                    self.stats.served_values += 1;
+                }
+                // transmit/engaged fill for the rest of the window
+                let work = (windows.len() * weights.len()) as u64;
+                self.server.stats.active_cycles += (taps as u64).saturating_sub(work);
+            }
+            ServerTask::Dense { x, w } => {
+                self.server.run_conv_taps(x, w);
+                dense_out = Some(self.server.take_output());
+                let work = x.len() as u64;
+                // dense shorter than the window: PE_9 idles the remainder;
+                // longer: the unit stalls the handoff (overhang cycles).
+                self.server.stats.idle_cycles += (taps as u64).saturating_sub(work);
+                extra_cycles = work.saturating_sub(taps as u64);
+            }
+        }
+
+        // ---- writeback --------------------------------------------------
+        let mut outputs = Vec::with_capacity(g.windows.len());
+        for (i, pe) in self.workers.iter_mut().enumerate().take(g.windows.len()) {
+            debug_assert!(pe.done(), "worker {i} did not finish");
+            if residual_mode {
+                pe.apply_residual(server_results[i]);
+            }
+            outputs.push(pe.take_output());
+        }
+
+        // Cycle accounting: taps cycles, +1 writeback when the pipeline is
+        // cold (first group after a flush), + any dense overhang.
+        let mut cycles = taps as u64 + extra_cycles;
+        if !self.pipeline_warm {
+            cycles += 1;
+            self.pipeline_warm = true;
+        }
+
+        // Memory accounting: without reuse every window value is a buffer
+        // read; with the reuse registers, `reused_inputs` of them are
+        // register hits instead.
+        let total_inputs: u64 = g.windows.iter().map(|w| w.len() as u64).sum();
+        assert!(
+            g.reused_inputs <= total_inputs,
+            "cannot reuse more inputs than exist"
+        );
+        self.stats.buffer_reads_no_reuse += total_inputs;
+        self.stats.buffer_reads += total_inputs - g.reused_inputs;
+        self.stats.reuse_reg_writes += g.reused_inputs;
+        // Weights broadcast: one buffer read per tap regardless of #PEs.
+        self.stats.weight_reads += taps as u64;
+
+        self.stats.cycles += cycles;
+        self.stats.conv_outputs += outputs.len() as u64;
+
+        GroupResult {
+            outputs,
+            dense_out,
+            cycles,
+        }
+    }
+
+    /// Small-input split (Figs 11-12): two output channels run
+    /// *concurrently* on disjoint worker halves — channel A on PE_1..PE_4,
+    /// channel B on PE_5..PE_8 — each with its own filter broadcast. PE_9
+    /// handles channel A's branch during the first part of the window and
+    /// channel B's during the second (Fig 12), so the pair costs the same
+    /// `taps` cycles as a single group: no redundant circuits, no
+    /// redundant cycles.
+    pub fn run_split_group(
+        &mut self,
+        ga: &ConvGroup,
+        gb: &ConvGroup,
+    ) -> (GroupResult, GroupResult) {
+        let (na, nb) = (ga.windows.len(), gb.windows.len());
+        assert!(na <= 4 && nb <= 4, "split halves are at most 4 lanes");
+        let taps = ga.weights.len();
+        assert_eq!(taps, gb.weights.len(), "split groups share tap count");
+        assert!(taps > 0);
+        for (i, w) in ga.windows.iter().enumerate() {
+            assert_eq!(w.len(), taps, "A window {i}");
+        }
+        for (i, w) in gb.windows.iter().enumerate() {
+            assert_eq!(w.len(), taps, "B window {i}");
+        }
+        let residual_a = !matches!(ga.server, ServerTask::Idle | ServerTask::Dense { .. });
+        let residual_b = !matches!(gb.server, ServerTask::Idle | ServerTask::Dense { .. });
+
+        // Configure the halves: A on workers 0..na, B on workers 4..4+nb.
+        for (i, pe) in self.workers.iter_mut().enumerate() {
+            let (active, res) = if i < na {
+                (true, residual_a)
+            } else if (4..4 + nb).contains(&i) {
+                (true, residual_b)
+            } else {
+                (false, false)
+            };
+            if active {
+                pe.set_mode(if res { PeMode::ResidualAdd } else { PeMode::Normal });
+                pe.begin_conv(taps as u32);
+            } else {
+                pe.set_mode(PeMode::Idle);
+            }
+        }
+        self.server.set_mode(
+            if matches!(ga.server, ServerTask::Idle) && matches!(gb.server, ServerTask::Idle) {
+                PeMode::Idle
+            } else {
+                PeMode::Normal
+            },
+        );
+
+        // PE_9's sequential schedule: finish half A's task, then half B's.
+        // Each task is the same state machine as in `run_group`.
+        struct SrvState {
+            results: Vec<Fixed>,
+            out_idx: usize,
+            cursor: usize,
+            dense_out: Option<Fixed>,
+        }
+        let mut sa = SrvState {
+            results: vec![],
+            out_idx: 0,
+            cursor: 0,
+            dense_out: None,
+        };
+        let mut sb = SrvState {
+            results: vec![],
+            out_idx: 0,
+            cursor: 0,
+            dense_out: None,
+        };
+
+        // Advance one server cycle on `task`; returns true if it consumed
+        // the cycle (false = task already complete).
+        let step_server = |server: &mut Pe,
+                               stats: &mut UnitStats,
+                               task: &ServerTask,
+                               st: &mut SrvState|
+         -> bool {
+            match task {
+                ServerTask::Idle => false,
+                ServerTask::ServeIdentity(vals) => {
+                    if st.out_idx < vals.len() {
+                        st.results.push(vals[st.out_idx]);
+                        st.out_idx += 1;
+                        stats.served_values += 1;
+                        server.stats.active_cycles += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                ServerTask::ServeConv { windows, weights } => {
+                    if st.out_idx < windows.len() {
+                        if st.cursor == 0 {
+                            server.begin_conv(weights.len() as u32);
+                        }
+                        server.mac_cycle(windows[st.out_idx][st.cursor], weights[st.cursor]);
+                        st.cursor += 1;
+                        if st.cursor == weights.len() {
+                            st.results.push(server.take_output());
+                            stats.served_values += 1;
+                            st.cursor = 0;
+                            st.out_idx += 1;
+                        }
+                        true
+                    } else {
+                        false
+                    }
+                }
+                ServerTask::Dense { x, w } => {
+                    if st.cursor < x.len() {
+                        if st.cursor == 0 {
+                            server.begin_conv(x.len() as u32);
+                        }
+                        server.mac_cycle(x[st.cursor], w[st.cursor]);
+                        st.cursor += 1;
+                        if st.cursor == x.len() {
+                            st.dense_out = Some(server.take_output());
+                        }
+                        true
+                    } else {
+                        false
+                    }
+                }
+            }
+        };
+
+        // ---- cycle loop ---------------------------------------------------
+        for t in 0..taps {
+            for (i, pe) in self.workers.iter_mut().enumerate() {
+                if i < na {
+                    pe.mac_cycle(ga.windows[i][t], ga.weights[t]);
+                } else if (4..4 + nb).contains(&i) {
+                    pe.mac_cycle(gb.windows[i - 4][t], gb.weights[t]);
+                } else {
+                    pe.idle_cycle();
+                }
+            }
+            // PE_9: A first, then B; engaged (not idle) whenever either
+            // half has a branch at all — same utilization rule as
+            // run_group's serving modes.
+            let consumed = step_server(&mut self.server, &mut self.stats, &ga.server, &mut sa)
+                || step_server(&mut self.server, &mut self.stats, &gb.server, &mut sb);
+            if !consumed {
+                if residual_a || residual_b {
+                    self.server.stats.active_cycles += 1; // engaged: holding
+                } else {
+                    self.server.idle_cycle();
+                }
+            }
+        }
+
+        // Overhang: any unfinished server work (long dense chains) extends
+        // the window, stalling the handoff.
+        let mut extra_cycles = 0u64;
+        loop {
+            let consumed = step_server(&mut self.server, &mut self.stats, &ga.server, &mut sa)
+                || step_server(&mut self.server, &mut self.stats, &gb.server, &mut sb);
+            if !consumed {
+                break;
+            }
+            extra_cycles += 1;
+        }
+
+        // ---- writeback ------------------------------------------------------
+        let mut out_a = Vec::with_capacity(na);
+        for (i, pe) in self.workers.iter_mut().enumerate().take(na) {
+            debug_assert!(pe.done(), "A worker {i}");
+            if residual_a {
+                pe.apply_residual(sa.results[i]);
+            }
+            out_a.push(pe.take_output());
+        }
+        let mut out_b = Vec::with_capacity(nb);
+        for i in 0..nb {
+            let pe = &mut self.workers[4 + i];
+            debug_assert!(pe.done(), "B worker {i}");
+            if residual_b {
+                pe.apply_residual(sb.results[i]);
+            }
+            out_b.push(pe.take_output());
+        }
+
+        let mut cycles = taps as u64 + extra_cycles;
+        if !self.pipeline_warm {
+            cycles += 1;
+            self.pipeline_warm = true;
+        }
+
+        // Memory accounting: both halves window the *same* input map, so
+        // half B's taps are register hits when the reuse registers are on
+        // (the caller encodes that through `gb.reused_inputs`).
+        for g in [ga, gb] {
+            let total: u64 = g.windows.iter().map(|w| w.len() as u64).sum();
+            assert!(g.reused_inputs <= total);
+            self.stats.buffer_reads_no_reuse += total;
+            self.stats.buffer_reads += total - g.reused_inputs;
+            self.stats.reuse_reg_writes += g.reused_inputs;
+        }
+        // Two filters broadcast, one per half.
+        self.stats.weight_reads += 2 * taps as u64;
+        self.stats.cycles += cycles;
+        self.stats.conv_outputs += (na + nb) as u64;
+
+        (
+            GroupResult {
+                outputs: out_a,
+                dense_out: sa.dense_out,
+                cycles,
+            },
+            GroupResult {
+                outputs: out_b,
+                dense_out: sb.dense_out,
+                cycles,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx(x: f32) -> Fixed {
+        Fixed::from_f32(x)
+    }
+
+    fn windows(n: usize, taps: usize, v: f32) -> Vec<Vec<Fixed>> {
+        (0..n).map(|_| vec![fx(v); taps]).collect()
+    }
+
+    #[test]
+    fn series_mode_eight_outputs_in_taps_cycles() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(0.5); 9];
+        let wins = windows(8, 9, 1.0);
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.outputs.len(), 8);
+        assert_eq!(r.cycles, 10); // cold pipeline: 9 + 1
+        for o in &r.outputs {
+            assert!((o.to_f32() - 4.5).abs() < 1e-2);
+        }
+        // steady state: next group is 9 cycles
+        let r2 = u.run_group(&g);
+        assert_eq!(r2.cycles, 9);
+        let (_, srv) = u.pe_stats();
+        assert_eq!(srv.macs, 0, "PE_9 must be idle in series mode");
+    }
+
+    #[test]
+    fn residual_identity_same_cycles_as_series() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 1.0);
+        let skip: Vec<Fixed> = (0..8).map(|i| fx(i as f32)).collect();
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::ServeIdentity(&skip),
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.cycles, 10); // identical to series cold-start: SF adds 0 cycles
+        for (i, o) in r.outputs.iter().enumerate() {
+            assert!(
+                (o.to_f32() - (9.0 + i as f32)).abs() < 1e-2,
+                "output {i} = {}",
+                o.to_f32()
+            );
+        }
+        assert_eq!(u.stats.served_values, 8);
+    }
+
+    #[test]
+    fn residual_conv_pe9_computes_in_time() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 1.0);
+        // 1x1 residual conv over 4 input channels: 4 taps per output
+        let rwins: Vec<Vec<Fixed>> = (0..8).map(|_| vec![fx(0.5); 4]).collect();
+        let rw = vec![fx(1.0); 4];
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::ServeConv {
+                windows: &rwins,
+                weights: &rw,
+            },
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.cycles, 10, "residual conv must not add cycles");
+        // main conv = 9, residual conv = 4 * 0.5 = 2 -> 11
+        for o in &r.outputs {
+            assert!((o.to_f32() - 11.0).abs() < 5e-2, "{}", o.to_f32());
+        }
+        let (_, srv) = u.pe_stats();
+        assert_eq!(srv.macs, 32, "PE_9 ran 8 x 4-tap convs");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot prepare residual conv in time")]
+    fn residual_conv_too_large_rejected() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 2]; // tiny main conv: 2 cycles only
+        let wins = windows(8, 2, 1.0);
+        let rwins: Vec<Vec<Fixed>> = (0..8).map(|_| vec![fx(0.5); 9]).collect();
+        let rw = vec![fx(1.0); 9];
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::ServeConv {
+                windows: &rwins,
+                weights: &rw,
+            },
+            reused_inputs: 0,
+        };
+        let _ = u.run_group(&g);
+    }
+
+    #[test]
+    fn dense_time_overlaps_with_conv() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 2.0);
+        let x = vec![fx(1.0); 6];
+        let dw = vec![fx(0.5); 6];
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Dense { x: &x, w: &dw },
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.cycles, 10, "6-tap dense hides under 9-tap conv");
+        let d = r.dense_out.expect("dense result");
+        assert!((d.to_f32() - 3.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn dense_longer_than_conv_adds_overhang() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 4];
+        let wins = windows(8, 4, 1.0);
+        let x = vec![fx(1.0); 10];
+        let dw = vec![fx(1.0); 10];
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Dense { x: &x, w: &dw },
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.cycles, 4 + 1 + 6, "4 conv + cold + 6 overhang");
+        assert!((r.dense_out.unwrap().to_f32() - 10.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn partial_group_leaves_workers_idle() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(3, 9, 1.0);
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.outputs.len(), 3);
+        let (wstats, _) = u.pe_stats();
+        assert_eq!(wstats.macs, 27);
+        assert_eq!(wstats.idle_cycles, 5 * 9);
+    }
+
+    #[test]
+    fn reuse_accounting() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 1.0);
+        // Sliding 3x3 windows over a row: 8 windows x 9 taps = 72 values,
+        // but only 30 are distinct (3 rows x 10 cols).
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 42,
+        };
+        u.run_group(&g);
+        assert_eq!(u.stats.buffer_reads_no_reuse, 72);
+        assert_eq!(u.stats.buffer_reads, 30);
+        assert_eq!(u.stats.reads_saved(), 42);
+    }
+
+    #[test]
+    fn split_group_costs_taps_once() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wa = windows(4, 9, 1.0);
+        let wb = windows(4, 9, 2.0);
+        let ga = ConvGroup {
+            windows: &wa,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 0,
+        };
+        let gb = ConvGroup {
+            windows: &wb,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 0,
+        };
+        let (ra, rb) = u.run_split_group(&ga, &gb);
+        assert_eq!(ra.cycles, 10);
+        assert_eq!(rb.cycles, 10);
+        assert_eq!(u.stats.cycles, 10, "halves overlap in time");
+        assert!((ra.outputs[0].to_f32() - 9.0).abs() < 1e-2);
+        assert!((rb.outputs[0].to_f32() - 18.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn zero_inputs_gate_but_keep_timing() {
+        let mut u = SfMmcnUnit::new();
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 0.0);
+        let g = ConvGroup {
+            windows: &wins,
+            weights: &w,
+            server: ServerTask::Idle,
+            reused_inputs: 0,
+        };
+        let r = u.run_group(&g);
+        assert_eq!(r.cycles, 10);
+        let (wstats, _) = u.pe_stats();
+        assert_eq!(wstats.macs, 0);
+        assert_eq!(wstats.gated_macs, 72);
+    }
+}

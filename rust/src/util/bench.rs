@@ -1,0 +1,150 @@
+//! Criterion-lite benchmarking harness for the `harness = false` bench
+//! targets: warmup, timed iterations, mean/std/percentiles, and a
+//! machine-greppable one-line-per-bench output format.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Summary};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure budgets.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly; returns timing stats. The closure's return value
+    /// is passed through `std::hint::black_box` to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure
+        let mut samples = Vec::new();
+        let mut sum = Summary::new();
+        let m0 = Instant::now();
+        let mut iters = 0u64;
+        while (m0.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let ns = t0.elapsed().as_nanos() as f64;
+            samples.push(ns);
+            sum.add(ns);
+            iters += 1;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: sum.mean(),
+            std_ns: sum.std(),
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+        }
+    }
+
+    /// Run and print a one-line summary (the bench binaries' output format).
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> BenchResult {
+        let r = self.run(name, f);
+        println!(
+            "bench {:<44} {:>10.3} us/iter (p50 {:>10.3}, p95 {:>10.3}, n={})",
+            r.name,
+            r.mean_us(),
+            r.p50_ns / 1e3,
+            r.p95_ns / 1e3,
+            r.iters
+        );
+        r
+    }
+}
+
+/// Format a big ops/second number human-readably.
+pub fn fmt_rate(ops_per_s: f64) -> String {
+    if ops_per_s >= 1e9 {
+        format!("{:.2} Gop/s", ops_per_s / 1e9)
+    } else if ops_per_s >= 1e6 {
+        format!("{:.2} Mop/s", ops_per_s / 1e6)
+    } else if ops_per_s >= 1e3 {
+        format!("{:.2} Kop/s", ops_per_s / 1e3)
+    } else {
+        format!("{ops_per_s:.2} op/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 100_000,
+        };
+        let r = b.run("noop-ish", || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(2.5e9), "2.50 Gop/s");
+        assert_eq!(fmt_rate(3.0e6), "3.00 Mop/s");
+        assert_eq!(fmt_rate(1.5e3), "1.50 Kop/s");
+        assert_eq!(fmt_rate(10.0), "10.00 op/s");
+    }
+}

@@ -1,0 +1,166 @@
+//! Tiny argv parser (clap-lite): subcommands, `--key value` / `--key=value`
+//! options, `--flag` booleans, positionals. Enough for the `sf-mmcn` CLI
+//! and the bench/example binaries, with helpful errors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: one optional subcommand, options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, subcommands: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+
+        // First non-option token may be a subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && subcommands.contains(&first.as_str()) {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing
+                    out.positionals.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process argv.
+    pub fn from_env(subcommands: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got `{s}`")),
+        }
+    }
+
+    /// Error if an unknown option was supplied (catch typos).
+    pub fn check_known(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.opts.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known_opts.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (known: {})", known_flags.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = Args::parse(v(&["serve", "--port", "8080", "--verbose"]), &["serve", "run"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(v(&["--model=vgg16", "--steps=10"]), &[]).unwrap();
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn positionals_and_double_dash() {
+        let a = Args::parse(v(&["run", "file.toml", "--", "--not-an-opt"]), &["run"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positionals, vec!["file.toml", "--not-an-opt"]);
+    }
+
+    #[test]
+    fn typed_getters_error_on_garbage() {
+        let a = Args::parse(v(&["--steps", "ten"]), &[]).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+        assert_eq!(a.get_usize("other", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = Args::parse(v(&["--tpyo", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["typo"], &[]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(v(&["--fast", "--quiet"]), &[]).unwrap();
+        assert!(a.flag("fast") && a.flag("quiet"));
+    }
+}

@@ -1,0 +1,17 @@
+//! From-scratch substrates.
+//!
+//! The offline build environment vendors only `xla`/`anyhow`/`thiserror`/
+//! `num-traits`, so the usual ecosystem crates (rand, clap, serde, rayon,
+//! criterion, proptest) are re-implemented here at the scale this project
+//! needs. Each submodule is small, tested, and dependency-free.
+
+pub mod bench;
+pub mod cli;
+pub mod pool;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+
+pub use rng::Rng;
+pub use tensor::Tensor;

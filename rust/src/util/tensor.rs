@@ -1,0 +1,238 @@
+//! A minimal dense row-major tensor (`ndarray`-lite) used by the simulator
+//! and the functional reference paths.
+//!
+//! Layout is NCHW-ish but rank-agnostic: `shape = [d0, d1, ...]`, strides
+//! derived row-major. Only the operations the project needs are provided:
+//! indexing, slicing views are avoided in favour of explicit copies (the
+//! hot path lives in the simulator's closed-form counters and in XLA, not
+//! here).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        let n = self.data.len().min(8);
+        for (i, v) in self.data[..n].iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > n {
+            write!(f, ", …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> f32) -> Self {
+        let mut t = Self::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for flat in 0..t.data.len() {
+            t.unflatten(flat, &mut idx);
+            t.data[flat] = f(&idx);
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    fn flatten(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0usize;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            flat = flat * dim + ix;
+        }
+        flat
+    }
+
+    fn unflatten(&self, mut flat: usize, idx: &mut [usize]) {
+        for i in (0..self.shape.len()).rev() {
+            idx[i] = flat % self.shape[i];
+            flat /= self.shape[i];
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.flatten(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let f = self.flatten(idx);
+        self.data[f] = v;
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Element-wise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Element-wise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("zip shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    /// Fraction of exactly-zero elements — drives the zero-gate model.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Max |a-b| against another tensor (for numerics checks).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_index() {
+        let t = Tensor::from_fn(&[2, 3, 4], |idx| (idx[0] * 100 + idx[1] * 10 + idx[2]) as f32);
+        assert_eq!(t.get(&[1, 2, 3]), 123.0);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::new(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn reshape_preserves_order() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.get(&[0, 1]), 1.0);
+        assert_eq!(r.get(&[2, 1]), 5.0);
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::new(&[4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let a = Tensor::new(&[3], vec![-1.0, 0.5, 2.0]).unwrap();
+        let b = Tensor::new(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(a.relu().data(), &[0.0, 0.5, 2.0]);
+        assert_eq!(a.add(&b).unwrap().data(), &[0.0, 1.5, 3.0]);
+        let c = Tensor::zeros(&[4]);
+        assert!(a.add(&c).is_err());
+    }
+}

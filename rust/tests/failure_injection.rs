@@ -1,0 +1,104 @@
+//! Failure injection: every user-facing loading path must fail *cleanly*
+//! (typed errors with actionable messages), never panic or UB.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use sf_mmcn::config::{RunConfig, ServeConfig};
+use sf_mmcn::coordinator::UnetParams;
+use sf_mmcn::runtime::{ArtifactStore, Executor};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sfmmcn_fi_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn malformed_hlo_text_is_an_error_not_a_crash() {
+    let d = tmpdir("badhlo");
+    let p = d.join("bad.hlo.txt");
+    let mut f = std::fs::File::create(&p).unwrap();
+    writeln!(f, "HloModule this_is_not_valid {{ garbage").unwrap();
+    let mut exe = Executor::new().unwrap();
+    let err = exe.load_hlo_text("bad", &p);
+    assert!(err.is_err(), "parser must reject garbage");
+}
+
+#[test]
+fn truncated_hlo_text_is_an_error() {
+    // take a valid artifact and truncate it mid-instruction
+    let store = ArtifactStore::new("artifacts");
+    let Ok(spec) = store.resolve("sf_block_16") else {
+        panic!("run `make artifacts` first");
+    };
+    let text = std::fs::read_to_string(&spec.path).unwrap();
+    let d = tmpdir("trunc");
+    let p = d.join("trunc.hlo.txt");
+    std::fs::write(&p, &text[..text.len() / 3]).unwrap();
+    let mut exe = Executor::new().unwrap();
+    assert!(exe.load_hlo_text("trunc", &p).is_err());
+}
+
+#[test]
+fn wrong_arity_execution_fails_cleanly() {
+    let store = ArtifactStore::new("artifacts");
+    let spec = store.resolve("sf_block_16").expect("make artifacts");
+    let mut exe = Executor::new().unwrap();
+    exe.load_hlo_text("sf_block", &spec.path).unwrap();
+    // artifact wants 4 inputs; pass 1
+    let x = sf_mmcn::runtime::TensorBuf::zeros(&[8, 16, 16]);
+    assert!(exe.run("sf_block", &[x]).is_err());
+}
+
+#[test]
+fn unknown_artifact_name_is_an_error() {
+    let exe = Executor::new().unwrap();
+    let x = sf_mmcn::runtime::TensorBuf::zeros(&[1]);
+    let err = exe.run("never-loaded", &[x]).unwrap_err().to_string();
+    assert!(err.contains("not loaded"), "{err}");
+}
+
+#[test]
+fn params_manifest_dimension_garbage() {
+    let d = tmpdir("manifest");
+    std::fs::write(d.join("p.manifest"), "a 2 x\n").unwrap();
+    std::fs::write(d.join("p.bin"), [0u8; 8]).unwrap();
+    let err = UnetParams::load(&d, "p").unwrap_err().to_string();
+    assert!(err.contains("bad dims"), "{err}");
+}
+
+#[test]
+fn config_parse_errors_are_actionable() {
+    let err = RunConfig::from_toml("[run\nmodel=\"vgg16\"").unwrap_err().to_string();
+    assert!(err.contains("line 1"), "{err}");
+    let err = ServeConfig::from_toml("[serve]\nworkers = 0").unwrap_err().to_string();
+    assert!(err.contains("workers"), "{err}");
+}
+
+#[test]
+fn missing_config_file_is_an_error() {
+    assert!(RunConfig::from_file(std::path::Path::new("/nonexistent/cfg.toml")).is_err());
+}
+
+#[test]
+fn serve_with_missing_artifact_fails_at_construction() {
+    let cfg = ServeConfig {
+        artifact: "no_such_artifact".into(),
+        ..ServeConfig::default()
+    };
+    let store = ArtifactStore::new("artifacts");
+    let msg = match sf_mmcn::coordinator::DiffusionServer::new(cfg, &store) {
+        Ok(_) => panic!("missing artifact must fail at construction"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn tensor_shape_mismatches_rejected_at_input_edge() {
+    use sf_mmcn::runtime::TensorBuf;
+    assert!(TensorBuf::new(vec![2, 3], vec![0.0; 5]).is_err());
+    assert!(TensorBuf::new(vec![2, 3], vec![0.0; 6]).is_ok());
+}

@@ -1,0 +1,225 @@
+//! Property-based invariants of the compiler/simulator stack, over
+//! randomized graphs and accelerator configurations.
+
+use sf_mmcn::compiler::analyze_graph;
+use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
+use sf_mmcn::models::{resnet18, unet, vgg16, UnetConfig};
+use sf_mmcn::sim::array::AcceleratorConfig;
+use sf_mmcn::sim::energy::CAL_40NM;
+use sf_mmcn::util::proptest_lite::{Gen, Prop};
+
+/// Random small CNN: a chain of convs (some residual) + optional pool +
+/// optional dense head.
+fn random_graph(g: &mut Gen) -> ModelGraph {
+    let c0 = g.usize_in(1, 8);
+    let mut hw = *g.choose(&[8usize, 12, 16]);
+    let mut b = GraphBuilder::new("rand", TensorShape::new(c0, hw, hw));
+    let mut c = c0;
+    let layers = g.usize_in(1, 5);
+    let mut last_conv: Option<(usize, usize)> = None; // (node, channels)
+    for _ in 0..layers {
+        let c_out = g.usize_in(1, 12);
+        let residual = match last_conv {
+            Some((node, ch)) if ch == c_out && g.bool() => {
+                Residual::Identity { from: node }
+            }
+            Some((node, _)) if g.bool() => Residual::Conv { from: node, stride: 1 },
+            _ => Residual::None,
+        };
+        let td = if g.bool() { Some(g.usize_in(1, 16)) } else { None };
+        let (residual, time_dense) = if matches!(residual, Residual::None) {
+            (residual, td)
+        } else {
+            (residual, None) // PE_9 can host only one branch
+        };
+        let node = b
+            .add(Layer::Conv {
+                c_in: c,
+                c_out,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                act: Act::None,
+                residual,
+                time_dense,
+            })
+            .unwrap();
+        last_conv = Some((node, c_out));
+        c = c_out;
+    }
+    if hw >= 4 && g.bool() {
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+        hw /= 2;
+        last_conv = None;
+    }
+    if g.bool() {
+        let _ = last_conv;
+        b.add(Layer::Dense {
+            in_f: c * hw * hw,
+            out_f: g.usize_in(1, 20),
+            act: Act::None,
+        })
+        .unwrap();
+    }
+    b.build()
+}
+
+#[test]
+fn utilization_bounded_and_positive() {
+    Prop::new("0 < U_PE <= 1 on random graphs", 60).check(|g| {
+        let graph = random_graph(g);
+        let units = *g.choose(&[1usize, 2, 4, 8, 16]);
+        let a = analyze_graph(&AcceleratorConfig::with_units(units), &graph, 0.0);
+        for l in &a.layers {
+            // pool/reshape nodes run on the peripheral units (zero PE use)
+            if l.label.starts_with("conv") || l.label.starts_with("dense") {
+                assert!(l.u_pe > 0.0, "{}: zero utilization", l.label);
+            }
+            assert!(l.u_pe <= 1.0 + 1e-12, "{}: U_PE {} > 1", l.label, l.u_pe);
+        }
+        let total_u = a.totals.u_pe();
+        assert!(total_u > 0.0 && total_u <= 1.0 + 1e-12);
+    });
+}
+
+#[test]
+fn hardware_does_exactly_the_models_work() {
+    Prop::new("worker MAC slots == model conv+dense MACs", 60).check(|g| {
+        let graph = random_graph(g);
+        let a = analyze_graph(&AcceleratorConfig::default(), &graph, 0.0);
+        // Worker slots + PE_9 residual-conv/dense MACs together must equal
+        // the model's MAC count: nothing dropped, nothing invented.
+        let hw_slots = a.totals.pe.mac_slots();
+        let model = graph.total_macs();
+        assert_eq!(
+            hw_slots, model,
+            "hardware slots {hw_slots} != model MACs {model}"
+        );
+    });
+}
+
+#[test]
+fn reuse_never_increases_reads() {
+    Prop::new("buffer_reads <= buffer_reads_no_reuse", 60).check(|g| {
+        let graph = random_graph(g);
+        let a = analyze_graph(&AcceleratorConfig::default(), &graph, 0.0);
+        assert!(a.totals.unit.buffer_reads <= a.totals.unit.buffer_reads_no_reuse);
+        // and disabling reuse makes them equal for conv layers (dense
+        // layers keep their structural input-broadcast sharing)
+        let cfg = AcceleratorConfig {
+            data_reuse: false,
+            ..AcceleratorConfig::default()
+        };
+        let b = analyze_graph(&cfg, &graph, 0.0);
+        for l in b.layers.iter().filter(|l| l.label.starts_with("conv")) {
+            assert_eq!(
+                l.counts.unit.buffer_reads, l.counts.unit.buffer_reads_no_reuse,
+                "{}: reuse disabled must read every tap",
+                l.label
+            );
+        }
+    });
+}
+
+#[test]
+fn cycles_monotone_in_units() {
+    Prop::new("more units never slower", 30).check(|g| {
+        let graph = random_graph(g);
+        let c1 = analyze_graph(&AcceleratorConfig::with_units(1), &graph, 0.0)
+            .total_cycles();
+        let c4 = analyze_graph(&AcceleratorConfig::with_units(4), &graph, 0.0)
+            .total_cycles();
+        let c16 = analyze_graph(&AcceleratorConfig::with_units(16), &graph, 0.0)
+            .total_cycles();
+        assert!(c4 <= c1, "4 units ({c4}) slower than 1 ({c1})");
+        assert!(c16 <= c4, "16 units ({c16}) slower than 4 ({c4})");
+    });
+}
+
+#[test]
+fn sparsity_only_moves_energy_not_time() {
+    Prop::new("gating: same cycles, less energy", 30).check(|g| {
+        let graph = random_graph(g);
+        let cfg = AcceleratorConfig::default();
+        let dense = analyze_graph(&cfg, &graph, 0.0);
+        let sparse = analyze_graph(&cfg, &graph, 0.7);
+        assert_eq!(dense.total_cycles(), sparse.total_cycles());
+        assert_eq!(dense.totals.pe.mac_slots(), sparse.totals.pe.mac_slots());
+        let ed = CAL_40NM.core_energy_pj(&dense.totals);
+        let es = CAL_40NM.core_energy_pj(&sparse.totals);
+        assert!(es <= ed, "sparsity must not increase energy");
+    });
+}
+
+#[test]
+fn residual_fusion_is_free_in_cycles() {
+    Prop::new("identity-skip conv == plain conv cycles", 40).check(|g| {
+        let c = g.usize_in(1, 10);
+        let hw = g.usize_in(3, 14);
+        let mk = |residual| {
+            let mut b = GraphBuilder::new("t", TensorShape::new(c, hw, hw));
+            b.add(Layer::Conv {
+                c_in: c,
+                c_out: c,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                act: Act::None,
+                residual: Residual::None,
+                time_dense: None,
+            })
+            .unwrap();
+            b.add(Layer::Conv {
+                c_in: c,
+                c_out: c,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                act: Act::None,
+                residual,
+                time_dense: None,
+            })
+            .unwrap();
+            b.build()
+        };
+        let plain = analyze_graph(
+            &AcceleratorConfig::default(),
+            &mk(Residual::None),
+            0.0,
+        );
+        let fused = analyze_graph(
+            &AcceleratorConfig::default(),
+            &mk(Residual::Identity { from: 0 }),
+            0.0,
+        );
+        assert_eq!(plain.total_cycles(), fused.total_cycles());
+        // ...and fused does strictly more arithmetic in that time
+        assert!(
+            fused.totals.pe.residual_adds > 0,
+            "fusion must perform the adds"
+        );
+    });
+}
+
+#[test]
+fn full_models_satisfy_energy_sanity() {
+    for (name, graph) in [
+        ("vgg16", vgg16(32, 10)),
+        ("resnet18", resnet18(32, 10)),
+        ("unet", unet(UnetConfig::default())),
+    ] {
+        let a = analyze_graph(&AcceleratorConfig::default(), &graph, 0.45);
+        let rep = CAL_40NM.report(&a.totals, 8);
+        assert!(
+            rep.core_power_w > 1e-3 && rep.core_power_w < 0.1,
+            "{name}: core power {} W out of band",
+            rep.core_power_w
+        );
+        assert!(rep.gops > 1.0, "{name}: {} GOPs", rep.gops);
+        assert!(rep.nu.is_finite() && rep.nu > 0.0);
+        assert!(
+            rep.core_energy_j < rep.core_energy_j + rep.dram_energy_j,
+            "{name}: dram energy must be accounted"
+        );
+    }
+}

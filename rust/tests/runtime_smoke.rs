@@ -1,0 +1,20 @@
+// integration smoke: load sf_block artifact, run, compare vs jnp values
+use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
+
+#[test]
+fn sf_block_artifact_loads_and_runs() {
+    let store = ArtifactStore::new("artifacts");
+    let spec = store.resolve("sf_block_16").expect("run `make artifacts`");
+    let mut exe = Executor::new().unwrap();
+    exe.load_hlo_text("sf_block", &spec.path).unwrap();
+    let x = TensorBuf::new(vec![8, 16, 16], vec![0.5; 8 * 16 * 16]).unwrap();
+    let w = TensorBuf::new(vec![8, 8, 3, 3], vec![0.1; 8 * 8 * 3 * 3]).unwrap();
+    let b = TensorBuf::new(vec![8], vec![0.0; 8]).unwrap();
+    let skip = TensorBuf::new(vec![8, 16, 16], vec![1.0; 8 * 16 * 16]).unwrap();
+    let out = exe.run("sf_block", &[x, w, b, skip]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![8, 16, 16]);
+    // interior pixel: 9 taps * 8 ch * 0.5 * 0.1 + 1.0 = 4.6
+    let v = out[0].data[16 * 16 / 2 + 8]; // row 8, col 8 of channel 0
+    assert!((v - 4.6).abs() < 1e-4, "interior value {v}");
+}

@@ -1,0 +1,379 @@
+//! Property test: the closed-form schedule model (`compiler::schedule`)
+//! must produce *exactly* the same cycle and event counts as the
+//! cycle-accurate micro simulator (`sim::array`) — this equivalence is
+//! what licenses using the analytic model for full-size VGG/ResNet/U-net
+//! sweeps in the paper benches.
+//!
+//! Inputs/weights are generated in [0.25, 1.0] so nothing quantizes to
+//! Q8.8 zero: gating is then driven by padding alone, which both sides
+//! count deterministically.
+
+use sf_mmcn::compiler::analyze_graph;
+use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
+use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, NodeWeights, WeightStore};
+use sf_mmcn::util::proptest_lite::{Gen, Prop};
+use sf_mmcn::util::Tensor;
+
+/// Weights with all values safely inside Q8.8 (no quantized zeros).
+fn safe_weights(g: &ModelGraph, gen: &mut Gen) -> WeightStore {
+    let mut ws = WeightStore::random(g, 1);
+    for (i, n) in g.nodes.iter().enumerate() {
+        let nw = match &n.layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                residual,
+                time_dense,
+                ..
+            } => {
+                let w = Tensor::from_fn(&[*c_out, *c_in, *k, *k], |_| gen.f32_in(0.25, 1.0));
+                let bias = (0..*c_out).map(|_| 0.0).collect();
+                let w_res = match residual {
+                    Residual::Conv { from, .. } => {
+                        let cs = g.nodes[*from].out_shape.c;
+                        Some(Tensor::from_fn(&[*c_out, cs], |_| gen.f32_in(0.25, 1.0)))
+                    }
+                    _ => None,
+                };
+                let w_time = time_dense.map(|td| {
+                    Tensor::from_fn(&[*c_out, td], |_| gen.f32_in(0.25, 1.0))
+                });
+                Some(NodeWeights {
+                    w,
+                    bias,
+                    w_res,
+                    w_time,
+                })
+            }
+            Layer::Dense { in_f, out_f, .. } => {
+                let w = Tensor::from_fn(&[*out_f, *in_f], |_| gen.f32_in(0.25, 1.0));
+                Some(NodeWeights {
+                    w,
+                    bias: vec![0.0; *out_f],
+                    w_res: None,
+                    w_time: None,
+                })
+            }
+            _ => None,
+        };
+        ws.per_node[i] = nw;
+    }
+    ws
+}
+
+fn assert_counts_equal(g: &ModelGraph, cfg: AcceleratorConfig, gen: &mut Gen, time_dim: Option<usize>) {
+    let ws = safe_weights(g, gen);
+    // positive inputs: conv chains stay positive, nothing quantizes to zero
+    let x = Tensor::from_fn(
+        &[g.input.c, g.input.h, g.input.w],
+        |_| gen.f32_in(0.25, 1.0),
+    );
+    let emb: Option<Vec<f32>> = time_dim.map(|td| (0..td).map(|_| gen.f32_in(0.25, 1.0)).collect());
+    let mut acc = Accelerator::new(cfg);
+    let run = acc
+        .run_graph(g, &x, &ws, emb.as_deref())
+        .expect("micro sim runs");
+    let ana = analyze_graph(&cfg, g, 0.0);
+
+    assert_eq!(run.layers.len(), ana.layers.len());
+    for (lr, la) in run.layers.iter().zip(&ana.layers) {
+        let ctx = format!("layer {} ({})", lr.node_idx, la.label);
+        assert_eq!(lr.cycles, la.cycles, "{ctx}: cycles");
+        assert_eq!(lr.counts.pe.macs, la.counts.pe.macs, "{ctx}: macs");
+        assert_eq!(
+            lr.counts.pe.gated_macs, la.counts.pe.gated_macs,
+            "{ctx}: gated"
+        );
+        assert_eq!(
+            lr.counts.pe.active_cycles, la.counts.pe.active_cycles,
+            "{ctx}: active"
+        );
+        assert_eq!(
+            lr.counts.pe.idle_cycles, la.counts.pe.idle_cycles,
+            "{ctx}: idle"
+        );
+        assert_eq!(
+            lr.counts.pe.writebacks, la.counts.pe.writebacks,
+            "{ctx}: writebacks"
+        );
+        assert_eq!(
+            lr.counts.pe.residual_adds, la.counts.pe.residual_adds,
+            "{ctx}: residual adds"
+        );
+        assert_eq!(
+            lr.counts.unit.cycles, la.counts.unit.cycles,
+            "{ctx}: unit cycles"
+        );
+        assert_eq!(
+            lr.counts.unit.buffer_reads, la.counts.unit.buffer_reads,
+            "{ctx}: buffer reads"
+        );
+        assert_eq!(
+            lr.counts.unit.buffer_reads_no_reuse, la.counts.unit.buffer_reads_no_reuse,
+            "{ctx}: buffer reads (no reuse)"
+        );
+        assert_eq!(
+            lr.counts.unit.weight_reads, la.counts.unit.weight_reads,
+            "{ctx}: weight reads"
+        );
+        assert_eq!(
+            lr.counts.unit.served_values, la.counts.unit.served_values,
+            "{ctx}: served"
+        );
+        assert_eq!(
+            lr.counts.mem.dram_reads, la.counts.mem.dram_reads,
+            "{ctx}: dram reads"
+        );
+        assert_eq!(
+            lr.counts.mem.output_buf_reads, la.counts.mem.output_buf_reads,
+            "{ctx}: skip reads"
+        );
+        assert_eq!(
+            lr.counts.mem.input_buf_writes, la.counts.mem.input_buf_writes,
+            "{ctx}: ifm writes"
+        );
+    }
+    assert_eq!(run.total_cycles(), ana.total_cycles(), "total cycles");
+}
+
+#[test]
+fn series_conv_equivalence() {
+    Prop::new("series conv: schedule == sim", 30).check(|g| {
+        let c_in = g.usize_in(1, 12);
+        let c_out = g.usize_in(1, 12);
+        let hw = g.usize_in(3, 14);
+        let k = *g.choose(&[1usize, 3, 5]);
+        if hw < k {
+            return;
+        }
+        let pad = g.usize_in(0, k / 2);
+        let stride = *g.choose(&[1usize, 2]);
+        if hw + 2 * pad < k {
+            return;
+        }
+        let mut b = GraphBuilder::new("t", TensorShape::new(c_in, hw, hw));
+        b.add(Layer::Conv {
+            c_in,
+            c_out,
+            k,
+            stride,
+            pad,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        let graph = b.build();
+        let units = *g.choose(&[2usize, 4, 8]);
+        assert_counts_equal(&graph, AcceleratorConfig::with_units(units), g, None);
+    });
+}
+
+#[test]
+fn residual_identity_equivalence() {
+    Prop::new("residual identity: schedule == sim", 20).check(|g| {
+        let c = g.usize_in(1, 10);
+        let hw = g.usize_in(3, 12);
+        let mut b = GraphBuilder::new("t", TensorShape::new(c, hw, hw));
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::Identity { from: 0 },
+            time_dense: None,
+        })
+        .unwrap();
+        let graph = b.build();
+        assert_counts_equal(&graph, AcceleratorConfig::default(), g, None);
+    });
+}
+
+#[test]
+fn residual_conv_equivalence() {
+    Prop::new("residual conv: schedule == sim", 20).check(|g| {
+        let c = g.usize_in(2, 8);
+        let hw = g.usize_in(4, 12);
+        let hw = hw & !1; // even for stride-2
+        let mut b = GraphBuilder::new("t", TensorShape::new(c, hw, hw));
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        // downsample block: stride-2 conv with 1x1/2 residual conv
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c * 2,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::Conv { from: 0, stride: 2 },
+            time_dense: None,
+        })
+        .unwrap();
+        let graph = b.build();
+        assert_counts_equal(&graph, AcceleratorConfig::default(), g, None);
+    });
+}
+
+#[test]
+fn time_dense_equivalence() {
+    Prop::new("time dense: schedule == sim", 20).check(|g| {
+        let c = g.usize_in(1, 8);
+        let c_out = g.usize_in(1, 8);
+        let hw = g.usize_in(3, 10);
+        // include overhang cases: time_dim can exceed k*k*c_in
+        let td = g.usize_in(1, 12 * 9);
+        let mut b = GraphBuilder::new("t", TensorShape::new(c, hw, hw));
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: Some(td),
+        })
+        .unwrap();
+        let graph = b.build();
+        assert_counts_equal(&graph, AcceleratorConfig::default(), g, Some(td));
+    });
+}
+
+#[test]
+fn dense_pool_gap_equivalence() {
+    Prop::new("dense/pool/gap: schedule == sim", 20).check(|g| {
+        let c = g.usize_in(1, 6);
+        let hw = *g.choose(&[4usize, 6, 8]);
+        let out_f = g.usize_in(1, 40);
+        let mut b = GraphBuilder::new("t", TensorShape::new(c, hw, hw));
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+        let s = hw / 2;
+        b.add(Layer::Dense {
+            in_f: c * s * s,
+            out_f,
+            act: Act::None,
+        })
+        .unwrap();
+        let graph = b.build();
+        assert_counts_equal(&graph, AcceleratorConfig::default(), g, None);
+    });
+}
+
+#[test]
+fn small_input_split_equivalence() {
+    // Tiny maps (<= 4 outputs) engage the split PE array (Figs 11-12):
+    // the analytic mirror must match in every SF mode.
+    Prop::new("split mode: schedule == sim", 25).check(|g| {
+        let c = g.usize_in(1, 8);
+        let c_out = g.usize_in(2, 9);
+        let hw = *g.choose(&[1usize, 2]); // 1x1 or 2x2 maps
+        let mode = g.usize_in(0, 3);
+        let mut b = GraphBuilder::new("t", TensorShape::new(c, hw * 2, hw * 2));
+        // producer conv to give skips a source (also possibly split-sized)
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out: c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+        let (residual, td) = match mode {
+            0 => (Residual::None, None),
+            1 => (Residual::None, Some(g.usize_in(1, 30))),
+            2 if c == c_out => (Residual::Identity { from: 1 }, None),
+            _ => (Residual::Conv { from: 1, stride: 1 }, None),
+        };
+        b.add(Layer::Conv {
+            c_in: c,
+            c_out,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual,
+            time_dense: td,
+        })
+        .unwrap();
+        let graph = b.build();
+        assert_counts_equal(&graph, AcceleratorConfig::default(), g, td);
+    });
+}
+
+#[test]
+fn unet_like_composite_equivalence() {
+    // fixed small composite exercising upsample/concat too
+    let mut gen = Gen::new(0xC0FFEE);
+    let mut b = GraphBuilder::new("t", TensorShape::new(2, 8, 8));
+    b.add(Layer::Conv {
+        c_in: 2,
+        c_out: 4,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::None,
+        residual: Residual::None,
+        time_dense: Some(6),
+    })
+    .unwrap();
+    b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+    b.add(Layer::Upsample2x).unwrap();
+    b.add(Layer::ConcatSkip { from: 0 }).unwrap();
+    b.add(Layer::Conv {
+        c_in: 8,
+        c_out: 4,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        act: Act::None,
+        residual: Residual::Conv { from: 3, stride: 1 },
+        time_dense: None,
+    })
+    .unwrap();
+    let graph = b.build();
+    assert_counts_equal(
+        &graph,
+        AcceleratorConfig::default(),
+        &mut gen,
+        Some(6),
+    );
+}
