@@ -1,26 +1,86 @@
 //! Bench: hot paths of the three layers, for the §Perf optimization pass.
 //!
-//! * L3 simulator: micro-sim conv groups / full small nets (events/sec).
+//! * L3 simulator: micro-sim conv groups / residual pairs / full VGG-16
+//!   and ResNet-18 graphs — fast path vs the preserved reference path
+//!   (`run_graph_ref`), so every run records the speedup against the
+//!   pre-optimization baseline *measured on the same machine*.
 //! * L3 analytic: full-model analysis throughput (the bench workhorse).
 //! * L3 runtime: PJRT execute latency for the SF block and the full U-net
 //!   denoise step (the serving hot path), when artifacts are present.
 //!
-//! Run: `cargo bench --bench hotpath`. Before/after numbers are recorded
-//! in EXPERIMENTS.md §Perf.
+//! Run: `cargo bench --bench hotpath` (full) or
+//! `cargo bench --bench hotpath -- --quick` (CI profile: skips the
+//! full-model simulations). Either mode writes machine-readable results
+//! to `BENCH_hotpath.json` so the perf trajectory is tracked across PRs;
+//! human-readable before/after tables live in EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
 
 use sf_mmcn::compiler::analyze_graph;
 use sf_mmcn::coordinator::ddpm::time_embedding;
 use sf_mmcn::coordinator::UnetParams;
-use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, Residual, TensorShape};
+use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
 use sf_mmcn::models::{resnet18, unet, vgg16, UnetConfig};
+use sf_mmcn::quant::Fixed;
 use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
 use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
-use sf_mmcn::sim::unit::{ConvGroup, ServerTask, SfMmcnUnit};
-use sf_mmcn::quant::Fixed;
+use sf_mmcn::sim::unit::{ConvGroup, FlatServer, ServerTask, SfMmcnUnit};
 use sf_mmcn::util::bench::{fmt_rate, Bencher};
 use sf_mmcn::util::{Rng, Tensor};
 
-fn bench_unit_group(b: &Bencher) {
+/// One machine-readable result row for `BENCH_hotpath.json`.
+struct JsonRow {
+    name: String,
+    mean_ns: f64,
+    /// Model MACs simulated per iteration (sim benches only).
+    macs: Option<u64>,
+    /// Simulated MAC throughput, MAC/s (sim benches only).
+    mac_rate: Option<f64>,
+    /// Speedup vs the reference (pre-optimization) path, if measured.
+    speedup_vs_ref: Option<f64>,
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(mode: &str, rows: &[JsonRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"hotpath\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"name\": \"{}\", ", r.name));
+        s.push_str(&format!("\"mean_ns\": {}", json_f64(r.mean_ns)));
+        if let Some(m) = r.macs {
+            s.push_str(&format!(", \"macs\": {m}"));
+        }
+        if let Some(rate) = r.mac_rate {
+            s.push_str(&format!(", \"mac_rate_per_s\": {}", json_f64(rate)));
+        }
+        if let Some(sp) = r.speedup_vs_ref {
+            s.push_str(&format!(", \"speedup_vs_ref\": {}", json_f64(sp)));
+        }
+        s.push('}');
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_hotpath.json", &s) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} results)", rows.len()),
+        Err(e) => println!("\nWARNING: could not write BENCH_hotpath.json: {e}"),
+    }
+}
+
+fn bench_unit_group(b: &Bencher, rows: &mut Vec<JsonRow>) {
     let w: Vec<Fixed> = (0..9).map(|i| Fixed::from_f32(0.1 * i as f32)).collect();
     let wins: Vec<Vec<Fixed>> = (0..8)
         .map(|i| (0..9).map(|j| Fixed::from_f32((i + j) as f32 * 0.05)).collect())
@@ -39,9 +99,40 @@ fn bench_unit_group(b: &Bencher) {
         "  -> simulated MAC rate: {}",
         fmt_rate(72.0 / (r.mean_ns / 1e9))
     );
+    rows.push(JsonRow {
+        name: "unit_run_group_3x3".into(),
+        mean_ns: r.mean_ns,
+        macs: Some(72),
+        mac_rate: Some(72.0 / (r.mean_ns / 1e9)),
+        speedup_vs_ref: None,
+    });
+
+    // §Perf flat path on the identical group.
+    let flat: Vec<Fixed> = wins.iter().flatten().copied().collect();
+    let zeros: Vec<u64> = wins
+        .iter()
+        .map(|win| win.iter().filter(|v| v.is_zero()).count() as u64)
+        .collect();
+    let mut unit2 = SfMmcnUnit::new();
+    let mut outs: Vec<Fixed> = Vec::with_capacity(8);
+    let rf = b.report("unit::run_group_flat 3x3 series (72 MACs)", || {
+        unit2.run_group_flat(&flat, 8, 9, &zeros, &w, FlatServer::Idle, 42, &mut outs)
+    });
+    println!(
+        "  -> simulated MAC rate: {}  (x{:.2} vs run_group)",
+        fmt_rate(72.0 / (rf.mean_ns / 1e9)),
+        r.mean_ns / rf.mean_ns
+    );
+    rows.push(JsonRow {
+        name: "unit_run_group_flat_3x3".into(),
+        mean_ns: rf.mean_ns,
+        macs: Some(72),
+        mac_rate: Some(72.0 / (rf.mean_ns / 1e9)),
+        speedup_vs_ref: Some(r.mean_ns / rf.mean_ns),
+    });
 }
 
-fn bench_micro_sim(b: &Bencher) {
+fn residual_pair_graph() -> ModelGraph {
     let mut bld = GraphBuilder::new("bench", TensorShape::new(16, 32, 32));
     bld.add(Layer::Conv {
         c_in: 16,
@@ -65,29 +156,86 @@ fn bench_micro_sim(b: &Bencher) {
         time_dense: None,
     })
     .unwrap();
-    let g = bld.build();
-    let ws = WeightStore::random(&g, 1);
-    let mut rng = Rng::new(2);
-    let x = Tensor::from_fn(&[16, 32, 32], |_| rng.normal() * 0.4);
+    bld.build()
+}
+
+/// Bench a graph through the fast path and (optionally) the reference
+/// path, pushing JSON rows with the measured speedup.
+fn bench_sim_graph(
+    b_fast: &Bencher,
+    b_ref: Option<&Bencher>,
+    name: &str,
+    g: &ModelGraph,
+    seed: u64,
+    time_dim: Option<usize>,
+    rows: &mut Vec<JsonRow>,
+) {
+    let ws = WeightStore::random(g, seed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| rng.normal() * 0.4);
+    let emb: Option<Vec<f32>> =
+        time_dim.map(|td| (0..td).map(|_| rng.normal() * 0.5).collect());
     let macs = g.total_macs();
-    let r = b.report("micro-sim residual pair 16ch@32 (9.4 M MACs)", || {
+
+    let r_fast = b_fast.report(&format!("micro-sim {name} [fast]"), || {
         let mut acc = Accelerator::new(AcceleratorConfig::default());
-        acc.run_graph(&g, &x, &ws, None).unwrap()
+        acc.run_graph(g, &x, &ws, emb.as_deref()).unwrap()
     });
     println!(
         "  -> simulated MAC rate: {}",
-        fmt_rate(macs as f64 / (r.mean_ns / 1e9))
+        fmt_rate(macs as f64 / (r_fast.mean_ns / 1e9))
     );
+
+    let speedup = b_ref.map(|br| {
+        let r_ref = br.report(&format!("micro-sim {name} [reference]"), || {
+            let mut acc = Accelerator::new(AcceleratorConfig::default());
+            acc.run_graph_ref(g, &x, &ws, emb.as_deref()).unwrap()
+        });
+        println!(
+            "  -> simulated MAC rate: {}  |  fast path speedup: x{:.2}",
+            fmt_rate(macs as f64 / (r_ref.mean_ns / 1e9)),
+            r_ref.mean_ns / r_fast.mean_ns
+        );
+        rows.push(JsonRow {
+            name: format!("{name}_reference"),
+            mean_ns: r_ref.mean_ns,
+            macs: Some(macs),
+            mac_rate: Some(macs as f64 / (r_ref.mean_ns / 1e9)),
+            speedup_vs_ref: None,
+        });
+        r_ref.mean_ns / r_fast.mean_ns
+    });
+
+    rows.push(JsonRow {
+        name: name.to_string(),
+        mean_ns: r_fast.mean_ns,
+        macs: Some(macs),
+        mac_rate: Some(macs as f64 / (r_fast.mean_ns / 1e9)),
+        speedup_vs_ref: speedup,
+    });
 }
 
-fn bench_analytic(b: &Bencher) {
+fn bench_analytic(b: &Bencher, rows: &mut Vec<JsonRow>) {
     let vgg = vgg16(224, 1000);
     let rn = resnet18(224, 1000);
     let un = unet(UnetConfig::default());
     let cfg = AcceleratorConfig::default();
-    b.report("analyze_graph vgg16@224", || analyze_graph(&cfg, &vgg, 0.45));
-    b.report("analyze_graph resnet18@224", || analyze_graph(&cfg, &rn, 0.45));
-    b.report("analyze_graph unet16", || analyze_graph(&cfg, &un, 0.45));
+    for (name, g) in [
+        ("analyze_vgg16_224", &vgg),
+        ("analyze_resnet18_224", &rn),
+        ("analyze_unet16", &un),
+    ] {
+        let r = b.report(&format!("analyze_graph {name}"), || {
+            analyze_graph(&cfg, g, 0.45)
+        });
+        rows.push(JsonRow {
+            name: name.into(),
+            mean_ns: r.mean_ns,
+            macs: None,
+            mac_rate: None,
+            speedup_vs_ref: None,
+        });
+    }
 }
 
 fn bench_runtime(b: &Bencher) {
@@ -96,8 +244,14 @@ fn bench_runtime(b: &Bencher) {
         println!("(artifacts missing — skipping PJRT hot-path benches; run `make artifacts`)");
         return;
     };
-    let mut exe = Executor::new().expect("pjrt client");
-    exe.load_hlo_text("sf_block", &spec.path).expect("compile");
+    let Ok(mut exe) = Executor::new() else {
+        println!("(no PJRT client — skipping PJRT hot-path benches)");
+        return;
+    };
+    if exe.load_hlo_text("sf_block", &spec.path).is_err() {
+        println!("(PJRT runtime unavailable — skipping PJRT hot-path benches; build with --features pjrt)");
+        return;
+    }
     let x = TensorBuf::new(vec![8, 16, 16], vec![0.3; 2048]).unwrap();
     let w = TensorBuf::new(vec![8, 8, 3, 3], vec![0.1; 576]).unwrap();
     let bias = TensorBuf::new(vec![8], vec![0.0; 8]).unwrap();
@@ -169,11 +323,75 @@ fn bench_runtime(b: &Bencher) {
 }
 
 fn main() {
-    println!("==================== HOT-PATH BENCH ====================\n");
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SF_MMCN_BENCH_QUICK").is_ok();
+    println!(
+        "==================== HOT-PATH BENCH ({}) ====================\n",
+        if quick { "quick" } else { "full" }
+    );
+    let mut rows: Vec<JsonRow> = Vec::new();
     let b = Bencher::default();
-    bench_unit_group(&b);
-    bench_micro_sim(&Bencher::quick());
-    bench_analytic(&Bencher::quick());
+    bench_unit_group(&b, &mut rows);
+
+    // Micro-sim residual pair: fast vs reference (the §Perf acceptance
+    // gate: >= 5x on this workload).
+    let pair = residual_pair_graph();
+    bench_sim_graph(
+        &Bencher::quick(),
+        Some(&Bencher::quick()),
+        "residual_pair_16ch_32",
+        &pair,
+        1,
+        None,
+        &mut rows,
+    );
+
+    // Micro-sim U-net (the diffusion workload the coordinator co-sims).
+    bench_sim_graph(
+        &Bencher::quick(),
+        Some(&Bencher::quick()),
+        "unet16_sim",
+        &unet(UnetConfig::default()),
+        2,
+        Some(UnetConfig::default().time_dim),
+        &mut rows,
+    );
+
+    if !quick {
+        // Full-model cycle-accurate sims (§Perf acceptance gate: >= 10x
+        // on ResNet-18 vs the reference path). Single iterations — these
+        // execute billions of simulated MACs.
+        let one_shot = Bencher {
+            warmup: Duration::ZERO,
+            measure: Duration::ZERO,
+            min_iters: 1,
+            max_iters: 1,
+        };
+        bench_sim_graph(
+            &one_shot,
+            Some(&one_shot),
+            "resnet18_224_sim",
+            &resnet18(224, 1000),
+            3,
+            None,
+            &mut rows,
+        );
+        bench_sim_graph(
+            &one_shot,
+            None, // reference VGG-16 @224 takes minutes; fast-only trend
+            "vgg16_224_sim",
+            &vgg16(224, 1000),
+            4,
+            None,
+            &mut rows,
+        );
+    } else {
+        println!("(--quick: skipping full VGG-16 / ResNet-18 micro-sims)");
+    }
+
+    bench_analytic(&Bencher::quick(), &mut rows);
     bench_runtime(&Bencher::quick());
+
+    write_json(if quick { "quick" } else { "full" }, &rows);
     println!("\nhotpath bench OK");
 }

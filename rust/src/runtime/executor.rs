@@ -1,4 +1,5 @@
-//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client (the real
+//! runtime, compiled only with `--features pjrt`; see `super::stub`).
 //!
 //! One [`Executor`] holds the PJRT client plus every compiled executable
 //! keyed by artifact name. All jax functions are lowered with
@@ -7,66 +8,18 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-/// A host-side tensor: row-major `f32` data plus its shape.
-///
-/// This is the only tensor type that crosses the runtime boundary; the
-/// simulator works in fixed-point (`crate::quant`) and converts at the edge.
-#[derive(Debug, Clone, PartialEq)]
-pub struct TensorBuf {
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
-}
+use super::tensor_buf::TensorBuf;
 
-impl TensorBuf {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
-        if n != data.len() {
-            bail!(
-                "shape {:?} wants {} elements, got {}",
-                shape,
-                n,
-                data.len()
-            );
-        }
-        Ok(Self { shape, data })
-    }
-
-    /// All-zeros tensor of the given shape.
-    pub fn zeros(shape: &[usize]) -> Self {
-        let n = shape.iter().product();
-        Self {
-            shape: shape.to_vec(),
-            data: vec![0.0; n],
-        }
-    }
-
-    pub fn scalar(v: f32) -> Self {
-        Self {
-            shape: vec![],
-            data: vec![v],
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.data.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<usize> = self.shape.clone();
-        let lit = xla::Literal::vec1(&self.data);
-        if dims.is_empty() {
-            // rank-0: reshape to scalar
-            Ok(lit.reshape(&[])?)
-        } else {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            Ok(lit.reshape(&dims_i64)?)
-        }
+fn to_literal(t: &TensorBuf) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // rank-0: reshape to scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims_i64: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims_i64)?)
     }
 }
 
@@ -119,10 +72,8 @@ impl Executor {
     /// Execute artifact `name` on the given inputs; returns the tuple of
     /// outputs as host tensors.
     pub fn run(&self, name: &str, inputs: &[TensorBuf]) -> Result<Vec<TensorBuf>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
         let refs: Vec<&xla::Literal> = lits.iter().collect();
         self.execute_refs(name, &refs)
     }
@@ -133,10 +84,7 @@ impl Executor {
     /// from 39 tensors (~530 KB) to 6 small ones per step.
     pub fn prepare(&self, tensors: &[TensorBuf]) -> Result<PreparedInputs> {
         Ok(PreparedInputs {
-            lits: tensors
-                .iter()
-                .map(|t| t.to_literal())
-                .collect::<Result<_>>()?,
+            lits: tensors.iter().map(to_literal).collect::<Result<_>>()?,
         })
     }
 
@@ -148,10 +96,8 @@ impl Executor {
         dynamic: &[TensorBuf],
         prepared: &PreparedInputs,
     ) -> Result<Vec<TensorBuf>> {
-        let dyn_lits: Vec<xla::Literal> = dynamic
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        let dyn_lits: Vec<xla::Literal> =
+            dynamic.iter().map(to_literal).collect::<Result<_>>()?;
         let refs: Vec<&xla::Literal> =
             dyn_lits.iter().chain(prepared.lits.iter()).collect();
         self.execute_refs(name, &refs)
@@ -188,23 +134,5 @@ impl PreparedInputs {
 
     pub fn is_empty(&self) -> bool {
         self.lits.is_empty()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tensor_buf_shape_checked() {
-        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 4]).is_ok());
-        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 5]).is_err());
-    }
-
-    #[test]
-    fn tensor_buf_zeros() {
-        let t = TensorBuf::zeros(&[3, 4]);
-        assert_eq!(t.len(), 12);
-        assert!(t.data.iter().all(|&x| x == 0.0));
     }
 }

@@ -3,9 +3,24 @@
 //! The interchange format is HLO *text* (not a serialized `HloModuleProto`):
 //! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The real PJRT executor needs the vendored `xla` crate and its
+//! `xla_extension` shared library, which the default build environment
+//! does not have — so it is gated behind the `pjrt` cargo feature and a
+//! stub with the same API takes its place otherwise (see [`stub`]). The
+//! artifact store and [`TensorBuf`] are backend-independent and always
+//! available.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod executor;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+mod tensor_buf;
 
 pub use artifact::{ArtifactSpec, ArtifactStore};
-pub use executor::{Executor, PreparedInputs, TensorBuf};
+#[cfg(feature = "pjrt")]
+pub use executor::{Executor, PreparedInputs};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executor, PreparedInputs};
+pub use tensor_buf::TensorBuf;

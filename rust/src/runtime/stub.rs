@@ -1,0 +1,117 @@
+//! Stub runtime used when the `pjrt` feature is disabled.
+//!
+//! The default build environment has neither the vendored `xla` crate nor
+//! the `xla_extension` shared library, so the PJRT-backed executor cannot
+//! even link. This stub keeps the whole crate (simulator, compiler,
+//! baselines, coordinator, benches) buildable and testable: constructing
+//! an [`Executor`] succeeds, but loading or executing an artifact returns
+//! a typed error pointing at the `pjrt` feature. Callers that can run
+//! without artifacts (tests, benches) detect this and skip.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor_buf::TensorBuf;
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} requires the PJRT runtime, but this binary was built \
+         without the `pjrt` feature (and the vendored `xla` crate) — \
+         rebuild with `cargo build --features pjrt`"
+    )
+}
+
+/// Stub executor: mirrors the PJRT executor's API, fails on use.
+pub struct Executor {
+    _priv: (),
+}
+
+impl Executor {
+    /// Succeeds so construction sites stay uniform; execution paths error.
+    pub fn new() -> Result<Self> {
+        Ok(Self { _priv: () })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
+    /// Always an error: validates the path exists (so missing-artifact
+    /// errors stay actionable), then reports the missing runtime.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        if !path.exists() {
+            bail!("artifact `{name}` not found at {}", path.display());
+        }
+        Err(unavailable("compiling an HLO artifact"))
+            .with_context(|| format!("loading artifact `{name}`"))
+    }
+
+    /// No executable can be loaded, so this is always false.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn run(&self, name: &str, _inputs: &[TensorBuf]) -> Result<Vec<TensorBuf>> {
+        bail!("artifact `{name}` not loaded ({})", unavailable("execution"))
+    }
+
+    pub fn prepare(&self, _tensors: &[TensorBuf]) -> Result<PreparedInputs> {
+        Err(unavailable("preparing device literals"))
+    }
+
+    pub fn run_prepared(
+        &self,
+        name: &str,
+        _dynamic: &[TensorBuf],
+        _prepared: &PreparedInputs,
+    ) -> Result<Vec<TensorBuf>> {
+        bail!("artifact `{name}` not loaded ({})", unavailable("execution"))
+    }
+}
+
+/// Stub for pre-converted static inputs.
+pub struct PreparedInputs {
+    _priv: (),
+}
+
+impl PreparedInputs {
+    pub fn len(&self) -> usize {
+        0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructs_but_refuses_to_run() {
+        let exe = Executor::new().unwrap();
+        assert!(exe.platform().contains("stub"));
+        assert!(!exe.has("anything"));
+        let err = exe
+            .run("never-loaded", &[TensorBuf::zeros(&[1])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not loaded"), "{err}");
+    }
+
+    #[test]
+    fn stub_load_missing_file_mentions_path() {
+        let mut exe = Executor::new().unwrap();
+        let err = exe
+            .load_hlo_text("x", Path::new("/nonexistent/x.hlo.txt"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not found"), "{err}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Host-side tensors crossing the runtime boundary (backend-independent).
+
+use anyhow::{bail, Result};
+
+/// A host-side tensor: row-major `f32` data plus its shape.
+///
+/// This is the only tensor type that crosses the runtime boundary; the
+/// simulator works in fixed-point (`crate::quant`) and converts at the edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorBuf {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_buf_shape_checked() {
+        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 4]).is_ok());
+        assert!(TensorBuf::new(vec![2, 2], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_buf_zeros() {
+        let t = TensorBuf::zeros(&[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scalar_is_rank_zero() {
+        let t = TensorBuf::scalar(3.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.data, vec![3.5]);
+    }
+}

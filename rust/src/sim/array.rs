@@ -14,16 +14,33 @@
 //!   a unit's PEs idle-clock while other units finish.
 //! * Residual skips and U-net time-dense layers ride on PE_9 (see
 //!   [`super::unit`]), so parallel branches add no cycles.
+//!
+//! §Perf — two code paths compute identical results:
+//! * [`Accelerator::run_graph`] is the flat-buffer hot path: per-layer
+//!   window slabs and zero counts built once and shared across output
+//!   channels, per-node quantized weight caches ([`WeightStore`]), flat
+//!   group execution ([`SfMmcnUnit::run_group_flat`]), and the lock-step
+//!   units mapped onto `std::thread::scope` threads (one per unit, each
+//!   owning a disjoint round-robin slice of output channels).
+//! * [`Accelerator::run_graph_ref`] is the scalar reference
+//!   implementation (the pre-optimization seed code path), kept as the
+//!   bit-exactness oracle: `rust/tests/sim_golden.rs` pins outputs, wall
+//!   cycles, and every event counter of the two paths against each other,
+//!   and `benches/hotpath.rs` uses it as the speedup baseline.
+
+use std::cell::RefCell;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::models::graph::{Act, Layer, ModelGraph, Residual};
-use crate::quant::Fixed;
+use crate::models::graph::{Act, Layer, ModelGraph, Node, Residual};
+use crate::quant::{quantize, Fixed};
 use crate::util::{Rng, Tensor};
 
 use super::energy::EventCounts;
 use super::memory::MemorySystem;
-use super::unit::{ConvGroup, ServerTask, SfMmcnUnit, PES_PER_UNIT, WORKERS};
+use super::pe::count_zeros;
+use super::unit::{ConvGroup, FlatServer, ServerTask, SfMmcnUnit, PES_PER_UNIT, WORKERS};
 
 /// Static configuration of the accelerator instance.
 #[derive(Debug, Clone, Copy)]
@@ -44,7 +61,9 @@ impl Default for AcceleratorConfig {
     fn default() -> Self {
         Self {
             units: 8,
-            // 128 KiB input + 32 KiB weight buffers (16-bit elements).
+            // Capacities are in 16-bit *elements*, not bytes: 64 Ki
+            // elements = 128 KiB input buffer, 16 Ki elements = 32 KiB
+            // weight buffer (the paper's on-chip SRAM sizing).
             input_buf_elems: 64 * 1024,
             weight_buf_elems: 16 * 1024,
             zero_gate: true,
@@ -108,13 +127,92 @@ pub struct NodeWeights {
     pub w_time: Option<Tensor>,
 }
 
+/// Quantized (Q8.8) weight taps for one node, flat so the hot path can
+/// slice per output channel without re-quantizing (§Perf: built once per
+/// node and cached in [`WeightStore`], reused across runs and groups).
+#[derive(Debug)]
+pub struct NodeQuant {
+    /// Conv: `[c_out, c_in*k*k]`; Dense: `[out_f, in_f]` — the weight
+    /// tensor's natural row-major order, i.e. `quantize(w.data())`.
+    pub w: Vec<Fixed>,
+    /// Dense nodes only: zero taps per weight row. (The dense mapping
+    /// broadcasts the input and streams weight rows through the worker
+    /// windows, so the zero-gate counts zeros of the *weights* there.)
+    pub w_zeros: Vec<u64>,
+    /// Residual 1x1 conv taps `[c_out, c_skip]`.
+    pub w_res: Option<Vec<Fixed>>,
+    /// Time-dense taps `[c_out, time_dim]`.
+    pub w_time: Option<Vec<Fixed>>,
+}
+
+impl NodeQuant {
+    /// Quantize a node's weights. `dense_rows = Some((rows, row_len))`
+    /// additionally precomputes per-row zero counts for dense layers.
+    fn new(nw: &NodeWeights, dense_rows: Option<(usize, usize)>) -> Self {
+        let w = quantize(nw.w.data());
+        let w_zeros = match dense_rows {
+            Some((rows, row_len)) => (0..rows)
+                .map(|r| count_zeros(&w[r * row_len..(r + 1) * row_len]))
+                .collect(),
+            None => Vec::new(),
+        };
+        Self {
+            w,
+            w_zeros,
+            w_res: nw.w_res.as_ref().map(|t| quantize(t.data())),
+            w_time: nw.w_time.as_ref().map(|t| quantize(t.data())),
+        }
+    }
+}
+
+/// Lazily-built per-node quantized weight cache (interior mutability so
+/// `run_graph` can fill it through a shared reference).
+#[derive(Debug, Clone, Default)]
+struct QuantCache {
+    slots: RefCell<Vec<Option<Arc<NodeQuant>>>>,
+}
+
 /// All weights for a graph, deterministically initialized (He-style).
 #[derive(Debug, Clone)]
 pub struct WeightStore {
     pub per_node: Vec<Option<NodeWeights>>,
+    quant: QuantCache,
 }
 
 impl WeightStore {
+    /// Wrap an explicit per-node weight list (quantized caches empty).
+    pub fn from_nodes(per_node: Vec<Option<NodeWeights>>) -> Self {
+        Self {
+            per_node,
+            quant: QuantCache::default(),
+        }
+    }
+
+    /// Drop all cached quantized taps. Call after mutating `per_node` in
+    /// place once the store has been used in a run — the cache is keyed
+    /// by node index only and cannot see in-place weight edits.
+    pub fn invalidate_quant(&self) {
+        self.quant.slots.borrow_mut().clear();
+    }
+
+    /// Quantized taps for node `idx`, built on first use and cached.
+    /// `dense_rows` must be `Some((rows, row_len))` for dense nodes.
+    fn quantized(
+        &self,
+        idx: usize,
+        dense_rows: Option<(usize, usize)>,
+    ) -> Option<Arc<NodeQuant>> {
+        let nw = self.per_node[idx].as_ref()?;
+        let mut slots = self.quant.slots.borrow_mut();
+        if slots.len() < self.per_node.len() {
+            slots.resize(self.per_node.len(), None);
+        }
+        if slots[idx].is_none() {
+            slots[idx] = Some(Arc::new(NodeQuant::new(nw, dense_rows)));
+        }
+        slots[idx].clone()
+    }
+
     pub fn random(g: &ModelGraph, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let mut per_node = Vec::with_capacity(g.nodes.len());
@@ -171,7 +269,7 @@ impl WeightStore {
         // Second pass: residual-conv weights need the *skip source* channel
         // count, which is the conv's in_shape only for stride-1 same-c
         // cases; derive from the referenced node's out_shape.
-        let mut ws = Self { per_node };
+        let mut ws = Self::from_nodes(per_node);
         let mut rng2 = Rng::new(seed ^ 0xABCD_EF01);
         for (i, n) in g.nodes.iter().enumerate() {
             if let Layer::Conv {
@@ -225,6 +323,59 @@ pub fn conv_group_distinct(
     ((c_in * k * cols) as u64).min(total)
 }
 
+/// Threading threshold: conv/dense layers with at least this many MAC
+/// tap-slots fan their units out over scoped threads; smaller layers run
+/// inline (spawn overhead would dominate). Either way results and event
+/// counts are identical — the threshold only moves wall-clock.
+const PAR_MIN_TAP_SLOTS: u64 = 1 << 18;
+
+/// One unit's contribution to a layer, merged after the layer barrier.
+struct UnitOutcome {
+    cycles: u64,
+    skip_reads: u64,
+}
+
+/// Read-only per-layer execution plan shared by every unit (and thread)
+/// of a conv layer: flat window slab + zero counts + group table built
+/// once, quantized weights sliced per output channel.
+struct ConvPlan<'a> {
+    taps: usize,
+    hw: usize,
+    act: Act,
+    residual: Residual,
+    /// `(start position, lane count, reused inputs)` per group.
+    groups: &'a [(usize, usize, u64)],
+    /// `hw x taps` window slab.
+    windows: &'a [Fixed],
+    /// Zero taps per window position.
+    win_zeros: &'a [u64],
+    /// Main conv taps `[c_out, taps]`.
+    qw: &'a [Fixed],
+    bias: &'a [f32],
+    /// Identity skip, quantized `[c_out, hw]` (empty otherwise).
+    sq: &'a [Fixed],
+    /// Conv-skip windows `[hw, c_skip]` (empty otherwise).
+    rwin: &'a [Fixed],
+    rzeros: &'a [u64],
+    c_skip: usize,
+    qw_res: Option<&'a [Fixed]>,
+    emb: Option<&'a [Fixed]>,
+    emb_zeros: u64,
+    qw_time: Option<&'a [Fixed]>,
+}
+
+/// Read-only per-layer plan for a dense node (neuron groups of 8).
+struct DensePlan<'a> {
+    in_f: usize,
+    act: Act,
+    /// Weight rows `[out_f, in_f]` — these are the worker *windows*.
+    qw: &'a [Fixed],
+    w_zeros: &'a [u64],
+    /// Quantized input vector — broadcast as the shared filter.
+    xq: &'a [Fixed],
+    bias: &'a [f32],
+}
+
 /// The simulated accelerator.
 pub struct Accelerator {
     pub cfg: AcceleratorConfig,
@@ -248,7 +399,12 @@ impl Accelerator {
         self.cfg.units.min(2 * c_in).max(1)
     }
 
-    fn snapshot(&self) -> (Vec<super::unit::UnitStats>, Vec<(super::pe::PeStats, super::pe::PeStats)>) {
+    fn snapshot(
+        &self,
+    ) -> (
+        Vec<super::unit::UnitStats>,
+        Vec<(super::pe::PeStats, super::pe::PeStats)>,
+    ) {
         (
             self.units.iter().map(|u| u.stats).collect(),
             self.units.iter().map(|u| u.pe_stats()).collect(),
@@ -259,7 +415,10 @@ impl Accelerator {
     /// wall cycles.
     fn delta_counts(
         &self,
-        snap: &(Vec<super::unit::UnitStats>, Vec<(super::pe::PeStats, super::pe::PeStats)>),
+        snap: &(
+            Vec<super::unit::UnitStats>,
+            Vec<(super::pe::PeStats, super::pe::PeStats)>,
+        ),
         wall_cycles: u64,
         mem_before: super::memory::MemoryStats,
     ) -> EventCounts {
@@ -290,28 +449,44 @@ impl Accelerator {
                 (w.residual_adds - pw.residual_adds) + (s.residual_adds - ps.residual_adds);
             c.pe.writebacks += (w.writebacks - pw.writebacks) + (s.writebacks - ps.writebacks);
         }
-        let mut mem = self.mem.stats;
-        // subtract the before snapshot
-        mem.dram_reads -= mem_before.dram_reads;
-        mem.dram_writes -= mem_before.dram_writes;
-        mem.input_buf_reads -= mem_before.input_buf_reads;
-        mem.input_buf_writes -= mem_before.input_buf_writes;
-        mem.weight_buf_reads -= mem_before.weight_buf_reads;
-        mem.weight_buf_writes -= mem_before.weight_buf_writes;
-        mem.output_buf_writes -= mem_before.output_buf_writes;
-        mem.output_buf_reads -= mem_before.output_buf_reads;
-        c.mem = mem;
+        c.mem = self.mem.stats.since(&mem_before);
         c
     }
 
-    /// Run a whole graph. `time_emb` supplies the U-net time embedding
-    /// (required iff the graph has `time_dense` convs).
+    /// Run a whole graph on the §Perf flat-buffer hot path. `time_emb`
+    /// supplies the U-net time embedding (required iff the graph has
+    /// `time_dense` convs). Outputs, wall cycles, and event counts are
+    /// bit-identical to [`Self::run_graph_ref`].
     pub fn run_graph(
         &mut self,
         g: &ModelGraph,
         input: &Tensor,
         weights: &WeightStore,
         time_emb: Option<&[f32]>,
+    ) -> Result<GraphRun> {
+        self.run_graph_inner(g, input, weights, time_emb, false)
+    }
+
+    /// Run a whole graph on the scalar *reference* path — the seed
+    /// implementation preserved verbatim as the bit-exactness oracle and
+    /// the perf baseline (`tests/sim_golden.rs`, `benches/hotpath.rs`).
+    pub fn run_graph_ref(
+        &mut self,
+        g: &ModelGraph,
+        input: &Tensor,
+        weights: &WeightStore,
+        time_emb: Option<&[f32]>,
+    ) -> Result<GraphRun> {
+        self.run_graph_inner(g, input, weights, time_emb, true)
+    }
+
+    fn run_graph_inner(
+        &mut self,
+        g: &ModelGraph,
+        input: &Tensor,
+        weights: &WeightStore,
+        time_emb: Option<&[f32]>,
+        reference: bool,
     ) -> Result<GraphRun> {
         if input.shape() != [g.input.c, g.input.h, g.input.w] {
             bail!(
@@ -320,6 +495,25 @@ impl Accelerator {
                 g.input
             );
         }
+        // §Perf: only outputs a later node consumes as a skip/concat
+        // source are retained — everything else moves through the
+        // double-buffered `cur` with no per-layer clone traffic.
+        let mut needed = vec![false; g.nodes.len()];
+        for n in &g.nodes {
+            match &n.layer {
+                Layer::Conv { residual, .. } => match residual {
+                    Residual::Identity { from } | Residual::Conv { from, .. }
+                        if *from != usize::MAX =>
+                    {
+                        needed[*from] = true;
+                    }
+                    _ => {}
+                },
+                Layer::ConcatSkip { from } => needed[*from] = true,
+                _ => {}
+            }
+        }
+
         let mut outputs: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
         let mut layers = Vec::with_capacity(g.nodes.len());
         let mut totals = EventCounts {
@@ -332,20 +526,47 @@ impl Accelerator {
             let snap = self.snapshot();
             let mem_before = self.mem.stats;
             let (out, wall, label) = match &node.layer {
-                Layer::Conv { .. } => {
-                    let skip = self.skip_tensor(g, idx, &outputs, input)?;
+                Layer::Conv { residual, .. } => {
+                    let skip: Option<&Tensor> = match residual {
+                        Residual::None => None,
+                        Residual::Identity { from } | Residual::Conv { from, .. } => {
+                            if *from == usize::MAX {
+                                Some(input)
+                            } else {
+                                Some(
+                                    outputs[*from]
+                                        .as_ref()
+                                        .context("skip source not materialized")?,
+                                )
+                            }
+                        }
+                    };
                     let nw = weights.per_node[idx]
                         .as_ref()
                         .context("conv node missing weights")?;
-                    self.run_conv(node, idx, &cur, nw, skip.as_ref(), time_emb)?
+                    if reference {
+                        self.run_conv_ref(node, &cur, nw, skip, time_emb)?
+                    } else {
+                        let nq = weights
+                            .quantized(idx, None)
+                            .context("conv node missing weights")?;
+                        self.run_conv(node, &cur, nw, &nq, skip, time_emb)?
+                    }
                 }
                 Layer::MaxPool { k, stride } => self.run_maxpool(node, &cur, *k, *stride),
                 Layer::GlobalAvgPool => self.run_gap(node, &cur),
-                Layer::Dense { act, .. } => {
+                Layer::Dense { in_f, out_f, act } => {
                     let nw = weights.per_node[idx]
                         .as_ref()
                         .context("dense node missing weights")?;
-                    self.run_dense(node, &cur, nw, *act)?
+                    if reference {
+                        self.run_dense_ref(node, &cur, nw, *act)?
+                    } else {
+                        let nq = weights
+                            .quantized(idx, Some((*out_f, *in_f)))
+                            .context("dense node missing weights")?;
+                        self.run_dense(node, &cur, nw, &nq, *act)?
+                    }
                 }
                 Layer::Upsample2x => self.run_upsample(node, &cur),
                 Layer::ConcatSkip { from } => {
@@ -357,6 +578,7 @@ impl Accelerator {
             };
             let counts = self.delta_counts(&snap, wall, mem_before);
             let u_pe = counts.u_pe();
+            totals.accumulate(&counts);
             layers.push(LayerRun {
                 node_idx: idx,
                 label,
@@ -365,14 +587,12 @@ impl Accelerator {
                 counts,
                 u_pe,
             });
-            totals.cycles += wall;
-            totals.pe.merge(&layers.last().unwrap().counts.pe);
-            totals.unit.merge(&layers.last().unwrap().counts.unit);
-            totals.mem.merge(&layers.last().unwrap().counts.mem);
-            // Keep outputs needed by later skips; always keep for simplicity
-            // (models here are small; the memory *system* accounting is what
-            // matters, not host RAM).
-            outputs[idx] = Some(out.clone());
+            // Retain only skip/concat sources; `cur` double-buffers the
+            // rest (the memory *system* accounting is what matters, not
+            // host RAM — but the host clones were the sim's hot path).
+            if needed[idx] {
+                outputs[idx] = Some(out.clone());
+            }
             cur = out;
             // New layer: the unit pipelines drain.
             for u in &mut self.units {
@@ -387,41 +607,10 @@ impl Accelerator {
         })
     }
 
-    /// Fetch the skip tensor for a conv node, if any.
-    fn skip_tensor(
-        &self,
-        g: &ModelGraph,
-        idx: usize,
-        outputs: &[Option<Tensor>],
-        graph_input: &Tensor,
-    ) -> Result<Option<Tensor>> {
-        if let Layer::Conv { residual, .. } = &g.nodes[idx].layer {
-            match residual {
-                Residual::None => Ok(None),
-                Residual::Identity { from } | Residual::Conv { from, .. } => {
-                    if *from == usize::MAX {
-                        return Ok(Some(graph_input.clone()));
-                    }
-                    Ok(Some(
-                        outputs[*from]
-                            .as_ref()
-                            .context("skip source not materialized")?
-                            .clone(),
-                    ))
-                }
-            }
-        } else {
-            Ok(None)
-        }
-    }
-
     /// Extract an input window (with zero padding) as quantized taps,
-    /// channel-major: for each input channel, k x k values.
-    ///
-    /// §Perf: windows overlap ~9x, so the input is quantized *once per
-    /// layer* into `xq` and the extraction reads it with direct slice
-    /// indexing into a caller-provided scratch buffer — this took the
-    /// micro simulator from 74 to >200 M MAC/s (EXPERIMENTS.md §Perf).
+    /// channel-major: for each input channel, k x k values. Reference-path
+    /// variant appending into a scratch `Vec` (see [`Self::fill_window_into`]
+    /// for the flat hot path).
     #[allow(clippy::too_many_arguments)]
     fn fill_window(
         xq: &[Fixed],
@@ -465,41 +654,65 @@ impl Accelerator {
         }
     }
 
-    /// Quantize a whole feature map once (layer-level; see `fill_window`).
-    fn quantize_map(x: &Tensor) -> Vec<Fixed> {
-        x.data().iter().map(|&v| Fixed::from_f32(v)).collect()
-    }
-
-    /// Back-compat wrapper used by the small-input split path.
+    /// Flat-slab variant of [`Self::fill_window`]: writes the window into
+    /// a caller-provided `c_in*k*k` slice and returns its zero-tap count.
+    /// §Perf: the hot path builds the whole layer's windows (and counts)
+    /// once and shares them across every output channel — the seed
+    /// re-extracted them `c_out` times.
     #[allow(clippy::too_many_arguments)]
-    fn window(
-        x: &Tensor,
+    fn fill_window_into(
+        xq: &[Fixed],
+        h: usize,
+        w: usize,
         oy: usize,
         ox: usize,
         k: usize,
         stride: usize,
         pad: usize,
         c_in: usize,
-    ) -> Vec<Fixed> {
-        let xq = Self::quantize_map(x);
-        let mut out = Vec::with_capacity(c_in * k * k);
-        Self::fill_window(
-            &xq,
-            x.shape()[1],
-            x.shape()[2],
-            oy,
-            ox,
-            k,
-            stride,
-            pad,
-            c_in,
-            &mut out,
-        );
-        out
+        out: &mut [Fixed],
+    ) -> u64 {
+        debug_assert_eq!(out.len(), c_in * k * k);
+        let plane = h * w;
+        let mut cursor = 0usize;
+        for c in 0..c_in {
+            let base_c = c * plane;
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                let dst = &mut out[cursor..cursor + k];
+                cursor += k;
+                if iy < 0 || iy >= h as isize {
+                    dst.fill(Fixed::ZERO);
+                    continue;
+                }
+                let row = base_c + iy as usize * w;
+                let x0 = (ox * stride) as isize - pad as isize;
+                if x0 >= 0 && x0 as usize + k <= w {
+                    // interior row: one contiguous copy (the common case)
+                    let s = row + x0 as usize;
+                    dst.copy_from_slice(&xq[s..s + k]);
+                } else {
+                    for (kx, d) in dst.iter_mut().enumerate() {
+                        let ix = x0 + kx as isize;
+                        *d = if ix < 0 || ix >= w as isize {
+                            Fixed::ZERO
+                        } else {
+                            xq[row + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
+        count_zeros(out)
+    }
+
+    /// Quantize a whole feature map once (layer-level; see `fill_window`).
+    fn quantize_map(x: &Tensor) -> Vec<Fixed> {
+        x.data().iter().map(|&v| Fixed::from_f32(v)).collect()
     }
 
     /// Conv filter taps for one output channel, channel-major to match
-    /// [`Self::window`].
+    /// the window extraction order.
     fn filter(w: &Tensor, oc: usize, c_in: usize, k: usize) -> Vec<Fixed> {
         let mut taps = Vec::with_capacity(c_in * k * k);
         for c in 0..c_in {
@@ -520,11 +733,308 @@ impl Accelerator {
         }
     }
 
-    /// Execute one conv node across the unit array.
+    /// Label for a conv layer (shared by both code paths).
+    fn conv_label(node: &Node, split: bool) -> String {
+        let (c_in, c_out, k, stride, residual, time_dense) = match &node.layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                stride,
+                residual,
+                time_dense,
+                ..
+            } => (*c_in, *c_out, *k, *stride, *residual, *time_dense),
+            _ => unreachable!(),
+        };
+        format!(
+            "conv{k}x{k}/{stride} {}x{}x{} -> {}x{}x{}{}{}{}",
+            c_in,
+            node.in_shape.h,
+            node.in_shape.w,
+            c_out,
+            node.out_shape.h,
+            node.out_shape.w,
+            match residual {
+                Residual::None => "",
+                Residual::Identity { .. } => " +skip",
+                Residual::Conv { .. } => " +skipconv",
+            },
+            if time_dense.is_some() { " +time" } else { "" },
+            if split { " [split]" } else { "" }
+        )
+    }
+
+    /// §Perf hot path: execute one conv node from flat per-layer buffers
+    /// across the active units, on scoped threads for large layers.
     fn run_conv(
         &mut self,
-        node: &crate::models::graph::Node,
-        _idx: usize,
+        node: &Node,
+        x: &Tensor,
+        nw: &NodeWeights,
+        nq: &NodeQuant,
+        skip: Option<&Tensor>,
+        time_emb: Option<&[f32]>,
+    ) -> Result<(Tensor, u64, String)> {
+        let (c_in, c_out, k, stride, pad, act, residual, time_dense) = match &node.layer {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                stride,
+                pad,
+                act,
+                residual,
+                time_dense,
+            } => (
+                *c_in, *c_out, *k, *stride, *pad, *act, *residual, *time_dense,
+            ),
+            _ => unreachable!(),
+        };
+        if time_dense.is_some() && !matches!(residual, Residual::None) {
+            bail!("a conv cannot host both time-dense and a residual on PE_9");
+        }
+        let out_shape = node.out_shape;
+        let hw = out_shape.h * out_shape.w;
+        if hw <= 4 && c_out >= 2 {
+            // Tiny maps take the small-input split path (Figs 11-12),
+            // shared verbatim with the reference implementation.
+            return self.run_conv_ref(node, x, nw, skip, time_emb);
+        }
+
+        let active = self.active_units(c_in);
+        let taps = c_in * k * k;
+
+        // Time-embedding operands, quantized once per layer.
+        let t_emb_fx: Option<Vec<Fixed>> = match (time_dense, time_emb) {
+            (Some(td), Some(e)) => {
+                if e.len() != td {
+                    bail!("time embedding len {} != layer's {}", e.len(), td);
+                }
+                Some(e.iter().map(|&v| Fixed::from_f32(v)).collect())
+            }
+            (Some(_), None) => bail!("graph needs a time embedding, none supplied"),
+            _ => None,
+        };
+        let emb_zeros = t_emb_fx.as_deref().map(count_zeros).unwrap_or(0);
+
+        // ---- per-layer plan: window slab, zero counts, group table and
+        // residual operands built ONCE and shared by every output channel
+        // (the seed re-extracted windows c_out times) -------------------
+        let xq = Self::quantize_map(x);
+        let (h_in, w_in) = (x.shape()[1], x.shape()[2]);
+        let mut windows = vec![Fixed::ZERO; hw * taps];
+        let mut win_zeros = vec![0u64; hw];
+        for p in 0..hw {
+            let (oy, ox) = (p / out_shape.w, p % out_shape.w);
+            win_zeros[p] = Self::fill_window_into(
+                &xq,
+                h_in,
+                w_in,
+                oy,
+                ox,
+                k,
+                stride,
+                pad,
+                c_in,
+                &mut windows[p * taps..(p + 1) * taps],
+            );
+        }
+        let mut groups: Vec<(usize, usize, u64)> =
+            Vec::with_capacity(hw.div_ceil(WORKERS));
+        let mut p = 0usize;
+        while p < hw {
+            let gw = WORKERS.min(hw - p);
+            let total_inputs = (gw * taps) as u64;
+            let reused = total_inputs
+                - conv_group_distinct(c_in, k, stride, self.cfg.data_reuse, p, gw, out_shape.w)
+                    .min(total_inputs);
+            groups.push((p, gw, reused));
+            p += gw;
+        }
+
+        let mut sq: Vec<Fixed> = Vec::new();
+        let mut rwin: Vec<Fixed> = Vec::new();
+        let mut rzeros: Vec<u64> = Vec::new();
+        let mut c_skip = 0usize;
+        match residual {
+            Residual::None => {}
+            Residual::Identity { .. } => {
+                let s = skip.context("identity residual needs skip")?;
+                sq = Self::quantize_map(s);
+            }
+            Residual::Conv {
+                stride: rstride, ..
+            } => {
+                let s = skip.context("conv residual needs skip")?;
+                c_skip = s.shape()[0];
+                let (sh, sw) = (s.shape()[1], s.shape()[2]);
+                let sqs = Self::quantize_map(s);
+                rwin = vec![Fixed::ZERO; hw * c_skip];
+                rzeros = vec![0u64; hw];
+                for q in 0..hw {
+                    let (oy, ox) = (q / out_shape.w, q % out_shape.w);
+                    let src = oy * rstride * sw + ox * rstride;
+                    let dst = &mut rwin[q * c_skip..(q + 1) * c_skip];
+                    for (c, d) in dst.iter_mut().enumerate() {
+                        *d = sqs[c * sh * sw + src];
+                    }
+                    rzeros[q] = count_zeros(dst);
+                }
+            }
+        }
+
+        let plan = ConvPlan {
+            taps,
+            hw,
+            act,
+            residual,
+            groups: &groups,
+            windows: &windows,
+            win_zeros: &win_zeros,
+            qw: &nq.w,
+            bias: &nw.bias,
+            sq: &sq,
+            rwin: &rwin,
+            rzeros: &rzeros,
+            c_skip,
+            qw_res: nq.w_res.as_deref(),
+            emb: t_emb_fx.as_deref(),
+            emb_zeros,
+            qw_time: nq.w_time.as_deref(),
+        };
+
+        // ---- execute: lock-step units on scoped threads ----------------
+        // Each unit owns a disjoint round-robin slice of output channels
+        // (oc % active == unit index, as in silicon), so per-unit stats
+        // and output planes merge deterministically at the layer barrier.
+        let mut out = Tensor::zeros(&[out_shape.c, out_shape.h, out_shape.w]);
+        let mut lanes: Vec<Vec<(usize, &mut [f32])>> =
+            (0..active).map(|_| Vec::new()).collect();
+        for (oc, plane) in out.data_mut().chunks_mut(hw).enumerate() {
+            lanes[oc % active].push((oc, plane));
+        }
+        let work = (hw * taps) as u64 * c_out as u64;
+        let outcomes: Vec<UnitOutcome> = if active > 1 && work >= PAR_MIN_TAP_SLOTS {
+            std::thread::scope(|scope| {
+                let plan = &plan;
+                let handles: Vec<_> = self
+                    .units
+                    .iter_mut()
+                    .take(active)
+                    .zip(lanes)
+                    .map(|(unit, lane)| {
+                        scope.spawn(move || Self::run_conv_unit(unit, plan, lane))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sim unit thread panicked"))
+                    .collect()
+            })
+        } else {
+            self.units
+                .iter_mut()
+                .take(active)
+                .zip(lanes)
+                .map(|(unit, lane)| Self::run_conv_unit(unit, &plan, lane))
+                .collect()
+        };
+
+        let wall = outcomes.iter().map(|o| o.cycles).max().unwrap_or(0);
+        let skip_reads: u64 = outcomes.iter().map(|o| o.skip_reads).sum();
+        if skip_reads > 0 {
+            self.mem.read_skip(skip_reads);
+        }
+
+        // Memory system: IFM streamed per iteration group, weights once.
+        let iterations = (c_out as u64).div_ceil(active as u64);
+        let ifm = x.shape().iter().product::<usize>() as u64;
+        let wsize = (c_out * c_in * k * k) as u64;
+        self.mem.stream_input(ifm, iterations, 0);
+        self.mem.stream_weights(wsize, 0);
+        self.mem.write_output(out_shape.elems(), false);
+
+        Ok((out, wall, Self::conv_label(node, false)))
+    }
+
+    /// One unit's share of a conv layer: its round-robin output channels,
+    /// group by group, through [`SfMmcnUnit::run_group_flat`]. Runs on a
+    /// scoped thread for large layers; the unit owns its PEs/stats and
+    /// `lane` holds disjoint output planes, so no synchronization exists
+    /// until the layer barrier (thread join).
+    fn run_conv_unit(
+        unit: &mut SfMmcnUnit,
+        plan: &ConvPlan<'_>,
+        lane: Vec<(usize, &mut [f32])>,
+    ) -> UnitOutcome {
+        let taps = plan.taps;
+        let mut outputs: Vec<Fixed> = Vec::with_capacity(WORKERS);
+        let mut cycles = 0u64;
+        let mut skip_reads = 0u64;
+        for (oc, plane) in lane {
+            let fw = &plan.qw[oc * taps..(oc + 1) * taps];
+            let mut time_proj = 0.0f32;
+            let mut dense_done = plan.emb.is_none();
+            for &(p, gw, reused) in plan.groups {
+                let server = match plan.residual {
+                    Residual::None => match (plan.emb, dense_done) {
+                        (Some(emb), false) => FlatServer::Dense {
+                            x: emb,
+                            w: &plan.qw_time.unwrap()
+                                [oc * emb.len()..(oc + 1) * emb.len()],
+                            zeros: plan.emb_zeros,
+                        },
+                        _ => FlatServer::Idle,
+                    },
+                    Residual::Identity { .. } => {
+                        skip_reads += gw as u64;
+                        FlatServer::Identity(
+                            &plan.sq[oc * plan.hw + p..oc * plan.hw + p + gw],
+                        )
+                    }
+                    Residual::Conv { .. } => {
+                        skip_reads += (gw * plan.c_skip) as u64;
+                        FlatServer::Conv {
+                            windows: &plan.rwin[p * plan.c_skip..(p + gw) * plan.c_skip],
+                            rtaps: plan.c_skip,
+                            weights: &plan.qw_res.unwrap()
+                                [oc * plan.c_skip..(oc + 1) * plan.c_skip],
+                            zeros: &plan.rzeros[p..p + gw],
+                        }
+                    }
+                };
+                let (cyc, dense_out) = unit.run_group_flat(
+                    &plan.windows[p * taps..(p + gw) * taps],
+                    gw,
+                    taps,
+                    &plan.win_zeros[p..p + gw],
+                    fw,
+                    server,
+                    reused,
+                    &mut outputs,
+                );
+                cycles += cyc;
+                if let Some(d) = dense_out {
+                    time_proj = d.to_f32();
+                    dense_done = true;
+                }
+                for (i, o) in outputs.iter().enumerate() {
+                    let v = o.to_f32() + plan.bias[oc] + time_proj;
+                    plane[p + i] = Self::apply_act(v, plan.act);
+                }
+            }
+        }
+        UnitOutcome { cycles, skip_reads }
+    }
+
+    /// Reference-path conv execution — the seed implementation, preserved
+    /// verbatim (per-oc window extraction, `Vec<Vec<Fixed>>` groups,
+    /// cycle-level unit driver). The small-input split path lives here
+    /// and is shared by both paths.
+    fn run_conv_ref(
+        &mut self,
+        node: &Node,
         x: &Tensor,
         nw: &NodeWeights,
         skip: Option<&Tensor>,
@@ -621,7 +1131,9 @@ impl Accelerator {
                         );
                         self.mem.read_skip(hw_total as u64);
                     }
-                    Residual::Conv { stride: rstride, .. } => {
+                    Residual::Conv {
+                        stride: rstride, ..
+                    } => {
                         let s = skip.context("conv residual needs skip")?;
                         let c_skip = s.shape()[0];
                         rwindows = Some(
@@ -750,26 +1262,10 @@ impl Accelerator {
             self.mem.stream_weights(wsize, 0);
             self.mem.write_output(out_shape.elems(), false);
             let wall = *per_unit_cycles.iter().max().unwrap_or(&0);
-            let label = format!(
-                "conv{k}x{k}/{stride} {}x{}x{} -> {}x{}x{}{}{} [split]",
-                c_in,
-                node.in_shape.h,
-                node.in_shape.w,
-                c_out,
-                out_shape.h,
-                out_shape.w,
-                match residual {
-                    Residual::None => "",
-                    Residual::Identity { .. } => " +skip",
-                    Residual::Conv { .. } => " +skipconv",
-                },
-                if time_dense.is_some() { " +time" } else { "" }
-            );
-            return Ok((out, wall, label));
+            return Ok((out, wall, Self::conv_label(node, true)));
         }
 
-        // §Perf: scratch buffers reused across every group of the layer —
-        // no per-group allocation on the hot path.
+        // Scratch buffers reused across every group of the layer.
         let mut windows: Vec<Vec<Fixed>> =
             (0..WORKERS).map(|_| Vec::with_capacity(taps_len)).collect();
         let mut pos: Vec<(usize, usize)> = Vec::with_capacity(WORKERS);
@@ -881,7 +1377,7 @@ impl Accelerator {
                     };
 
                     let g = ConvGroup {
-                        windows: &windows,
+                        windows,
                         weights: &fw,
                         server,
                         reused_inputs: reused,
@@ -913,27 +1409,12 @@ impl Accelerator {
         let wall = *per_unit_cycles.iter().max().unwrap_or(&0);
         // Units that finished early idle until the slowest one is done; the
         // energy model prices that via (total_pes*cycles - active) idling.
-        let label = format!(
-            "conv{k}x{k}/{stride} {}x{}x{} -> {}x{}x{}{}{}",
-            c_in,
-            node.in_shape.h,
-            node.in_shape.w,
-            c_out,
-            out_shape.h,
-            out_shape.w,
-            match residual {
-                Residual::None => "",
-                Residual::Identity { .. } => " +skip",
-                Residual::Conv { .. } => " +skipconv",
-            },
-            if time_dense.is_some() { " +time" } else { "" }
-        );
-        Ok((out, wall, label))
+        Ok((out, wall, Self::conv_label(node, false)))
     }
 
     fn run_maxpool(
         &mut self,
-        node: &crate::models::graph::Node,
+        node: &Node,
         x: &Tensor,
         k: usize,
         stride: usize,
@@ -964,11 +1445,7 @@ impl Accelerator {
         (out, wall, format!("maxpool{k}/{stride}"))
     }
 
-    fn run_gap(
-        &mut self,
-        node: &crate::models::graph::Node,
-        x: &Tensor,
-    ) -> (Tensor, u64, String) {
+    fn run_gap(&mut self, node: &Node, x: &Tensor) -> (Tensor, u64, String) {
         let c = node.in_shape.c;
         let hw = (node.in_shape.h * node.in_shape.w) as f32;
         let mut out = Tensor::zeros(&[c, 1, 1]);
@@ -988,9 +1465,111 @@ impl Accelerator {
         (out, ins.div_ceil(lanes), "gap".into())
     }
 
+    /// §Perf hot path: dense layers run as 8-neuron groups over the flat
+    /// quantized weight rows (the worker windows), threaded per unit.
     fn run_dense(
         &mut self,
-        node: &crate::models::graph::Node,
+        node: &Node,
+        x: &Tensor,
+        nw: &NodeWeights,
+        nq: &NodeQuant,
+        act: Act,
+    ) -> Result<(Tensor, u64, String)> {
+        let in_f = x.len();
+        let out_f = node.out_shape.c;
+        let xq: Vec<Fixed> = x.data().iter().map(|&v| Fixed::from_f32(v)).collect();
+        let mut out = Tensor::zeros(&[out_f, 1, 1]);
+        let active = self.cfg.units;
+
+        let plan = DensePlan {
+            in_f,
+            act,
+            qw: &nq.w,
+            w_zeros: &nq.w_zeros,
+            xq: &xq,
+            bias: &nw.bias,
+        };
+        let mut lanes: Vec<Vec<(usize, &mut [f32])>> =
+            (0..active).map(|_| Vec::new()).collect();
+        for (gidx, chunk) in out.data_mut().chunks_mut(WORKERS).enumerate() {
+            lanes[gidx % active].push((gidx, chunk));
+        }
+        let work = (in_f * out_f) as u64;
+        let outcomes: Vec<UnitOutcome> = if active > 1 && work >= PAR_MIN_TAP_SLOTS {
+            std::thread::scope(|scope| {
+                let plan = &plan;
+                let handles: Vec<_> = self
+                    .units
+                    .iter_mut()
+                    .take(active)
+                    .zip(lanes)
+                    .map(|(unit, lane)| {
+                        scope.spawn(move || Self::run_dense_unit(unit, plan, lane))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sim unit thread panicked"))
+                    .collect()
+            })
+        } else {
+            self.units
+                .iter_mut()
+                .take(active)
+                .zip(lanes)
+                .map(|(unit, lane)| Self::run_dense_unit(unit, &plan, lane))
+                .collect()
+        };
+        let wall = outcomes.iter().map(|o| o.cycles).max().unwrap_or(0);
+
+        self.mem.stream_input(in_f as u64, 1, 0);
+        self.mem.stream_weights((in_f * out_f) as u64, 0);
+        self.mem.write_output(out_f as u64, false);
+        Ok((out, wall, format!("dense {in_f}->{out_f}")))
+    }
+
+    /// One unit's share of a dense layer (its round-robin neuron groups).
+    fn run_dense_unit(
+        unit: &mut SfMmcnUnit,
+        plan: &DensePlan<'_>,
+        lane: Vec<(usize, &mut [f32])>,
+    ) -> UnitOutcome {
+        let in_f = plan.in_f;
+        let mut outputs: Vec<Fixed> = Vec::with_capacity(WORKERS);
+        let mut cycles = 0u64;
+        for (gidx, chunk) in lane {
+            let n0 = gidx * WORKERS;
+            let gw = chunk.len();
+            // Each "window" is a neuron's weight row; the input vector is
+            // broadcast as the shared filter (MAC is commutative, counts
+            // identical, reuse = inputs broadcast) — see run_dense_ref.
+            let reused = (gw.saturating_sub(1) * in_f) as u64;
+            let (cyc, _) = unit.run_group_flat(
+                &plan.qw[n0 * in_f..(n0 + gw) * in_f],
+                gw,
+                in_f,
+                &plan.w_zeros[n0..n0 + gw],
+                plan.xq,
+                FlatServer::Idle,
+                reused,
+                &mut outputs,
+            );
+            cycles += cyc;
+            for (i, o) in outputs.iter().enumerate() {
+                let v = o.to_f32() + plan.bias[n0 + i];
+                chunk[i] = Self::apply_act(v, plan.act);
+            }
+        }
+        UnitOutcome {
+            cycles,
+            skip_reads: 0,
+        }
+    }
+
+    /// Reference-path dense execution (seed implementation).
+    fn run_dense_ref(
+        &mut self,
+        node: &Node,
         x: &Tensor,
         nw: &NodeWeights,
         act: Act,
@@ -1037,18 +1616,13 @@ impl Accelerator {
         }
 
         self.mem.stream_input(in_f as u64, 1, 0);
-        self.mem
-            .stream_weights((in_f * out_f) as u64, 0);
+        self.mem.stream_weights((in_f * out_f) as u64, 0);
         self.mem.write_output(out_f as u64, false);
         let wall = *per_unit_cycles.iter().max().unwrap();
         Ok((out, wall, format!("dense {in_f}->{out_f}")))
     }
 
-    fn run_upsample(
-        &mut self,
-        node: &crate::models::graph::Node,
-        x: &Tensor,
-    ) -> (Tensor, u64, String) {
+    fn run_upsample(&mut self, node: &Node, x: &Tensor) -> (Tensor, u64, String) {
         let s = node.out_shape;
         let out = Tensor::from_fn(&[s.c, s.h, s.w], |idx| {
             x.get(&[idx[0], idx[1] / 2, idx[2] / 2])
@@ -1062,7 +1636,7 @@ impl Accelerator {
 
     fn run_concat(
         &mut self,
-        node: &crate::models::graph::Node,
+        node: &Node,
         x: &Tensor,
         skip: &Tensor,
     ) -> Result<(Tensor, u64, String)> {
@@ -1248,6 +1822,23 @@ mod tests {
     }
 
     #[test]
+    fn total_pes_counts_workers_and_server() {
+        // 8 units x (8 workers + PE_9) = 72 PEs — the paper's Table-I
+        // organisation; sweeps scale linearly.
+        assert_eq!(AcceleratorConfig::default().total_pes(), 72);
+        assert_eq!(AcceleratorConfig::with_units(1).total_pes(), 9);
+        assert_eq!(AcceleratorConfig::with_units(16).total_pes(), 144);
+    }
+
+    #[test]
+    fn default_buffer_capacities_are_elements_not_bytes() {
+        // 64 Ki 16-bit elements = 128 KiB; 16 Ki elements = 32 KiB.
+        let cfg = AcceleratorConfig::default();
+        assert_eq!(cfg.input_buf_elems * 2, 128 * 1024);
+        assert_eq!(cfg.weight_buf_elems * 2, 32 * 1024);
+    }
+
+    #[test]
     fn maxpool_numerics() {
         let mut b = GraphBuilder::new("t", TensorShape::new(1, 4, 4));
         b.add(L::MaxPool { k: 2, stride: 2 }).unwrap();
@@ -1346,5 +1937,45 @@ mod tests {
         assert_eq!(run.output.shape(), &[1, 8, 8]);
         assert!(run.total_cycles() > 0);
         assert!(run.totals.pe.macs > 0);
+    }
+
+    #[test]
+    fn fast_path_matches_reference_path_smoke() {
+        // The full bit-exactness suite lives in tests/sim_golden.rs; this
+        // is the in-crate smoke version on a residual pair.
+        let mut b = GraphBuilder::new("t", TensorShape::new(3, 10, 10));
+        b.add(L::Conv {
+            c_in: 3,
+            c_out: 5,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::Relu,
+            residual: Residual::None,
+            time_dense: None,
+        })
+        .unwrap();
+        b.add(L::Conv {
+            c_in: 5,
+            c_out: 5,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            act: Act::None,
+            residual: Residual::Identity { from: 0 },
+            time_dense: None,
+        })
+        .unwrap();
+        let g = b.build();
+        let ws = WeightStore::random(&g, 9);
+        let mut rng = Rng::new(4);
+        let x = Tensor::from_fn(&[3, 10, 10], |_| rng.normal() * 0.5);
+        let mut a_fast = Accelerator::new(AcceleratorConfig::default());
+        let mut a_ref = Accelerator::new(AcceleratorConfig::default());
+        let fast = a_fast.run_graph(&g, &x, &ws, None).unwrap();
+        let reference = a_ref.run_graph_ref(&g, &x, &ws, None).unwrap();
+        assert_eq!(fast.output.data(), reference.output.data(), "outputs");
+        assert_eq!(fast.total_cycles(), reference.total_cycles(), "cycles");
+        assert_eq!(fast.totals.pe, reference.totals.pe, "pe stats");
     }
 }

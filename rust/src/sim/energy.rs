@@ -98,7 +98,7 @@ pub const CAL_40NM_LAYOUT: EnergyModel = EnergyModel {
 };
 
 /// Aggregated event counts for one run (any simulated architecture).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EventCounts {
     /// Wall-clock cycles of the run.
     pub cycles: u64,
@@ -116,6 +116,16 @@ impl EventCounts {
     pub fn merge_run(&mut self, o: &EventCounts) {
         // Sequential composition: cycles add, design size must match.
         assert_eq!(self.total_pes, o.total_pes, "merging different designs");
+        self.cycles += o.cycles;
+        self.pe.merge(&o.pe);
+        self.unit.merge(&o.unit);
+        self.mem.merge(&o.mem);
+    }
+
+    /// Accumulate one layer's counters into a graph total — same design
+    /// by construction, so no size check (§Perf: one call per layer on
+    /// the simulator hot path instead of four separate merges).
+    pub fn accumulate(&mut self, o: &EventCounts) {
         self.cycles += o.cycles;
         self.pe.merge(&o.pe);
         self.unit.merge(&o.unit);

@@ -40,6 +40,23 @@ impl MemoryStats {
         self.output_buf_reads += o.output_buf_reads;
     }
 
+    /// Traffic accumulated since the `before` snapshot — the per-layer
+    /// delta the simulator folds into each [`super::energy::EventCounts`]
+    /// (§Perf: one struct-level diff instead of eight call-site
+    /// subtractions on the layer loop).
+    pub fn since(&self, before: &MemoryStats) -> MemoryStats {
+        MemoryStats {
+            dram_reads: self.dram_reads - before.dram_reads,
+            dram_writes: self.dram_writes - before.dram_writes,
+            input_buf_reads: self.input_buf_reads - before.input_buf_reads,
+            input_buf_writes: self.input_buf_writes - before.input_buf_writes,
+            weight_buf_reads: self.weight_buf_reads - before.weight_buf_reads,
+            weight_buf_writes: self.weight_buf_writes - before.weight_buf_writes,
+            output_buf_writes: self.output_buf_writes - before.output_buf_writes,
+            output_buf_reads: self.output_buf_reads - before.output_buf_reads,
+        }
+    }
+
     /// Total off-chip traffic in elements.
     pub fn dram_traffic(&self) -> u64 {
         self.dram_reads + self.dram_writes
@@ -167,6 +184,25 @@ mod tests {
         m.write_output(100, true);
         assert_eq!(m.stats.dram_writes, 100);
         assert_eq!(m.stats.output_buf_writes, 200);
+    }
+
+    #[test]
+    fn since_diffs_every_field() {
+        let mut m = MemorySystem::new(10_000, 10_000);
+        m.stream_input(100, 1, 10);
+        let before = m.stats;
+        m.stream_weights(50, 5);
+        m.write_output(20, true);
+        m.read_skip(7);
+        let d = m.stats.since(&before);
+        assert_eq!(d.dram_reads, 50);
+        assert_eq!(d.weight_buf_writes, 50);
+        assert_eq!(d.weight_buf_reads, 5);
+        assert_eq!(d.output_buf_writes, 20);
+        assert_eq!(d.dram_writes, 20);
+        assert_eq!(d.output_buf_reads, 7);
+        assert_eq!(d.input_buf_reads, 0);
+        assert_eq!(d.input_buf_writes, 0);
     }
 
     #[test]

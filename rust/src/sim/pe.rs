@@ -13,6 +13,27 @@
 
 use crate::quant::Fixed;
 
+/// Zero-valued taps in a window — what the zero-gate unit would suppress.
+#[inline]
+pub fn count_zeros(window: &[Fixed]) -> u64 {
+    // Branchless: `is_zero` lowers to a compare, the sum vectorizes.
+    window.iter().map(|x| u64::from(x.is_zero())).sum()
+}
+
+/// Widening dot product, exactly as the MAC pipeline accumulates it:
+/// Q8.8 x Q8.8 products summed into the Q16.16 accumulator in tap order.
+/// Zero activations contribute zero products, so the result is identical
+/// with or without the zero-gate unit.
+#[inline]
+pub fn dot_wide(window: &[Fixed], weights: &[Fixed]) -> i64 {
+    debug_assert_eq!(window.len(), weights.len());
+    let mut acc = 0i64;
+    for (&x, &w) in window.iter().zip(weights) {
+        acc += x.mul_wide(w) as i64;
+    }
+    acc
+}
+
 /// Operating mode of a PE, set by the unit's mode-select lines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PeMode {
@@ -116,24 +137,33 @@ impl Pe {
     /// [`Self::mac_cycle`] per tap, without per-call dispatch overhead.
     /// Identical stats/numerics to the cycle-major path — PEs are
     /// independent within a group (§Perf hot path).
+    ///
+    /// §Perf: the loop is branch-light. A gated slot contributes a zero
+    /// product (`x == 0  =>  x * w == 0`), so the accumulator can take
+    /// every product unconditionally; only the zero *count* is tracked,
+    /// and the MAC/gated split is folded into [`PeStats`] once per call.
     pub fn run_conv_taps(&mut self, window: &[Fixed], weights: &[Fixed]) {
+        let zeros = count_zeros(window);
+        self.run_conv_taps_with_zeros(window, weights, zeros);
+    }
+
+    /// [`Self::run_conv_taps`] with the window's zero count precomputed by
+    /// the caller — the flat hot path counts zeros once per *layer* and
+    /// reuses the counts across every output channel (§Perf).
+    pub fn run_conv_taps_with_zeros(
+        &mut self,
+        window: &[Fixed],
+        weights: &[Fixed],
+        zeros: u64,
+    ) {
         debug_assert_eq!(window.len(), weights.len());
+        debug_assert_eq!(zeros, count_zeros(window), "stale zero count");
         self.begin_conv(window.len() as u32);
-        let mut acc = self.acc;
-        let mut macs = 0u64;
-        let mut gated = 0u64;
-        for (&x, &w) in window.iter().zip(weights) {
-            if x.is_zero() {
-                gated += 1;
-            } else {
-                acc += x.mul_wide(w) as i64;
-                macs += 1;
-            }
-        }
-        self.acc = acc;
-        self.stats.active_cycles += window.len() as u64;
-        self.stats.macs += macs;
-        self.stats.gated_macs += gated;
+        self.acc = dot_wide(window, weights);
+        let n = window.len() as u64;
+        self.stats.active_cycles += n;
+        self.stats.macs += n - zeros;
+        self.stats.gated_macs += zeros;
         self.counter = self.taps; // all taps consumed
         self.finish(Fixed::ZERO);
     }
@@ -308,6 +338,37 @@ mod tests {
             pe.mac_cycle(fx(1.0), fx(1.0));
             assert!(pe.acc_fits_hw());
         }
+    }
+
+    #[test]
+    fn taps_path_matches_cycle_path_exactly() {
+        // The batched tap loop must be bit- and stat-identical to the
+        // cycle-by-cycle path, including zero gating.
+        let window: Vec<Fixed> = [0.0, 0.5, -0.25, 0.0, 1.0, 2.0, -1.5, 0.0, 0.125]
+            .iter()
+            .map(|&v| fx(v))
+            .collect();
+        let weights: Vec<Fixed> = (0..9).map(|i| fx(0.1 * i as f32 - 0.3)).collect();
+        let mut a = Pe::new();
+        a.begin_conv(9);
+        for (&x, &w) in window.iter().zip(&weights) {
+            a.mac_cycle(x, w);
+        }
+        let mut b = Pe::new();
+        b.run_conv_taps(&window, &weights);
+        assert_eq!(a.take_output(), b.take_output());
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(b.stats.gated_macs, 3);
+    }
+
+    #[test]
+    fn zero_count_helpers() {
+        let w: Vec<Fixed> = [0.0, 1.0, 0.0, 2.0].iter().map(|&v| fx(v)).collect();
+        assert_eq!(count_zeros(&w), 2);
+        let ones = vec![fx(1.0); 4];
+        // 0*1 + 1*1 + 0*1 + 2*1 = 3.0 in Q16.16
+        let acc = dot_wide(&w, &ones);
+        assert!((Fixed::from_acc(acc).to_f32() - 3.0).abs() < 1e-2);
     }
 
     #[test]

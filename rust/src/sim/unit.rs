@@ -27,7 +27,7 @@
 
 use crate::quant::Fixed;
 
-use super::pe::{Pe, PeMode, PeStats};
+use super::pe::{dot_wide, Pe, PeMode, PeStats};
 
 /// Number of worker PEs per unit (PE_1..PE_8).
 pub const WORKERS: usize = 8;
@@ -48,7 +48,7 @@ pub enum UnitMode {
 }
 
 /// Counters for one unit (beyond the per-PE stats).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct UnitStats {
     /// Total cycles the unit spent executing groups.
     pub cycles: u64,
@@ -99,6 +99,31 @@ pub enum ServerTask<'a> {
     /// Run dense (time-embedding) MACs: `x` dot `w`, independent of the
     /// workers; the scalar result is latched for the caller.
     Dense { x: &'a [Fixed], w: &'a [Fixed] },
+}
+
+/// What PE_9 serves during a *flat* group (`run_group_flat`, §Perf hot
+/// path): the same four modes as [`ServerTask`], but over flat slices
+/// with precomputed zero counts so the hot loop never re-scans data.
+#[derive(Debug, Clone)]
+pub enum FlatServer<'a> {
+    /// Nothing (series mode) — PE_9 clock-gated.
+    Idle,
+    /// Serve these skip-branch values (one per worker output).
+    Identity(&'a [Fixed]),
+    /// Compute a 1x1(xC) residual conv per worker output: `windows` is the
+    /// `gw x rtaps` flat slab, `zeros[i]` the zero taps of row `i`.
+    Conv {
+        windows: &'a [Fixed],
+        rtaps: usize,
+        weights: &'a [Fixed],
+        zeros: &'a [u64],
+    },
+    /// Run dense (time-embedding) MACs; `zeros` counts zero inputs in `x`.
+    Dense {
+        x: &'a [Fixed],
+        w: &'a [Fixed],
+        zeros: u64,
+    },
 }
 
 /// One convolution group: up to 8 worker windows sharing one filter.
@@ -332,6 +357,143 @@ impl SfMmcnUnit {
             dense_out,
             cycles,
         }
+    }
+
+    /// §Perf hot path: execute one convolution group from *flat* buffers
+    /// with per-group aggregated stats — no per-window `Vec`s, no per-tap
+    /// branches, no per-cycle counter updates.
+    ///
+    /// Semantics are identical to [`Self::run_group`] (the golden tests in
+    /// `rust/tests/sim_golden.rs` pin this bit-exactly):
+    ///
+    /// * `windows` is the `gw x taps` window slab, row-major; `zeros[i]`
+    ///   is the number of zero taps in window `i` (precomputed once per
+    ///   layer by the array driver and reused across output channels).
+    /// * Worker lane `i < gw` accumulates its window against the broadcast
+    ///   `weights` in tap order — gated slots add a zero product, so the
+    ///   accumulator needs no branch — and folds `taps` active cycles plus
+    ///   the MAC/gated split into its [`PeStats`] once.
+    /// * PE_9 runs the [`FlatServer`] task under the same schedule as
+    ///   [`ServerTask`] in `run_group` (engaged-fill in serving modes,
+    ///   idle-fill in series/dense, dense overhang extends the group).
+    ///
+    /// `outputs` is a caller-owned scratch vector (cleared, then one
+    /// output per window). Returns `(cycles, dense_out)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_group_flat(
+        &mut self,
+        windows: &[Fixed],
+        gw: usize,
+        taps: usize,
+        zeros: &[u64],
+        weights: &[Fixed],
+        server: FlatServer,
+        reused_inputs: u64,
+        outputs: &mut Vec<Fixed>,
+    ) -> (u64, Option<Fixed>) {
+        assert!(taps > 0, "empty filter");
+        assert!(gw >= 1 && gw <= WORKERS, "1..=8 windows per group");
+        debug_assert_eq!(windows.len(), gw * taps);
+        debug_assert_eq!(zeros.len(), gw);
+        debug_assert_eq!(weights.len(), taps);
+
+        // ---- workers: one dot product per lane, stats folded per lane ----
+        outputs.clear();
+        for i in 0..gw {
+            let win = &windows[i * taps..(i + 1) * taps];
+            outputs.push(Fixed::from_acc(dot_wide(win, weights)));
+            let st = &mut self.workers[i].stats;
+            st.active_cycles += taps as u64;
+            st.macs += taps as u64 - zeros[i];
+            st.gated_macs += zeros[i];
+            st.writebacks += 1;
+        }
+        for pe in &mut self.workers[gw..] {
+            pe.stats.idle_cycles += taps as u64;
+        }
+
+        // ---- PE_9: batched form of run_group's server schedule ----------
+        let mut dense_out = None;
+        let mut extra_cycles = 0u64;
+        match server {
+            FlatServer::Idle => self.server.stats.idle_cycles += taps as u64,
+            FlatServer::Identity(vals) => {
+                assert_eq!(vals.len(), gw, "one residual value per worker output");
+                for i in 0..gw {
+                    outputs[i] = outputs[i].sat_add(vals[i]);
+                    self.workers[i].stats.residual_adds += 1;
+                }
+                self.stats.served_values += gw as u64;
+                self.server.stats.active_cycles += taps as u64;
+            }
+            FlatServer::Conv {
+                windows: rwin,
+                rtaps,
+                weights: rw,
+                zeros: rzeros,
+            } => {
+                assert_eq!(rwin.len(), gw * rtaps);
+                debug_assert_eq!(rzeros.len(), gw);
+                debug_assert_eq!(rw.len(), rtaps);
+                // Synchronization invariant from §III.C: PE_9 must finish
+                // all residual convs within the main conv's taps.
+                assert!(
+                    rtaps * gw <= taps * WORKERS,
+                    "PE_9 cannot prepare residual conv in time: \
+                     {rtaps} taps x {gw} outputs vs {taps} main-conv cycles"
+                );
+                let mut rgated = 0u64;
+                for i in 0..gw {
+                    let win = &rwin[i * rtaps..(i + 1) * rtaps];
+                    let served = Fixed::from_acc(dot_wide(win, rw));
+                    outputs[i] = outputs[i].sat_add(served);
+                    self.workers[i].stats.residual_adds += 1;
+                    rgated += rzeros[i];
+                }
+                let work = (gw * rtaps) as u64;
+                let st = &mut self.server.stats;
+                st.macs += work - rgated;
+                st.gated_macs += rgated;
+                st.writebacks += gw as u64;
+                // compute cycles + transmit/engaged fill for the rest
+                st.active_cycles += work + (taps as u64).saturating_sub(work);
+                self.stats.served_values += gw as u64;
+            }
+            FlatServer::Dense { x, w, zeros: dz } => {
+                debug_assert_eq!(x.len(), w.len(), "dense operands must match");
+                dense_out = Some(Fixed::from_acc(dot_wide(x, w)));
+                let work = x.len() as u64;
+                let st = &mut self.server.stats;
+                st.active_cycles += work;
+                st.macs += work - dz;
+                st.gated_macs += dz;
+                st.writebacks += 1;
+                // dense shorter than the window: PE_9 idles the remainder;
+                // longer: the unit stalls the handoff (overhang cycles).
+                st.idle_cycles += (taps as u64).saturating_sub(work);
+                extra_cycles = work.saturating_sub(taps as u64);
+            }
+        }
+
+        // ---- cycle + memory accounting (identical to run_group) ---------
+        let mut cycles = taps as u64 + extra_cycles;
+        if !self.pipeline_warm {
+            cycles += 1;
+            self.pipeline_warm = true;
+        }
+        let total_inputs = (gw * taps) as u64;
+        assert!(
+            reused_inputs <= total_inputs,
+            "cannot reuse more inputs than exist"
+        );
+        self.stats.buffer_reads_no_reuse += total_inputs;
+        self.stats.buffer_reads += total_inputs - reused_inputs;
+        self.stats.reuse_reg_writes += reused_inputs;
+        self.stats.weight_reads += taps as u64;
+        self.stats.cycles += cycles;
+        self.stats.conv_outputs += gw as u64;
+
+        (cycles, dense_out)
     }
 
     /// Small-input split (Figs 11-12): two output channels run
@@ -758,6 +920,156 @@ mod tests {
         assert_eq!(u.stats.cycles, 10, "halves overlap in time");
         assert!((ra.outputs[0].to_f32() - 9.0).abs() < 1e-2);
         assert!((rb.outputs[0].to_f32() - 18.0).abs() < 1e-2);
+    }
+
+    /// Helper: run the same group through `run_group` and `run_group_flat`
+    /// on two fresh units and assert outputs, cycles, and every stat agree.
+    fn assert_flat_matches(
+        wins: &[Vec<Fixed>],
+        w: &[Fixed],
+        server: ServerTask<'_>,
+        reused: u64,
+        rounds: usize,
+    ) {
+        use crate::sim::pe::count_zeros;
+        let mut u_ref = SfMmcnUnit::new();
+        let mut u_flat = SfMmcnUnit::new();
+        let taps = w.len();
+        let gw = wins.len();
+        let flat: Vec<Fixed> = wins.iter().flatten().copied().collect();
+        let zeros: Vec<u64> = wins.iter().map(|win| count_zeros(win)).collect();
+        for _ in 0..rounds {
+            let g = ConvGroup {
+                windows: wins,
+                weights: w,
+                server: server.clone(),
+                reused_inputs: reused,
+            };
+            let r = u_ref.run_group(&g);
+            let fs = match &server {
+                ServerTask::Idle => FlatServer::Idle,
+                ServerTask::ServeIdentity(v) => FlatServer::Identity(v),
+                ServerTask::ServeConv { windows, weights } => {
+                    let weights: &[Fixed] = weights;
+                    // flatten on the fly for the test
+                    let rtaps = weights.len();
+                    let rflat: Vec<Fixed> = windows.iter().flatten().copied().collect();
+                    let rz: Vec<u64> = windows.iter().map(|x| count_zeros(x)).collect();
+                    // run inline since the borrows are local
+                    let mut outs = Vec::new();
+                    let (cycles, dense_out) = u_flat.run_group_flat(
+                        &flat,
+                        gw,
+                        taps,
+                        &zeros,
+                        w,
+                        FlatServer::Conv {
+                            windows: &rflat,
+                            rtaps,
+                            weights,
+                            zeros: &rz,
+                        },
+                        reused,
+                        &mut outs,
+                    );
+                    assert_eq!(r.outputs, outs, "conv-server outputs");
+                    assert_eq!(r.cycles, cycles);
+                    assert_eq!(r.dense_out, dense_out);
+                    continue;
+                }
+                ServerTask::Dense { x, w: dw } => FlatServer::Dense {
+                    x,
+                    w: dw,
+                    zeros: count_zeros(x),
+                },
+            };
+            let mut outs = Vec::new();
+            let (cycles, dense_out) =
+                u_flat.run_group_flat(&flat, gw, taps, &zeros, w, fs, reused, &mut outs);
+            assert_eq!(r.outputs, outs, "outputs");
+            assert_eq!(r.cycles, cycles, "cycles");
+            assert_eq!(r.dense_out, dense_out, "dense out");
+        }
+        // unit-level counters
+        assert_eq!(u_ref.stats.cycles, u_flat.stats.cycles);
+        assert_eq!(u_ref.stats.conv_outputs, u_flat.stats.conv_outputs);
+        assert_eq!(u_ref.stats.served_values, u_flat.stats.served_values);
+        assert_eq!(u_ref.stats.buffer_reads, u_flat.stats.buffer_reads);
+        assert_eq!(
+            u_ref.stats.buffer_reads_no_reuse,
+            u_flat.stats.buffer_reads_no_reuse
+        );
+        assert_eq!(u_ref.stats.weight_reads, u_flat.stats.weight_reads);
+        assert_eq!(u_ref.stats.reuse_reg_writes, u_flat.stats.reuse_reg_writes);
+        // aggregated PE stats
+        let (rw_, rs) = u_ref.pe_stats();
+        let (fw_, fsrv) = u_flat.pe_stats();
+        assert_eq!(rw_, fw_, "worker PE stats");
+        assert_eq!(rs, fsrv, "server PE stats");
+    }
+
+    #[test]
+    fn flat_group_matches_reference_series() {
+        let w: Vec<Fixed> = (0..9).map(|i| fx(0.1 * i as f32 - 0.4)).collect();
+        let wins: Vec<Vec<Fixed>> = (0..8)
+            .map(|i| {
+                (0..9)
+                    .map(|j| if (i + j) % 4 == 0 { fx(0.0) } else { fx(0.3 * j as f32) })
+                    .collect()
+            })
+            .collect();
+        assert_flat_matches(&wins, &w, ServerTask::Idle, 42, 3);
+    }
+
+    #[test]
+    fn flat_group_matches_reference_partial_group() {
+        let w = vec![fx(0.5); 12];
+        let wins = windows(3, 12, 1.0);
+        assert_flat_matches(&wins, &w, ServerTask::Idle, 0, 2);
+    }
+
+    #[test]
+    fn flat_group_matches_reference_identity() {
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 1.0);
+        let skip: Vec<Fixed> = (0..8).map(|i| fx(i as f32 - 3.0)).collect();
+        assert_flat_matches(&wins, &w, ServerTask::ServeIdentity(&skip), 30, 2);
+    }
+
+    #[test]
+    fn flat_group_matches_reference_residual_conv() {
+        let w = vec![fx(1.0); 9];
+        let wins = windows(8, 9, 1.0);
+        let rwins: Vec<Vec<Fixed>> = (0..8)
+            .map(|i| vec![if i % 2 == 0 { fx(0.0) } else { fx(0.5) }; 4])
+            .collect();
+        let rw = vec![fx(1.0); 4];
+        assert_flat_matches(
+            &wins,
+            &w,
+            ServerTask::ServeConv {
+                windows: &rwins,
+                weights: &rw,
+            },
+            0,
+            2,
+        );
+    }
+
+    #[test]
+    fn flat_group_matches_reference_dense_and_overhang() {
+        let w = vec![fx(1.0); 4];
+        let wins = windows(8, 4, 1.0);
+        // longer than the conv window: overhang cycles must match too
+        let x = vec![fx(1.0); 10];
+        let dw = vec![fx(0.5); 10];
+        assert_flat_matches(&wins, &w, ServerTask::Dense { x: &x, w: &dw }, 0, 2);
+        // shorter than the window: idle fill must match
+        let w2 = vec![fx(1.0); 9];
+        let wins2 = windows(8, 9, 2.0);
+        let x2 = vec![fx(1.0); 6];
+        let dw2 = vec![fx(0.5); 6];
+        assert_flat_matches(&wins2, &w2, ServerTask::Dense { x: &x2, w: &dw2 }, 0, 2);
     }
 
     #[test]

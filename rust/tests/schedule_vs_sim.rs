@@ -59,6 +59,8 @@ fn safe_weights(g: &ModelGraph, gen: &mut Gen) -> WeightStore {
         };
         ws.per_node[i] = nw;
     }
+    // weights were replaced in place: drop any cached quantized taps
+    ws.invalidate_quant();
     ws
 }
 

@@ -1,0 +1,319 @@
+//! Golden-equivalence suite for the §Perf simulator hot-path rewrite.
+//!
+//! [`Accelerator::run_graph`] (flat buffers, per-layer window slabs,
+//! scoped-thread units) and [`Accelerator::run_graph_ref`] (the seed
+//! scalar implementation, preserved verbatim) must agree **bit-exactly**:
+//! fixed-point outputs, per-layer wall cycles, and every event counter
+//! (PE, unit, memory). A separate test pins hand-computed golden values
+//! for a tiny conv so both paths are also anchored against an external
+//! derivation, not just each other.
+
+use sf_mmcn::models::graph::{
+    Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape,
+};
+use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
+use sf_mmcn::util::{Rng, Tensor};
+
+/// Run both paths on fresh accelerators and assert bit-exact agreement.
+fn assert_paths_agree(
+    g: &ModelGraph,
+    cfg: AcceleratorConfig,
+    x: &Tensor,
+    ws: &WeightStore,
+    emb: Option<&[f32]>,
+) {
+    let mut a_fast = Accelerator::new(cfg);
+    let mut a_ref = Accelerator::new(cfg);
+    let fast = a_fast.run_graph(g, x, ws, emb).expect("fast path runs");
+    let refr = a_ref.run_graph_ref(g, x, ws, emb).expect("ref path runs");
+
+    assert_eq!(fast.output.shape(), refr.output.shape());
+    assert_eq!(
+        fast.output.data(),
+        refr.output.data(),
+        "fixed-point outputs must be bit-identical"
+    );
+    assert_eq!(fast.layers.len(), refr.layers.len());
+    for (lf, lr) in fast.layers.iter().zip(&refr.layers) {
+        let ctx = format!("layer {} ({})", lf.node_idx, lf.label);
+        assert_eq!(lf.label, lr.label, "{ctx}: label");
+        assert_eq!(lf.cycles, lr.cycles, "{ctx}: wall cycles");
+        assert_eq!(lf.counts, lr.counts, "{ctx}: event counts");
+        assert_eq!(lf.macs, lr.macs, "{ctx}: model macs");
+    }
+    assert_eq!(fast.totals, refr.totals, "graph totals");
+    // memory-system grand totals (accumulated across layers)
+    assert_eq!(a_fast.mem.stats, a_ref.mem.stats, "memory system totals");
+}
+
+fn conv(
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    act: Act,
+    residual: Residual,
+    time_dense: Option<usize>,
+) -> Layer {
+    Layer::Conv {
+        c_in,
+        c_out,
+        k,
+        stride,
+        pad,
+        act,
+        residual,
+        time_dense,
+    }
+}
+
+#[test]
+fn residual_pair_bit_exact() {
+    // The `micro-sim residual pair` bench workload (smaller map): conv +
+    // conv-with-identity-skip. Large enough to cross the threading
+    // threshold, so this also pins threaded == reference.
+    let mut b = GraphBuilder::new("t", TensorShape::new(16, 16, 16));
+    b.add(conv(16, 16, 3, 1, 1, Act::Relu, Residual::None, None))
+        .unwrap();
+    b.add(conv(
+        16,
+        16,
+        3,
+        1,
+        1,
+        Act::None,
+        Residual::Identity { from: 0 },
+        None,
+    ))
+    .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 1);
+    let mut rng = Rng::new(2);
+    let x = Tensor::from_fn(&[16, 16, 16], |_| rng.normal() * 0.4);
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, None);
+}
+
+#[test]
+fn downsample_conv_residual_bit_exact() {
+    // ResNet-style stage entry: stride-2 conv with a 1x1/2 conv skip on
+    // PE_9 — exercises the FlatServer::Conv path and strided windows.
+    let mut b = GraphBuilder::new("t", TensorShape::new(6, 12, 12));
+    b.add(conv(6, 6, 3, 1, 1, Act::Relu, Residual::None, None))
+        .unwrap();
+    b.add(conv(
+        6,
+        12,
+        3,
+        2,
+        1,
+        Act::None,
+        Residual::Conv { from: 0, stride: 2 },
+        None,
+    ))
+    .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 3);
+    let mut rng = Rng::new(7);
+    let x = Tensor::from_fn(&[6, 12, 12], |_| rng.normal() * 0.5);
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, None);
+}
+
+#[test]
+fn unet_down_block_bit_exact() {
+    // One U-net down-block as built by models::unet: stem conv, then a
+    // block conv carrying the time-dense on PE_9, the block's second conv
+    // fusing the skip, and the down-sampling max-pool. Exercises
+    // FlatServer::Dense (incl. the first-group-only schedule), the skip
+    // retention logic, and the pooling path.
+    let td = 12usize;
+    let mut b = GraphBuilder::new("t", TensorShape::new(1, 16, 16));
+    b.add(conv(1, 8, 3, 1, 1, Act::Silu, Residual::None, None))
+        .unwrap();
+    b.add(conv(8, 8, 3, 1, 1, Act::Silu, Residual::None, Some(td)))
+        .unwrap();
+    b.add(conv(
+        8,
+        8,
+        3,
+        1,
+        1,
+        Act::None,
+        Residual::Identity { from: 0 },
+        None,
+    ))
+    .unwrap();
+    b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 5);
+    let mut rng = Rng::new(11);
+    let x = Tensor::from_fn(&[1, 16, 16], |_| rng.normal() * 0.5);
+    let emb: Vec<f32> = (0..td).map(|_| rng.normal() * 0.5).collect();
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, Some(&emb));
+}
+
+#[test]
+fn full_unet_bit_exact() {
+    // The whole default U-net (2 levels, concat skips, upsample, head):
+    // every layer kind and SF mode in one pass.
+    let g = sf_mmcn::models::unet(sf_mmcn::models::UnetConfig {
+        img: 8,
+        base_c: 4,
+        levels: 1,
+        time_dim: 8,
+        img_channels: 1,
+    });
+    let ws = WeightStore::random(&g, 13);
+    let mut rng = Rng::new(17);
+    let x = Tensor::from_fn(&[1, 8, 8], |_| rng.normal() * 0.5);
+    let emb: Vec<f32> = (0..8).map(|_| rng.normal() * 0.5).collect();
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, Some(&emb));
+}
+
+#[test]
+fn dense_head_bit_exact() {
+    // Conv -> pool -> dense classifier head: pins the dense fast path
+    // (weight-row windows, broadcast input, per-row zero gating).
+    let mut b = GraphBuilder::new("t", TensorShape::new(4, 8, 8));
+    b.add(conv(4, 6, 3, 1, 1, Act::Relu, Residual::None, None))
+        .unwrap();
+    b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+    b.add(Layer::GlobalAvgPool).unwrap();
+    b.add(Layer::Dense {
+        in_f: 6,
+        out_f: 19, // partial final neuron group
+        act: Act::None,
+    })
+    .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 23);
+    let mut rng = Rng::new(29);
+    let x = Tensor::from_fn(&[4, 8, 8], |_| rng.normal() * 0.5);
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, None);
+}
+
+#[test]
+fn small_input_split_bit_exact() {
+    // Tiny maps (<= 4 outputs) take the split PE-array path, which both
+    // code paths share — this pins the delegation stays wired up.
+    let mut b = GraphBuilder::new("t", TensorShape::new(3, 4, 4));
+    b.add(conv(3, 3, 3, 1, 1, Act::None, Residual::None, None))
+        .unwrap();
+    b.add(Layer::MaxPool { k: 2, stride: 2 }).unwrap();
+    b.add(conv(3, 5, 3, 1, 1, Act::None, Residual::None, None))
+        .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 31);
+    let mut rng = Rng::new(37);
+    let x = Tensor::from_fn(&[3, 4, 4], |_| rng.normal() * 0.5);
+    assert_paths_agree(&g, AcceleratorConfig::default(), &x, &ws, None);
+}
+
+#[test]
+fn non_default_unit_counts_bit_exact() {
+    // Unit-count sweeps change the round-robin layout and the threading
+    // split; results must not.
+    let mut b = GraphBuilder::new("t", TensorShape::new(5, 10, 10));
+    b.add(conv(5, 7, 3, 1, 1, Act::Relu, Residual::None, None))
+        .unwrap();
+    b.add(conv(
+        7,
+        7,
+        3,
+        1,
+        1,
+        Act::None,
+        Residual::Identity { from: 0 },
+        None,
+    ))
+    .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 41);
+    let mut rng = Rng::new(43);
+    let x = Tensor::from_fn(&[5, 10, 10], |_| rng.normal() * 0.5);
+    for units in [1usize, 2, 4, 16] {
+        assert_paths_agree(&g, AcceleratorConfig::with_units(units), &x, &ws, None);
+    }
+}
+
+#[test]
+fn repeated_runs_reuse_quant_cache_identically() {
+    // The WeightStore quantized-tap cache is filled on the first run and
+    // hit on the second — results must be identical both times.
+    let mut b = GraphBuilder::new("t", TensorShape::new(4, 8, 8));
+    b.add(conv(4, 4, 3, 1, 1, Act::Relu, Residual::None, None))
+        .unwrap();
+    let g = b.build();
+    let ws = WeightStore::random(&g, 47);
+    let x = Tensor::full(&[4, 8, 8], 0.3);
+    let mut a1 = Accelerator::new(AcceleratorConfig::default());
+    let r1 = a1.run_graph(&g, &x, &ws, None).unwrap();
+    let mut a2 = Accelerator::new(AcceleratorConfig::default());
+    let r2 = a2.run_graph(&g, &x, &ws, None).unwrap();
+    assert_eq!(r1.output.data(), r2.output.data());
+    assert_eq!(r1.totals, r2.totals);
+}
+
+/// Hand-derived golden values: 1-channel 3x3/1/p1 conv over a 4x4 map,
+/// one output channel, default 8-unit array, all inputs/weights nonzero.
+///
+/// Derivation (independent of both implementations):
+/// * 16 output positions -> 2 groups of 8 on unit 0; wall = 9 + 9 + 1
+///   cold-start = 19 cycles.
+/// * Worker MAC slots = 16 windows x 9 taps = 144 active cycles; padding
+///   zeros = 4 corners x 5 + 8 edges x 3 = 44 gated, 100 fired.
+/// * PE_9 idles through both groups: 18 idle cycles; 16 writebacks.
+/// * Buffer reads: per group the reuse registers fetch c_in*k*(k-1+8)
+///   = 3*(2+4+2+4) per the row-segment rule -> 36 distinct of 72 taps;
+///   two groups -> 72 reads, 144 without reuse, 72 register writes.
+/// * Weight broadcasts: 9 taps x 2 groups = 18 reads.
+/// * Memory system: 16-elem IFM fits (1 DRAM fill + 16 buffer writes),
+///   9 weight elems, 16 output writes -> 25 DRAM reads total.
+#[test]
+fn hand_computed_golden_values() {
+    let mut b = GraphBuilder::new("t", TensorShape::new(1, 4, 4));
+    b.add(conv(1, 1, 3, 1, 1, Act::None, Residual::None, None))
+        .unwrap();
+    let g = b.build();
+    let mut ws = WeightStore::random(&g, 53);
+    // all-nonzero input and weights so gating is padding-only
+    ws.per_node[0].as_mut().unwrap().w = Tensor::full(&[1, 1, 3, 3], 0.5);
+    ws.per_node[0].as_mut().unwrap().bias = vec![0.0];
+    ws.invalidate_quant();
+    let x = Tensor::full(&[1, 4, 4], 0.5);
+
+    for reference in [false, true] {
+        let mut acc = Accelerator::new(AcceleratorConfig::default());
+        let run = if reference {
+            acc.run_graph_ref(&g, &x, &ws, None).unwrap()
+        } else {
+            acc.run_graph(&g, &x, &ws, None).unwrap()
+        };
+        let label = if reference { "ref" } else { "fast" };
+        let c = &run.layers[0].counts;
+        assert_eq!(run.total_cycles(), 19, "{label}: wall cycles");
+        assert_eq!(c.pe.active_cycles, 144, "{label}: active");
+        assert_eq!(c.pe.macs, 100, "{label}: macs");
+        assert_eq!(c.pe.gated_macs, 44, "{label}: gated");
+        assert_eq!(c.pe.idle_cycles, 18, "{label}: idle");
+        assert_eq!(c.pe.writebacks, 16, "{label}: writebacks");
+        assert_eq!(c.pe.residual_adds, 0, "{label}: residual adds");
+        assert_eq!(c.unit.cycles, 19, "{label}: unit cycles");
+        assert_eq!(c.unit.conv_outputs, 16, "{label}: outputs");
+        assert_eq!(c.unit.served_values, 0, "{label}: served");
+        assert_eq!(c.unit.buffer_reads, 72, "{label}: buffer reads");
+        assert_eq!(
+            c.unit.buffer_reads_no_reuse, 144,
+            "{label}: no-reuse reads"
+        );
+        assert_eq!(c.unit.reuse_reg_writes, 72, "{label}: reuse writes");
+        assert_eq!(c.unit.weight_reads, 18, "{label}: weight reads");
+        assert_eq!(c.mem.dram_reads, 25, "{label}: dram reads");
+        assert_eq!(c.mem.input_buf_writes, 16, "{label}: ifm writes");
+        assert_eq!(c.mem.weight_buf_writes, 9, "{label}: weight writes");
+        assert_eq!(c.mem.output_buf_writes, 16, "{label}: ofm writes");
+        // functional check: interior output = 9 taps * 0.5 * 0.5 = 2.25
+        let v = run.output.get(&[0, 1, 1]);
+        assert!((v - 2.25).abs() < 0.01, "{label}: interior value {v}");
+    }
+}
