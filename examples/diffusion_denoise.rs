@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use sf_mmcn::config::ServeConfig;
+use sf_mmcn::config::{ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::DiffusionServer;
 use sf_mmcn::runtime::ArtifactStore;
 use sf_mmcn::sim::energy::CAL_40NM;
@@ -43,12 +43,25 @@ fn main() -> Result<()> {
     cfg.requests = args.get_usize("requests", 8)?;
     cfg.steps = args.get_usize("steps", 50)?;
     cfg.workers = args.get_usize("workers", 2)?;
+    // --native: run offline on the host-CPU surrogate (no artifacts),
+    // with the batched + pipelined request path of ISSUE 3.
+    if args.flag("native") {
+        cfg.backend = ServeBackend::Native;
+        cfg.batched = true;
+    }
 
     println!("=== SF-MMCN end-to-end: diffusion de-noise serving ===");
     println!(
-        "workload: {} requests x {} DDPM steps, {} workers, batch=1 per\n\
-         execution (the chip's real-time constraint, paper §III.D)\n",
-        cfg.requests, cfg.steps, cfg.workers
+        "workload: {} requests x {} DDPM steps, {} workers, {} backend{}\n",
+        cfg.requests,
+        cfg.steps,
+        cfg.workers,
+        cfg.backend.name(),
+        if cfg.batched {
+            " (batched + pipelined)"
+        } else {
+            ", batch=1 per execution (the chip's real-time constraint, §III.D)"
+        }
     );
 
     let store = ArtifactStore::default_store();

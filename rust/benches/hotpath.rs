@@ -13,6 +13,9 @@
 //! full-model simulations). Either mode writes machine-readable results
 //! to `BENCH_hotpath.json` so the perf trajectory is tracked across PRs;
 //! human-readable before/after tables live in EXPERIMENTS.md §Perf.
+//! `-- --check-against benches/baseline/BENCH_hotpath.json` turns the run
+//! into the CI regression gate: exit 1 on a >15% drop vs the baseline
+//! (tolerance via `SF_MMCN_BENCH_TOLERANCE`, in percent).
 
 use std::time::Duration;
 
@@ -25,7 +28,9 @@ use sf_mmcn::quant::Fixed;
 use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
 use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
 use sf_mmcn::sim::unit::{ConvGroup, FlatServer, ServerTask, SfMmcnUnit};
-use sf_mmcn::util::bench::{fmt_rate, Bencher};
+use sf_mmcn::util::bench::{
+    compare_baselines, BaselineRow, BenchBaseline, Bencher, fmt_rate,
+};
 use sf_mmcn::util::{Rng, Tensor};
 
 /// One machine-readable result row for `BENCH_hotpath.json`.
@@ -322,9 +327,67 @@ fn bench_runtime(b: &Bencher) {
     }
 }
 
+/// CI regression gate: compare this run against a committed baseline
+/// (`--check-against <path>`), failing the process on a >tolerance drop.
+/// Tolerance defaults to 15% (`SF_MMCN_BENCH_TOLERANCE`, in percent).
+fn check_against(rows: &[JsonRow], baseline_path: &str) {
+    let tolerance = std::env::var("SF_MMCN_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|pct| pct / 100.0)
+        .unwrap_or(0.15);
+    let current = BenchBaseline {
+        provisional: false,
+        rows: rows
+            .iter()
+            .map(|r| BaselineRow {
+                name: r.name.clone(),
+                mean_ns: Some(r.mean_ns),
+                mac_rate: r.mac_rate,
+                speedup_vs_ref: r.speedup_vs_ref,
+            })
+            .collect(),
+    };
+    let baseline = match BenchBaseline::load(std::path::Path::new(baseline_path)) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("\nBENCH GATE ERROR: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let (regressions, notes) = compare_baselines(&baseline, &current, tolerance);
+    println!(
+        "\n==== bench gate vs {baseline_path} (tolerance {:.0}%) ====",
+        tolerance * 100.0
+    );
+    for n in &notes {
+        println!("note: {n}");
+    }
+    if regressions.is_empty() {
+        println!("bench gate OK: no regression beyond tolerance");
+        return;
+    }
+    for r in &regressions {
+        println!(
+            "REGRESSION {}: {} {:.3} -> {:.3} ({:.1}% of baseline)",
+            r.name,
+            r.metric,
+            r.baseline,
+            r.current,
+            r.ratio * 100.0
+        );
+    }
+    std::process::exit(1);
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("SF_MMCN_BENCH_QUICK").is_ok();
+    let argv: Vec<String> = std::env::args().collect();
+    let baseline_path = argv
+        .iter()
+        .position(|a| a == "--check-against")
+        .and_then(|i| argv.get(i + 1).cloned());
     println!(
         "==================== HOT-PATH BENCH ({}) ====================\n",
         if quick { "quick" } else { "full" }
@@ -393,5 +456,8 @@ fn main() {
     bench_runtime(&Bencher::quick());
 
     write_json(if quick { "quick" } else { "full" }, &rows);
+    if let Some(path) = baseline_path {
+        check_against(&rows, &path);
+    }
     println!("\nhotpath bench OK");
 }

@@ -59,6 +59,35 @@ impl Default for RunConfig {
     }
 }
 
+/// Which runtime the serving workers execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// AOT HLO artifacts through PJRT (requires `make artifacts` and a
+    /// `--features pjrt` build). The default.
+    Pjrt,
+    /// The built-in host-CPU denoise surrogate with synthetic parameters
+    /// (`runtime::NativeDenoise`) — no artifacts needed; what tier-1 and
+    /// the serve benchmarks run on.
+    Native,
+}
+
+impl ServeBackend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pjrt" => ServeBackend::Pjrt,
+            "native" | "stub" => ServeBackend::Native,
+            other => bail!("unknown serve backend `{other}` (pjrt|native)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeBackend::Pjrt => "pjrt",
+            ServeBackend::Native => "native",
+        }
+    }
+}
+
 /// `sf-mmcn serve` (diffusion) configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -68,17 +97,33 @@ pub struct ServeConfig {
     pub requests: usize,
     /// Worker threads pulling from the request queue.
     pub workers: usize,
-    /// Max batch gathered per dispatch (the chip's batch is 1; batching
-    /// here amortizes queueing, each image still runs solo — §III.D).
+    /// Max requests the batcher hands a worker per grab. With `batched`
+    /// they stack into one `[B, ...]` device dispatch; without it they
+    /// amortize queueing only (each image still runs solo — §III.D).
     pub max_batch: usize,
     pub seed: u64,
     /// Artifact name for the denoise step.
     pub artifact: String,
-    /// Co-simulate the accelerator (cycles/energy) alongside PJRT.
+    /// Co-simulate the accelerator (cycles/energy) alongside execution.
+    /// Batched traffic co-sims through the cycle-accurate micro simulator;
+    /// the per-request path keeps the analytic model.
     pub cosim: bool,
     /// Use the fused T-step scan artifact (`unet_denoise_scan<T>_16`)
     /// instead of step-at-a-time execution (§Perf, L2).
     pub fused: bool,
+    /// Runtime backend (see [`ServeBackend`]).
+    pub backend: ServeBackend,
+    /// Cross-request batched dispatch: stack up to `max_batch` requests
+    /// into one `[B, ...]` execution per timestep chunk (ISSUE 3).
+    pub batched: bool,
+    /// Double-buffer the host stage: generate the next batch's noise and
+    /// time embeddings on a separate thread while the device executes the
+    /// current one. Only affects `batched` mode.
+    pub pipeline: bool,
+    /// Timesteps per batched dispatch (0 = the whole request in one).
+    /// On the PJRT backend the chunk must equal the scan artifact's baked
+    /// step count, so only 0 (or `steps`) is valid there.
+    pub chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -92,6 +137,10 @@ impl Default for ServeConfig {
             artifact: "unet_denoise_16".into(),
             cosim: true,
             fused: false,
+            backend: ServeBackend::Pjrt,
+            batched: false,
+            pipeline: true,
+            chunk: 0,
         }
     }
 }
@@ -172,6 +221,15 @@ impl ServeConfig {
         cfg.artifact = doc.get_str_or("serve", "artifact", &cfg.artifact);
         cfg.cosim = doc.get_bool_or("serve", "cosim", cfg.cosim);
         cfg.fused = doc.get_bool_or("serve", "fused", cfg.fused);
+        cfg.backend =
+            ServeBackend::parse(&doc.get_str_or("serve", "backend", cfg.backend.name()))?;
+        cfg.batched = doc.get_bool_or("serve", "batched", cfg.batched);
+        cfg.pipeline = doc.get_bool_or("serve", "pipeline", cfg.pipeline);
+        let chunk = doc.get_int_or("serve", "chunk", cfg.chunk as i64);
+        if chunk < 0 {
+            bail!("serve.chunk must be >= 0 (0 = whole request per dispatch)");
+        }
+        cfg.chunk = chunk as usize;
         if cfg.steps == 0 || cfg.workers == 0 || cfg.max_batch == 0 {
             bail!("serve.steps/workers/max_batch must be >= 1");
         }
@@ -249,6 +307,23 @@ data_reuse = false
         let cfg = ServeConfig::from_toml("[serve]\nsteps = 10\nworkers = 3\n").unwrap();
         assert_eq!(cfg.steps, 10);
         assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.backend, ServeBackend::Pjrt, "pjrt stays the default");
+        assert!(!cfg.batched);
+        assert!(cfg.pipeline);
+    }
+
+    #[test]
+    fn serve_config_batching_keys() {
+        let cfg = ServeConfig::from_toml(
+            "[serve]\nbackend = \"native\"\nbatched = true\npipeline = false\nchunk = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, ServeBackend::Native);
+        assert!(cfg.batched);
+        assert!(!cfg.pipeline);
+        assert_eq!(cfg.chunk, 8);
+        assert!(ServeConfig::from_toml("[serve]\nbackend = \"tpu\"\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nchunk = -1\n").is_err());
     }
 
     #[test]

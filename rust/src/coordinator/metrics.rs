@@ -1,5 +1,6 @@
-//! Serving metrics: wall-clock latency/throughput plus the co-simulated
-//! accelerator's cycles/energy for the same work.
+//! Serving metrics: wall-clock latency/throughput, batching/pipeline
+//! behaviour, plus the co-simulated accelerator's cycles/energy for the
+//! same work.
 
 use std::time::Duration;
 
@@ -13,8 +14,22 @@ pub struct ServeMetrics {
     pub request_latency: LatencyHist,
     /// Per-denoise-step latency.
     pub step_latency: LatencyHist,
+    /// Host-side batch preparation latency (noise + embeddings), one
+    /// sample per prepared batch. Empty on the per-request path.
+    pub host_prep: LatencyHist,
     pub requests_done: usize,
     pub steps_done: usize,
+    /// Device dispatches issued (batched mode: one per timestep chunk;
+    /// per-request mode: one per step, or per request when fused).
+    pub dispatches: usize,
+    /// Total request-slots across all dispatches; `batch_occupancy()` =
+    /// `batch_items / dispatches`.
+    pub batch_items: usize,
+    /// Times a worker's device lane had to wait on the host stage (the
+    /// double buffer was empty when the device went to fetch work).
+    pub pipeline_stalls: usize,
+    /// Requests completed per worker — the batcher-fairness signal.
+    pub per_worker_requests: Vec<usize>,
     pub wall: Duration,
     /// Co-simulated accelerator counts for all served work (if enabled).
     pub sim_counts: Option<EventCounts>,
@@ -25,8 +40,13 @@ impl ServeMetrics {
         Self {
             request_latency: LatencyHist::new(),
             step_latency: LatencyHist::new(),
+            host_prep: LatencyHist::new(),
             requests_done: 0,
             steps_done: 0,
+            dispatches: 0,
+            batch_items: 0,
+            pipeline_stalls: 0,
+            per_worker_requests: Vec::new(),
             wall: Duration::ZERO,
             sim_counts: None,
         }
@@ -44,6 +64,14 @@ impl ServeMetrics {
             return 0.0;
         }
         self.steps_done as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Mean requests per device dispatch (1.0 = no cross-request batching).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.dispatches == 0 {
+            return 0.0;
+        }
+        self.batch_items as f64 / self.dispatches as f64
     }
 
     /// Price the co-simulated counts under an energy model.
@@ -73,6 +101,29 @@ impl ServeMetrics {
             self.step_latency.mean_us() / 1e3,
             self.step_latency.percentile_us(95.0) / 1e3,
         ));
+        if self.dispatches > 0 {
+            s.push_str(&format!(
+                "dispatches: {}  batch occupancy: {:.2} req/dispatch  pipeline stalls: {}\n",
+                self.dispatches,
+                self.batch_occupancy(),
+                self.pipeline_stalls,
+            ));
+        }
+        if self.host_prep.count() > 0 {
+            s.push_str(&format!(
+                "host prep: mean {:.3} ms/batch ({} batches, overlapped with device)\n",
+                self.host_prep.mean_us() / 1e3,
+                self.host_prep.count(),
+            ));
+        }
+        if !self.per_worker_requests.is_empty() {
+            let min = self.per_worker_requests.iter().min().copied().unwrap_or(0);
+            let max = self.per_worker_requests.iter().max().copied().unwrap_or(0);
+            s.push_str(&format!(
+                "worker spread: {min}..{max} requests/worker across {} workers\n",
+                self.per_worker_requests.len(),
+            ));
+        }
         s
     }
 }
@@ -112,5 +163,19 @@ mod tests {
     fn zero_wall_is_safe() {
         let m = ServeMetrics::new();
         assert_eq!(m.requests_per_s(), 0.0);
+        assert_eq!(m.batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn occupancy_and_render_batched_lines() {
+        let mut m = ServeMetrics::new();
+        m.dispatches = 4;
+        m.batch_items = 14;
+        m.pipeline_stalls = 2;
+        m.per_worker_requests = vec![3, 4];
+        assert!((m.batch_occupancy() - 3.5).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("batch occupancy"), "{s}");
+        assert!(s.contains("worker spread"), "{s}");
     }
 }

@@ -9,13 +9,17 @@
 //!   side never needs re-lowering to change schedules).
 //! * [`params`] — loads `artifacts/unet_params.{bin,manifest}` into the
 //!   input layout the artifact expects.
-//! * [`server`] — request queue → batcher → worker threads, each owning a
-//!   PJRT executor; per-request de-noise loops; co-simulation of the
-//!   SF-MMCN accelerator for cycles/energy alongside the functional run.
-//! * [`metrics`] — latency histograms + simulated PPA aggregation.
+//! * [`server`] — request queue → fair batcher → worker lanes, each a
+//!   two-stage pipeline (host prep ∥ device execute) owning its executor;
+//!   batched `[B, ...]` fused dispatch across the queue; co-simulation of
+//!   the SF-MMCN accelerator for cycles/energy alongside the functional
+//!   run (micro-sim for batched traffic, analytic otherwise).
+//! * [`metrics`] — latency histograms, batching/pipeline counters, and
+//!   simulated PPA aggregation.
 //!
 //! Python never runs here: workers execute `artifacts/*.hlo.txt` through
-//! the PJRT C API only.
+//! the PJRT C API (or the offline native surrogate — see
+//! `crate::runtime::NativeDenoise`).
 
 pub mod ddpm;
 pub mod metrics;

@@ -8,7 +8,10 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::models::graph::{Layer, Residual};
+use crate::models::{unet, UnetConfig};
 use crate::runtime::TensorBuf;
+use crate::util::Rng;
 
 /// The loaded parameter set.
 #[derive(Debug, Clone)]
@@ -73,6 +76,50 @@ impl UnetParams {
         Ok(Self { names, tensors })
     }
 
+    /// Deterministic synthetic parameter set shaped like the real
+    /// artifact's (one `w`/`b` per conv, plus time-dense and skip-conv
+    /// tensors where the graph has them), for the native backend — lets
+    /// the serving stack run offline with no `make artifacts`. Same seed,
+    /// same tensors, bit-for-bit.
+    pub fn synthetic(cfg: &UnetConfig, seed: u64) -> Self {
+        fn gen(rng: &mut Rng, shape: Vec<usize>) -> TensorBuf {
+            let n: usize = shape.iter().product();
+            TensorBuf {
+                shape,
+                data: (0..n).map(|_| rng.normal() * 0.05).collect(),
+            }
+        }
+        let g = unet(*cfg);
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for (i, node) in g.nodes.iter().enumerate() {
+            if let Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                residual,
+                time_dense,
+                ..
+            } = &node.layer
+            {
+                names.push(format!("n{i}.w"));
+                tensors.push(gen(&mut rng, vec![*c_out, *c_in, *k, *k]));
+                names.push(format!("n{i}.b"));
+                tensors.push(gen(&mut rng, vec![*c_out]));
+                if let Some(td) = time_dense {
+                    names.push(format!("n{i}.wt"));
+                    tensors.push(gen(&mut rng, vec![*c_out, *td]));
+                }
+                if let Residual::Conv { from, .. } = residual {
+                    names.push(format!("n{i}.wr"));
+                    tensors.push(gen(&mut rng, vec![*c_out, g.nodes[*from].out_shape.c]));
+                }
+            }
+        }
+        Self { names, tensors }
+    }
+
     pub fn count(&self) -> usize {
         self.tensors.len()
     }
@@ -126,6 +173,25 @@ mod tests {
         std::fs::write(dir.join("p.manifest"), "a 1\n").unwrap();
         std::fs::write(dir.join("p.bin"), [0u8; 12]).unwrap();
         assert!(UnetParams::load(&dir, "p").is_err());
+    }
+
+    #[test]
+    fn synthetic_params_deterministic_and_sized() {
+        let cfg = UnetConfig::default();
+        let a = UnetParams::synthetic(&cfg, 7);
+        let b = UnetParams::synthetic(&cfg, 7);
+        let c = UnetParams::synthetic(&cfg, 8);
+        assert_eq!(a.names, b.names);
+        for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(ta, tb, "same seed must be bit-identical");
+        }
+        assert_ne!(
+            a.tensors[0].data, c.tensors[0].data,
+            "different seed differs"
+        );
+        // shaped like the real blob: tens of tensors, >50k scalars
+        assert!(a.count() > 10, "{} tensors", a.count());
+        assert!(a.total_values() > 50_000, "{} values", a.total_values());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 
 use sf_mmcn::baselines::mmcn;
 use sf_mmcn::compiler::analyze_graph;
-use sf_mmcn::config::{ModelChoice, RunConfig, ServeConfig};
+use sf_mmcn::config::{ModelChoice, RunConfig, ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::DiffusionServer;
 use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
 use sf_mmcn::report;
@@ -35,7 +35,8 @@ USAGE: sf-mmcn <subcommand> [options]
             [--sparsity 0.45] [--config file.toml]
   simulate  --model unet [--img 16] [--units 8] [--seed 42]
   serve     [--steps 50] [--requests 8] [--workers 2] [--fused]
-            [--config file.toml]
+            [--backend pjrt|native] [--native] [--batched] [--no-batch]
+            [--max-batch 4] [--chunk 0] [--no-pipeline] [--config file.toml]
   sweep     [--model resnet18] [--img 224]
   report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
             headlines|all
@@ -160,18 +161,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.steps = args.get_usize("steps", cfg.steps)?;
     cfg.requests = args.get_usize("requests", cfg.requests)?;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    cfg.chunk = args.get_usize("chunk", cfg.chunk)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = ServeBackend::parse(b)?;
+    }
+    if args.flag("native") {
+        cfg.backend = ServeBackend::Native;
+    }
     if args.flag("fused") {
         cfg.fused = true;
+    }
+    if args.flag("batched") {
+        cfg.batched = true;
+    }
+    if args.flag("no-batch") {
+        cfg.batched = false;
+    }
+    if args.flag("no-pipeline") {
+        cfg.pipeline = false;
     }
 
     let store = ArtifactStore::default_store();
     let server = DiffusionServer::new(cfg.clone(), &store)?;
     println!(
-        "serving {} denoise requests ({} steps each) on {} workers{} …",
+        "serving {} denoise requests ({} steps each) on {} workers, {} backend{}{} …",
         cfg.requests,
         cfg.steps,
         cfg.workers,
-        if cfg.fused { " [fused scan]" } else { "" }
+        cfg.backend.name(),
+        if cfg.fused { " [fused scan]" } else { "" },
+        if cfg.batched {
+            " [batched + pipelined]"
+        } else {
+            ""
+        }
     );
     let reqs = server.workload(cfg.requests);
     let (results, metrics) = server.serve(reqs)?;

@@ -4,12 +4,19 @@
 //! One [`Executor`] holds the PJRT client plus every compiled executable
 //! keyed by artifact name. All jax functions are lowered with
 //! `return_tuple=True`, so execution results are unwrapped as tuples.
+//!
+//! The executor also carries the same native-surrogate registry as the
+//! stub ([`Executor::register_native`]): a registered [`NativeDenoise`]
+//! answers for names that have no compiled executable, so a PJRT build
+//! can still serve offline workloads (and the serving layer is identical
+//! across backends).
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use super::native::{BatchDispatch, NativeDenoise};
 use super::tensor_buf::TensorBuf;
 
 fn to_literal(t: &TensorBuf) -> Result<xla::Literal> {
@@ -27,6 +34,7 @@ fn to_literal(t: &TensorBuf) -> Result<xla::Literal> {
 pub struct Executor {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    natives: HashMap<String, NativeDenoise>,
 }
 
 impl Executor {
@@ -36,6 +44,7 @@ impl Executor {
         Ok(Self {
             client,
             executables: HashMap::new(),
+            natives: HashMap::new(),
         })
     }
 
@@ -58,14 +67,26 @@ impl Executor {
         Ok(())
     }
 
-    /// True if an executable has been loaded under `name`.
+    /// Register a host-CPU surrogate under an artifact name; it answers
+    /// `run_prepared`/`run_batched` for names without a compiled HLO.
+    pub fn register_native(&mut self, name: &str, engine: NativeDenoise) {
+        self.natives.insert(name.to_string(), engine);
+    }
+
+    /// True if anything executable is loaded under `name`.
     pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        self.executables.contains_key(name) || self.natives.contains_key(name)
     }
 
     pub fn loaded_names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        let mut v: Vec<&str> = self
+            .executables
+            .keys()
+            .chain(self.natives.keys())
+            .map(|s| s.as_str())
+            .collect();
         v.sort();
+        v.dedup();
         v
     }
 
@@ -81,10 +102,12 @@ impl Executor {
     /// Pre-convert static inputs (e.g. model weights) to device literals
     /// once, so the serving hot loop only converts the per-step tensors.
     /// §Perf: cut the U-net denoise step's host-side input preparation
-    /// from 39 tensors (~530 KB) to 6 small ones per step.
+    /// from 39 tensors (~530 KB) to 6 small ones per step. A host copy is
+    /// retained for the native-surrogate fallback.
     pub fn prepare(&self, tensors: &[TensorBuf]) -> Result<PreparedInputs> {
         Ok(PreparedInputs {
             lits: tensors.iter().map(to_literal).collect::<Result<_>>()?,
+            host: tensors.to_vec(),
         })
     }
 
@@ -96,11 +119,75 @@ impl Executor {
         dynamic: &[TensorBuf],
         prepared: &PreparedInputs,
     ) -> Result<Vec<TensorBuf>> {
+        if !self.executables.contains_key(name) {
+            if let Some(engine) = self.natives.get(name) {
+                return engine.run_dynamic(dynamic, &prepared.host);
+            }
+        }
         let dyn_lits: Vec<xla::Literal> =
             dynamic.iter().map(to_literal).collect::<Result<_>>()?;
         let refs: Vec<&xla::Literal> =
             dyn_lits.iter().chain(prepared.lits.iter()).collect();
         self.execute_refs(name, &refs)
+    }
+
+    /// Batched entry point: one `[B, ...]` × C-step dispatch (see
+    /// [`BatchDispatch`]). Resolution order:
+    ///
+    /// 1. a truly batched executable `"{name}__b{B}"` (stacked inputs,
+    ///    one PJRT execution for the whole batch), if compiled;
+    /// 2. the per-item scan executable `name` — inputs are unstacked and
+    ///    executed per request (the chunk length must then match the
+    ///    artifact's baked step count);
+    /// 3. a registered native surrogate.
+    ///
+    /// Returns the updated images stacked `[B, ...]`.
+    pub fn run_batched(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+    ) -> Result<TensorBuf> {
+        let stacked_name = format!("{name}__b{}", d.batch);
+        if self.executables.contains_key(&stacked_name) {
+            let dynamic = [
+                d.x.clone(),
+                d.t_embs.clone(),
+                d.coeffs.clone(),
+                d.noises.clone(),
+            ];
+            let out = self.run_prepared(&stacked_name, &dynamic, prepared)?;
+            return out
+                .into_iter()
+                .next()
+                .context("batched artifact returned nothing");
+        }
+        if self.executables.contains_key(name) {
+            let xs = d.x.unstack()?;
+            let noises = d.noises.unstack()?;
+            if xs.len() != d.batch || noises.len() != d.batch {
+                bail!(
+                    "batched dispatch: leading dim {} != batch {}",
+                    xs.len(),
+                    d.batch
+                );
+            }
+            let mut outs = Vec::with_capacity(xs.len());
+            for (x_i, n_i) in xs.into_iter().zip(noises) {
+                let dynamic = [x_i, d.t_embs.clone(), d.coeffs.clone(), n_i];
+                let out = self.run_prepared(name, &dynamic, prepared)?;
+                outs.push(
+                    out.into_iter()
+                        .next()
+                        .context("scan artifact returned nothing")?,
+                );
+            }
+            return TensorBuf::stack(&outs);
+        }
+        if let Some(engine) = self.natives.get(name) {
+            return engine.run_batched(d, &prepared.host);
+        }
+        bail!("artifact `{name}` not loaded")
     }
 
     fn execute_refs(&self, name: &str, refs: &[&xla::Literal]) -> Result<Vec<TensorBuf>> {
@@ -125,6 +212,7 @@ impl Executor {
 /// Pre-converted static inputs (see [`Executor::prepare`]).
 pub struct PreparedInputs {
     lits: Vec<xla::Literal>,
+    host: Vec<TensorBuf>,
 }
 
 impl PreparedInputs {

@@ -8,12 +8,14 @@
 //! `xla_extension` shared library, which the default build environment
 //! does not have — so it is gated behind the `pjrt` cargo feature and a
 //! stub with the same API takes its place otherwise (see [`stub`]). The
-//! artifact store and [`TensorBuf`] are backend-independent and always
-//! available.
+//! artifact store, [`TensorBuf`], and the [`native`] denoise surrogate
+//! (which lets the serving layer run offline, batched included) are
+//! backend-independent and always available.
 
 mod artifact;
 #[cfg(feature = "pjrt")]
 mod executor;
+mod native;
 #[cfg(not(feature = "pjrt"))]
 mod stub;
 mod tensor_buf;
@@ -21,6 +23,7 @@ mod tensor_buf;
 pub use artifact::{ArtifactSpec, ArtifactStore};
 #[cfg(feature = "pjrt")]
 pub use executor::{Executor, PreparedInputs};
+pub use native::{BatchDispatch, NativeDenoise};
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{Executor, PreparedInputs};
 pub use tensor_buf::TensorBuf;

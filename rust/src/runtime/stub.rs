@@ -4,14 +4,22 @@
 //! the `xla_extension` shared library, so the PJRT-backed executor cannot
 //! even link. This stub keeps the whole crate (simulator, compiler,
 //! baselines, coordinator, benches) buildable and testable: constructing
-//! an [`Executor`] succeeds, but loading or executing an artifact returns
-//! a typed error pointing at the `pjrt` feature. Callers that can run
-//! without artifacts (tests, benches) detect this and skip.
+//! an [`Executor`] succeeds, but loading or executing an *HLO* artifact
+//! returns a typed error pointing at the `pjrt` feature. Callers that can
+//! run without artifacts (tests, benches) detect this and skip.
+//!
+//! Since ISSUE 3 the stub is no longer execution-dead: the serving layer
+//! can register a [`NativeDenoise`] surrogate under an artifact name
+//! ([`Executor::register_native`]), after which `run_prepared` /
+//! `run_batched` execute it on the host CPU. That is what lets tier-1
+//! exercise the full batched/pipelined serving path offline.
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::native::{BatchDispatch, NativeDenoise};
 use super::tensor_buf::TensorBuf;
 
 fn unavailable(what: &str) -> anyhow::Error {
@@ -22,19 +30,22 @@ fn unavailable(what: &str) -> anyhow::Error {
     )
 }
 
-/// Stub executor: mirrors the PJRT executor's API, fails on use.
+/// Stub executor: mirrors the PJRT executor's API. HLO paths fail with a
+/// typed error; registered native surrogates execute for real.
 pub struct Executor {
-    _priv: (),
+    natives: HashMap<String, NativeDenoise>,
 }
 
 impl Executor {
-    /// Succeeds so construction sites stay uniform; execution paths error.
+    /// Succeeds so construction sites stay uniform; HLO paths error.
     pub fn new() -> Result<Self> {
-        Ok(Self { _priv: () })
+        Ok(Self {
+            natives: HashMap::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
-        "stub (pjrt feature disabled)".to_string()
+        "native stub (pjrt feature disabled)".to_string()
     }
 
     /// Always an error: validates the path exists (so missing-artifact
@@ -47,45 +58,77 @@ impl Executor {
             .with_context(|| format!("loading artifact `{name}`"))
     }
 
-    /// No executable can be loaded, so this is always false.
-    pub fn has(&self, _name: &str) -> bool {
-        false
+    /// Register a host-CPU surrogate under an artifact name; subsequent
+    /// `run_prepared`/`run_batched` calls on that name execute it.
+    pub fn register_native(&mut self, name: &str, engine: NativeDenoise) {
+        self.natives.insert(name.to_string(), engine);
+    }
+
+    /// True if anything executable is registered under `name`.
+    pub fn has(&self, name: &str) -> bool {
+        self.natives.contains_key(name)
     }
 
     pub fn loaded_names(&self) -> Vec<&str> {
-        Vec::new()
+        let mut v: Vec<&str> = self.natives.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
     }
 
     pub fn run(&self, name: &str, _inputs: &[TensorBuf]) -> Result<Vec<TensorBuf>> {
         bail!("artifact `{name}` not loaded ({})", unavailable("execution"))
     }
 
-    pub fn prepare(&self, _tensors: &[TensorBuf]) -> Result<PreparedInputs> {
-        Err(unavailable("preparing device literals"))
+    /// Host-side copy of the static inputs (the native surrogate reads
+    /// them per dispatch; there is no device to convert them for).
+    pub fn prepare(&self, tensors: &[TensorBuf]) -> Result<PreparedInputs> {
+        Ok(PreparedInputs {
+            tensors: tensors.to_vec(),
+        })
     }
 
     pub fn run_prepared(
         &self,
         name: &str,
-        _dynamic: &[TensorBuf],
-        _prepared: &PreparedInputs,
+        dynamic: &[TensorBuf],
+        prepared: &PreparedInputs,
     ) -> Result<Vec<TensorBuf>> {
+        if let Some(engine) = self.natives.get(name) {
+            return engine.run_dynamic(dynamic, &prepared.tensors);
+        }
         bail!("artifact `{name}` not loaded ({})", unavailable("execution"))
+    }
+
+    /// Batched entry point: one `[B, ...]` × C-step dispatch (see
+    /// [`BatchDispatch`]). Returns the updated images stacked `[B, ...]`.
+    pub fn run_batched(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+    ) -> Result<TensorBuf> {
+        if let Some(engine) = self.natives.get(name) {
+            return engine.run_batched(d, &prepared.tensors);
+        }
+        bail!(
+            "artifact `{name}` not loaded ({})",
+            unavailable("batched execution")
+        )
     }
 }
 
-/// Stub for pre-converted static inputs.
+/// Host copies of pre-converted static inputs (see [`Executor::prepare`]).
 pub struct PreparedInputs {
-    _priv: (),
+    tensors: Vec<TensorBuf>,
 }
 
 impl PreparedInputs {
     pub fn len(&self) -> usize {
-        0
+        self.tensors.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        true
+        self.tensors.is_empty()
     }
 }
 
@@ -113,5 +156,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("not found"), "{err}");
+    }
+
+    #[test]
+    fn registered_native_executes_offline() {
+        let mut exe = Executor::new().unwrap();
+        exe.register_native("denoise", NativeDenoise::new(vec![1, 2, 2], 4));
+        assert!(exe.has("denoise"));
+        assert_eq!(exe.loaded_names(), vec!["denoise"]);
+        let prepared = exe
+            .prepare(&[TensorBuf::new(vec![2], vec![0.1, -0.1]).unwrap()])
+            .unwrap();
+        assert_eq!(prepared.len(), 1);
+        let dynamic = vec![
+            TensorBuf::new(vec![1, 2, 2], vec![0.1, 0.2, 0.3, 0.4]).unwrap(),
+            TensorBuf::new(vec![4], vec![0.0, 0.1, 0.2, 0.3]).unwrap(),
+            TensorBuf::scalar(1.01),
+            TensorBuf::scalar(0.05),
+            TensorBuf::scalar(0.0),
+            TensorBuf::zeros(&[1, 2, 2]),
+        ];
+        let out = exe.run_prepared("denoise", &dynamic, &prepared).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![1, 2, 2]);
+        // unknown names still error even with natives registered
+        assert!(exe.run_prepared("other", &dynamic, &prepared).is_err());
     }
 }

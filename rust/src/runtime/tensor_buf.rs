@@ -49,6 +49,66 @@ impl TensorBuf {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+
+    /// Stack same-shaped tensors into one tensor with a new leading axis —
+    /// how the batched serving path forms a `[B, ...]` device dispatch out
+    /// of B per-request tensors.
+    pub fn stack(parts: &[TensorBuf]) -> Result<TensorBuf> {
+        let first = match parts.first() {
+            Some(p) => p,
+            None => bail!("stack of zero tensors"),
+        };
+        let mut data = Vec::with_capacity(first.len() * parts.len());
+        for p in parts {
+            if p.shape != first.shape {
+                bail!(
+                    "stack shape mismatch: {:?} vs {:?}",
+                    p.shape,
+                    first.shape
+                );
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&first.shape);
+        TensorBuf::new(shape, data)
+    }
+
+    /// Split along the leading axis into `shape[0]` tensors (inverse of
+    /// [`TensorBuf::stack`]).
+    pub fn unstack(&self) -> Result<Vec<TensorBuf>> {
+        if self.shape.is_empty() {
+            bail!("unstack of a rank-0 tensor");
+        }
+        let b = self.shape[0];
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let n: usize = inner.iter().product();
+        let mut out = Vec::with_capacity(b);
+        for i in 0..b {
+            out.push(TensorBuf::new(
+                inner.clone(),
+                self.data[i * n..(i + 1) * n].to_vec(),
+            )?);
+        }
+        Ok(out)
+    }
+
+    /// Copy rows `lo..lo+len` along the leading axis (row-major), keeping
+    /// the trailing dims — how the batched path carves per-timestep-chunk
+    /// views out of the whole-request embedding/coefficient tensors.
+    pub fn slice_rows(&self, lo: usize, len: usize) -> Result<TensorBuf> {
+        if self.shape.is_empty() {
+            bail!("slice_rows of a rank-0 tensor");
+        }
+        let rows = self.shape[0];
+        if lo + len > rows {
+            bail!("slice_rows {lo}..{} out of {rows} rows", lo + len);
+        }
+        let n: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = len;
+        TensorBuf::new(shape, self.data[lo * n..(lo + len) * n].to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +133,35 @@ mod tests {
         let t = TensorBuf::scalar(3.5);
         assert!(t.shape.is_empty());
         assert_eq!(t.data, vec![3.5]);
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = TensorBuf::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = TensorBuf::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let s = TensorBuf::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        assert_eq!(s.data[..4], a.data[..]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatch_and_empty() {
+        let a = TensorBuf::zeros(&[2]);
+        let b = TensorBuf::zeros(&[3]);
+        assert!(TensorBuf::stack(&[a, b]).is_err());
+        assert!(TensorBuf::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_copies_chunk() {
+        let t = TensorBuf::new(vec![3, 2], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_rows(2, 2).is_err());
     }
 }

@@ -1,9 +1,15 @@
 //! Criterion-lite benchmarking harness for the `harness = false` bench
 //! targets: warmup, timed iterations, mean/std/percentiles, and a
-//! machine-greppable one-line-per-bench output format.
+//! machine-greppable one-line-per-bench output format — plus the
+//! baseline comparator behind the CI bench-regression gate
+//! ([`BenchBaseline`]/[`compare_baselines`]).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
+use super::json_lite::Json;
 use super::stats::{percentile, Summary};
 
 /// Result of one benchmark.
@@ -109,6 +115,166 @@ impl Bencher {
     }
 }
 
+/// One row of a `BENCH_*.json` results file, as the comparator sees it.
+#[derive(Debug, Clone)]
+pub struct BaselineRow {
+    pub name: String,
+    pub mean_ns: Option<f64>,
+    /// "cycles/sec" proxy: simulated MAC throughput for sim benches.
+    pub mac_rate: Option<f64>,
+    /// Machine-independent fast-vs-reference ratio (same host, same run).
+    pub speedup_vs_ref: Option<f64>,
+}
+
+/// A parsed `BENCH_*.json` file (fresh run or committed baseline).
+#[derive(Debug, Clone)]
+pub struct BenchBaseline {
+    /// Provisional baselines carry target-derived, not host-measured,
+    /// numbers; only their machine-independent ratio columns gate CI.
+    pub provisional: bool,
+    pub rows: Vec<BaselineRow>,
+}
+
+impl BenchBaseline {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench baseline {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let rows_json = v
+            .get("results")
+            .and_then(Json::as_array)
+            .context("bench file has no `results` array")?;
+        let mut rows = Vec::with_capacity(rows_json.len());
+        for r in rows_json {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .context("result row without `name`")?
+                .to_string();
+            rows.push(BaselineRow {
+                name,
+                mean_ns: r.get("mean_ns").and_then(Json::as_f64),
+                mac_rate: r.get("mac_rate_per_s").and_then(Json::as_f64),
+                speedup_vs_ref: r.get("speedup_vs_ref").and_then(Json::as_f64),
+            });
+        }
+        if rows.is_empty() {
+            bail!("bench file has an empty `results` array");
+        }
+        Ok(Self {
+            provisional: v
+                .get("provisional")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            rows,
+        })
+    }
+}
+
+/// One detected regression (current worse than baseline by more than the
+/// tolerance).
+#[derive(Debug, Clone)]
+pub struct BenchRegression {
+    pub name: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// current / baseline (< 1 − tolerance to be reported).
+    pub ratio: f64,
+}
+
+/// Compare a fresh run against a baseline; returns (regressions, notes).
+///
+/// * `speedup_vs_ref` columns compare directly — the ratio is measured
+///   fast-vs-reference *on the same host in the same process*, so it is
+///   machine-independent and always gates.
+/// * Absolute throughput (`mac_rate_per_s`, else `1/mean_ns`) gates only
+///   against non-provisional (host-measured) baselines; a provisional
+///   baseline's absolute numbers produce a note instead.
+///
+/// `tolerance` is fractional (0.15 = fail below 85% of baseline).
+pub fn compare_baselines(
+    baseline: &BenchBaseline,
+    current: &BenchBaseline,
+    tolerance: f64,
+) -> (Vec<BenchRegression>, Vec<String>) {
+    let mut regressions = Vec::new();
+    let mut notes = Vec::new();
+    for base in &baseline.rows {
+        let Some(cur) = current.rows.iter().find(|r| r.name == base.name) else {
+            // a vanished row (renamed/dropped bench) must FAIL, not note —
+            // otherwise a refactor silently disarms the gate; legitimate
+            // renames update the committed baseline in the same PR
+            regressions.push(BenchRegression {
+                name: base.name.clone(),
+                metric: "missing_row",
+                baseline: 1.0,
+                current: 0.0,
+                ratio: 0.0,
+            });
+            continue;
+        };
+        if let (Some(b), Some(c)) = (base.speedup_vs_ref, cur.speedup_vs_ref) {
+            if b > 0.0 {
+                let ratio = c / b;
+                if ratio < 1.0 - tolerance {
+                    regressions.push(BenchRegression {
+                        name: base.name.clone(),
+                        metric: "speedup_vs_ref",
+                        baseline: b,
+                        current: c,
+                        ratio,
+                    });
+                }
+            }
+        }
+        if baseline.provisional {
+            continue; // absolute rates from a provisional baseline: skip
+        }
+        let rate = |r: &BaselineRow| -> Option<(f64, &'static str)> {
+            if let Some(m) = r.mac_rate {
+                return Some((m, "mac_rate_per_s"));
+            }
+            r.mean_ns
+                .filter(|&ns| ns > 0.0)
+                .map(|ns| (1e9 / ns, "iters_per_s"))
+        };
+        if let (Some((b, metric)), Some((c, cur_metric))) = (rate(base), rate(cur)) {
+            if metric != cur_metric {
+                // e.g. the baseline recorded mac_rate_per_s but the bench
+                // no longer emits it: units apart, never compare
+                notes.push(format!(
+                    "row `{}`: metric changed ({metric} -> {cur_metric}); not compared",
+                    base.name
+                ));
+            } else if b > 0.0 {
+                let ratio = c / b;
+                if ratio < 1.0 - tolerance {
+                    regressions.push(BenchRegression {
+                        name: base.name.clone(),
+                        metric,
+                        baseline: b,
+                        current: c,
+                        ratio,
+                    });
+                }
+            }
+        }
+    }
+    if baseline.provisional {
+        notes.push(
+            "baseline is provisional (target-derived): only speedup_vs_ref ratios gated; \
+             commit a measured BENCH json to enable the absolute-rate gate"
+                .to_string(),
+        );
+    }
+    (regressions, notes)
+}
+
 /// Format a big ops/second number human-readably.
 pub fn fmt_rate(ops_per_s: f64) -> String {
     if ops_per_s >= 1e9 {
@@ -138,6 +304,88 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.mean_ns >= 0.0);
         assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    fn fixture(provisional: bool, speedup: f64, rate: f64) -> String {
+        format!(
+            r#"{{"bench": "hotpath", "mode": "quick", "provisional": {provisional},
+  "results": [
+    {{"name": "sim_a", "mean_ns": 100.0, "mac_rate_per_s": {rate}, "speedup_vs_ref": {speedup}}},
+    {{"name": "analyze_b", "mean_ns": 2000.0}}
+  ]}}"#
+        )
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_gate() {
+        let base = BenchBaseline::from_json(&fixture(false, 5.0, 1e9)).unwrap();
+        assert!(!base.provisional);
+        assert_eq!(base.rows.len(), 2);
+
+        // healthy run: slightly faster — no regressions
+        let ok = BenchBaseline::from_json(&fixture(false, 5.2, 1.05e9)).unwrap();
+        let (regs, _) = compare_baselines(&base, &ok, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
+
+        // collapsed speedup AND rate: both gate
+        let bad = BenchBaseline::from_json(&fixture(false, 1.0, 3e8)).unwrap();
+        let (regs, _) = compare_baselines(&base, &bad, 0.15);
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        assert!(regs.iter().any(|r| r.metric == "speedup_vs_ref"));
+        assert!(regs.iter().any(|r| r.metric == "mac_rate_per_s"));
+
+        // within tolerance: 10% down passes a 15% gate
+        let close = BenchBaseline::from_json(&fixture(false, 4.5, 0.9e9)).unwrap();
+        let (regs, _) = compare_baselines(&base, &close, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
+    }
+
+    #[test]
+    fn provisional_baseline_gates_ratios_only() {
+        let base = BenchBaseline::from_json(&fixture(true, 5.0, 1e9)).unwrap();
+        assert!(base.provisional);
+        // rate collapsed but ratio healthy: provisional baseline must not fail it
+        let cur = BenchBaseline::from_json(&fixture(false, 5.0, 1e7)).unwrap();
+        let (regs, notes) = compare_baselines(&base, &cur, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
+        assert!(notes.iter().any(|n| n.contains("provisional")));
+        // ratio collapsed: still caught
+        let bad = BenchBaseline::from_json(&fixture(false, 1.2, 1e9)).unwrap();
+        let (regs, _) = compare_baselines(&base, &bad, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "speedup_vs_ref");
+    }
+
+    #[test]
+    fn metric_change_is_noted_not_compared() {
+        // baseline recorded a MAC rate; the current run only has mean_ns —
+        // units apart, must not produce a (spurious) regression
+        let base = BenchBaseline::from_json(
+            r#"{"results": [{"name": "sim_a", "mean_ns": 100.0, "mac_rate_per_s": 1e9}]}"#,
+        )
+        .unwrap();
+        let cur = BenchBaseline::from_json(
+            r#"{"results": [{"name": "sim_a", "mean_ns": 100.0}]}"#,
+        )
+        .unwrap();
+        let (regs, notes) = compare_baselines(&base, &cur, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
+        assert!(notes.iter().any(|n| n.contains("metric changed")), "{notes:?}");
+    }
+
+    #[test]
+    fn missing_rows_fail_the_gate() {
+        // dropping/renaming a gated bench must fail, not silently disarm
+        let base = BenchBaseline::from_json(&fixture(false, 5.0, 1e9)).unwrap();
+        let cur = BenchBaseline::from_json(
+            r#"{"results": [{"name": "sim_a", "mean_ns": 100.0, "mac_rate_per_s": 1e9, "speedup_vs_ref": 5.0}]}"#,
+        )
+        .unwrap();
+        let (regs, _) = compare_baselines(&base, &cur, 0.15);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert_eq!(regs[0].metric, "missing_row");
+        assert_eq!(regs[0].name, "analyze_b");
+        assert!(BenchBaseline::from_json("{\"results\": []}").is_err());
     }
 
     #[test]

@@ -1,17 +1,287 @@
-//! End-to-end serving integration test: the full coordinator path
-//! (queue → batcher → workers → PJRT → DDPM loop) on a small workload.
+//! End-to-end serving integration tests: the full coordinator path
+//! (queue → fair batcher → worker lanes → DDPM loop) on small workloads.
 //!
-//! Requires `make artifacts` *and* a PJRT-enabled build (`--features
-//! pjrt`); each test skips cleanly when either is missing, so the suite
-//! stays green on CI builds that have neither.
+//! Two tiers:
+//!
+//! * **Native tests** run unconditionally — the serving stack executes on
+//!   the host-CPU surrogate runtime with synthetic parameters, so tier-1
+//!   exercises batching, pipelining, fairness, and determinism offline.
+//! * **PJRT tests** additionally require `make artifacts` *and* a
+//!   PJRT-enabled build (`--features pjrt` against the real xla crate);
+//!   each skips cleanly when either is missing.
 
-use sf_mmcn::config::ServeConfig;
+use sf_mmcn::config::{ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::{DenoiseRequest, DiffusionServer};
 use sf_mmcn::runtime::{ArtifactStore, Executor};
 use sf_mmcn::sim::energy::CAL_40NM;
 
-/// Build a server, or None (with a skip note) when the artifacts or the
-/// PJRT runtime are unavailable in this build.
+// ---------------------------------------------------------------- native
+
+/// Offline server on the native surrogate backend (no artifacts needed).
+fn native_server(cfg: ServeConfig) -> DiffusionServer {
+    let store = ArtifactStore::new("artifacts");
+    DiffusionServer::new(cfg, &store).expect("native backend needs no artifacts")
+}
+
+fn native_cfg(steps: usize, workers: usize, max_batch: usize, batched: bool) -> ServeConfig {
+    ServeConfig {
+        steps,
+        workers,
+        max_batch,
+        batched,
+        requests: 0,
+        seed: 11,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: false,
+        backend: ServeBackend::Native,
+        pipeline: true,
+        chunk: 0,
+    }
+}
+
+fn reqs(n: u64, steps: usize) -> Vec<DenoiseRequest> {
+    (0..n)
+        .map(|i| DenoiseRequest {
+            id: i,
+            seed: 500 + i,
+            steps,
+        })
+        .collect()
+}
+
+#[test]
+fn native_serves_all_requests_exactly_once() {
+    let s = native_server(native_cfg(4, 2, 4, true));
+    let (results, metrics) = s.serve(reqs(5, 4)).unwrap();
+    assert_eq!(results.len(), 5);
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    assert_eq!(metrics.requests_done, 5);
+    assert_eq!(metrics.steps_done, 20);
+    assert_eq!(metrics.request_latency.count(), 5);
+    assert_eq!(metrics.step_latency.count(), 20);
+    assert!(metrics.dispatches >= 1);
+    assert_eq!(metrics.batch_items, 5, "each request in exactly one dispatch");
+}
+
+#[test]
+fn native_batched_bit_identical_to_per_request_path() {
+    // The ISSUE 3 determinism contract: for the same seeds, the batched
+    // pipelined path must produce bit-identical images to the
+    // step-at-a-time per-request path.
+    let s_seq = native_server(native_cfg(5, 1, 1, false));
+    let (mut r_seq, _) = s_seq.serve(reqs(6, 5)).unwrap();
+    let s_bat = native_server(native_cfg(5, 2, 4, true));
+    let (mut r_bat, m) = s_bat.serve(reqs(6, 5)).unwrap();
+    r_seq.sort_by_key(|r| r.id);
+    r_bat.sort_by_key(|r| r.id);
+    for (a, b) in r_seq.iter().zip(&r_bat) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.image.data, b.image.data,
+            "request {} diverged between batched and per-request paths",
+            a.id
+        );
+        assert_eq!(a.steps, 5);
+        assert_eq!(b.steps, 5);
+    }
+    assert!(
+        m.batch_occupancy() > 1.0,
+        "batched mode must actually batch (occupancy {})",
+        m.batch_occupancy()
+    );
+}
+
+#[test]
+fn native_chunked_dispatch_bit_identical() {
+    // Chunked timestep dispatch (several [B, ...] executions per request)
+    // must not change the math, only the dispatch count.
+    let whole = native_server(native_cfg(5, 1, 4, true));
+    let (mut r_whole, m_whole) = whole.serve(reqs(4, 5)).unwrap();
+    let mut cfg = native_cfg(5, 1, 4, true);
+    cfg.chunk = 2;
+    let chunked = native_server(cfg);
+    let (mut r_chunk, m_chunk) = chunked.serve(reqs(4, 5)).unwrap();
+    r_whole.sort_by_key(|r| r.id);
+    r_chunk.sort_by_key(|r| r.id);
+    for (a, b) in r_whole.iter().zip(&r_chunk) {
+        assert_eq!(a.image.data, b.image.data, "request {} diverged", a.id);
+    }
+    assert!(
+        m_chunk.dispatches > m_whole.dispatches,
+        "chunk=2 over 5 steps must dispatch more often ({} vs {})",
+        m_chunk.dispatches,
+        m_whole.dispatches
+    );
+}
+
+#[test]
+fn native_deterministic_per_seed() {
+    let s = native_server(native_cfg(3, 1, 2, true));
+    let req = |seed| {
+        vec![DenoiseRequest {
+            id: 0,
+            seed,
+            steps: 3,
+        }]
+    };
+    let (r1, _) = s.serve(req(42)).unwrap();
+    let (r2, _) = s.serve(req(42)).unwrap();
+    let (r3, _) = s.serve(req(43)).unwrap();
+    assert_eq!(r1[0].image.data, r2[0].image.data, "same seed, same image");
+    assert_ne!(r1[0].image.data, r3[0].image.data, "different seed differs");
+}
+
+#[test]
+fn native_fair_batcher_spreads_work_across_workers() {
+    // Starvation regression test: with max_batch >= the whole queue, the
+    // old greedy batcher let one worker swallow all 8 requests. The fair
+    // batcher divides by worker count (first grab <= ceil(8/2) = 4), and
+    // the start barrier keeps any lane from draining before all exist.
+    let s = native_server(native_cfg(6, 2, 8, true));
+    let (results, m) = s.serve(reqs(8, 6)).unwrap();
+    assert_eq!(results.len(), 8);
+    assert_eq!(m.per_worker_requests.len(), 2);
+    assert_eq!(m.per_worker_requests.iter().sum::<usize>(), 8);
+    assert!(
+        m.per_worker_requests.iter().all(|&c| c >= 1),
+        "a worker starved: {:?}",
+        m.per_worker_requests
+    );
+    assert!(
+        m.per_worker_requests.iter().all(|&c| c <= 7),
+        "a worker swallowed the queue: {:?}",
+        m.per_worker_requests
+    );
+}
+
+#[test]
+fn native_mixed_step_counts_honored_per_request() {
+    // ISSUE 3 satellite: per-request steps must be honored (the fused
+    // path used to ignore them). Mixed-step workloads batch in same-step
+    // groups and every result reports its own step count.
+    let mut all = reqs(3, 6);
+    all.extend((3..6).map(|i| DenoiseRequest {
+        id: i,
+        seed: 500 + i,
+        steps: 2,
+    }));
+    let s = native_server(native_cfg(6, 2, 4, true));
+    let (mut results, m) = s.serve(all).unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 6);
+    for r in &results[..3] {
+        assert_eq!(r.steps, 6, "request {}", r.id);
+    }
+    for r in &results[3..] {
+        assert_eq!(r.steps, 2, "request {}", r.id);
+    }
+    assert_eq!(m.steps_done, 3 * 6 + 3 * 2);
+
+    // and a 2-step request batched here must equal the same request run
+    // solo through the per-request path (same 6-step schedule)
+    let s2 = native_server(native_cfg(6, 1, 1, false));
+    let (r2, _) = s2
+        .serve(vec![DenoiseRequest {
+            id: 3,
+            seed: 503,
+            steps: 2,
+        }])
+        .unwrap();
+    let mixed = results.iter().find(|r| r.id == 3).unwrap();
+    assert_eq!(mixed.image.data, r2[0].image.data);
+}
+
+#[test]
+fn native_rejects_out_of_range_steps() {
+    let s = native_server(native_cfg(4, 1, 2, false));
+    let bad = vec![DenoiseRequest {
+        id: 9,
+        seed: 1,
+        steps: 99,
+    }];
+    let err = s.serve(bad).unwrap_err().to_string();
+    assert!(err.contains("steps 99"), "{err}");
+    assert!(err.contains("out of range"), "{err}");
+}
+
+#[test]
+fn native_fused_honors_per_request_steps() {
+    // fused mode on the native backend runs the request's own step count
+    let mut cfg = native_cfg(6, 1, 1, false);
+    cfg.fused = true;
+    let s = native_server(cfg);
+    let (r, m) = s
+        .serve(vec![DenoiseRequest {
+            id: 0,
+            seed: 77,
+            steps: 4,
+        }])
+        .unwrap();
+    assert_eq!(r[0].steps, 4);
+    assert_eq!(m.steps_done, 4);
+    // and matches the step-at-a-time result bit for bit
+    let s_step = native_server(native_cfg(6, 1, 1, false));
+    let (r_step, _) = s_step
+        .serve(vec![DenoiseRequest {
+            id: 0,
+            seed: 77,
+            steps: 4,
+        }])
+        .unwrap();
+    assert_eq!(r[0].image.data, r_step[0].image.data);
+}
+
+#[test]
+fn native_pipeline_off_is_equivalent() {
+    let mut cfg = native_cfg(4, 2, 4, true);
+    cfg.pipeline = false;
+    let s_inline = native_server(cfg);
+    let (mut r_inline, m_inline) = s_inline.serve(reqs(6, 4)).unwrap();
+    let s_pipe = native_server(native_cfg(4, 2, 4, true));
+    let (mut r_pipe, _) = s_pipe.serve(reqs(6, 4)).unwrap();
+    r_inline.sort_by_key(|r| r.id);
+    r_pipe.sort_by_key(|r| r.id);
+    for (a, b) in r_inline.iter().zip(&r_pipe) {
+        assert_eq!(a.image.data, b.image.data);
+    }
+    assert_eq!(m_inline.pipeline_stalls, 0, "no pipeline, no stalls");
+}
+
+#[test]
+fn native_cosim_uses_micro_sim_for_batched_traffic() {
+    let mut cfg = native_cfg(2, 1, 2, true);
+    cfg.cosim = true;
+    let s = native_server(cfg);
+    let (_, metrics) = s.serve(reqs(2, 2)).unwrap();
+    let rep = metrics.sim_report(&CAL_40NM, 8).expect("cosim enabled");
+    assert!(rep.cycles > 0);
+    assert!(rep.u_pe > 0.0 && rep.u_pe <= 1.0);
+    // 2 requests x 2 steps: counts are per-step multiples
+    let counts = metrics.sim_counts.unwrap();
+    assert_eq!(counts.cycles % 4, 0, "4 identical steps merged");
+}
+
+#[test]
+fn native_outputs_bounded() {
+    let s = native_server(native_cfg(8, 2, 4, true));
+    let (results, _) = s.serve(s.workload(3)).unwrap();
+    for r in &results {
+        let max = r.image.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!(
+            max < 20.0,
+            "request {} diverged (max |px| = {max})",
+            r.id
+        );
+    }
+}
+
+// ----------------------------------------------------------------- pjrt
+
+/// Build a PJRT server, or None (with a skip note) when the artifacts or
+/// the PJRT runtime are unavailable in this build.
 fn server(steps: usize, workers: usize) -> Option<DiffusionServer> {
     let cfg = ServeConfig {
         steps,
@@ -22,6 +292,7 @@ fn server(steps: usize, workers: usize) -> Option<DiffusionServer> {
         artifact: "unet_denoise_16".into(),
         cosim: true,
         fused: false,
+        ..ServeConfig::default()
     };
     let store = ArtifactStore::new("artifacts");
     let Ok(spec) = store.resolve(&cfg.artifact) else {
@@ -119,6 +390,7 @@ fn fused_scan_matches_step_mode() {
         artifact: "unet_denoise_16".into(),
         cosim: false,
         fused,
+        ..ServeConfig::default()
     };
     let req = DenoiseRequest {
         id: 0,
@@ -142,6 +414,41 @@ fn fused_scan_matches_step_mode() {
         "fused and step-mode images diverged: {max_diff}"
     );
     assert_eq!(m_fused.steps_done, 50);
+}
+
+#[test]
+fn fused_rejects_mismatched_step_counts() {
+    // ISSUE 3 satellite: the fused PJRT path used to silently run the
+    // artifact's baked step count; now a mismatch is a clear error.
+    if server(50, 1).is_none() {
+        return; // artifacts or PJRT unavailable
+    }
+    let store = ArtifactStore::new("artifacts");
+    if store.resolve("unet_denoise_scan50_16").is_err() {
+        eprintln!("skipping: scan artifact missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = ServeConfig {
+        steps: 50,
+        workers: 1,
+        requests: 0,
+        max_batch: 1,
+        seed: 21,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: true,
+        ..ServeConfig::default()
+    };
+    let s = DiffusionServer::new(cfg, &store).unwrap();
+    let err = s
+        .serve(vec![DenoiseRequest {
+            id: 0,
+            seed: 1,
+            steps: 20,
+        }])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("exactly 50 steps"), "{err}");
 }
 
 #[test]

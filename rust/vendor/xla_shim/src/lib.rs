@@ -1,0 +1,194 @@
+//! Compile-time API shim for the `xla` crate's PJRT surface.
+//!
+//! The offline build environment has neither the vendored `xla` crate nor
+//! the `xla_extension` shared library, which used to mean that `cargo
+//! check --features pjrt` could not even *type-check* the real executor —
+//! API drift in `src/runtime/executor.rs` went unnoticed until someone
+//! built on a machine with the full toolchain. This shim mirrors exactly
+//! the API surface the executor consumes (types, generics, error
+//! plumbing) so the feature-matrix CI job keeps the PJRT path compiling.
+//!
+//! Every entry point that would need the real runtime returns
+//! [`Error::Unavailable`] at *runtime* (client construction fails first),
+//! so a shim-linked binary behaves like the stub: callers that probe the
+//! executor (tests, benches) skip cleanly. Host-only `Literal` plumbing
+//! (construction/reshape) works for real, since conversions happen before
+//! client probing in some call paths.
+
+use std::fmt;
+
+/// The shim's error type — mirrors the real crate's in the one way the
+/// executor cares about: it converts into `anyhow::Error`.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what} is unavailable: this binary links the xla API shim \
+                 (vendor/xla_shim), not the real xla crate — point the `xla` \
+                 dependency in rust/Cargo.toml at the vendored crate with the \
+                 xla_extension library to execute artifacts"
+            ),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal: a flat f32 buffer plus dims. Construction and reshape
+/// work for real; device-derived accessors error.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.data.len() as i64;
+        // rank-0 reshape of a 1-element literal is the scalar case
+        if n != have && !(dims.is_empty() && have == 1) {
+            return Err(Error::Shape(format!(
+                "reshape to {dims:?} wants {n} elements, literal has {have}"
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::decompose_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: FromLiteral>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Element types extractable from a literal (the executor only uses f32).
+pub trait FromLiteral: Sized {}
+impl FromLiteral for f32 {}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Always errors: there is no PJRT runtime behind the shim. Probing
+    /// callers (tests, benches) treat this exactly like the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-shim (no runtime)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_host_plumbing_works() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(l.reshape(&[3]).is_err());
+        let s = Literal::vec1(&[5.0]).reshape(&[]).unwrap();
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn runtime_entry_points_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("shim"), "{err}");
+    }
+}
