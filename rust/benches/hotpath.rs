@@ -29,7 +29,7 @@ use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
 use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
 use sf_mmcn::sim::unit::{ConvGroup, FlatServer, ServerTask, SfMmcnUnit};
 use sf_mmcn::util::bench::{
-    compare_baselines, BaselineRow, BenchBaseline, Bencher, fmt_rate,
+    check_against_baseline, BaselineRow, BenchBaseline, Bencher, fmt_rate,
 };
 use sf_mmcn::util::{Rng, Tensor};
 
@@ -327,15 +327,10 @@ fn bench_runtime(b: &Bencher) {
     }
 }
 
-/// CI regression gate: compare this run against a committed baseline
-/// (`--check-against <path>`), failing the process on a >tolerance drop.
-/// Tolerance defaults to 15% (`SF_MMCN_BENCH_TOLERANCE`, in percent).
+/// CI regression gate: map this run's rows onto the shared comparator
+/// (`util::bench::check_against_baseline`; >15% drop exits 1, tolerance
+/// via `SF_MMCN_BENCH_TOLERANCE` in percent).
 fn check_against(rows: &[JsonRow], baseline_path: &str) {
-    let tolerance = std::env::var("SF_MMCN_BENCH_TOLERANCE")
-        .ok()
-        .and_then(|s| s.parse::<f64>().ok())
-        .map(|pct| pct / 100.0)
-        .unwrap_or(0.15);
     let current = BenchBaseline {
         provisional: false,
         rows: rows
@@ -348,36 +343,7 @@ fn check_against(rows: &[JsonRow], baseline_path: &str) {
             })
             .collect(),
     };
-    let baseline = match BenchBaseline::load(std::path::Path::new(baseline_path)) {
-        Ok(b) => b,
-        Err(e) => {
-            println!("\nBENCH GATE ERROR: {e:#}");
-            std::process::exit(1);
-        }
-    };
-    let (regressions, notes) = compare_baselines(&baseline, &current, tolerance);
-    println!(
-        "\n==== bench gate vs {baseline_path} (tolerance {:.0}%) ====",
-        tolerance * 100.0
-    );
-    for n in &notes {
-        println!("note: {n}");
-    }
-    if regressions.is_empty() {
-        println!("bench gate OK: no regression beyond tolerance");
-        return;
-    }
-    for r in &regressions {
-        println!(
-            "REGRESSION {}: {} {:.3} -> {:.3} ({:.1}% of baseline)",
-            r.name,
-            r.metric,
-            r.baseline,
-            r.current,
-            r.ratio * 100.0
-        );
-    }
-    std::process::exit(1);
+    check_against_baseline(&current, baseline_path, "hotpath");
 }
 
 fn main() {

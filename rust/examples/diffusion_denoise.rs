@@ -39,12 +39,16 @@ fn ascii_image(data: &[f32], w: usize) -> String {
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[])?;
-    let mut cfg = ServeConfig::default();
-    cfg.requests = args.get_usize("requests", 8)?;
-    cfg.steps = args.get_usize("steps", 50)?;
-    cfg.workers = args.get_usize("workers", 2)?;
+    let mut cfg = ServeConfig {
+        requests: args.get_usize("requests", 8)?,
+        steps: args.get_usize("steps", 50)?,
+        workers: args.get_usize("workers", 2)?,
+        ..ServeConfig::default()
+    };
     // --native: run offline on the host-CPU surrogate (no artifacts),
-    // with the batched + pipelined request path of ISSUE 3.
+    // with the batched + pipelined request path of ISSUE 3 and the
+    // pooled zero-allocation hot path of ISSUE 4 (pooled by default;
+    // see `sf-mmcn serve --no-pool` for the allocating baseline).
     if args.flag("native") {
         cfg.backend = ServeBackend::Native;
         cfg.batched = true;

@@ -68,6 +68,9 @@ fn main() -> Result<()> {
     ws.per_node[0].as_mut().unwrap().bias = vec![0.0; C];
     ws.per_node[1].as_mut().unwrap().w = w.clone();
     ws.per_node[1].as_mut().unwrap().bias = vec![0.0; C];
+    // the store caches quantized taps per node (§Perf, PR 1); drop any
+    // cached state after editing weights in place
+    ws.invalidate_quant();
 
     let mut acc = Accelerator::new(AcceleratorConfig::default());
     let run = acc.run_graph(&g, &x, &ws, None)?;

@@ -124,6 +124,12 @@ pub struct ServeConfig {
     /// On the PJRT backend the chunk must equal the scan artifact's baked
     /// step count, so only 0 (or `steps`) is valid there.
     pub chunk: usize,
+    /// Lease batch tensors from a per-worker buffer pool and execute in
+    /// place (ISSUE 4): the batched lane reaches zero steady-state
+    /// allocation. `false` restores the per-batch-allocating behaviour —
+    /// the "unpooled" baseline the serve bench compares against. Only
+    /// affects `batched` mode.
+    pub pooled: bool,
 }
 
 impl Default for ServeConfig {
@@ -141,6 +147,7 @@ impl Default for ServeConfig {
             batched: false,
             pipeline: true,
             chunk: 0,
+            pooled: true,
         }
     }
 }
@@ -225,6 +232,7 @@ impl ServeConfig {
             ServeBackend::parse(&doc.get_str_or("serve", "backend", cfg.backend.name()))?;
         cfg.batched = doc.get_bool_or("serve", "batched", cfg.batched);
         cfg.pipeline = doc.get_bool_or("serve", "pipeline", cfg.pipeline);
+        cfg.pooled = doc.get_bool_or("serve", "pooled", cfg.pooled);
         let chunk = doc.get_int_or("serve", "chunk", cfg.chunk as i64);
         if chunk < 0 {
             bail!("serve.chunk must be >= 0 (0 = whole request per dispatch)");
@@ -322,6 +330,10 @@ data_reuse = false
         assert!(cfg.batched);
         assert!(!cfg.pipeline);
         assert_eq!(cfg.chunk, 8);
+        assert!(cfg.pooled, "pooled serving is the default");
+        let unpooled =
+            ServeConfig::from_toml("[serve]\npooled = false\n").unwrap();
+        assert!(!unpooled.pooled);
         assert!(ServeConfig::from_toml("[serve]\nbackend = \"tpu\"\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\nchunk = -1\n").is_err());
     }

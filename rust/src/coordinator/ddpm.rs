@@ -75,16 +75,29 @@ impl DdpmSchedule {
 /// Sinusoidal time embedding — must match `python/compile/model.py::
 /// time_embedding` exactly (the artifact was lowered against it).
 pub fn time_embedding(t: f32, dim: usize) -> Vec<f32> {
-    assert!(dim >= 2 && dim % 2 == 0);
-    let half = dim / 2;
     let mut out = vec![0.0f32; dim];
+    time_embedding_into(t, &mut out);
+    out
+}
+
+/// [`time_embedding`] into a caller slab (`out.len()` is the embedding
+/// dimension) — the allocation-free variant the pooled serving lane
+/// uses; identical values.
+pub fn time_embedding_into(t: f32, out: &mut [f32]) {
+    let dim = out.len();
+    // dim == 2 would make half - 1 == 0 and the frequency expression
+    // 0/0 = NaN, so fail fast instead of denoising with NaN embeddings
+    assert!(
+        dim >= 4 && dim % 2 == 0,
+        "time embedding dim must be even and >= 4, got {dim}"
+    );
+    let half = dim / 2;
     for i in 0..half {
         let freq = (-(10000.0f64.ln()) * i as f64 / (half - 1) as f64).exp();
         let ang = t as f64 * freq;
         out[i] = ang.sin() as f32;
         out[half + i] = ang.cos() as f32;
     }
-    out
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::runtime::PoolStats;
 use crate::sim::energy::{EnergyModel, EventCounts, PpaReport};
 use crate::util::stats::LatencyHist;
 
@@ -28,6 +29,15 @@ pub struct ServeMetrics {
     /// Times a worker's device lane had to wait on the host stage (the
     /// double buffer was empty when the device went to fetch work).
     pub pipeline_stalls: usize,
+    /// Buffer-pool leases served from the free list, summed across the
+    /// per-worker pools (ISSUE 4).
+    pub pool_hits: u64,
+    /// Buffer-pool leases that had to allocate. In steady state this
+    /// stays flat — only warmup (the first few batches per worker)
+    /// allocates.
+    pub pool_misses: u64,
+    /// Total bytes leased from the per-worker pools (hit or miss).
+    pub pool_bytes_leased: u64,
     /// Requests completed per worker — the batcher-fairness signal.
     pub per_worker_requests: Vec<usize>,
     pub wall: Duration,
@@ -46,6 +56,9 @@ impl ServeMetrics {
             dispatches: 0,
             batch_items: 0,
             pipeline_stalls: 0,
+            pool_hits: 0,
+            pool_misses: 0,
+            pool_bytes_leased: 0,
             per_worker_requests: Vec::new(),
             wall: Duration::ZERO,
             sim_counts: None,
@@ -72,6 +85,17 @@ impl ServeMetrics {
             return 0.0;
         }
         self.batch_items as f64 / self.dispatches as f64
+    }
+
+    /// Fraction of buffer-pool leases served without allocating (the
+    /// aggregated counters viewed through [`PoolStats::hit_rate`]).
+    pub fn pool_hit_rate(&self) -> f64 {
+        PoolStats {
+            hits: self.pool_hits,
+            misses: self.pool_misses,
+            ..Default::default()
+        }
+        .hit_rate()
     }
 
     /// Price the co-simulated counts under an energy model.
@@ -107,6 +131,15 @@ impl ServeMetrics {
                 self.dispatches,
                 self.batch_occupancy(),
                 self.pipeline_stalls,
+            ));
+        }
+        if self.pool_hits + self.pool_misses > 0 {
+            s.push_str(&format!(
+                "buffer pool: {} hits / {} misses ({:.1}% hit rate), {:.1} MB leased\n",
+                self.pool_hits,
+                self.pool_misses,
+                self.pool_hit_rate() * 100.0,
+                self.pool_bytes_leased as f64 / 1e6,
             ));
         }
         if self.host_prep.count() > 0 {
@@ -177,5 +210,19 @@ mod tests {
         let s = m.render();
         assert!(s.contains("batch occupancy"), "{s}");
         assert!(s.contains("worker spread"), "{s}");
+        assert!(!s.contains("buffer pool"), "no pool counters, no pool line");
+    }
+
+    #[test]
+    fn pool_counters_render_and_rate() {
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.pool_hit_rate(), 0.0);
+        m.pool_hits = 30;
+        m.pool_misses = 10;
+        m.pool_bytes_leased = 4_000_000;
+        assert!((m.pool_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("buffer pool"), "{s}");
+        assert!(s.contains("75.0% hit rate"), "{s}");
     }
 }

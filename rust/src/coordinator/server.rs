@@ -20,6 +20,20 @@
 //!   while the device executes the current one (a capacity-1 channel is
 //!   the double buffer); device-side waits on that channel are counted
 //!   as `pipeline_stalls`.
+//! * **Pooled zero-allocation hot path** (`cfg.pooled`, ISSUE 4): every
+//!   batch tensor leases its slab from a per-worker-lane [`BufferPool`]
+//!   and returns it after the dispatch, and the device stage executes in
+//!   place against rotating image slabs (`Executor::run_batched_into`)
+//!   instead of allocating a fresh output per chunk. With the capacity-1
+//!   prep channel, at most two batches are in flight per lane, so the
+//!   pool stabilizes at two rotating arenas after warmup and the
+//!   allocator drops out of the steady-state loop entirely — the
+//!   software analogue of Server Flow reusing a fixed resource set
+//!   across a stream (paper §III). `pooled = false` swaps in the
+//!   retain-nothing pool: the identical code path, but every lease
+//!   allocates — the PR 2 per-batch-allocating baseline the serve bench
+//!   compares against. Only the result images still allocate (they
+//!   escape to the caller).
 //!
 //! Workers own their executor (PJRT clients are not shared across
 //! threads) and compile/register the denoise artifact once at startup.
@@ -35,12 +49,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ServeBackend, ServeConfig};
-use crate::coordinator::ddpm::{time_embedding, DdpmSchedule};
+use crate::coordinator::ddpm::{time_embedding, time_embedding_into, DdpmSchedule};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::params::UnetParams;
 use crate::models::{unet, UnetConfig};
 use crate::runtime::{
-    ArtifactStore, BatchDispatch, Executor, NativeDenoise, PreparedInputs, TensorBuf,
+    ArtifactStore, BatchDispatch, BufferPool, Executor, NativeDenoise, PoolStats,
+    PreparedInputs, TensorBuf,
 };
 use crate::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
 use crate::sim::energy::EventCounts;
@@ -141,6 +156,7 @@ struct WorkerCtx {
     batched: bool,
     pipeline: bool,
     chunk: usize,
+    pooled: bool,
 }
 
 /// One per-batch progress report from a worker lane.
@@ -152,12 +168,18 @@ struct WorkerMsg {
     dispatches: usize,
     batch_items: usize,
     stalled: bool,
+    /// Cumulative snapshot of this worker's buffer pool at send time; the
+    /// server keeps the latest per worker and sums them at the end.
+    pool: PoolStats,
 }
 
 /// A batch with all host-side tensors generated (stage 1 of the lane
 /// pipeline). Noise draw order per request matches the step-at-a-time
 /// loop exactly — initial x, then one map per step t = T-1..1, none at
 /// t = 0 — so every execution mode produces the same images.
+///
+/// Every tensor's backing slab is leased from the lane's [`BufferPool`];
+/// [`execute_batch`] reclaims them all once the batch completes.
 struct PreparedBatch {
     reqs: Vec<DenoiseRequest>,
     steps: usize,
@@ -177,6 +199,7 @@ fn prepare_host_batch(
     schedule: &DdpmSchedule,
     img_shape: &[usize],
     time_dim: usize,
+    pool: &BufferPool,
 ) -> Result<PreparedBatch> {
     let t0 = Instant::now();
     let steps = reqs.first().map(|r| r.steps).unwrap_or(0);
@@ -189,26 +212,32 @@ fn prepare_host_batch(
     }
     let n: usize = img_shape.iter().product();
     let b = reqs.len();
-    let mut x0 = Vec::with_capacity(b * n);
-    let mut noises = Vec::with_capacity(b * steps * n);
-    for req in &reqs {
+    // Every slab takes the no-memset dirty lease: each row below is
+    // written exactly once — noise rows by `normal_fill` (the exact
+    // stream `normal_vec` used to draw, keeping images bit-identical),
+    // and the per-request t = 0 row (no noise is injected at the final
+    // step) by an explicit zero fill.
+    let mut x0 = pool.lease_dirty(b * n);
+    let mut noises = pool.lease_dirty(b * steps * n);
+    for (i, req) in reqs.iter().enumerate() {
         debug_assert_eq!(req.steps, steps, "batcher groups by step count");
         let mut rng = Rng::new(req.seed);
-        x0.extend(rng.normal_vec(n));
-        for t in (0..steps).rev() {
+        rng.normal_fill(&mut x0[i * n..(i + 1) * n]);
+        for (r, t) in (0..steps).rev().enumerate() {
+            let base = (i * steps + r) * n;
             if t > 0 {
-                noises.extend(rng.normal_vec(n));
+                rng.normal_fill(&mut noises[base..base + n]);
             } else {
-                noises.extend(std::iter::repeat_n(0.0f32, n));
+                noises[base..base + n].fill(0.0);
             }
         }
     }
-    let mut t_embs = Vec::with_capacity(steps * time_dim);
-    let mut coeffs = Vec::with_capacity(steps * 3);
-    for t in (0..steps).rev() {
-        t_embs.extend(time_embedding(t as f32, time_dim));
+    let mut t_embs = pool.lease_dirty(steps * time_dim);
+    let mut coeffs = pool.lease_dirty(steps * 3);
+    for (r, t) in (0..steps).rev().enumerate() {
+        time_embedding_into(t as f32, &mut t_embs[r * time_dim..(r + 1) * time_dim]);
         let (c1, c2, sigma) = schedule.coefficients(t);
-        coeffs.extend([c1, c2, sigma]);
+        coeffs[r * 3..(r + 1) * 3].copy_from_slice(&[c1, c2, sigma]);
     }
     let mut xshape = vec![b];
     xshape.extend_from_slice(img_shape);
@@ -225,30 +254,40 @@ fn prepare_host_batch(
     })
 }
 
-/// Carve one timestep chunk's noise rows `[B, len, ...]` out of the
-/// whole-request `[B, steps, ...]` tensor.
-fn slice_noise_chunk(
+/// Gather one timestep chunk's noise rows `[B, len, ...]` out of the
+/// whole-request `[B, steps, ...]` tensor into a caller slab sized to
+/// exactly `B * len` rows.
+fn copy_noise_chunk_into(
     noises: &TensorBuf,
     b: usize,
     steps: usize,
     lo: usize,
     len: usize,
-) -> Result<TensorBuf> {
+    out: &mut [f32],
+) -> Result<()> {
     if noises.shape.len() < 2 || noises.shape[0] != b || noises.shape[1] != steps {
         bail!(
             "noise tensor shape {:?} != [B={b}, steps={steps}, ...]",
             noises.shape
         );
     }
-    let n: usize = noises.shape[2..].iter().product();
-    let mut data = Vec::with_capacity(b * len * n);
-    for i in 0..b {
-        let base = (i * steps + lo) * n;
-        data.extend_from_slice(&noises.data[base..base + len * n]);
+    if lo + len > steps {
+        bail!("noise chunk {lo}..{} out of {steps} steps", lo + len);
     }
-    let mut shape = vec![b, len];
-    shape.extend_from_slice(&noises.shape[2..]);
-    TensorBuf::new(shape, data)
+    let n: usize = noises.shape[2..].iter().product();
+    if out.len() != b * len * n {
+        bail!(
+            "noise chunk slab holds {} elements, chunk [B={b}, {len}, ...] needs {}",
+            out.len(),
+            b * len * n
+        );
+    }
+    for i in 0..b {
+        let src = (i * steps + lo) * n;
+        out[i * len * n..(i + 1) * len * n]
+            .copy_from_slice(&noises.data[src..src + len * n]);
+    }
+    Ok(())
 }
 
 /// Fused path (§Perf, L2): the whole reverse process in one device
@@ -256,6 +295,7 @@ fn slice_noise_chunk(
 /// request's own step count; a PJRT scan artifact bakes T into its
 /// signature, so a mismatching request is rejected with a clear error
 /// instead of silently running the wrong number of steps.
+#[allow(clippy::too_many_arguments)]
 fn denoise_one_fused(
     exe: &Executor,
     artifact: &str,
@@ -331,6 +371,7 @@ fn denoise_one_fused(
 /// §Perf: the 33 weight tensors (~530 KB) are pre-converted once per
 /// worker ([`Executor::prepare`]); each step only converts the six
 /// small per-step tensors (~1.3 KB).
+#[allow(clippy::too_many_arguments)]
 fn denoise_one(
     exe: &Executor,
     artifact: &str,
@@ -386,12 +427,71 @@ fn denoise_one(
     })
 }
 
+/// One timestep-chunk dispatch, in place: the updated images overwrite
+/// `out`'s slab. A whole-request chunk borrows the prepared tensors
+/// directly; a partial chunk gathers its rows into pool-leased scratch
+/// and returns it before reporting (on the error path the scratch is
+/// simply dropped — an error tears the serving session down).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_chunk(
+    exe: &Executor,
+    artifact: &str,
+    prepared: &PreparedInputs,
+    pool: &BufferPool,
+    pb: &PreparedBatch,
+    x: &TensorBuf,
+    out: &mut TensorBuf,
+    lo: usize,
+    len: usize,
+) -> Result<()> {
+    let b = pb.reqs.len();
+    let steps = pb.steps;
+    if lo == 0 && len == steps {
+        let d = BatchDispatch {
+            batch: b,
+            steps: len,
+            x,
+            t_embs: &pb.t_embs,
+            coeffs: &pb.coeffs,
+            noises: &pb.noises,
+        };
+        return exe.run_batched_into(artifact, &d, prepared, out);
+    }
+    // gather scratch is fully overwritten by the exact-length copies, so
+    // it takes the no-memset dirty lease
+    let time_dim = pb.t_embs.shape[1];
+    let mut te = pool.lease_tensor_dirty(&[len, time_dim]);
+    pb.t_embs.copy_rows_into(lo, len, &mut te.data)?;
+    let mut co = pool.lease_tensor_dirty(&[len, 3]);
+    pb.coeffs.copy_rows_into(lo, len, &mut co.data)?;
+    let mut nshape = vec![b, len];
+    nshape.extend_from_slice(&pb.noises.shape[2..]);
+    let mut no = pool.lease_tensor_dirty(&nshape);
+    copy_noise_chunk_into(&pb.noises, b, steps, lo, len, &mut no.data)?;
+    let d = BatchDispatch {
+        batch: b,
+        steps: len,
+        x,
+        t_embs: &te,
+        coeffs: &co,
+        noises: &no,
+    };
+    let r = exe.run_batched_into(artifact, &d, prepared, out);
+    pool.reclaim(te);
+    pool.reclaim(co);
+    pool.reclaim(no);
+    r
+}
+
 /// Stage 2 of a batched lane: run one prepared batch through the device
-/// in timestep chunks and report results.
+/// in timestep chunks — in place against two rotating pool-leased image
+/// slabs — and report results. All leased slabs (the prepared batch's
+/// and the rotating pair) go back to the pool on completion.
 fn execute_batch(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
+    pool: &BufferPool,
     pb: PreparedBatch,
     stalled: bool,
     res_tx: &Sender<Result<WorkerMsg>>,
@@ -417,53 +517,40 @@ fn execute_batch(
     } else {
         ctx.chunk.min(steps)
     };
-    let mut x = pb.x0;
+    // Rotating image slabs, materialized lazily: each dispatch reads the
+    // current images and writes a destination slab, then the old current
+    // becomes the next destination — in-place ping-pong instead of a
+    // fresh output allocation per chunk. The first chunk reads `pb.x0`
+    // directly, so a whole-request batch (chunk = 0, the default) leases
+    // exactly one slab and a chunked batch exactly two.
+    let mut cur: Option<TensorBuf> = None;
+    let mut spare: Option<TensorBuf> = None;
     let mut dispatches = 0usize;
     let mut batch_items = 0usize;
-    let mut step_us = Vec::with_capacity(steps);
     let mut done = 0usize;
     while done < steps {
         let c = chunk.min(steps - done);
-        // whole-request dispatch borrows the prepared tensors directly;
-        // partial chunks carve copies of their rows
-        let chunk_run = if done == 0 && c == steps {
-            let d = BatchDispatch {
-                batch: b,
-                steps: c,
-                x: &x,
-                t_embs: &pb.t_embs,
-                coeffs: &pb.coeffs,
-                noises: &pb.noises,
-            };
-            exe.run_batched(&ctx.artifact, &d, prepared)
-        } else {
-            let sliced = pb.t_embs.slice_rows(done, c).and_then(|te| {
-                pb.coeffs.slice_rows(done, c).and_then(|co| {
-                    slice_noise_chunk(&pb.noises, b, steps, done, c).map(|no| (te, co, no))
-                })
-            });
-            match sliced {
-                Ok((te, co, no)) => {
-                    let d = BatchDispatch {
-                        batch: b,
-                        steps: c,
-                        x: &x,
-                        t_embs: &te,
-                        coeffs: &co,
-                        noises: &no,
-                    };
-                    exe.run_batched(&ctx.artifact, &d, prepared)
-                }
-                Err(e) => Err(e),
-            }
-        };
-        match chunk_run {
-            Ok(out) => x = out,
-            Err(e) => {
-                let _ = res_tx.send(Err(e));
-                return;
-            }
+        // the dispatch fully overwrites its destination, so the rotation
+        // slabs take the no-memset dirty lease
+        let mut dst = spare
+            .take()
+            .unwrap_or_else(|| pool.lease_tensor_dirty(&pb.x0.shape));
+        let src = cur.as_ref().unwrap_or(&pb.x0);
+        if let Err(e) = dispatch_chunk(
+            exe,
+            &ctx.artifact,
+            prepared,
+            pool,
+            &pb,
+            src,
+            &mut dst,
+            done,
+            c,
+        ) {
+            let _ = res_tx.send(Err(e));
+            return;
         }
+        spare = cur.replace(dst);
         dispatches += 1;
         batch_items += b;
         done += c;
@@ -473,25 +560,53 @@ fn execute_batch(
     // spread over its steps — one sample per request-step, so the
     // histogram counts line up with `steps_done` across modes.
     let per_step = latency.as_micros() as f64 / steps as f64;
-    for _ in 0..steps * b {
-        step_us.push(per_step);
-    }
-    let images = match x.unstack() {
-        Ok(v) => v,
-        Err(e) => {
-            let _ = res_tx.send(Err(e));
+    let step_us = vec![per_step; steps * b];
+    // The result images escape to the caller, so they are the one
+    // allocation this path keeps (sized exactly, filled by unstack_into);
+    // every scratch slab goes back. `cur` is always Some here: prepare
+    // guarantees steps >= 1, so at least one chunk dispatched.
+    let final_x = match cur {
+        Some(t) => t,
+        None => {
+            let _ = res_tx.send(Err(anyhow::anyhow!(
+                "batched dispatch loop executed no chunks for {steps} steps"
+            )));
             return;
         }
     };
-    if images.len() != b {
-        let _ = res_tx.send(Err(anyhow::anyhow!(
-            "batched dispatch returned {} images for {b} requests",
-            images.len()
-        )));
+    let n_inner: usize = pb.x0.shape[1..].iter().product();
+    // capacity-only construction: unstack_into rewrites shape and data,
+    // so pre-zeroing the images would be a dead fill pass
+    let mut images: Vec<TensorBuf> = (0..b)
+        .map(|_| TensorBuf {
+            shape: vec![0],
+            data: Vec::with_capacity(n_inner),
+        })
+        .collect();
+    if let Err(e) = final_x.unstack_into(&mut images) {
+        let _ = res_tx.send(Err(e));
         return;
     }
-    let results: Vec<DenoiseResult> = pb
-        .reqs
+    pool.reclaim(final_x);
+    if let Some(s) = spare {
+        pool.reclaim(s);
+    }
+    let PreparedBatch {
+        reqs,
+        x0,
+        t_embs,
+        coeffs,
+        noises,
+        prep_us,
+        ..
+    } = pb;
+    pool.reclaim(x0);
+    pool.reclaim(t_embs);
+    pool.reclaim(coeffs);
+    pool.reclaim(noises);
+    // (a dispatch that returned the wrong leading dim already failed
+    // above: unstack_into rejects a row-count mismatch)
+    let results: Vec<DenoiseResult> = reqs
         .iter()
         .zip(images)
         .map(|(req, image)| DenoiseResult {
@@ -505,10 +620,11 @@ fn execute_batch(
         worker: ctx.worker,
         results,
         step_us,
-        host_prep_us: pb.prep_us,
+        host_prep_us: prep_us,
         dispatches,
         batch_items,
         stalled,
+        pool: pool.stats(),
     }));
 }
 
@@ -521,17 +637,29 @@ fn run_batched_lane(
     batcher: &Arc<Batcher>,
     res_tx: &Sender<Result<WorkerMsg>>,
 ) {
+    // One buffer pool per worker lane, shared by the host-prep stage and
+    // the device stage (at most two threads contend, at batch
+    // granularity). `pooled = false` swaps in the retain-nothing pool:
+    // the identical code path, but every lease allocates and every
+    // return frees — the per-batch-allocating baseline.
+    let pool = Arc::new(if ctx.pooled {
+        BufferPool::new()
+    } else {
+        BufferPool::disabled()
+    });
     if ctx.pipeline {
         let (prep_tx, prep_rx) = sync_channel::<Result<PreparedBatch>>(1);
         let b2 = Arc::clone(batcher);
         let schedule = Arc::clone(&ctx.schedule);
         let img_shape = ctx.img_shape.clone();
         let time_dim = ctx.time_dim;
+        let prep_pool = Arc::clone(&pool);
         let prep = std::thread::Builder::new()
             .name(format!("sfmmcn-hostprep-{}", ctx.worker))
             .spawn(move || {
                 while let Some(reqs) = b2.next_batch() {
-                    let pb = prepare_host_batch(reqs, &schedule, &img_shape, time_dim);
+                    let pb =
+                        prepare_host_batch(reqs, &schedule, &img_shape, time_dim, &prep_pool);
                     if prep_tx.send(pb).is_err() {
                         return;
                     }
@@ -551,7 +679,7 @@ fn run_batched_lane(
             };
             first = false;
             match pb {
-                Ok(pb) => execute_batch(ctx, exe, prepared, pb, stalled, res_tx),
+                Ok(pb) => execute_batch(ctx, exe, prepared, &pool, pb, stalled, res_tx),
                 Err(e) => {
                     let _ = res_tx.send(Err(e));
                 }
@@ -560,8 +688,8 @@ fn run_batched_lane(
         let _ = prep.join();
     } else {
         while let Some(reqs) = batcher.next_batch() {
-            match prepare_host_batch(reqs, &ctx.schedule, &ctx.img_shape, ctx.time_dim) {
-                Ok(pb) => execute_batch(ctx, exe, prepared, pb, false, res_tx),
+            match prepare_host_batch(reqs, &ctx.schedule, &ctx.img_shape, ctx.time_dim, &pool) {
+                Ok(pb) => execute_batch(ctx, exe, prepared, &pool, pb, false, res_tx),
                 Err(e) => {
                     let _ = res_tx.send(Err(e));
                 }
@@ -618,6 +746,9 @@ fn run_request_lane(
                         dispatches,
                         batch_items: dispatches,
                         stalled: false,
+                        // the per-request lane allocates per dispatch by
+                        // design (it is the comparison baseline)
+                        pool: PoolStats::default(),
                     }));
                 }
                 Err(e) => {
@@ -759,6 +890,7 @@ impl DiffusionServer {
                 batched: self.cfg.batched,
                 pipeline: self.cfg.pipeline,
                 chunk: self.cfg.chunk,
+                pooled: self.cfg.pooled,
             };
             let batcher = Arc::clone(&batcher);
             let res_tx = res_tx.clone();
@@ -774,6 +906,9 @@ impl DiffusionServer {
         let mut results = Vec::with_capacity(n_requests);
         let mut metrics = ServeMetrics::new();
         metrics.per_worker_requests = vec![0; self.cfg.workers];
+        // Pool counters are cumulative per worker lane, so keep each
+        // worker's latest snapshot and sum them once at the end.
+        let mut worker_pools = vec![PoolStats::default(); self.cfg.workers];
         for msg in res_rx {
             let m = match msg {
                 Ok(m) => m,
@@ -807,10 +942,18 @@ impl DiffusionServer {
             if m.stalled {
                 metrics.pipeline_stalls += 1;
             }
+            worker_pools[m.worker] = m.pool;
         }
         for h in handles {
             let _ = h.join();
         }
+        let mut pool_total = PoolStats::default();
+        for s in &worker_pools {
+            pool_total.absorb(s);
+        }
+        metrics.pool_hits = pool_total.hits;
+        metrics.pool_misses = pool_total.misses;
+        metrics.pool_bytes_leased = pool_total.bytes_leased;
         metrics.wall = t0.elapsed();
 
         // Co-simulation: the SF-MMCN accelerator's counts for the same
@@ -909,7 +1052,8 @@ mod tests {
     fn prepared_batch_layout_and_noise_order() {
         let schedule = DdpmSchedule::standard(4);
         let reqs = vec![req(0, 4), req(1, 4)];
-        let pb = prepare_host_batch(reqs, &schedule, &[1, 2, 2], 8).unwrap();
+        let pool = BufferPool::disabled();
+        let pb = prepare_host_batch(reqs, &schedule, &[1, 2, 2], 8, &pool).unwrap();
         assert_eq!(pb.x0.shape, vec![2, 1, 2, 2]);
         assert_eq!(pb.t_embs.shape, vec![4, 8]);
         assert_eq!(pb.coeffs.shape, vec![4, 3]);
@@ -929,22 +1073,63 @@ mod tests {
     }
 
     #[test]
-    fn noise_chunk_slicing() {
+    fn noise_chunk_gather() {
         let schedule = DdpmSchedule::standard(3);
-        let pb = prepare_host_batch(vec![req(0, 3), req(1, 3)], &schedule, &[1, 2, 2], 4)
-            .unwrap();
-        let chunk = slice_noise_chunk(&pb.noises, 2, 3, 1, 2).unwrap();
-        assert_eq!(chunk.shape, vec![2, 2, 1, 2, 2]);
+        let pool = BufferPool::disabled();
+        let pb =
+            prepare_host_batch(vec![req(0, 3), req(1, 3)], &schedule, &[1, 2, 2], 4, &pool)
+                .unwrap();
+        let mut chunk = vec![0.0f32; 2 * 2 * 4];
+        copy_noise_chunk_into(&pb.noises, 2, 3, 1, 2, &mut chunk).unwrap();
         // row 1 of request 0 lands at the front of the chunk
-        assert_eq!(chunk.data[..4], pb.noises.data[4..8]);
+        assert_eq!(chunk[..4], pb.noises.data[4..8]);
         // row 1 of request 1 follows
-        assert_eq!(chunk.data[8..12], pb.noises.data[16..20]);
+        assert_eq!(chunk[8..12], pb.noises.data[16..20]);
+        // out-of-range chunks and wrong-sized slabs rejected
+        assert!(copy_noise_chunk_into(&pb.noises, 2, 3, 2, 2, &mut chunk).is_err());
+        let mut short = vec![0.0f32; 3];
+        assert!(copy_noise_chunk_into(&pb.noises, 2, 3, 1, 2, &mut short).is_err());
     }
 
     #[test]
     fn prepare_rejects_bad_step_counts() {
         let schedule = DdpmSchedule::standard(4);
-        assert!(prepare_host_batch(vec![req(0, 0)], &schedule, &[1, 2, 2], 4).is_err());
-        assert!(prepare_host_batch(vec![req(0, 9)], &schedule, &[1, 2, 2], 4).is_err());
+        let pool = BufferPool::disabled();
+        assert!(prepare_host_batch(vec![req(0, 0)], &schedule, &[1, 2, 2], 4, &pool).is_err());
+        assert!(prepare_host_batch(vec![req(0, 9)], &schedule, &[1, 2, 2], 4, &pool).is_err());
+    }
+
+    #[test]
+    fn prepared_batch_identical_on_recycled_slabs() {
+        // The pooled prepare must produce the same bits whether its slabs
+        // are freshly allocated or recycled: the noise slab's zeroed
+        // lease keeps the t = 0 rows correct, and the dirty-leased slabs
+        // (x0/t_embs/coeffs) are fully overwritten — this test is the
+        // guard that they really are.
+        let schedule = DdpmSchedule::standard(4);
+        let mk = |pool: &BufferPool| {
+            prepare_host_batch(
+                vec![req(0, 4), req(1, 4)],
+                &schedule,
+                &[1, 2, 2],
+                8,
+                pool,
+            )
+            .unwrap()
+        };
+        let cold = mk(&BufferPool::disabled());
+        let pool = BufferPool::new();
+        let warm = mk(&pool);
+        // return every slab dirty, then prepare again from the free list
+        pool.reclaim(warm.x0);
+        pool.reclaim(warm.t_embs);
+        pool.reclaim(warm.coeffs);
+        pool.reclaim(warm.noises);
+        let recycled = mk(&pool);
+        assert!(pool.stats().hits >= 1, "second prepare must reuse slabs");
+        assert_eq!(recycled.x0, cold.x0);
+        assert_eq!(recycled.t_embs, cold.t_embs);
+        assert_eq!(recycled.coeffs, cold.coeffs);
+        assert_eq!(recycled.noises, cold.noises);
     }
 }

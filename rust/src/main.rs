@@ -36,7 +36,8 @@ USAGE: sf-mmcn <subcommand> [options]
   simulate  --model unet [--img 16] [--units 8] [--seed 42]
   serve     [--steps 50] [--requests 8] [--workers 2] [--fused]
             [--backend pjrt|native] [--native] [--batched] [--no-batch]
-            [--max-batch 4] [--chunk 0] [--no-pipeline] [--config file.toml]
+            [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
+            [--config file.toml]
   sweep     [--model resnet18] [--img 224]
   report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
             headlines|all
@@ -180,6 +181,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.flag("no-pipeline") {
         cfg.pipeline = false;
+    }
+    if args.flag("no-pool") {
+        // per-batch-allocating baseline (ISSUE 4 comparison mode)
+        cfg.pooled = false;
     }
 
     let store = ArtifactStore::default_store();

@@ -163,31 +163,76 @@ impl Executor {
                 .context("batched artifact returned nothing");
         }
         if self.executables.contains_key(name) {
-            let xs = d.x.unstack()?;
-            let noises = d.noises.unstack()?;
-            if xs.len() != d.batch || noises.len() != d.batch {
-                bail!(
-                    "batched dispatch: leading dim {} != batch {}",
-                    xs.len(),
-                    d.batch
-                );
-            }
-            let mut outs = Vec::with_capacity(xs.len());
-            for (x_i, n_i) in xs.into_iter().zip(noises) {
-                let dynamic = [x_i, d.t_embs.clone(), d.coeffs.clone(), n_i];
-                let out = self.run_prepared(name, &dynamic, prepared)?;
-                outs.push(
-                    out.into_iter()
-                        .next()
-                        .context("scan artifact returned nothing")?,
-                );
-            }
-            return TensorBuf::stack(&outs);
+            return TensorBuf::stack(&self.run_batched_items(name, d, prepared)?);
         }
         if let Some(engine) = self.natives.get(name) {
             return engine.run_batched(d, &prepared.host);
         }
         bail!("artifact `{name}` not loaded")
+    }
+
+    /// Per-item fallback of the batched entry points: unstack the batch
+    /// and execute the scan executable once per request, returning the
+    /// B per-request outputs unstacked.
+    fn run_batched_items(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+    ) -> Result<Vec<TensorBuf>> {
+        let xs = d.x.unstack()?;
+        let noises = d.noises.unstack()?;
+        if xs.len() != d.batch || noises.len() != d.batch {
+            bail!(
+                "batched dispatch: leading dim {} != batch {}",
+                xs.len(),
+                d.batch
+            );
+        }
+        let mut outs = Vec::with_capacity(xs.len());
+        for (x_i, n_i) in xs.into_iter().zip(noises) {
+            let dynamic = [x_i, d.t_embs.clone(), d.coeffs.clone(), n_i];
+            let out = self.run_prepared(name, &dynamic, prepared)?;
+            outs.push(
+                out.into_iter()
+                    .next()
+                    .context("scan artifact returned nothing")?,
+            );
+        }
+        Ok(outs)
+    }
+
+    /// In-place batched entry point (ISSUE 4): like
+    /// [`Executor::run_batched`] but the result overwrites `out`, reusing
+    /// its backing slab. The native-surrogate path is truly
+    /// zero-allocation; compiled-executable paths still materialize
+    /// literals at the XLA boundary and then copy into `out`, so the
+    /// caller's pooled slab keeps rotating either way.
+    pub fn run_batched_into(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+        out: &mut TensorBuf,
+    ) -> Result<()> {
+        let stacked_name = format!("{name}__b{}", d.batch);
+        if !self.executables.contains_key(&stacked_name) {
+            if self.executables.contains_key(name) {
+                // per-item scan fallback: stack the B outputs straight
+                // into the caller's slab, reusing its capacity
+                let outs = self.run_batched_items(name, d, prepared)?;
+                return TensorBuf::stack_into(&outs, out);
+            }
+            if let Some(engine) = self.natives.get(name) {
+                out.shape.clone_from(&d.x.shape);
+                out.data.resize(d.x.len(), 0.0);
+                return engine.run_batched_into(d, &prepared.host, &mut out.data);
+            }
+        }
+        // stacked-executable path: move the result into place (the
+        // caller's old slab drops and this one enters the rotation)
+        *out = self.run_batched(name, d, prepared)?;
+        Ok(())
     }
 
     fn execute_refs(&self, name: &str, refs: &[&xla::Literal]) -> Result<Vec<TensorBuf>> {

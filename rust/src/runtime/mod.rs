@@ -8,7 +8,8 @@
 //! `xla_extension` shared library, which the default build environment
 //! does not have — so it is gated behind the `pjrt` cargo feature and a
 //! stub with the same API takes its place otherwise (see [`stub`]). The
-//! artifact store, [`TensorBuf`], and the [`native`] denoise surrogate
+//! artifact store, [`TensorBuf`], the [`pool`] buffer arena backing the
+//! zero-allocation serving hot path, and the [`native`] denoise surrogate
 //! (which lets the serving layer run offline, batched included) are
 //! backend-independent and always available.
 
@@ -16,6 +17,7 @@ mod artifact;
 #[cfg(feature = "pjrt")]
 mod executor;
 mod native;
+mod pool;
 #[cfg(not(feature = "pjrt"))]
 mod stub;
 mod tensor_buf;
@@ -24,6 +26,7 @@ pub use artifact::{ArtifactSpec, ArtifactStore};
 #[cfg(feature = "pjrt")]
 pub use executor::{Executor, PreparedInputs};
 pub use native::{BatchDispatch, NativeDenoise};
+pub use pool::{BufferPool, PoolStats};
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{Executor, PreparedInputs};
 pub use tensor_buf::TensorBuf;

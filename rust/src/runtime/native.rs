@@ -96,13 +96,44 @@ impl NativeDenoise {
     /// One reverse step, in place. `eps = tanh(g0·x + g1·mean(emb) + pos)`
     /// is bounded, so the served images stay bounded like a trained
     /// denoiser's; the update itself is the exact DDPM rule.
+    ///
+    /// ISSUE 4: rewritten as a chunked 8-wide inner loop over
+    /// bounds-check-free slice pairs so the non-transcendental arithmetic
+    /// autovectorizes; the per-element expression tree (and therefore
+    /// every output bit) is unchanged from the original scalar loop —
+    /// `pos` values come from a table of the exact same
+    /// `((i % 31) as f32) * 0.021 - 0.31` expressions, and the
+    /// loop-invariant `g1 * e` product is the identical f32 op.
     fn step_into(x: &mut [f32], t_emb: &[f32], c: (f32, f32, f32), noise: &[f32], g: (f32, f32)) {
+        const W: usize = 8;
+        const P: usize = 31;
         let e = t_emb.iter().copied().sum::<f32>() / t_emb.len().max(1) as f32;
         let (c1, c2, sigma) = c;
-        for (i, xi) in x.iter_mut().enumerate() {
-            let pos = ((i % 31) as f32) * 0.021 - 0.31;
-            let eps = (g.0 * *xi + g.1 * e + pos).tanh();
-            *xi = c1 * (*xi - c2 * eps) + sigma * noise[i];
+        let (g0, g1) = g;
+        let bias = g1 * e;
+        let mut pos = [0.0f32; P];
+        for (k, p) in pos.iter_mut().enumerate() {
+            *p = (k as f32) * 0.021 - 0.31;
+        }
+        let main = x.len() / W * W;
+        let (xh, xt) = x.split_at_mut(main);
+        let (nh, nt) = noise.split_at(main);
+        for (ci, (xc, nc)) in xh
+            .chunks_exact_mut(W)
+            .zip(nh.chunks_exact(W))
+            .enumerate()
+        {
+            let base = ci * W;
+            for j in 0..W {
+                let xi = xc[j];
+                let eps = (g0 * xi + bias + pos[(base + j) % P]).tanh();
+                xc[j] = c1 * (xi - c2 * eps) + sigma * nc[j];
+            }
+        }
+        for (j, xi) in xt.iter_mut().enumerate() {
+            let v = *xi;
+            let eps = (g0 * v + bias + pos[(main + j) % P]).tanh();
+            *xi = c1 * (v - c2 * eps) + sigma * nt[j];
         }
     }
 
@@ -188,12 +219,57 @@ impl NativeDenoise {
 
     /// Batched entry point: B stacked requests × a C-step chunk in ONE
     /// dispatch — digest once, then per-image per-step work. Returns the
-    /// updated images stacked `[B, c, h, w]`.
+    /// updated images stacked `[B, c, h, w]` (allocating wrapper over
+    /// the same row kernel as [`NativeDenoise::run_batched_into`]; the
+    /// initial clone of `x` is the seed copy, so no buffer is written
+    /// twice).
     pub fn run_batched(&self, d: &BatchDispatch, params: &[TensorBuf]) -> Result<TensorBuf> {
+        self.validate_batched(d)?;
+        let mut out = TensorBuf {
+            shape: d.x.shape.clone(),
+            data: d.x.data.clone(),
+        };
+        self.denoise_rows(d, params, &mut out.data);
+        Ok(out)
+    }
+
+    /// Zero-allocation batched entry point (ISSUE 4): identical math to
+    /// [`NativeDenoise::run_batched`], but the updated images are written
+    /// into the caller's `out` slab (`B * pixels` elements — the pooled
+    /// serving lane rotates two such slabs through the chunk loop).
+    ///
+    /// Rows (requests) are mutually independent, so large dispatches fan
+    /// out across threads; per-row arithmetic is unchanged, keeping the
+    /// result bit-identical at any thread count.
+    pub fn run_batched_into(
+        &self,
+        d: &BatchDispatch,
+        params: &[TensorBuf],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = self.validate_batched(d)?;
+        if out.len() != d.batch * n {
+            bail!(
+                "batched dispatch: out slab {} != B*{n} (B = {})",
+                out.len(),
+                d.batch
+            );
+        }
+        out.copy_from_slice(&d.x.data);
+        self.denoise_rows(d, params, out);
+        Ok(())
+    }
+
+    /// Shape/size validation shared by the batched entry points; returns
+    /// the per-image pixel count.
+    fn validate_batched(&self, d: &BatchDispatch) -> Result<usize> {
         let n = self.pixels();
         let (b, steps) = (d.batch, d.steps);
         if b == 0 || steps == 0 {
             bail!("empty batched dispatch (batch {b}, steps {steps})");
+        }
+        if n == 0 {
+            bail!("native denoise: empty image shape {:?}", self.img_shape);
         }
         if d.x.len() != b * n {
             bail!("batched dispatch: x length {} != B*{n} (B = {b})", d.x.len());
@@ -217,11 +293,17 @@ impl NativeDenoise {
                 d.noises.len()
             );
         }
+        Ok(n)
+    }
+
+    /// The batched row kernel: `out` must already be seeded with the
+    /// stacked input images (validated by the entry points above).
+    fn denoise_rows(&self, d: &BatchDispatch, params: &[TensorBuf], out: &mut [f32]) {
+        let n = self.pixels();
+        let (b, steps) = (d.batch, d.steps);
         let g = Self::digest(params);
         let td = self.time_dim;
-        let mut out = d.x.clone();
-        for i in 0..b {
-            let x = &mut out.data[i * n..(i + 1) * n];
+        let denoise_row = |x: &mut [f32], i: usize| {
             for r in 0..steps {
                 let emb = &d.t_embs.data[r * td..(r + 1) * td];
                 let c = (
@@ -232,9 +314,41 @@ impl NativeDenoise {
                 let noise = &d.noises.data[(i * steps + r) * n..(i * steps + r + 1) * n];
                 Self::step_into(x, emb, c, noise, g);
             }
+        };
+        let threads = fanout_threads(b, steps * n);
+        if threads <= 1 {
+            for (i, x) in out.chunks_mut(n).enumerate() {
+                denoise_row(x, i);
+            }
+        } else {
+            let rows_per = b.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (shard, xs) in out.chunks_mut(rows_per * n).enumerate() {
+                    let denoise_row = &denoise_row;
+                    s.spawn(move || {
+                        for (j, x) in xs.chunks_mut(n).enumerate() {
+                            denoise_row(x, shard * rows_per + j);
+                        }
+                    });
+                }
+            });
         }
-        Ok(out)
     }
+}
+
+/// How many threads to fan a batched dispatch across: bounded by the
+/// hardware, the row count, and a minimum per-thread workload so small
+/// dispatches stay on the calling thread (spawning costs ~tens of µs).
+fn fanout_threads(batch: usize, work_per_row: usize) -> usize {
+    const MIN_WORK_PER_THREAD: usize = 1 << 15;
+    if batch < 2 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let by_work = (batch * work_per_row / MIN_WORK_PER_THREAD).max(1);
+    hw.min(batch).min(by_work).min(8)
 }
 
 #[cfg(test)]
@@ -356,6 +470,90 @@ mod tests {
             ];
             let solo = e.run_scan(&scan_dyn, &p).unwrap();
             assert_eq!(parts[b].data, solo[0].data, "request {b} diverged under batching");
+        }
+    }
+
+    #[test]
+    fn run_batched_into_matches_allocating_path() {
+        let e = engine();
+        let p = params();
+        let steps = 2;
+        // large-ish batch so the fanout path is at least reachable
+        let b = 5;
+        let x: Vec<f32> = (0..b * 16).map(|i| (i as f32) * 0.013 - 0.4).collect();
+        let t_embs: Vec<f32> = (0..steps * 8).map(|i| i as f32 * 0.05).collect();
+        let coeffs: Vec<f32> = vec![1.01, 0.05, 0.1, 1.002, 0.03, 0.0];
+        let noises: Vec<f32> = (0..b * steps * 16).map(|i| (i as f32) * 0.0007).collect();
+        let x_t = TensorBuf::new(vec![b, 1, 4, 4], x).unwrap();
+        let noise_t = TensorBuf::new(vec![b, steps, 1, 4, 4], noises).unwrap();
+        let te_t = TensorBuf::new(vec![steps, 8], t_embs).unwrap();
+        let co_t = TensorBuf::new(vec![steps, 3], coeffs).unwrap();
+        let d = BatchDispatch {
+            batch: b,
+            steps,
+            x: &x_t,
+            t_embs: &te_t,
+            coeffs: &co_t,
+            noises: &noise_t,
+        };
+        let alloc = e.run_batched(&d, &p).unwrap();
+        let mut out = vec![0.0f32; b * 16];
+        e.run_batched_into(&d, &p, &mut out).unwrap();
+        assert_eq!(out, alloc.data, "in-place and allocating paths must agree");
+        // wrong-sized out slab rejected
+        let mut short = vec![0.0f32; b * 16 - 1];
+        assert!(e.run_batched_into(&d, &p, &mut short).is_err());
+    }
+
+    #[test]
+    fn threaded_fanout_bit_identical_to_solo_scans() {
+        // Big enough that fanout_threads exceeds 1 on multi-core hosts
+        // (4 rows x 8 steps x 4096 px = 128 Ki elements of row work);
+        // rows are independent, so any thread count must reproduce the
+        // solo per-row scan bit for bit.
+        let e = NativeDenoise::new(vec![1, 64, 64], 8);
+        let p = params();
+        let (b, steps, n) = (4usize, 8usize, 4096usize);
+        let x: Vec<f32> = (0..b * n).map(|i| ((i % 97) as f32) * 0.011 - 0.5).collect();
+        let t_embs: Vec<f32> = (0..steps * 8).map(|i| (i as f32) * 0.02 - 0.07).collect();
+        let mut coeffs = Vec::new();
+        for r in 0..steps {
+            coeffs.extend([1.003, 0.04, if r + 1 < steps { 0.06 } else { 0.0 }]);
+        }
+        let noises: Vec<f32> = (0..b * steps * n)
+            .map(|i| ((i % 113) as f32) * 0.0008 - 0.04)
+            .collect();
+        let x_t = TensorBuf::new(vec![b, 1, 64, 64], x.clone()).unwrap();
+        let te_t = TensorBuf::new(vec![steps, 8], t_embs).unwrap();
+        let co_t = TensorBuf::new(vec![steps, 3], coeffs).unwrap();
+        let no_t = TensorBuf::new(vec![b, steps, 1, 64, 64], noises.clone()).unwrap();
+        let d = BatchDispatch {
+            batch: b,
+            steps,
+            x: &x_t,
+            t_embs: &te_t,
+            coeffs: &co_t,
+            noises: &no_t,
+        };
+        let mut out = vec![0.0f32; b * n];
+        e.run_batched_into(&d, &p, &mut out).unwrap();
+        for i in 0..b {
+            let scan_dyn = vec![
+                TensorBuf::new(vec![1, 64, 64], x[i * n..(i + 1) * n].to_vec()).unwrap(),
+                te_t.clone(),
+                co_t.clone(),
+                TensorBuf::new(
+                    vec![steps, 1, 64, 64],
+                    noises[i * steps * n..(i + 1) * steps * n].to_vec(),
+                )
+                .unwrap(),
+            ];
+            let solo = e.run_scan(&scan_dyn, &p).unwrap();
+            assert_eq!(
+                out[i * n..(i + 1) * n],
+                solo[0].data[..],
+                "row {i} diverged under threaded fanout"
+            );
         }
     }
 

@@ -1,0 +1,439 @@
+//! Arena-backed `f32` buffer pool — the reuse-over-reallocate substrate
+//! for the zero-steady-state-allocation serving hot path (ISSUE 4).
+//!
+//! SF-MMCN's server-flow discipline keeps a small fixed resource set
+//! saturated by streaming work through it instead of provisioning per
+//! operation (paper §III); this pool is the software analogue for host
+//! memory. A worker lane leases slabs for its batch tensors, executes,
+//! and returns them; after a short warmup every lease is served from the
+//! free list and the allocator drops out of the hot loop entirely.
+//!
+//! Design points:
+//!
+//! * **Capacity-based best fit** — a lease asks for a length and gets the
+//!   smallest retained slab whose *capacity* covers it, so the shrinking
+//!   tail batches of a draining queue keep hitting the slabs their bigger
+//!   predecessors allocated.
+//! * **Zeroed leases by default** — [`BufferPool::lease`] hands back a
+//!   slab filled with zeros, so a recycled buffer is indistinguishable
+//!   from a fresh `vec![0.0; n]` (bit-exactness of the pooled serving
+//!   path falls out of this). [`BufferPool::lease_dirty`] skips the
+//!   zero-fill for buffers the caller fully overwrites before reading —
+//!   the steady-state hot path's dominant case.
+//! * **Bounded retention** — `give_back` drops slabs beyond
+//!   `max_retained` (the shrink path), and [`BufferPool::disabled`]
+//!   retains nothing, which turns every lease into a plain allocation —
+//!   the "unpooled" baseline the serve bench compares against.
+//! * **Shared, cheaply lockable** — one mutex around the free list; the
+//!   serving layer uses one pool per worker lane (prep thread + device
+//!   thread), so contention is two threads at batch granularity.
+
+use std::sync::Mutex;
+
+use super::tensor_buf::TensorBuf;
+
+/// Cumulative pool counters (monotonic except `retained*`, which track
+/// the current free list).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Leases served from the free list.
+    pub hits: u64,
+    /// Leases that had to allocate.
+    pub misses: u64,
+    /// Total bytes handed out across all leases (hit or miss).
+    pub bytes_leased: u64,
+    /// Slabs currently retained on the free list.
+    pub retained: usize,
+    /// Capacity bytes currently retained on the free list.
+    pub retained_bytes: usize,
+}
+
+impl PoolStats {
+    /// Fraction of leases served without allocating (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    /// Merge another pool's counters into this one (per-worker pools are
+    /// aggregated into one `ServeMetrics` view).
+    pub fn absorb(&mut self, o: &PoolStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.bytes_leased += o.bytes_leased;
+        self.retained += o.retained;
+        self.retained_bytes += o.retained_bytes;
+    }
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    /// Returned slabs, kept exactly as given back — length and contents
+    /// retained. `lease` clears/zero-fills on the way OUT, and
+    /// `lease_dirty` relies on the retained length to skip that fill,
+    /// so give_back must NOT clear.
+    free: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+    bytes_leased: u64,
+}
+
+/// A recycling pool of `Vec<f32>` slabs (see module docs).
+#[derive(Debug)]
+pub struct BufferPool {
+    inner: Mutex<PoolInner>,
+    max_retained: usize,
+}
+
+impl BufferPool {
+    /// Pool with the default retention bound (64 slabs — several times a
+    /// worker lane's steady-state working set).
+    pub fn new() -> Self {
+        Self::with_max_retained(64)
+    }
+
+    /// Pool retaining at most `max_retained` free slabs; returns beyond
+    /// that are dropped (the shrink path).
+    pub fn with_max_retained(max_retained: usize) -> Self {
+        Self {
+            inner: Mutex::new(PoolInner::default()),
+            max_retained,
+        }
+    }
+
+    /// Pool that retains nothing: every lease allocates, every return
+    /// frees. This is the "unpooled" allocating baseline — same call
+    /// sites, pure allocator behaviour.
+    pub fn disabled() -> Self {
+        Self::with_max_retained(0)
+    }
+
+    /// Pop the smallest retained slab whose capacity covers `len`
+    /// (recording a hit), or record a miss. Only this pop happens under
+    /// the pool mutex — any zero-fill or miss-path allocation runs
+    /// outside it, so one lane thread memsetting a large noise slab
+    /// never blocks the other's lease/return.
+    fn pop_best_fit(&self, len: usize) -> Option<Vec<f32>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes_leased += (len * std::mem::size_of::<f32>()) as u64;
+        let mut best: Option<(usize, usize)> = None;
+        for (i, s) in inner.free.iter().enumerate() {
+            let cap = s.capacity();
+            let better = match best {
+                None => true,
+                Some((_, best_cap)) => cap < best_cap,
+            };
+            if cap >= len && better {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                inner.hits += 1;
+                Some(inner.free.swap_remove(i))
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Lease a zeroed slab of exactly `len` elements. Served from the
+    /// free list when a retained slab's capacity covers `len` (best
+    /// fit); otherwise allocates.
+    pub fn lease(&self, len: usize) -> Vec<f32> {
+        match self.pop_best_fit(len) {
+            Some(mut v) => {
+                // returned slabs keep their old contents: clear, then
+                // fill the working range so a recycled slab is
+                // indistinguishable from a fresh `vec![0.0; len]`
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Lease a slab of exactly `len` elements with UNSPECIFIED contents
+    /// (recycled data may be visible) — the no-memset variant for
+    /// buffers the caller fully overwrites before reading (stacked
+    /// images, embeddings, noise draws, chunk scratch). Anything not
+    /// provably written end to end must use [`BufferPool::lease`]
+    /// instead.
+    pub fn lease_dirty(&self, len: usize) -> Vec<f32> {
+        match self.pop_best_fit(len) {
+            Some(mut v) => {
+                if v.len() > len {
+                    v.truncate(len);
+                } else {
+                    // only the tail beyond the recycled length is filled
+                    v.resize(len, 0.0);
+                }
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a slab for reuse. Capacity (and, until the next lease,
+    /// contents) are retained unless the free list is full; a zeroed
+    /// lease clears the contents, a dirty lease may observe them.
+    pub fn give_back(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.free.len() < self.max_retained {
+            inner.free.push(v);
+        }
+        // else: drop — bounded retention IS the shrink behaviour
+    }
+
+    /// Drop retained slabs down to `keep`, preferring to keep the
+    /// largest (most reusable) capacities.
+    pub fn shrink(&self, keep: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.free.len() > keep {
+            inner.free.sort_by_key(|s| std::cmp::Reverse(s.capacity()));
+            inner.free.truncate(keep);
+        }
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        PoolStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            bytes_leased: inner.bytes_leased,
+            retained: inner.free.len(),
+            retained_bytes: inner
+                .free
+                .iter()
+                .map(|s| s.capacity() * std::mem::size_of::<f32>())
+                .sum(),
+        }
+    }
+
+    /// Lease a zeroed tensor of the given shape (pool-backed
+    /// [`TensorBuf`] construction).
+    pub fn lease_tensor(&self, shape: &[usize]) -> TensorBuf {
+        let n = shape.iter().product();
+        TensorBuf {
+            shape: shape.to_vec(),
+            data: self.lease(n),
+        }
+    }
+
+    /// Lease a tensor with unspecified contents (see
+    /// [`BufferPool::lease_dirty`]) — for dispatch destinations and
+    /// gather scratch that the callee fully overwrites.
+    pub fn lease_tensor_dirty(&self, shape: &[usize]) -> TensorBuf {
+        let n = shape.iter().product();
+        TensorBuf {
+            shape: shape.to_vec(),
+            data: self.lease_dirty(n),
+        }
+    }
+
+    /// Return a tensor's backing slab to the pool (the shape vec is
+    /// dropped; only the data slab recycles).
+    pub fn reclaim(&self, t: TensorBuf) {
+        self.give_back(t.data);
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_miss_then_hit_on_return() {
+        let p = BufferPool::new();
+        let a = p.lease(16);
+        assert_eq!(a.len(), 16);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        p.give_back(a);
+        assert_eq!(p.stats().retained, 1);
+        let b = p.lease(16);
+        assert_eq!(b.len(), 16);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_leased, 2 * 16 * 4);
+    }
+
+    #[test]
+    fn recycled_leases_come_back_zeroed() {
+        let p = BufferPool::new();
+        let mut a = p.lease(8);
+        a.iter_mut().for_each(|v| *v = 3.25);
+        p.give_back(a);
+        let b = p.lease(8);
+        assert!(b.iter().all(|&v| v == 0.0), "recycled slab must be zeroed");
+    }
+
+    #[test]
+    fn smaller_lease_reuses_bigger_slab() {
+        let p = BufferPool::new();
+        p.give_back(p.lease(100));
+        let v = p.lease(40);
+        assert_eq!(v.len(), 40);
+        assert!(v.capacity() >= 100, "best fit reuses the retained slab");
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_capacity() {
+        let p = BufferPool::new();
+        let big = p.lease(1000);
+        let small = p.lease(50);
+        p.give_back(big);
+        p.give_back(small);
+        let v = p.lease(30);
+        assert!(
+            v.capacity() < 1000,
+            "a 30-element lease must take the 50-capacity slab, not the 1000"
+        );
+    }
+
+    #[test]
+    fn outstanding_leases_never_alias() {
+        let p = BufferPool::new();
+        p.give_back(p.lease(32));
+        let a = p.lease(32);
+        let b = p.lease(32);
+        assert_ne!(
+            a.as_ptr(),
+            b.as_ptr(),
+            "two outstanding leases must be distinct buffers"
+        );
+        // and both are independently writable end to end
+        let mut a = a;
+        let mut b = b;
+        a.iter_mut().for_each(|v| *v = 1.0);
+        b.iter_mut().for_each(|v| *v = 2.0);
+        assert!(a.iter().all(|&v| v == 1.0));
+        assert!(b.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn dirty_lease_skips_zeroing_but_sizes_correctly() {
+        let p = BufferPool::new();
+        let mut a = p.lease(8);
+        a.iter_mut().for_each(|v| *v = 3.5);
+        p.give_back(a);
+        // a dirty lease may expose old contents, but must size exactly
+        let d = p.lease_dirty(6);
+        assert_eq!(d.len(), 6);
+        assert_eq!(p.stats().hits, 1);
+        p.give_back(d);
+        // growing within capacity also sizes exactly
+        let d2 = p.lease_dirty(8);
+        assert_eq!(d2.len(), 8);
+        // and a zeroed lease stays fully zeroed even after dirty traffic
+        p.give_back(d2);
+        let z = p.lease(8);
+        assert!(z.iter().all(|&v| v == 0.0), "zeroed lease after dirty reuse");
+        // dirty tensor leases keep the shape/len invariant
+        p.give_back(z);
+        let t = p.lease_tensor_dirty(&[2, 4]);
+        assert_eq!(t.shape, vec![2, 4]);
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    fn retention_bound_drops_excess_returns() {
+        let p = BufferPool::with_max_retained(2);
+        let slabs: Vec<_> = (0..4).map(|_| p.lease(8)).collect();
+        for s in slabs {
+            p.give_back(s);
+        }
+        assert_eq!(p.stats().retained, 2, "returns beyond the bound are dropped");
+    }
+
+    #[test]
+    fn shrink_keeps_largest_slabs() {
+        let p = BufferPool::new();
+        p.give_back(p.lease(10));
+        p.give_back(p.lease(1000));
+        p.give_back(p.lease(100));
+        p.shrink(1);
+        let s = p.stats();
+        assert_eq!(s.retained, 1);
+        assert!(
+            s.retained_bytes >= 1000 * 4,
+            "shrink keeps the most reusable (largest) slab"
+        );
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates() {
+        let p = BufferPool::disabled();
+        p.give_back(p.lease(8));
+        p.give_back(p.lease(8));
+        let s = p.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.retained, 0);
+    }
+
+    #[test]
+    fn tensor_lease_and_reclaim_roundtrip() {
+        let p = BufferPool::new();
+        let t = p.lease_tensor(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+        p.reclaim(t);
+        assert_eq!(p.stats().retained, 1);
+        let t2 = p.lease_tensor(&[6]);
+        assert_eq!(p.stats().hits, 1);
+        assert_eq!(t2.len(), 6);
+    }
+
+    #[test]
+    fn zero_len_lease_is_safe() {
+        let p = BufferPool::new();
+        let v = p.lease(0);
+        assert!(v.is_empty());
+        p.give_back(v); // capacity 0: silently dropped
+        assert_eq!(p.stats().retained, 0);
+    }
+
+    #[test]
+    fn stats_hit_rate_and_absorb() {
+        let mut a = PoolStats {
+            hits: 3,
+            misses: 1,
+            bytes_leased: 100,
+            retained: 2,
+            retained_bytes: 64,
+        };
+        assert!((a.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(PoolStats::default().hit_rate(), 0.0);
+        let b = PoolStats {
+            hits: 1,
+            misses: 1,
+            bytes_leased: 50,
+            retained: 1,
+            retained_bytes: 32,
+        };
+        a.absorb(&b);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 2);
+        assert_eq!(a.bytes_leased, 150);
+        assert_eq!(a.retained, 3);
+    }
+}

@@ -115,6 +115,28 @@ impl Executor {
             unavailable("batched execution")
         )
     }
+
+    /// In-place batched entry point (ISSUE 4): like
+    /// [`Executor::run_batched`] but the result overwrites `out`,
+    /// reusing its backing slab — zero allocations once the slab's
+    /// capacity covers the batch.
+    pub fn run_batched_into(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+        out: &mut TensorBuf,
+    ) -> Result<()> {
+        if let Some(engine) = self.natives.get(name) {
+            out.shape.clone_from(&d.x.shape);
+            out.data.resize(d.x.len(), 0.0);
+            return engine.run_batched_into(d, &prepared.tensors, &mut out.data);
+        }
+        bail!(
+            "artifact `{name}` not loaded ({})",
+            unavailable("batched execution")
+        )
+    }
 }
 
 /// Host copies of pre-converted static inputs (see [`Executor::prepare`]).

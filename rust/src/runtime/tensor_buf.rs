@@ -109,6 +109,96 @@ impl TensorBuf {
         shape[0] = len;
         TensorBuf::new(shape, self.data[lo * n..(lo + len) * n].to_vec())
     }
+
+    // ---- zero-copy variants (ISSUE 4) ----------------------------------
+    //
+    // Each writes into caller-provided storage instead of allocating, so
+    // a pooled serving lane can keep one set of slabs rotating through
+    // the hot loop. Semantics (shapes, element order, error conditions)
+    // mirror the allocating counterparts above bit for bit.
+
+    /// [`TensorBuf::stack`] into `out`'s retained storage: `out` becomes
+    /// the `[parts.len(), ...]` stack, reusing its backing slab (no
+    /// allocation once the slab's capacity covers the batch).
+    pub fn stack_into(parts: &[TensorBuf], out: &mut TensorBuf) -> Result<()> {
+        let first = match parts.first() {
+            Some(p) => p,
+            None => bail!("stack of zero tensors"),
+        };
+        let n = first.len();
+        for p in parts {
+            if p.shape != first.shape {
+                bail!(
+                    "stack shape mismatch: {:?} vs {:?}",
+                    p.shape,
+                    first.shape
+                );
+            }
+        }
+        out.shape.clear();
+        out.shape.push(parts.len());
+        out.shape.extend_from_slice(&first.shape);
+        // clear + extend writes each element exactly once, reusing the
+        // slab's capacity (no dead zero-fill pass)
+        out.data.clear();
+        out.data.reserve(parts.len() * n);
+        for p in parts {
+            out.data.extend_from_slice(&p.data);
+        }
+        Ok(())
+    }
+
+    /// [`TensorBuf::unstack`] into preallocated per-row tensors: row `i`
+    /// of the leading axis overwrites `outs[i]` (shape and data), reusing
+    /// each output's backing slab.
+    pub fn unstack_into(&self, outs: &mut [TensorBuf]) -> Result<()> {
+        if self.shape.is_empty() {
+            bail!("unstack of a rank-0 tensor");
+        }
+        let b = self.shape[0];
+        if outs.len() != b {
+            bail!("unstack_into: {} outputs for leading dim {b}", outs.len());
+        }
+        let inner = &self.shape[1..];
+        let n: usize = inner.iter().product();
+        for (i, o) in outs.iter_mut().enumerate() {
+            o.shape.clear();
+            o.shape.extend_from_slice(inner);
+            o.data.clear();
+            o.data.extend_from_slice(&self.data[i * n..(i + 1) * n]);
+        }
+        Ok(())
+    }
+
+    /// Copy one leading-axis row into a caller slab sized to exactly one
+    /// row.
+    pub fn copy_row_into(&self, row: usize, out: &mut [f32]) -> Result<()> {
+        self.copy_rows_into(row, 1, out)
+    }
+
+    /// [`TensorBuf::slice_rows`] into a caller slab: copies rows
+    /// `lo..lo+len` (keeping trailing dims) into `out`, which must be
+    /// sized to exactly `len` rows.
+    pub fn copy_rows_into(&self, lo: usize, len: usize, out: &mut [f32]) -> Result<()> {
+        if self.shape.is_empty() {
+            bail!("copy_rows_into of a rank-0 tensor");
+        }
+        let rows = self.shape[0];
+        if lo + len > rows {
+            bail!("copy_rows_into {lo}..{} out of {rows} rows", lo + len);
+        }
+        let n: usize = self.shape[1..].iter().product();
+        if out.len() != len * n {
+            bail!(
+                "copy_rows_into: out slab holds {} elements, rows {lo}..{} need {}",
+                out.len(),
+                lo + len,
+                len * n
+            );
+        }
+        out.copy_from_slice(&self.data[lo * n..(lo + len) * n]);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +244,53 @@ mod tests {
         let b = TensorBuf::zeros(&[3]);
         assert!(TensorBuf::stack(&[a, b]).is_err());
         assert!(TensorBuf::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn stack_into_matches_stack_and_reuses_storage() {
+        let a = TensorBuf::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = TensorBuf::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let parts = [a, b];
+        let alloc = TensorBuf::stack(&parts).unwrap();
+        let mut out = TensorBuf::zeros(&[2, 2, 2]);
+        let ptr = out.data.as_ptr();
+        TensorBuf::stack_into(&parts, &mut out).unwrap();
+        assert_eq!(out, alloc);
+        assert_eq!(out.data.as_ptr(), ptr, "slab must be reused, not replaced");
+        // shape/size mismatches rejected, empty rejected
+        let c = TensorBuf::zeros(&[3]);
+        assert!(TensorBuf::stack_into(&[parts[0].clone(), c], &mut out).is_err());
+        assert!(TensorBuf::stack_into(&[], &mut out).is_err());
+    }
+
+    #[test]
+    fn unstack_into_matches_unstack() {
+        let s = TensorBuf::new(vec![2, 3], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let alloc = s.unstack().unwrap();
+        let mut outs = vec![TensorBuf::zeros(&[3]), TensorBuf::zeros(&[3])];
+        s.unstack_into(&mut outs).unwrap();
+        assert_eq!(outs, alloc);
+        // wrong output count rejected
+        let mut short = vec![TensorBuf::zeros(&[3])];
+        assert!(s.unstack_into(&mut short).is_err());
+        assert!(TensorBuf::scalar(1.0).unstack_into(&mut outs).is_err());
+    }
+
+    #[test]
+    fn copy_rows_into_matches_slice_rows() {
+        let t = TensorBuf::new(vec![3, 2], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let sliced = t.slice_rows(1, 2).unwrap();
+        let mut out = vec![0.0f32; 4];
+        t.copy_rows_into(1, 2, &mut out).unwrap();
+        assert_eq!(out, sliced.data);
+        let mut row = vec![0.0f32; 2];
+        t.copy_row_into(2, &mut row).unwrap();
+        assert_eq!(row, vec![4.0, 5.0]);
+        // out-of-range rows and wrong slab sizes rejected
+        assert!(t.copy_rows_into(2, 2, &mut out).is_err());
+        let mut bad = vec![0.0f32; 3];
+        assert!(t.copy_rows_into(1, 2, &mut bad).is_err());
+        assert!(TensorBuf::scalar(1.0).copy_row_into(0, &mut row).is_err());
     }
 
     #[test]

@@ -120,9 +120,14 @@ impl Bencher {
 pub struct BaselineRow {
     pub name: String,
     pub mean_ns: Option<f64>,
-    /// "cycles/sec" proxy: simulated MAC throughput for sim benches.
+    /// Work-per-second column: `mac_rate_per_s` (sim benches) or
+    /// `req_per_s` (the serve bench) — either way, bigger is better and
+    /// the gate fires on a drop.
     pub mac_rate: Option<f64>,
-    /// Machine-independent fast-vs-reference ratio (same host, same run).
+    /// Machine-independent ratio column: `speedup_vs_ref` (fast vs
+    /// reference path) or `speedup_vs_per_request` (batched vs
+    /// per-request serving) — measured same-host same-process, so it
+    /// always gates, even against provisional baselines.
     pub speedup_vs_ref: Option<f64>,
 }
 
@@ -158,8 +163,14 @@ impl BenchBaseline {
             rows.push(BaselineRow {
                 name,
                 mean_ns: r.get("mean_ns").and_then(Json::as_f64),
-                mac_rate: r.get("mac_rate_per_s").and_then(Json::as_f64),
-                speedup_vs_ref: r.get("speedup_vs_ref").and_then(Json::as_f64),
+                mac_rate: r
+                    .get("mac_rate_per_s")
+                    .or_else(|| r.get("req_per_s"))
+                    .and_then(Json::as_f64),
+                speedup_vs_ref: r
+                    .get("speedup_vs_ref")
+                    .or_else(|| r.get("speedup_vs_per_request"))
+                    .and_then(Json::as_f64),
             });
         }
         if rows.is_empty() {
@@ -275,6 +286,49 @@ pub fn compare_baselines(
     (regressions, notes)
 }
 
+/// The bench binaries' shared `--check-against` entry point: load the
+/// committed baseline, compare `current` against it, print the gate
+/// report, and exit(1) on any regression beyond tolerance. Tolerance
+/// defaults to 15% (`SF_MMCN_BENCH_TOLERANCE`, in percent); `label`
+/// names the bench in the report.
+pub fn check_against_baseline(current: &BenchBaseline, baseline_path: &str, label: &str) {
+    let tolerance = std::env::var("SF_MMCN_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|pct| pct / 100.0)
+        .unwrap_or(0.15);
+    let baseline = match BenchBaseline::load(Path::new(baseline_path)) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("\nBENCH GATE ERROR: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let (regressions, notes) = compare_baselines(&baseline, current, tolerance);
+    println!(
+        "\n==== {label} gate vs {baseline_path} (tolerance {:.0}%) ====",
+        tolerance * 100.0
+    );
+    for n in &notes {
+        println!("note: {n}");
+    }
+    if regressions.is_empty() {
+        println!("{label} bench gate OK: no regression beyond tolerance");
+        return;
+    }
+    for r in &regressions {
+        println!(
+            "REGRESSION {}: {} {:.3} -> {:.3} ({:.1}% of baseline)",
+            r.name,
+            r.metric,
+            r.baseline,
+            r.current,
+            r.ratio * 100.0
+        );
+    }
+    std::process::exit(1);
+}
+
 /// Format a big ops/second number human-readably.
 pub fn fmt_rate(ops_per_s: f64) -> String {
     if ops_per_s >= 1e9 {
@@ -353,6 +407,42 @@ mod tests {
         let bad = BenchBaseline::from_json(&fixture(false, 1.2, 1e9)).unwrap();
         let (regs, _) = compare_baselines(&base, &bad, 0.15);
         assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "speedup_vs_ref");
+    }
+
+    #[test]
+    fn serve_shaped_rows_parse_into_the_same_gate() {
+        // The serve bench emits req_per_s / speedup_vs_per_request; both
+        // map onto the rate and ratio columns of the comparator.
+        let base = BenchBaseline::from_json(
+            r#"{"provisional": true, "results": [
+                {"name": "per_request", "req_per_s": 50.0},
+                {"name": "batched_b4", "req_per_s": 160.0, "speedup_vs_per_request": 2.0}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(base.rows[1].mac_rate, Some(160.0));
+        assert_eq!(base.rows[1].speedup_vs_ref, Some(2.0));
+        // ratio healthy: provisional baseline gates nothing else
+        let ok = BenchBaseline::from_json(
+            r#"{"results": [
+                {"name": "per_request", "req_per_s": 10.0},
+                {"name": "batched_b4", "req_per_s": 25.0, "speedup_vs_per_request": 2.5}
+            ]}"#,
+        )
+        .unwrap();
+        let (regs, _) = compare_baselines(&base, &ok, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
+        // collapsed batching ratio: caught even on a slow host
+        let bad = BenchBaseline::from_json(
+            r#"{"results": [
+                {"name": "per_request", "req_per_s": 10.0},
+                {"name": "batched_b4", "req_per_s": 11.0, "speedup_vs_per_request": 1.1}
+            ]}"#,
+        )
+        .unwrap();
+        let (regs, _) = compare_baselines(&base, &bad, 0.15);
+        assert_eq!(regs.len(), 1, "{regs:?}");
         assert_eq!(regs[0].metric, "speedup_vs_ref");
     }
 

@@ -2,10 +2,11 @@
 //! from-scratch substrates: enough to read the machine-readable bench
 //! result files (`BENCH_*.json`) back in for the CI regression gate.
 //!
-//! Supports the full JSON value grammar minus exotic corners we never
-//! emit: numbers parse through `f64`, strings support the standard
-//! escapes plus `\uXXXX` (surrogate pairs unhandled — our files are
-//! ASCII). Errors carry byte offsets.
+//! Supports the full JSON value grammar: numbers parse through `f64`,
+//! strings support the standard escapes plus `\uXXXX` including UTF-16
+//! surrogate pairs (`\uD83D\uDE00` → 😀); unpaired surrogates are a
+//! parse error, not a silent replacement char. Errors carry byte
+//! offsets.
 
 use std::collections::HashMap;
 
@@ -146,6 +147,59 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits of a `\u` escape (cursor already past the `u`).
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape at byte {}", self.pos);
+        }
+        let raw = &self.bytes[self.pos..self.pos + 4];
+        // from_str_radix tolerates a leading `+`; JSON does not
+        if !raw.iter().all(|b| b.is_ascii_hexdigit()) {
+            let hex = String::from_utf8_lossy(raw);
+            bail!("bad \\u escape `{hex}` at byte {}", self.pos);
+        }
+        let hex = std::str::from_utf8(raw)?;
+        let code = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape `{hex}` at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    /// Decode one `\uXXXX` escape (cursor already past the `u`),
+    /// consuming a second `\uXXXX` when the first is a UTF-16 high
+    /// surrogate. Unpaired or out-of-order surrogates are errors — JSON
+    /// strings must encode astral code points as a high/low pair.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            bail!("unpaired low surrogate \\u{hi:04X} at byte {}", self.pos);
+        }
+        if (0xD800..=0xDBFF).contains(&hi) {
+            if self.bytes.get(self.pos) != Some(&b'\\')
+                || self.bytes.get(self.pos + 1) != Some(&b'u')
+            {
+                bail!(
+                    "high surrogate \\u{hi:04X} not followed by a \\u low surrogate \
+                     at byte {}",
+                    self.pos
+                );
+            }
+            self.pos += 2;
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                bail!(
+                    "high surrogate \\u{hi:04X} paired with non-low-surrogate \
+                     \\u{lo:04X} at byte {}",
+                    self.pos
+                );
+            }
+            let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return Ok(char::from_u32(code)
+                .expect("a surrogate pair always decodes to a valid scalar"));
+        }
+        Ok(char::from_u32(hi).expect("a non-surrogate BMP code point is a valid char"))
+    }
+
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut out = String::new();
@@ -170,17 +224,7 @@ impl<'a> Parser<'a> {
                         b'n' => out.push('\n'),
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
-                        b'u' => {
-                            if self.pos + 4 > self.bytes.len() {
-                                bail!("truncated \\u escape at byte {}", self.pos);
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| anyhow::anyhow!("bad \\u escape `{hex}`"))?;
-                            self.pos += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        }
+                        b'u' => out.push(self.unicode_escape()?),
                         other => bail!("bad escape `\\{}` at byte {}", other as char, self.pos),
                     }
                 }
@@ -293,6 +337,49 @@ mod tests {
         let v = Json::parse("[1, [2, {\"k\": false}]]").unwrap();
         let inner = v.as_array().unwrap()[1].as_array().unwrap();
         assert_eq!(inner[1].get("k").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn unicode_escapes_and_surrogate_pairs_round_trip() {
+        // BMP escapes, lower/upper-case hex
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""\u00e9""#).unwrap(), Json::Str("\u{e9}".into()));
+        assert_eq!(Json::parse(r#""\u00E9""#).unwrap(), Json::Str("\u{e9}".into()));
+        // astral code points arrive as UTF-16 surrogate pairs
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        assert_eq!(
+            Json::parse(r#""x\uD834\uDD1Ey""#).unwrap(),
+            Json::Str("x\u{1d11e}y".into())
+        );
+        // round trip: the escaped and the raw utf-8 encodings of the
+        // same string parse to the same value
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00 ok""#).unwrap(),
+            Json::parse("\"\u{1f600} ok\"").unwrap()
+        );
+        // and inside a bench-shaped document field
+        let v = Json::parse(r#"{"name": "serve \uD83E\uDD16 bot"}"#).unwrap();
+        assert_eq!(
+            v.get("name").and_then(Json::as_str),
+            Some("serve \u{1f916} bot")
+        );
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_errors() {
+        // previously these silently decoded to U+FFFD
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "lone high at end");
+        assert!(Json::parse(r#""\ud83dx""#).is_err(), "high + literal");
+        assert!(Json::parse(r#""\ud83d\n""#).is_err(), "high + other escape");
+        assert!(Json::parse(r#""\ud83dA""#).is_err(), "high + non-low");
+        assert!(Json::parse(r#""\ude00""#).is_err(), "lone low");
+        assert!(Json::parse(r#""\u12""#).is_err(), "truncated");
+        assert!(Json::parse(r#""\uZZZZ""#).is_err(), "non-hex");
+        assert!(Json::parse(r#""\u+041""#).is_err(), "sign is not a hex digit");
+        assert!(Json::parse(r#""\ud83d\u""#).is_err(), "truncated low");
     }
 
     #[test]

@@ -90,9 +90,20 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Fill a slice with standard-normal values — the allocation-free
+    /// variant of [`Rng::normal_vec`]; identical draw order, so the two
+    /// produce the same stream from the same state.
+    pub fn normal_fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
     /// Fill a vec with standard-normal values.
     pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
-        (0..n).map(|_| self.normal()).collect()
+        let mut v = vec![0.0f32; n];
+        self.normal_fill(&mut v);
+        v
     }
 
     /// Fill a vec with values that are zero with probability `p_zero` and
@@ -170,6 +181,16 @@ mod tests {
             v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn normal_fill_matches_normal_vec_stream() {
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        let v = a.normal_vec(64);
+        let mut f = [0.0f32; 64];
+        b.normal_fill(&mut f);
+        assert_eq!(v, f, "fill and vec variants must draw the same stream");
     }
 
     #[test]

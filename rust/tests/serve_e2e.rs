@@ -11,7 +11,7 @@
 //!   each skips cleanly when either is missing.
 
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{DenoiseRequest, DiffusionServer};
+use sf_mmcn::coordinator::{DenoiseRequest, DenoiseResult, DiffusionServer};
 use sf_mmcn::runtime::{ArtifactStore, Executor};
 use sf_mmcn::sim::energy::CAL_40NM;
 
@@ -37,6 +37,7 @@ fn native_cfg(steps: usize, workers: usize, max_batch: usize, batched: bool) -> 
         backend: ServeBackend::Native,
         pipeline: true,
         chunk: 0,
+        pooled: true,
     }
 }
 
@@ -114,6 +115,135 @@ fn native_chunked_dispatch_bit_identical() {
         "chunk=2 over 5 steps must dispatch more often ({} vs {})",
         m_chunk.dispatches,
         m_whole.dispatches
+    );
+}
+
+// ------------------------------------------------- pooled hot path (ISSUE 4)
+
+/// Sort-by-id helper for output comparisons.
+fn by_id(mut results: Vec<DenoiseResult>) -> Vec<DenoiseResult> {
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+#[test]
+fn pooled_bit_identical_to_allocating_batched_and_per_request() {
+    // ISSUE 4 acceptance: the pooled zero-allocation path must be
+    // bit-identical to the PR 2 allocating batched path AND to the
+    // step-at-a-time per-request path, for the same seeds.
+    let pooled = native_server(native_cfg(5, 2, 4, true));
+    let (r_pool, m_pool) = pooled.serve(reqs(6, 5)).unwrap();
+    let r_pool = by_id(r_pool);
+    let mut cfg = native_cfg(5, 2, 4, true);
+    cfg.pooled = false;
+    let unpooled = native_server(cfg);
+    let (r_alloc, m_alloc) = unpooled.serve(reqs(6, 5)).unwrap();
+    let r_alloc = by_id(r_alloc);
+    let seq = native_server(native_cfg(5, 1, 1, false));
+    let (r_seq, _) = seq.serve(reqs(6, 5)).unwrap();
+    let r_seq = by_id(r_seq);
+    for ((p, a), s) in r_pool.iter().zip(&r_alloc).zip(&r_seq) {
+        assert_eq!(p.id, a.id);
+        assert_eq!(p.id, s.id);
+        assert_eq!(
+            p.image.data, a.image.data,
+            "request {} diverged between pooled and allocating batched paths",
+            p.id
+        );
+        assert_eq!(
+            p.image.data, s.image.data,
+            "request {} diverged between pooled and per-request paths",
+            p.id
+        );
+    }
+    // the pooled session recycles; the disabled pool never hits
+    assert!(m_pool.pool_hits > 0, "pooled run must reuse slabs");
+    assert_eq!(m_alloc.pool_hits, 0, "disabled pool must never hit");
+    assert!(m_alloc.pool_misses > 0, "disabled pool allocates every lease");
+    assert!(
+        m_pool.pool_bytes_leased > 0 && m_alloc.pool_bytes_leased > 0,
+        "both modes account leased bytes"
+    );
+}
+
+#[test]
+fn pooled_chunked_bit_identical_to_allocating() {
+    // Chunked dispatch exercises the partial-chunk scratch leases
+    // (t_emb/coeff/noise gathers) on top of the rotating image slabs.
+    let mut pooled_cfg = native_cfg(5, 1, 4, true);
+    pooled_cfg.chunk = 2;
+    let pooled = native_server(pooled_cfg);
+    let (r_pool, _) = pooled.serve(reqs(4, 5)).unwrap();
+    let r_pool = by_id(r_pool);
+    let mut alloc_cfg = native_cfg(5, 1, 4, true);
+    alloc_cfg.chunk = 2;
+    alloc_cfg.pooled = false;
+    let alloc = native_server(alloc_cfg);
+    let (r_alloc, _) = alloc.serve(reqs(4, 5)).unwrap();
+    let r_alloc = by_id(r_alloc);
+    // and the whole-request pooled path for the same workload
+    let whole = native_server(native_cfg(5, 1, 4, true));
+    let (r_whole, _) = whole.serve(reqs(4, 5)).unwrap();
+    let r_whole = by_id(r_whole);
+    for ((p, a), w) in r_pool.iter().zip(&r_alloc).zip(&r_whole) {
+        assert_eq!(p.image.data, a.image.data, "request {} diverged (chunked)", p.id);
+        assert_eq!(p.image.data, w.image.data, "request {} diverged (vs whole)", p.id);
+    }
+}
+
+#[test]
+fn pooled_mixed_step_counts_bit_identical_to_allocating() {
+    // Mixed per-request steps mean differently-sized slabs per batch —
+    // the best-fit free list must still hand back correct (zeroed)
+    // storage for every size.
+    let mixed = |pooled: bool| {
+        let mut all = reqs(3, 6);
+        all.extend((3..6).map(|i| DenoiseRequest {
+            id: i,
+            seed: 500 + i,
+            steps: 2,
+        }));
+        let mut cfg = native_cfg(6, 2, 4, true);
+        cfg.pooled = pooled;
+        let s = native_server(cfg);
+        let (results, m) = s.serve(all).unwrap();
+        (by_id(results), m)
+    };
+    let (r_pool, _) = mixed(true);
+    let (r_alloc, _) = mixed(false);
+    for (p, a) in r_pool.iter().zip(&r_alloc) {
+        assert_eq!(p.id, a.id);
+        assert_eq!(p.steps, a.steps);
+        assert_eq!(
+            p.image.data, a.image.data,
+            "request {} diverged between pooled and allocating mixed-step paths",
+            p.id
+        );
+    }
+}
+
+#[test]
+fn pool_misses_stay_flat_after_warmup() {
+    // Steady-state zero-allocation contract: on a single worker serving
+    // many same-shape batches, only the warmup working set allocates —
+    // a miss count that grows with the batch count means slabs are not
+    // recycling. 16 requests in batches of 2 = 8 batches; each batch
+    // leases 5 slabs (4 prep + 1 rotating image slab in whole-request
+    // mode), so a non-recycling pool would miss ~40 times.
+    let s = native_server(native_cfg(3, 1, 2, true));
+    let (_, m) = s.serve(reqs(16, 3)).unwrap();
+    assert!(
+        m.pool_misses <= 16,
+        "pool misses must be bounded by the warmup working set, got {} \
+         (hits {})",
+        m.pool_misses,
+        m.pool_hits
+    );
+    assert!(
+        m.pool_hits > m.pool_misses,
+        "steady state must be dominated by free-list hits ({} hits / {} misses)",
+        m.pool_hits,
+        m.pool_misses
     );
 }
 

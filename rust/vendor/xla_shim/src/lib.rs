@@ -13,7 +13,10 @@
 //! so a shim-linked binary behaves like the stub: callers that probe the
 //! executor (tests, benches) skip cleanly. Host-only `Literal` plumbing
 //! (construction/reshape) works for real, since conversions happen before
-//! client probing in some call paths.
+//! client probing in some call paths — including the batched serving
+//! entry points (`Executor::run_batched`/`run_batched_into`, ISSUE 4),
+//! which stack `[B, ...]` dispatch tensors into literals before any
+//! executable is consulted.
 
 use std::fmt;
 
@@ -182,6 +185,27 @@ mod tests {
         assert!(l.reshape(&[3]).is_err());
         let s = Literal::vec1(&[5.0]).reshape(&[]).unwrap();
         assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn batched_dispatch_literal_shapes_work() {
+        // The executor's batched/in-place serving path reshapes stacked
+        // host tensors to [B, ...] before probing any executable; that
+        // plumbing must keep working against the shim so the pjrt
+        // feature-matrix job exercises the real call sequence.
+        let b = 4;
+        let images = vec![0.5f32; b * 256];
+        let x = Literal::vec1(&images);
+        let stacked = x.reshape(&[b as i64, 1, 16, 16]).unwrap();
+        assert_eq!(stacked.array_shape().unwrap().dims(), &[4, 1, 16, 16]);
+        // chunked noise tensors carry a [B, C, ...] leading pair
+        let noises = vec![0.0f32; b * 2 * 256];
+        let n = Literal::vec1(&noises);
+        let chunk = n.reshape(&[b as i64, 2, 1, 16, 16]).unwrap();
+        assert_eq!(chunk.array_shape().unwrap().dims().len(), 5);
+        // device-derived accessors still refuse (shim has no runtime)
+        assert!(stacked.clone().decompose_tuple().is_err());
+        assert!(stacked.to_vec::<f32>().is_err());
     }
 
     #[test]
