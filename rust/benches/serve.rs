@@ -14,6 +14,24 @@
 //!                           max_batch = 4.
 //! * `batched_b8`          — same, max_batch = 8.
 //!
+//! After the closed-loop modes, the bench runs the **open-loop**
+//! streaming scenarios of ISSUE 5 on the session API: requests arrive on
+//! a fixed synthetic schedule (`try_submit`, no blocking), calibrated
+//! against the just-measured pooled `batched_b4` throughput:
+//!
+//! * `nominal`       — 0.4x the measured capacity, queue sized to the
+//!                     workload: the bounded queue must admit everything
+//!                     (zero `QueueFull` rejections below capacity).
+//! * `overload_10x`  — 10x the nominal arrival rate against a small
+//!                     bounded queue: overload must be shed at admission
+//!                     (`QueueFull` rejections, not OOM or unbounded
+//!                     latency), and `shutdown()` must resolve every
+//!                     admitted ticket.
+//!
+//! Both checks are smoke gates that run in every mode (quick included);
+//! the per-scenario e2e latency percentiles (p50/p95/p99, streaming
+//! estimator) land in `BENCH_serve_openloop.json` for the CI artifact.
+//!
 //! Run: `cargo bench --bench serve` (full) or `-- --quick` (CI profile).
 //! Results go to `BENCH_serve.json`. Every run (quick included) asserts
 //! the steady-state zero-allocation contract: the pooled `batched_b4`
@@ -27,8 +45,10 @@
 //! baseline via `util::bench::compare_baselines` (>15% drop fails; see
 //! the hotpath bench for the same pattern).
 
+use std::time::{Duration, Instant};
+
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{DiffusionServer, ServeMetrics};
+use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, ServeMetrics};
 use sf_mmcn::runtime::ArtifactStore;
 use sf_mmcn::util::bench::{check_against_baseline, BaselineRow, BenchBaseline};
 
@@ -127,6 +147,7 @@ fn base_cfg(steps: usize, requests: usize) -> ServeConfig {
         pipeline: true,
         chunk: 0,
         pooled: true,
+        ..ServeConfig::default()
     }
 }
 
@@ -135,7 +156,7 @@ fn base_cfg(steps: usize, requests: usize) -> ServeConfig {
 fn serve_once(cfg: &ServeConfig) -> ServeMetrics {
     let store = ArtifactStore::default_store();
     let server = DiffusionServer::new(cfg.clone(), &store).expect("native server");
-    let reqs = server.workload(cfg.requests);
+    let reqs = workload(cfg, cfg.seed, 0..cfg.requests);
     let (results, metrics) = server.serve(reqs).expect("serve");
     assert_eq!(
         results.len(),
@@ -222,6 +243,142 @@ fn check_pool_steady_state(row: &Row, require_hit_majority: bool) -> bool {
         row.name, row.pool_hits, row.pool_misses, row.pool_mb_leased
     );
     true
+}
+
+// ------------------------------------------- open-loop scenarios (ISSUE 5)
+
+struct OpenRow {
+    name: String,
+    target_rps: f64,
+    offered: usize,
+    admitted: u64,
+    rejected_full: u64,
+    expired: u64,
+    completed: usize,
+    failed: usize,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    wall_s: f64,
+    queue_depth: usize,
+}
+
+/// One open-loop session: `n` requests arrive on a fixed schedule at
+/// `rate` req/s via `try_submit` (overload is shed, never queued beyond
+/// `queue_depth`), then the session drains gracefully. Panics if any
+/// admitted ticket fails to resolve — `shutdown()` owing tickets is a
+/// serving bug, not a perf regression.
+fn run_open_loop(name: &str, steps: usize, n: usize, rate: f64, queue_depth: usize) -> OpenRow {
+    let mut cfg = base_cfg(steps, n);
+    cfg.batched = true;
+    cfg.max_batch = 4;
+    cfg.queue_depth = queue_depth;
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store).expect("native server");
+    let handle = server.start();
+    let reqs = workload(&cfg, cfg.seed, 0..n);
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    let mut shed = 0usize;
+    for (i, req) in reqs.into_iter().enumerate() {
+        // fixed synthetic arrival schedule: request i is due at i/rate
+        if let Some(sleep) = interval.mul_f64(i as f64).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match handle.try_submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => shed += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let m = handle.shutdown().expect("graceful drain");
+    assert_eq!(
+        completed + failed,
+        m.admission.admitted as usize,
+        "shutdown() must resolve every admitted ticket"
+    );
+    assert_eq!(
+        shed as u64, m.admission.rejected_queue_full,
+        "client-side and server-side QueueFull counts agree"
+    );
+    let row = OpenRow {
+        name: name.to_string(),
+        target_rps: rate,
+        offered: n,
+        admitted: m.admission.admitted,
+        rejected_full: m.admission.rejected_queue_full,
+        expired: m.admission.expired,
+        completed,
+        failed,
+        p50_ms: m.e2e_latency.p50_us() / 1e3,
+        p95_ms: m.e2e_latency.p95_us() / 1e3,
+        p99_ms: m.e2e_latency.p99_us() / 1e3,
+        wall_s: m.wall.as_secs_f64(),
+        queue_depth,
+    };
+    println!(
+        "bench serve::open_loop_{:<13} target {:>7.1} req/s  offered {:>3}  admitted {:>3}  \
+         shed {:>3}  e2e p50 {:.2} ms  p95 {:.2}  p99 {:.2}  wall {:.3}s",
+        row.name,
+        row.target_rps,
+        row.offered,
+        row.admitted,
+        row.rejected_full,
+        row.p50_ms,
+        row.p95_ms,
+        row.p99_ms,
+        row.wall_s,
+    );
+    row
+}
+
+/// `BENCH_serve_openloop.json`: the latency-percentile artifact CI
+/// uploads (written before any gate can fire).
+fn write_openloop_json(mode: &str, capacity_rps: f64, rows: &[OpenRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_openloop\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!(
+        "  \"calibrated_capacity_rps\": {},\n",
+        json_f64(capacity_rps)
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"name\": \"{}\", ", r.name));
+        s.push_str(&format!("\"target_rps\": {}, ", json_f64(r.target_rps)));
+        s.push_str(&format!("\"offered\": {}, ", r.offered));
+        s.push_str(&format!("\"admitted\": {}, ", r.admitted));
+        s.push_str(&format!("\"rejected_queue_full\": {}, ", r.rejected_full));
+        s.push_str(&format!("\"expired\": {}, ", r.expired));
+        s.push_str(&format!("\"completed\": {}, ", r.completed));
+        s.push_str(&format!("\"failed\": {}, ", r.failed));
+        s.push_str(&format!("\"queue_depth\": {}, ", r.queue_depth));
+        s.push_str(&format!("\"p50_ms\": {}, ", json_f64(r.p50_ms)));
+        s.push_str(&format!("\"p95_ms\": {}, ", json_f64(r.p95_ms)));
+        s.push_str(&format!("\"p99_ms\": {}, ", json_f64(r.p99_ms)));
+        s.push_str(&format!("\"wall_s\": {}", json_f64(r.wall_s)));
+        s.push('}');
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve_openloop.json", &s) {
+        Ok(()) => println!("wrote BENCH_serve_openloop.json ({} scenarios)", rows.len()),
+        Err(e) => println!("WARNING: could not write BENCH_serve_openloop.json: {e}"),
+    }
 }
 
 /// CI regression gate: map this run's rows onto the shared comparator
@@ -320,6 +477,51 @@ fn main() {
             "POOL GATE FAILED: the unpooled baseline hit the free list {} times — \
              it must allocate every lease",
             rows[2].pool_hits
+        );
+        failed = true;
+    }
+
+    // ---- open-loop scenarios (ISSUE 5), calibrated to the measured
+    // pooled batched_b4 capacity ----
+    println!("\n---- open-loop streaming (session API) ----");
+    let capacity = b4_row.req_per_s.max(1e-6);
+    let nominal_rate = 0.4 * capacity;
+    let overload_rate = 10.0 * nominal_rate;
+    let (n_nominal, n_overload) = if quick { (32, 80) } else { (48, 120) };
+    // Nominal: queue sized to the workload — below capacity the bounded
+    // queue must never reject. Overload: a small bounded queue
+    // (2 lanes x 2 batches of 4) — the 10x arrival surplus must be shed
+    // at admission instead of ballooning memory or latency.
+    let nominal = run_open_loop("nominal", steps, n_nominal, nominal_rate, n_nominal);
+    let overload = run_open_loop(
+        "overload_10x",
+        steps,
+        n_overload,
+        overload_rate,
+        2 * WORKERS * 4,
+    );
+    // JSON goes to disk before the gates so a failing run still uploads
+    // its percentile diagnostics from the CI artifact step.
+    let open_rows = [nominal, overload];
+    write_openloop_json(if quick { "quick" } else { "full" }, capacity, &open_rows);
+    let [nominal, overload] = &open_rows;
+
+    // Smoke gates (always on, quick included): bounded-queue behaviour.
+    if nominal.rejected_full != 0 {
+        println!(
+            "OPEN-LOOP GATE FAILED: {} QueueFull rejections at nominal load \
+             ({:.1} req/s, 0.4x measured capacity) — below capacity the bounded \
+             queue must admit everything",
+            nominal.rejected_full, nominal.target_rps
+        );
+        failed = true;
+    }
+    if overload.rejected_full == 0 {
+        println!(
+            "OPEN-LOOP GATE FAILED: no QueueFull rejections under 10x overload \
+             ({:.1} req/s against queue depth {}) — overload must be shed at \
+             admission, not absorbed",
+            overload.target_rps, overload.queue_depth
         );
         failed = true;
     }

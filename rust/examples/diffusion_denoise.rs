@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::DiffusionServer;
+use sf_mmcn::coordinator::{workload, DiffusionServer};
 use sf_mmcn::runtime::ArtifactStore;
 use sf_mmcn::sim::energy::CAL_40NM;
 use sf_mmcn::util::cli::Args;
@@ -70,7 +70,7 @@ fn main() -> Result<()> {
 
     let store = ArtifactStore::default_store();
     let server = DiffusionServer::new(cfg.clone(), &store)?;
-    let requests = server.workload(cfg.requests);
+    let requests = workload(&cfg, cfg.seed, 0..cfg.requests);
     let (results, metrics) = server.serve(requests)?;
 
     println!("{}", metrics.render());

@@ -1,0 +1,116 @@
+//! Streaming serving session walkthrough (ISSUE 5): the long-running
+//! API behind the "millions of users" north star.
+//!
+//! A [`ServerHandle`] owns the worker lanes for the life of the session.
+//! This example runs entirely offline on the native surrogate backend:
+//!
+//! 1. `start()` the session, then trickle requests in on a schedule
+//!    (mixed priorities, one with a tight deadline) — the Server Flow
+//!    shape: work streams through a fixed engine instead of being
+//!    pre-staged (paper §III).
+//! 2. Shed overload with `try_submit` against the bounded queue.
+//! 3. Read `metrics_snapshot()` mid-flight — live queue depth,
+//!    admission counters, and fixed-memory latency percentiles.
+//! 4. `shutdown()` gracefully: admission closes, every admitted ticket
+//!    resolves, lanes join.
+//!
+//! Run: `cargo run --release --example streaming_serve`
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer};
+use sf_mmcn::runtime::ArtifactStore;
+
+fn main() -> Result<()> {
+    let cfg = ServeConfig {
+        steps: 6,
+        requests: 12,
+        workers: 2,
+        max_batch: 4,
+        backend: ServeBackend::Native,
+        batched: true,
+        cosim: false,
+        queue_depth: 8,
+        ..ServeConfig::default()
+    };
+    println!("=== SF-MMCN streaming serving session ===");
+    println!(
+        "{} workers, max_batch {}, bounded queue depth {}, native backend\n",
+        cfg.workers, cfg.max_batch, cfg.queue_depth
+    );
+
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store)?;
+    let handle = server.start();
+
+    // Trickle a deterministic workload in: every third request is
+    // low-priority, and one carries a deadline it cannot meet (it will
+    // be expired in the queue or rejected at admission, never executed).
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for (i, mut req) in workload(&cfg, cfg.seed, 0..cfg.requests)
+        .into_iter()
+        .enumerate()
+    {
+        if i % 3 == 2 {
+            req.priority = 2; // batch-job lane
+        }
+        if i == 5 {
+            req.deadline = Some(Duration::from_nanos(1)); // unmeetable
+        }
+        match handle.try_submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => shed += 1,
+            Err(e) => println!("request {i} not admitted: {e}"),
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let snap = handle.metrics_snapshot();
+    println!("mid-session snapshot (live, lanes undisturbed):");
+    println!(
+        "  queue depth {}  admitted {}  rejected {}  expired {}  done {}",
+        snap.admission.queue_depth,
+        snap.admission.admitted,
+        snap.admission.rejected_total(),
+        snap.admission.expired,
+        snap.requests_done,
+    );
+
+    // Every admitted ticket resolves — results, or an expiry error for
+    // the doomed request.
+    let (mut ok, mut expired) = (0usize, 0usize);
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                ok += 1;
+                if r.id == 0 {
+                    let mean: f32 = r.image.data.iter().sum::<f32>() / r.image.len() as f32;
+                    println!(
+                        "  first result: id {} shape {:?} mean {mean:.4} \
+                         (service {:.2} ms)",
+                        r.id,
+                        r.image.shape,
+                        r.latency.as_secs_f64() * 1e3
+                    );
+                }
+            }
+            Err(e) => {
+                expired += 1;
+                println!("  ticket resolved with error: {e}");
+            }
+        }
+    }
+
+    let metrics = handle.shutdown()?;
+    println!("\nfinal session metrics:\n{}", metrics.render());
+    println!(
+        "summary: {ok} served, {expired} expired/failed, {shed} shed at the \
+         bounded queue"
+    );
+    println!("streaming_serve OK");
+    Ok(())
+}

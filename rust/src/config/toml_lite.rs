@@ -178,6 +178,10 @@ pub trait DocExt {
     fn get_int_or(&self, section: &str, key: &str, default: i64) -> i64;
     fn get_float_or(&self, section: &str, key: &str, default: f64) -> f64;
     fn get_bool_or(&self, section: &str, key: &str, default: bool) -> bool;
+    /// Unsigned integer getter for keys where a negative value has no
+    /// meaning (queue depths, millisecond budgets): negatives clamp to 0
+    /// so callers can validate against a single "disabled" sentinel.
+    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> u64;
 }
 
 impl DocExt for Doc {
@@ -207,6 +211,13 @@ impl DocExt for Doc {
     fn get_bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get_val(section, key)
             .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+
+    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get_val(section, key)
+            .and_then(|v| v.as_int())
+            .map(|i| i.max(0) as u64)
             .unwrap_or(default)
     }
 }
@@ -282,6 +293,14 @@ steps = 200  # ddpm steps
         assert_eq!(doc.get_str_or("nosect", "k", "d"), "d");
         assert!(doc.get_bool_or("s", "b", true));
         assert_eq!(doc.get_float_or("s", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn u64_getter_clamps_negatives() {
+        let doc = parse_toml("[s]\nx = 3\nneg = -7").unwrap();
+        assert_eq!(doc.get_u64_or("s", "x", 0), 3);
+        assert_eq!(doc.get_u64_or("s", "neg", 9), 0, "negatives clamp to 0");
+        assert_eq!(doc.get_u64_or("s", "missing", 9), 9);
     }
 
     #[test]

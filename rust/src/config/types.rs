@@ -130,6 +130,18 @@ pub struct ServeConfig {
     /// the "unpooled" baseline the serve bench compares against. Only
     /// affects `batched` mode.
     pub pooled: bool,
+    /// Bounded admission queue depth of the streaming session API
+    /// (ISSUE 5): `try_submit` returns `QueueFull` once this many
+    /// requests are waiting, `submit` blocks. The legacy `serve()` drain
+    /// widens the bound to its whole workload, so it never rejects.
+    pub queue_depth: usize,
+    /// Default per-request deadline in milliseconds, applied at admission
+    /// to requests that carry none of their own. 0 disables the default
+    /// (requests without an explicit deadline never expire).
+    pub default_deadline_ms: u64,
+    /// Number of admission priority levels. Priority 0 is the most
+    /// urgent; request priorities clamp to `priorities - 1`.
+    pub priorities: usize,
 }
 
 impl Default for ServeConfig {
@@ -148,6 +160,9 @@ impl Default for ServeConfig {
             pipeline: true,
             chunk: 0,
             pooled: true,
+            queue_depth: 64,
+            default_deadline_ms: 0,
+            priorities: 3,
         }
     }
 }
@@ -238,8 +253,19 @@ impl ServeConfig {
             bail!("serve.chunk must be >= 0 (0 = whole request per dispatch)");
         }
         cfg.chunk = chunk as usize;
+        cfg.queue_depth =
+            doc.get_u64_or("serve", "queue_depth", cfg.queue_depth as u64) as usize;
+        cfg.default_deadline_ms =
+            doc.get_u64_or("serve", "default_deadline_ms", cfg.default_deadline_ms);
+        cfg.priorities = doc.get_u64_or("serve", "priorities", cfg.priorities as u64) as usize;
         if cfg.steps == 0 || cfg.workers == 0 || cfg.max_batch == 0 {
             bail!("serve.steps/workers/max_batch must be >= 1");
+        }
+        if cfg.queue_depth == 0 {
+            bail!("serve.queue_depth must be >= 1 (bounded admission needs room for one)");
+        }
+        if !(1..=16).contains(&cfg.priorities) {
+            bail!("serve.priorities must be in 1..=16, got {}", cfg.priorities);
         }
         Ok(cfg)
     }
@@ -336,6 +362,24 @@ data_reuse = false
         assert!(!unpooled.pooled);
         assert!(ServeConfig::from_toml("[serve]\nbackend = \"tpu\"\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\nchunk = -1\n").is_err());
+    }
+
+    #[test]
+    fn serve_config_admission_keys() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert_eq!(cfg.queue_depth, 64, "bounded admission default");
+        assert_eq!(cfg.default_deadline_ms, 0, "no default deadline");
+        assert_eq!(cfg.priorities, 3);
+        let cfg = ServeConfig::from_toml(
+            "[serve]\nqueue_depth = 8\ndefault_deadline_ms = 250\npriorities = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.queue_depth, 8);
+        assert_eq!(cfg.default_deadline_ms, 250);
+        assert_eq!(cfg.priorities, 2);
+        assert!(ServeConfig::from_toml("[serve]\nqueue_depth = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\npriorities = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\npriorities = 99\n").is_err());
     }
 
     #[test]

@@ -6,7 +6,36 @@ use std::time::Duration;
 
 use crate::runtime::PoolStats;
 use crate::sim::energy::{EnergyModel, EventCounts, PpaReport};
-use crate::util::stats::LatencyHist;
+use crate::util::stats::{LatencyHist, StreamingPercentiles};
+
+/// Admission-control counters of a streaming serving session (ISSUE 5).
+/// All counters are cumulative since `start()`; `queue_depth` is the
+/// instantaneous backlog at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Submission attempts (admitted + rejected).
+    pub offered: u64,
+    /// Requests accepted into the bounded queue.
+    pub admitted: u64,
+    /// `try_submit` attempts bounced off a full queue.
+    pub rejected_queue_full: u64,
+    /// Requests whose deadline was already unmeetable at admission.
+    pub rejected_deadline: u64,
+    /// Submissions after shutdown began.
+    pub rejected_shutdown: u64,
+    /// Admitted requests whose deadline passed while still queued (their
+    /// tickets resolve with an error instead of occupying a lane).
+    pub expired: u64,
+    /// Requests waiting in the admission queue right now.
+    pub queue_depth: usize,
+}
+
+impl AdmissionStats {
+    /// Total submissions turned away (for any reason).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue_full + self.rejected_deadline + self.rejected_shutdown
+    }
+}
 
 /// Aggregated results of one serving session.
 #[derive(Debug, Clone)]
@@ -43,6 +72,21 @@ pub struct ServeMetrics {
     pub wall: Duration,
     /// Co-simulated accelerator counts for all served work (if enabled).
     pub sim_counts: Option<EventCounts>,
+    /// Admission-control counters of the streaming session (ISSUE 5).
+    /// All zero on workloads that never touch the bounded queue.
+    pub admission: AdmissionStats,
+    /// Admitted requests whose ticket resolved with an error (bad step
+    /// counts, dispatch failures) — distinct from `admission.expired`.
+    pub requests_failed: usize,
+    /// Worker lanes that died during setup (a session with all lanes down
+    /// drains its queue with errors instead of hanging tickets).
+    pub lanes_down: usize,
+    /// End-to-end latency (admission -> ticket resolution, queue wait
+    /// included) via the fixed-memory P² estimator. Together with the
+    /// bounded-reservoir [`LatencyHist`]s above, every metric here is
+    /// O(1) in session length, so live snapshots of a week-long session
+    /// cost the same as minute-one snapshots.
+    pub e2e_latency: StreamingPercentiles,
 }
 
 impl ServeMetrics {
@@ -62,6 +106,10 @@ impl ServeMetrics {
             per_worker_requests: Vec::new(),
             wall: Duration::ZERO,
             sim_counts: None,
+            admission: AdmissionStats::default(),
+            requests_failed: 0,
+            lanes_down: 0,
+            e2e_latency: StreamingPercentiles::new(),
         }
     }
 
@@ -125,6 +173,39 @@ impl ServeMetrics {
             self.step_latency.mean_us() / 1e3,
             self.step_latency.percentile_us(95.0) / 1e3,
         ));
+        if self.e2e_latency.count() > 0 {
+            s.push_str(&format!(
+                "e2e latency (queue + service, streaming): mean {:.2} ms  \
+                 p50 {:.2}  p95 {:.2}  p99 {:.2}\n",
+                self.e2e_latency.mean_us() / 1e3,
+                self.e2e_latency.p50_us() / 1e3,
+                self.e2e_latency.p95_us() / 1e3,
+                self.e2e_latency.p99_us() / 1e3,
+            ));
+        }
+        if self.admission.offered > 0 {
+            s.push_str(&format!(
+                "admission: {} offered, {} admitted, {} rejected \
+                 (full {} / deadline {} / shutdown {}), {} expired, queue depth {}\n",
+                self.admission.offered,
+                self.admission.admitted,
+                self.admission.rejected_total(),
+                self.admission.rejected_queue_full,
+                self.admission.rejected_deadline,
+                self.admission.rejected_shutdown,
+                self.admission.expired,
+                self.admission.queue_depth,
+            ));
+        }
+        if self.requests_failed > 0 {
+            s.push_str(&format!(
+                "failed requests: {} (tickets resolved with an error)\n",
+                self.requests_failed
+            ));
+        }
+        if self.lanes_down > 0 {
+            s.push_str(&format!("worker lanes down: {}\n", self.lanes_down));
+        }
         if self.dispatches > 0 {
             s.push_str(&format!(
                 "dispatches: {}  batch occupancy: {:.2} req/dispatch  pipeline stalls: {}\n",
@@ -211,6 +292,35 @@ mod tests {
         assert!(s.contains("batch occupancy"), "{s}");
         assert!(s.contains("worker spread"), "{s}");
         assert!(!s.contains("buffer pool"), "no pool counters, no pool line");
+    }
+
+    #[test]
+    fn admission_line_and_streaming_percentiles_render() {
+        let mut m = ServeMetrics::new();
+        let s = m.render();
+        assert!(
+            !s.contains("admission:") && !s.contains("e2e latency"),
+            "idle session renders neither admission nor e2e lines: {s}"
+        );
+        m.admission.offered = 12;
+        m.admission.admitted = 9;
+        m.admission.rejected_queue_full = 2;
+        m.admission.rejected_deadline = 1;
+        m.admission.expired = 1;
+        m.admission.queue_depth = 3;
+        assert_eq!(m.admission.rejected_total(), 3);
+        for i in 1..=100 {
+            m.e2e_latency.record_us(i as f64 * 1000.0);
+        }
+        let s = m.render();
+        assert!(s.contains("admission: 12 offered, 9 admitted, 3 rejected"), "{s}");
+        assert!(s.contains("queue depth 3"), "{s}");
+        assert!(s.contains("e2e latency"), "{s}");
+        m.requests_failed = 2;
+        m.lanes_down = 1;
+        let s = m.render();
+        assert!(s.contains("failed requests: 2"), "{s}");
+        assert!(s.contains("worker lanes down: 1"), "{s}");
     }
 
     #[test]

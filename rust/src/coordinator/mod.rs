@@ -9,13 +9,16 @@
 //!   side never needs re-lowering to change schedules).
 //! * [`params`] — loads `artifacts/unet_params.{bin,manifest}` into the
 //!   input layout the artifact expects.
-//! * [`server`] — request queue → fair batcher → worker lanes, each a
-//!   two-stage pipeline (host prep ∥ device execute) owning its executor;
-//!   batched `[B, ...]` fused dispatch across the queue; co-simulation of
-//!   the SF-MMCN accelerator for cycles/energy alongside the functional
-//!   run (micro-sim for batched traffic, analytic otherwise).
-//! * [`metrics`] — latency histograms, batching/pipeline counters, and
-//!   simulated PPA aggregation.
+//! * [`server`] — the streaming session API (ISSUE 5): bounded admission
+//!   queue with priorities and deadlines → fair batcher → worker lanes,
+//!   each a two-stage pipeline (host prep ∥ device execute) owning its
+//!   executor; batched `[B, ...]` fused dispatch across the queue;
+//!   ticket-based result delivery; graceful drain; co-simulation of the
+//!   SF-MMCN accelerator for cycles/energy alongside the functional run
+//!   (micro-sim for batched traffic, analytic otherwise).
+//! * [`metrics`] — latency histograms, fixed-memory streaming
+//!   percentiles, admission/batching/pipeline counters, and simulated
+//!   PPA aggregation.
 //!
 //! Python never runs here: workers execute `artifacts/*.hlo.txt` through
 //! the PJRT C API (or the offline native surrogate — see
@@ -27,6 +30,9 @@ pub mod params;
 pub mod server;
 
 pub use ddpm::DdpmSchedule;
-pub use metrics::ServeMetrics;
+pub use metrics::{AdmissionStats, ServeMetrics};
 pub use params::UnetParams;
-pub use server::{DenoiseRequest, DenoiseResult, DiffusionServer};
+pub use server::{
+    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, ServerHandle,
+    Ticket,
+};

@@ -1,39 +1,43 @@
-//! The diffusion serving loop: request queue → fair batcher → worker
-//! lanes, each lane a two-stage pipeline (host prep ∥ device execute).
+//! The diffusion serving loop: bounded admission queue → fair batcher →
+//! worker lanes, each lane a two-stage pipeline (host prep ∥ device
+//! execute), behind a long-running session API.
 //!
-//! Rebuilt for ISSUE 3 around a true batched, pipelined request path:
+//! Redesigned for ISSUE 5 from a one-shot drain into a streaming server:
 //!
-//! * **Fair shared batcher** ([`Batcher`]): a single queue all workers
-//!   drain with round-robin-fair grabs — one grab takes at most
-//!   `ceil(pending / workers)` requests (capped at `max_batch`), so a
-//!   fast worker can no longer swallow `max_batch` requests while the
-//!   others starve on an empty queue. Batches only group requests with
-//!   identical step counts, so per-request `steps` stays honored.
-//! * **Batched fused dispatch** (`cfg.batched`): B requests'
-//!   `x`/`t_emb`/`coeff`/`noise` tensors stack into one `[B, ...]`
-//!   device execution per timestep chunk ([`BatchDispatch`]) — the
-//!   `unet_denoise_scan` idea generalized across the queue, the serving-
-//!   layer analogue of Server Flow keeping a small PE pool saturated by
-//!   streaming work through it (paper §III).
-//! * **Double-buffered host stage** (`cfg.pipeline`): a per-worker host
-//!   thread generates the *next* batch's noise draws and time embeddings
-//!   while the device executes the current one (a capacity-1 channel is
-//!   the double buffer); device-side waits on that channel are counted
-//!   as `pipeline_stalls`.
-//! * **Pooled zero-allocation hot path** (`cfg.pooled`, ISSUE 4): every
-//!   batch tensor leases its slab from a per-worker-lane [`BufferPool`]
-//!   and returns it after the dispatch, and the device stage executes in
-//!   place against rotating image slabs (`Executor::run_batched_into`)
-//!   instead of allocating a fresh output per chunk. With the capacity-1
-//!   prep channel, at most two batches are in flight per lane, so the
-//!   pool stabilizes at two rotating arenas after warmup and the
-//!   allocator drops out of the steady-state loop entirely — the
-//!   software analogue of Server Flow reusing a fixed resource set
-//!   across a stream (paper §III). `pooled = false` swaps in the
-//!   retain-nothing pool: the identical code path, but every lease
-//!   allocates — the PR 2 per-batch-allocating baseline the serve bench
-//!   compares against. Only the result images still allocate (they
-//!   escape to the caller).
+//! * **Session API** ([`DiffusionServer::start`] → [`ServerHandle`]): the
+//!   handle owns the worker lanes for as long as the session lives.
+//!   [`ServerHandle::submit`] blocks for queue space, `try_submit`
+//!   returns [`AdmissionError::QueueFull`] instead — callers choose
+//!   backpressure or load shedding. Every admitted request yields a
+//!   [`Ticket`] whose `wait()`/`try_wait()` delivers that request's
+//!   [`DenoiseResult`]. This is the software analogue of the paper's
+//!   Server Flow: a small fixed resource set (the lanes) continuously
+//!   fed by streaming work, instead of a pre-staged burst (§III).
+//! * **Bounded admission** ([`AdmissionQueue`]): at most
+//!   `serve.queue_depth` requests wait at once, split across
+//!   `serve.priorities` FIFO lanes (priority 0 drains first). Overload
+//!   is rejected at the door — latency stays bounded and memory flat.
+//! * **Deadlines**: a request may carry a relative deadline (or inherit
+//!   `serve.default_deadline_ms`). A deadline that already passed is
+//!   rejected at admission; one that passes while queued resolves the
+//!   ticket with an "expired" error at batch-formation time rather than
+//!   occupying a lane. In-flight work is never aborted — a dispatched
+//!   timestep chunk runs to completion (see EXPERIMENTS.md §Streaming
+//!   for how deadlines interact with chunking).
+//! * **Graceful drain** ([`ServerHandle::shutdown`]): admission closes
+//!   (further submits see [`AdmissionError::ShuttingDown`]), the lanes
+//!   drain everything already admitted — every ticket resolves — and the
+//!   threads join. [`ServerHandle::metrics_snapshot`] reads live
+//!   counters (queue depth, admitted/rejected/expired, fixed-memory
+//!   latency percentiles) at any point without disturbing the lanes.
+//!
+//! The PR 2/PR 4 engine is unchanged behind the handle: the fair shared
+//! batcher (one grab ≤ `ceil(pending / workers)`, batches group equal
+//! step counts), batched `[B, ...]` fused dispatch per timestep chunk,
+//! the double-buffered host stage, and the pooled zero-allocation hot
+//! path all run exactly as before — [`DiffusionServer::serve`] is now a
+//! thin submit-all-then-wait wrapper over the session API and stays
+//! bit-identical to the historical drain.
 //!
 //! Workers own their executor (PJRT clients are not shared across
 //! threads) and compile/register the denoise artifact once at startup.
@@ -41,16 +45,18 @@
 //! the host-CPU surrogate and synthetic parameters, which is what tier-1
 //! and the serve benchmarks exercise.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, sync_channel, Sender, TryRecvError};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ServeBackend, ServeConfig};
 use crate::coordinator::ddpm::{time_embedding, time_embedding_into, DdpmSchedule};
-use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::metrics::{AdmissionStats, ServeMetrics};
 use crate::coordinator::params::UnetParams;
 use crate::models::{unet, UnetConfig};
 use crate::runtime::{
@@ -68,6 +74,29 @@ pub struct DenoiseRequest {
     pub seed: u64,
     /// Reverse steps (defaults to the server's schedule length).
     pub steps: usize,
+    /// Admission priority: 0 is the most urgent; values clamp to the
+    /// session's `serve.priorities - 1`. Within a priority level the
+    /// queue is FIFO.
+    pub priority: u8,
+    /// Relative completion budget, measured from submission. `None`
+    /// inherits `serve.default_deadline_ms` (which may itself be "no
+    /// deadline"). An expired deadline rejects at admission or, once
+    /// queued, resolves the ticket with an error instead of running.
+    pub deadline: Option<Duration>,
+}
+
+impl DenoiseRequest {
+    /// Request with default admission attributes (most-urgent priority,
+    /// no explicit deadline).
+    pub fn new(id: u64, seed: u64, steps: usize) -> Self {
+        Self {
+            id,
+            seed,
+            steps,
+            priority: 0,
+            deadline: None,
+        }
+    }
 }
 
 /// The served result.
@@ -75,37 +104,198 @@ pub struct DenoiseRequest {
 pub struct DenoiseResult {
     pub id: u64,
     pub image: TensorBuf,
+    /// Service latency (batch wall time for batched execution); queue
+    /// wait is reported separately via the session's e2e percentiles.
     pub latency: Duration,
     pub steps: usize,
 }
 
-/// Shared request queue with fairness: one grab takes at most
-/// `ceil(pending / workers)` requests (≤ `max_batch`, ≥ 1), and a batch
-/// only groups requests with the same step count. The barrier holds all
-/// worker lanes at the line until everyone finished setup, so the fair
-/// division is over the real worker count, not over whoever compiled
-/// first.
+/// Why a submission was turned away at the admission queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The bounded queue is at `serve.queue_depth`; shed load or use the
+    /// blocking [`ServerHandle::submit`].
+    QueueFull,
+    /// The request's deadline already passed (or passed while a blocking
+    /// submit waited for space).
+    Deadline,
+    /// [`ServerHandle::shutdown`] (or `begin_shutdown`) already closed
+    /// admission.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull => write!(f, "admission queue full (bounded depth)"),
+            AdmissionError::Deadline => write!(f, "deadline already expired at admission"),
+            AdmissionError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Claim on one admitted request's future result. Delivery is
+/// single-shot: `wait()` consumes the ticket; after `try_wait()` has
+/// returned `Some`, the ticket is spent.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<Result<DenoiseResult>>,
+    done: bool,
+}
+
+impl Ticket {
+    /// Session-unique ticket id (monotonic admission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request resolves (result, execution error, or
+    /// queue expiry).
+    pub fn wait(self) -> Result<DenoiseResult> {
+        if self.done {
+            bail!("ticket {}: already consumed by try_wait", self.id);
+        }
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => bail!(
+                "ticket {}: serving lane dropped without resolving it",
+                self.id
+            ),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still queued or
+    /// executing, `Some(result)` exactly once when it resolves.
+    pub fn try_wait(&mut self) -> Option<Result<DenoiseResult>> {
+        if self.done {
+            return Some(Err(anyhow!(
+                "ticket {}: already consumed by try_wait",
+                self.id
+            )));
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = true;
+                Some(r)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(anyhow!(
+                    "ticket {}: serving lane dropped without resolving it",
+                    self.id
+                )))
+            }
+        }
+    }
+}
+
+/// An admitted request: the queue entry the lanes execute. Carries the
+/// ticket's response channel and the absolute deadline fixed at
+/// admission.
+#[derive(Debug)]
+struct Admitted {
+    req: DenoiseRequest,
+    ticket: u64,
+    admitted_at: Instant,
+    deadline: Option<Instant>,
+    tx: Sender<Result<DenoiseResult>>,
+}
+
+/// Resolve a whole batch's tickets with (a copy of) one error.
+fn resolve_batch_err(reqs: &[Admitted], e: &anyhow::Error) {
+    for a in reqs {
+        let _ = a.tx.send(Err(anyhow!("{e:#}")));
+    }
+}
+
+/// Monotonic admission counters (lock-free; the queue mutex is not
+/// needed to read them).
+#[derive(Default)]
+struct AdmissionCounters {
+    offered: AtomicU64,
+    admitted: AtomicU64,
+    rejected_queue_full: AtomicU64,
+    rejected_deadline: AtomicU64,
+    rejected_shutdown: AtomicU64,
+    expired: AtomicU64,
+}
+
+struct QueueState {
+    /// One FIFO per priority level; index 0 drains first.
+    lanes: Vec<VecDeque<Admitted>>,
+    /// Total queued entries across all lanes.
+    len: usize,
+    /// Admission closed; lanes drain what is already queued, then exit.
+    draining: bool,
+    /// Workers gated at the starting line (the legacy `serve()` preload
+    /// uses this so the fair division sees the whole workload at once).
+    held: bool,
+    /// Worker lanes that finished setup or are still trying. When the
+    /// last lane dies during setup, the queue fails every pending ticket
+    /// instead of hanging them.
+    alive: usize,
+}
+
+/// Shared bounded admission queue with fairness: one grab takes at most
+/// `ceil(pending / workers)` requests (≤ `max_batch`, ≥ 1) from the most
+/// urgent non-empty priority lane, and a batch only groups requests with
+/// the same step count. The barrier holds all worker lanes at the line
+/// until everyone finished setup.
 ///
 /// Fairness is per grab, not end-to-end: with the pipelined host stage a
 /// lane prefetches, so it can hold one executing batch plus one buffered
-/// batch plus one being prepared (each a fair share of what was pending
-/// at its grab). That bounded lookahead is the price of overlapping host
-/// prep with device execution; `pipeline = false` restores strict
-/// grab-on-demand draining.
-struct Batcher {
-    queue: Mutex<std::collections::VecDeque<DenoiseRequest>>,
+/// batch plus one being prepared. That bounded lookahead is the price of
+/// overlapping host prep with device execution; `pipeline = false`
+/// restores strict grab-on-demand draining.
+struct AdmissionQueue {
+    state: Mutex<QueueState>,
+    /// Signalled on push / drain / release — wakes worker grabs.
+    not_empty: Condvar,
+    /// Signalled on pop / expiry / drain — wakes blocking submits.
+    not_full: Condvar,
+    depth: usize,
+    levels: usize,
+    default_deadline: Option<Duration>,
     workers: usize,
     max_batch: usize,
     start: Barrier,
+    next_ticket: AtomicU64,
+    counters: AdmissionCounters,
 }
 
-impl Batcher {
-    fn new(requests: Vec<DenoiseRequest>, workers: usize, max_batch: usize) -> Self {
+impl AdmissionQueue {
+    fn new(
+        depth: usize,
+        levels: usize,
+        default_deadline: Option<Duration>,
+        workers: usize,
+        max_batch: usize,
+        held: bool,
+    ) -> Self {
+        let workers = workers.max(1);
+        let levels = levels.max(1);
         Self {
-            queue: Mutex::new(requests.into()),
-            workers: workers.max(1),
+            state: Mutex::new(QueueState {
+                lanes: (0..levels).map(|_| VecDeque::new()).collect(),
+                len: 0,
+                draining: false,
+                held,
+                alive: workers,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+            levels,
+            default_deadline,
+            workers,
             max_batch: max_batch.max(1),
-            start: Barrier::new(workers.max(1)),
+            start: Barrier::new(workers),
+            next_ticket: AtomicU64::new(0),
+            counters: AdmissionCounters::default(),
         }
     }
 
@@ -115,30 +305,223 @@ impl Batcher {
         self.start.wait();
     }
 
-    /// Cancel all pending work (the error path): workers finish their
-    /// in-flight batch, find the queue empty, and exit.
-    fn clear(&self) {
-        self.queue.lock().unwrap().clear();
+    /// Admit one request, blocking for queue space when `block`.
+    fn admit(
+        &self,
+        req: DenoiseRequest,
+        block: bool,
+    ) -> std::result::Result<Ticket, AdmissionError> {
+        self.counters.offered.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let rel = req.deadline.or(self.default_deadline);
+        if rel.is_some_and(|d| d.is_zero()) {
+            self.counters.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionError::Deadline);
+        }
+        let deadline = rel.and_then(|d| now.checked_add(d));
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.draining || st.alive == 0 {
+                self.counters.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                return Err(AdmissionError::ShuttingDown);
+            }
+            if st.len < self.depth {
+                break;
+            }
+            // a full queue may be holding expired entries no worker has
+            // popped yet — free those slots before shedding a live request
+            if self.sweep_expired(&mut st, Instant::now()) > 0 {
+                self.not_full.notify_all();
+                continue;
+            }
+            if !block {
+                self.counters
+                    .rejected_queue_full
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(AdmissionError::QueueFull);
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        // a blocking submit can outwait its own deadline
+        if deadline.is_some_and(|d| d <= Instant::now()) {
+            self.counters.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionError::Deadline);
+        }
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let pri = (req.priority as usize).min(self.levels - 1);
+        st.lanes[pri].push_back(Admitted {
+            req,
+            ticket,
+            admitted_at: now,
+            deadline,
+            tx,
+        });
+        st.len += 1;
+        self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(Ticket {
+            id: ticket,
+            rx,
+            done: false,
+        })
     }
 
-    /// Take the next fair batch, or `None` when the queue is drained.
-    fn next_batch(&self) -> Option<Vec<DenoiseRequest>> {
-        let mut q = self.queue.lock().unwrap();
-        let pending = q.len();
-        if pending == 0 {
-            return None;
+    /// Stop admission and wake everyone: blocked submitters reject with
+    /// `ShuttingDown`; lanes drain the remaining queue and then exit.
+    fn begin_drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.draining = true;
+        st.held = false;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Open the gate of a held session (the `serve()` preload path).
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.held = false;
+        self.not_empty.notify_all();
+    }
+
+    /// A worker lane died during setup. When the last one goes, every
+    /// queued ticket resolves with the lane's error and admission closes
+    /// — nothing can execute the backlog.
+    fn lane_down(&self, error: &anyhow::Error) {
+        let mut st = self.state.lock().unwrap();
+        st.alive = st.alive.saturating_sub(1);
+        if st.alive == 0 {
+            st.draining = true;
+            for lane in st.lanes.iter_mut() {
+                for a in lane.drain(..) {
+                    let _ = a.tx.send(Err(anyhow!(
+                        "request {} (ticket {}): serving lane failed during setup: {error:#}",
+                        a.req.id,
+                        a.ticket
+                    )));
+                }
+            }
+            st.len = 0;
+            self.not_empty.notify_all();
+            self.not_full.notify_all();
         }
-        let fair = pending.div_ceil(self.workers);
-        let take = fair.clamp(1, self.max_batch);
-        let steps0 = q.front().map(|r| r.steps).unwrap_or(0);
-        let mut batch = Vec::with_capacity(take);
-        while batch.len() < take {
-            match q.front() {
-                Some(r) if r.steps == steps0 => batch.push(q.pop_front().unwrap()),
-                _ => break,
+    }
+
+    /// Requests waiting right now.
+    fn depth_now(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// Snapshot the admission counters plus the live queue depth.
+    fn admission_stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            offered: self.counters.offered.load(Ordering::Relaxed),
+            admitted: self.counters.admitted.load(Ordering::Relaxed),
+            rejected_queue_full: self.counters.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_deadline: self.counters.rejected_deadline.load(Ordering::Relaxed),
+            rejected_shutdown: self.counters.rejected_shutdown.load(Ordering::Relaxed),
+            expired: self.counters.expired.load(Ordering::Relaxed),
+            queue_depth: self.depth_now(),
+        }
+    }
+
+    /// Pop one expired entry: resolve its ticket and count it.
+    fn expire(&self, a: Admitted) {
+        self.counters.expired.fetch_add(1, Ordering::Relaxed);
+        let _ = a.tx.send(Err(anyhow!(
+            "request {} (ticket {}): deadline expired after {:.1} ms in queue",
+            a.req.id,
+            a.ticket,
+            a.admitted_at.elapsed().as_secs_f64() * 1e3
+        )));
+    }
+
+    /// Resolve expired entries at the front of every priority lane,
+    /// releasing their bounded-queue slots. Returns how many expired.
+    /// (Entries buried behind a live same-lane front are caught when
+    /// they surface, or by the in-group check during batch formation.)
+    fn sweep_expired(&self, st: &mut QueueState, now: Instant) -> usize {
+        let mut freed = 0;
+        for lane in st.lanes.iter_mut() {
+            while lane
+                .front()
+                .is_some_and(|a| a.deadline.is_some_and(|d| d <= now))
+            {
+                let a = lane.pop_front().unwrap();
+                st.len -= 1;
+                freed += 1;
+                self.expire(a);
             }
         }
-        Some(batch)
+        freed
+    }
+
+    /// Take the next fair batch under the state lock, resolving expired
+    /// entries as they surface at the front of *any* priority lane.
+    /// `None` when nothing is currently runnable.
+    fn take_batch(&self, st: &mut QueueState) -> Option<Vec<Admitted>> {
+        let now = Instant::now();
+        // Sweep every lane's front for expired entries before choosing a
+        // batch: under a steady stream of urgent traffic the pop below
+        // may never reach a lower-priority lane, and without this sweep
+        // a stale entry there would neither resolve its ticket nor
+        // release its bounded-queue slot.
+        self.sweep_expired(st, now);
+        let mut pri = 0;
+        while pri < st.lanes.len() {
+            if st.lanes[pri].is_empty() {
+                pri += 1;
+                continue;
+            }
+            let fair = st.len.div_ceil(self.workers).clamp(1, self.max_batch);
+            let steps0 = st.lanes[pri].front().unwrap().req.steps;
+            let mut batch = Vec::with_capacity(fair);
+            while batch.len() < fair {
+                match st.lanes[pri].front() {
+                    Some(a) if a.req.steps == steps0 => {
+                        let a = st.lanes[pri].pop_front().unwrap();
+                        st.len -= 1;
+                        if a.deadline.is_some_and(|d| d <= now) {
+                            self.expire(a);
+                        } else {
+                            batch.push(a);
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            if batch.is_empty() {
+                // the whole step-group at the front had expired; the lane
+                // front changed, so retry this priority level
+                continue;
+            }
+            return Some(batch);
+        }
+        None
+    }
+
+    /// Take the next fair batch, blocking while the queue is empty (or
+    /// held). `None` once the session is draining and nothing is left —
+    /// the lane's signal to exit.
+    fn next_batch(&self) -> Option<Vec<Admitted>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.held {
+                let before = st.len;
+                let batch = self.take_batch(&mut st);
+                if st.len < before {
+                    // space opened up (batch taken and/or entries expired)
+                    self.not_full.notify_all();
+                }
+                if let Some(b) = batch {
+                    return Some(b);
+                }
+                if st.draining && st.len == 0 {
+                    return None;
+                }
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
     }
 }
 
@@ -159,18 +542,34 @@ struct WorkerCtx {
     pooled: bool,
 }
 
-/// One per-batch progress report from a worker lane.
+/// Per-batch metrics report from a worker lane (results themselves go
+/// straight to their tickets).
 struct WorkerMsg {
     worker: usize,
-    results: Vec<DenoiseResult>,
+    requests: usize,
+    steps_done: usize,
+    /// Service latency per completed request (batch wall for batched).
+    service_us: Vec<f64>,
+    /// Admission → resolution latency per completed request.
+    e2e_us: Vec<f64>,
     step_us: Vec<f64>,
     host_prep_us: f64,
     dispatches: usize,
     batch_items: usize,
     stalled: bool,
     /// Cumulative snapshot of this worker's buffer pool at send time; the
-    /// server keeps the latest per worker and sums them at the end.
+    /// collector keeps the latest per worker and sums them on read.
     pool: PoolStats,
+}
+
+/// Lane → collector events.
+enum LaneEvent {
+    Batch(WorkerMsg),
+    /// Tickets resolved with an error by the lane (bad step counts,
+    /// dispatch failures).
+    Failed { count: usize },
+    /// A lane died during setup.
+    LaneDown,
 }
 
 /// A batch with all host-side tensors generated (stage 1 of the lane
@@ -181,7 +580,7 @@ struct WorkerMsg {
 /// Every tensor's backing slab is leased from the lane's [`BufferPool`];
 /// [`execute_batch`] reclaims them all once the batch completes.
 struct PreparedBatch {
-    reqs: Vec<DenoiseRequest>,
+    reqs: Vec<Admitted>,
     steps: usize,
     /// `[B, c, h, w]` initial noise images.
     x0: TensorBuf,
@@ -194,21 +593,24 @@ struct PreparedBatch {
     prep_us: f64,
 }
 
+/// Prepare a batch's host tensors. On failure the admitted requests come
+/// back with the error so the caller can resolve their tickets.
 fn prepare_host_batch(
-    reqs: Vec<DenoiseRequest>,
+    reqs: Vec<Admitted>,
     schedule: &DdpmSchedule,
     img_shape: &[usize],
     time_dim: usize,
     pool: &BufferPool,
-) -> Result<PreparedBatch> {
+) -> std::result::Result<PreparedBatch, (Vec<Admitted>, anyhow::Error)> {
     let t0 = Instant::now();
-    let steps = reqs.first().map(|r| r.steps).unwrap_or(0);
+    let steps = reqs.first().map(|a| a.req.steps).unwrap_or(0);
     if steps == 0 || steps > schedule.t_max() {
-        bail!(
+        let e = anyhow!(
             "request {}: steps {steps} out of range 1..={} (server schedule)",
-            reqs.first().map(|r| r.id).unwrap_or(0),
+            reqs.first().map(|a| a.req.id).unwrap_or(0),
             schedule.t_max()
         );
+        return Err((reqs, e));
     }
     let n: usize = img_shape.iter().product();
     let b = reqs.len();
@@ -219,9 +621,9 @@ fn prepare_host_batch(
     // step) by an explicit zero fill.
     let mut x0 = pool.lease_dirty(b * n);
     let mut noises = pool.lease_dirty(b * steps * n);
-    for (i, req) in reqs.iter().enumerate() {
-        debug_assert_eq!(req.steps, steps, "batcher groups by step count");
-        let mut rng = Rng::new(req.seed);
+    for (i, a) in reqs.iter().enumerate() {
+        debug_assert_eq!(a.req.steps, steps, "batcher groups by step count");
+        let mut rng = Rng::new(a.req.seed);
         rng.normal_fill(&mut x0[i * n..(i + 1) * n]);
         for (r, t) in (0..steps).rev().enumerate() {
             let base = (i * steps + r) * n;
@@ -243,12 +645,28 @@ fn prepare_host_batch(
     xshape.extend_from_slice(img_shape);
     let mut nshape = vec![b, steps];
     nshape.extend_from_slice(img_shape);
+    let x0 = match TensorBuf::new(xshape, x0) {
+        Ok(t) => t,
+        Err(e) => return Err((reqs, e)),
+    };
+    let t_embs = match TensorBuf::new(vec![steps, time_dim], t_embs) {
+        Ok(t) => t,
+        Err(e) => return Err((reqs, e)),
+    };
+    let coeffs = match TensorBuf::new(vec![steps, 3], coeffs) {
+        Ok(t) => t,
+        Err(e) => return Err((reqs, e)),
+    };
+    let noises = match TensorBuf::new(nshape, noises) {
+        Ok(t) => t,
+        Err(e) => return Err((reqs, e)),
+    };
     Ok(PreparedBatch {
         steps,
-        x0: TensorBuf::new(xshape, x0)?,
-        t_embs: TensorBuf::new(vec![steps, time_dim], t_embs)?,
-        coeffs: TensorBuf::new(vec![steps, 3], coeffs)?,
-        noises: TensorBuf::new(nshape, noises)?,
+        x0,
+        t_embs,
+        coeffs,
+        noises,
         reqs,
         prep_us: t0.elapsed().as_micros() as f64,
     })
@@ -431,7 +849,7 @@ fn denoise_one(
 /// `out`'s slab. A whole-request chunk borrows the prepared tensors
 /// directly; a partial chunk gathers its rows into pool-leased scratch
 /// and returns it before reporting (on the error path the scratch is
-/// simply dropped — an error tears the serving session down).
+/// simply dropped — an error fails the batch's tickets).
 #[allow(clippy::too_many_arguments)]
 fn dispatch_chunk(
     exe: &Executor,
@@ -485,8 +903,9 @@ fn dispatch_chunk(
 
 /// Stage 2 of a batched lane: run one prepared batch through the device
 /// in timestep chunks — in place against two rotating pool-leased image
-/// slabs — and report results. All leased slabs (the prepared batch's
-/// and the rotating pair) go back to the pool on completion.
+/// slabs — resolve every ticket, and report metrics. All leased slabs
+/// (the prepared batch's and the rotating pair) go back to the pool on
+/// completion.
 fn execute_batch(
     ctx: &WorkerCtx,
     exe: &Executor,
@@ -494,7 +913,7 @@ fn execute_batch(
     pool: &BufferPool,
     pb: PreparedBatch,
     stalled: bool,
-    res_tx: &Sender<Result<WorkerMsg>>,
+    res_tx: &Sender<LaneEvent>,
 ) {
     let t0 = Instant::now();
     let b = pb.reqs.len();
@@ -503,13 +922,15 @@ fn execute_batch(
     // the same clear error as the per-request fused path instead of
     // dispatching wrong-shaped literals into XLA.
     if ctx.backend == ServeBackend::Pjrt && steps != ctx.schedule.t_max() {
-        let _ = res_tx.send(Err(anyhow::anyhow!(
+        let e = anyhow!(
             "request {}: the fused scan artifact executes exactly {} steps but the \
              request asked for {steps} — send steps = {} or use the native backend",
-            pb.reqs[0].id,
+            pb.reqs[0].req.id,
             ctx.schedule.t_max(),
             ctx.schedule.t_max()
-        )));
+        );
+        resolve_batch_err(&pb.reqs, &e);
+        let _ = res_tx.send(LaneEvent::Failed { count: b });
         return;
     }
     let chunk = if ctx.chunk == 0 {
@@ -547,7 +968,8 @@ fn execute_batch(
             done,
             c,
         ) {
-            let _ = res_tx.send(Err(e));
+            resolve_batch_err(&pb.reqs, &e);
+            let _ = res_tx.send(LaneEvent::Failed { count: b });
             return;
         }
         spare = cur.replace(dst);
@@ -568,9 +990,9 @@ fn execute_batch(
     let final_x = match cur {
         Some(t) => t,
         None => {
-            let _ = res_tx.send(Err(anyhow::anyhow!(
-                "batched dispatch loop executed no chunks for {steps} steps"
-            )));
+            let e = anyhow!("batched dispatch loop executed no chunks for {steps} steps");
+            resolve_batch_err(&pb.reqs, &e);
+            let _ = res_tx.send(LaneEvent::Failed { count: b });
             return;
         }
     };
@@ -584,7 +1006,8 @@ fn execute_batch(
         })
         .collect();
     if let Err(e) = final_x.unstack_into(&mut images) {
-        let _ = res_tx.send(Err(e));
+        resolve_batch_err(&pb.reqs, &e);
+        let _ = res_tx.send(LaneEvent::Failed { count: b });
         return;
     }
     pool.reclaim(final_x);
@@ -604,21 +1027,27 @@ fn execute_batch(
     pool.reclaim(t_embs);
     pool.reclaim(coeffs);
     pool.reclaim(noises);
+    // resolve every ticket, measuring admission → resolution latency
     // (a dispatch that returned the wrong leading dim already failed
     // above: unstack_into rejects a row-count mismatch)
-    let results: Vec<DenoiseResult> = reqs
-        .iter()
-        .zip(images)
-        .map(|(req, image)| DenoiseResult {
-            id: req.id,
+    let service_us = latency.as_micros() as f64;
+    let mut e2e_us = Vec::with_capacity(b);
+    for (adm, image) in reqs.iter().zip(images) {
+        let res = DenoiseResult {
+            id: adm.req.id,
             image,
             latency,
             steps,
-        })
-        .collect();
-    let _ = res_tx.send(Ok(WorkerMsg {
+        };
+        e2e_us.push(adm.admitted_at.elapsed().as_micros() as f64);
+        let _ = adm.tx.send(Ok(res));
+    }
+    let _ = res_tx.send(LaneEvent::Batch(WorkerMsg {
         worker: ctx.worker,
-        results,
+        requests: b,
+        steps_done: steps * b,
+        service_us: vec![service_us; b],
+        e2e_us,
         step_us,
         host_prep_us: prep_us,
         dispatches,
@@ -634,8 +1063,8 @@ fn run_batched_lane(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
-    batcher: &Arc<Batcher>,
-    res_tx: &Sender<Result<WorkerMsg>>,
+    queue: &Arc<AdmissionQueue>,
+    res_tx: &Sender<LaneEvent>,
 ) {
     // One buffer pool per worker lane, shared by the host-prep stage and
     // the device stage (at most two threads contend, at batch
@@ -648,25 +1077,37 @@ fn run_batched_lane(
         BufferPool::disabled()
     });
     if ctx.pipeline {
-        let (prep_tx, prep_rx) = sync_channel::<Result<PreparedBatch>>(1);
-        let b2 = Arc::clone(batcher);
+        let (prep_tx, prep_rx) = sync_channel::<PreparedBatch>(1);
+        let q2 = Arc::clone(queue);
         let schedule = Arc::clone(&ctx.schedule);
         let img_shape = ctx.img_shape.clone();
         let time_dim = ctx.time_dim;
         let prep_pool = Arc::clone(&pool);
+        let prep_res_tx = res_tx.clone();
         let prep = std::thread::Builder::new()
             .name(format!("sfmmcn-hostprep-{}", ctx.worker))
             .spawn(move || {
-                while let Some(reqs) = b2.next_batch() {
-                    let pb =
-                        prepare_host_batch(reqs, &schedule, &img_shape, time_dim, &prep_pool);
-                    if prep_tx.send(pb).is_err() {
-                        return;
+                while let Some(reqs) = q2.next_batch() {
+                    match prepare_host_batch(reqs, &schedule, &img_shape, time_dim, &prep_pool)
+                    {
+                        Ok(pb) => {
+                            if prep_tx.send(pb).is_err() {
+                                return;
+                            }
+                        }
+                        Err((reqs, e)) => {
+                            // a bad batch fails its own tickets; the lane
+                            // keeps serving the stream
+                            resolve_batch_err(&reqs, &e);
+                            let _ = prep_res_tx.send(LaneEvent::Failed { count: reqs.len() });
+                        }
                     }
                 }
             })
             .expect("spawn host-prep thread");
-        // The first wait is the pipeline filling, not a stall.
+        // The first wait is the pipeline filling, not a stall. (On a
+        // long-running session a wait can also be an empty queue — the
+        // counter reads as "the device had nothing buffered".)
         let mut first = true;
         loop {
             let (pb, stalled) = match prep_rx.try_recv() {
@@ -678,20 +1119,16 @@ fn run_batched_lane(
                 Err(TryRecvError::Disconnected) => break,
             };
             first = false;
-            match pb {
-                Ok(pb) => execute_batch(ctx, exe, prepared, &pool, pb, stalled, res_tx),
-                Err(e) => {
-                    let _ = res_tx.send(Err(e));
-                }
-            }
+            execute_batch(ctx, exe, prepared, &pool, pb, stalled, res_tx);
         }
         let _ = prep.join();
     } else {
-        while let Some(reqs) = batcher.next_batch() {
+        while let Some(reqs) = queue.next_batch() {
             match prepare_host_batch(reqs, &ctx.schedule, &ctx.img_shape, ctx.time_dim, &pool) {
                 Ok(pb) => execute_batch(ctx, exe, prepared, &pool, pb, false, res_tx),
-                Err(e) => {
-                    let _ = res_tx.send(Err(e));
+                Err((reqs, e)) => {
+                    resolve_batch_err(&reqs, &e);
+                    let _ = res_tx.send(LaneEvent::Failed { count: reqs.len() });
                 }
             }
         }
@@ -705,11 +1142,11 @@ fn run_request_lane(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
-    batcher: &Arc<Batcher>,
-    res_tx: &Sender<Result<WorkerMsg>>,
+    queue: &Arc<AdmissionQueue>,
+    res_tx: &Sender<LaneEvent>,
 ) {
-    while let Some(batch) = batcher.next_batch() {
-        for req in batch {
+    while let Some(batch) = queue.next_batch() {
+        for adm in batch {
             let mut step_us = Vec::new();
             let r = if ctx.fused {
                 denoise_one_fused(
@@ -720,7 +1157,7 @@ fn run_request_lane(
                     &ctx.img_shape,
                     ctx.time_dim,
                     ctx.backend == ServeBackend::Native,
-                    &req,
+                    &adm.req,
                     &mut step_us,
                 )
             } else {
@@ -731,16 +1168,23 @@ fn run_request_lane(
                     &ctx.schedule,
                     &ctx.img_shape,
                     ctx.time_dim,
-                    &req,
+                    &adm.req,
                     &mut step_us,
                 )
             };
             match r {
                 Ok(res) => {
                     let dispatches = if ctx.fused { 1 } else { res.steps };
-                    let _ = res_tx.send(Ok(WorkerMsg {
+                    let steps_done = res.steps;
+                    let service_us = res.latency.as_micros() as f64;
+                    let e2e_us = adm.admitted_at.elapsed().as_micros() as f64;
+                    let _ = adm.tx.send(Ok(res));
+                    let _ = res_tx.send(LaneEvent::Batch(WorkerMsg {
                         worker: ctx.worker,
-                        results: vec![res],
+                        requests: 1,
+                        steps_done,
+                        service_us: vec![service_us],
+                        e2e_us: vec![e2e_us],
                         step_us,
                         host_prep_us: 0.0,
                         dispatches,
@@ -752,7 +1196,8 @@ fn run_request_lane(
                     }));
                 }
                 Err(e) => {
-                    let _ = res_tx.send(Err(e));
+                    let _ = adm.tx.send(Err(e));
+                    let _ = res_tx.send(LaneEvent::Failed { count: 1 });
                 }
             }
         }
@@ -782,28 +1227,215 @@ fn worker_setup(ctx: &WorkerCtx) -> Result<(Executor, PreparedInputs)> {
     Ok((exe, prepared))
 }
 
-fn worker_main(ctx: WorkerCtx, batcher: Arc<Batcher>, res_tx: Sender<Result<WorkerMsg>>) {
+fn worker_main(ctx: WorkerCtx, queue: Arc<AdmissionQueue>, res_tx: Sender<LaneEvent>) {
     // Setup (PJRT compilation can take seconds and varies per thread)
     // happens BEFORE the barrier; every worker then reaches the line
     // exactly once, success or not, so the barrier cannot deadlock and
     // the fair queue division starts from a simultaneous standing start.
     let setup = worker_setup(&ctx);
-    batcher.ready_wait();
+    queue.ready_wait();
     let (exe, prepared) = match setup {
         Ok(v) => v,
         Err(e) => {
-            let _ = res_tx.send(Err(e));
+            let _ = res_tx.send(LaneEvent::LaneDown);
+            queue.lane_down(&e);
             return;
         }
     };
     if ctx.batched {
-        run_batched_lane(&ctx, &exe, &prepared, &batcher, &res_tx);
+        run_batched_lane(&ctx, &exe, &prepared, &queue, &res_tx);
     } else {
-        run_request_lane(&ctx, &exe, &prepared, &batcher, &res_tx);
+        run_request_lane(&ctx, &exe, &prepared, &queue, &res_tx);
+    }
+}
+
+/// Live metrics accumulated by the collector thread.
+struct SessionLive {
+    metrics: ServeMetrics,
+    /// Latest cumulative pool snapshot per worker lane (summed on read).
+    worker_pools: Vec<PoolStats>,
+}
+
+fn collector_main(rx: Receiver<LaneEvent>, live: Arc<Mutex<SessionLive>>) {
+    for ev in rx {
+        let mut l = live.lock().unwrap();
+        match ev {
+            LaneEvent::Batch(m) => {
+                for us in m.service_us {
+                    l.metrics.request_latency.record_us(us);
+                }
+                for us in m.e2e_us {
+                    l.metrics.e2e_latency.record_us(us);
+                }
+                for us in m.step_us {
+                    l.metrics.step_latency.record_us(us);
+                }
+                if m.host_prep_us > 0.0 {
+                    l.metrics.host_prep.record_us(m.host_prep_us);
+                }
+                l.metrics.requests_done += m.requests;
+                l.metrics.steps_done += m.steps_done;
+                if let Some(c) = l.metrics.per_worker_requests.get_mut(m.worker) {
+                    *c += m.requests;
+                }
+                l.metrics.dispatches += m.dispatches;
+                l.metrics.batch_items += m.batch_items;
+                if m.stalled {
+                    l.metrics.pipeline_stalls += 1;
+                }
+                if let Some(p) = l.worker_pools.get_mut(m.worker) {
+                    *p = m.pool;
+                }
+            }
+            LaneEvent::Failed { count } => {
+                l.metrics.requests_failed += count;
+            }
+            LaneEvent::LaneDown => {
+                l.metrics.lanes_down += 1;
+            }
+        }
+    }
+}
+
+/// A running serving session: owns the worker lanes, the bounded
+/// admission queue, and the metrics collector. Obtained from
+/// [`DiffusionServer::start`]; ends with [`ServerHandle::shutdown`]
+/// (dropping the handle also drains and joins).
+pub struct ServerHandle {
+    queue: Arc<AdmissionQueue>,
+    live: Arc<Mutex<SessionLive>>,
+    t0: Instant,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    cfg: ServeConfig,
+    time_dim: usize,
+}
+
+impl ServerHandle {
+    /// Admit a request, blocking while the bounded queue is full.
+    /// Returns the ticket that will deliver this request's result, or
+    /// why admission refused it ([`AdmissionError::QueueFull`] never
+    /// occurs on this path).
+    pub fn submit(&self, req: DenoiseRequest) -> std::result::Result<Ticket, AdmissionError> {
+        self.queue.admit(req, true)
+    }
+
+    /// Admit a request without blocking: a full queue returns
+    /// [`AdmissionError::QueueFull`] immediately (load shedding).
+    pub fn try_submit(
+        &self,
+        req: DenoiseRequest,
+    ) -> std::result::Result<Ticket, AdmissionError> {
+        self.queue.admit(req, false)
+    }
+
+    /// Stop admission now (subsequent submits see `ShuttingDown`)
+    /// without waiting for the drain. Call [`ServerHandle::shutdown`] to
+    /// wait and join.
+    pub fn begin_shutdown(&self) {
+        self.queue.begin_drain();
+    }
+
+    /// Requests waiting in the admission queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth_now()
+    }
+
+    /// Snapshot the live session counters without disturbing the lanes:
+    /// queue depth, admitted/rejected/expired, throughput counters, and
+    /// fixed-memory latency percentiles. `wall` is the session age, so
+    /// rates read as "so far". Co-simulation totals are only attached by
+    /// the final [`ServerHandle::shutdown`] metrics.
+    pub fn metrics_snapshot(&self) -> ServeMetrics {
+        let mut m = {
+            let l = self.live.lock().unwrap();
+            let mut m = l.metrics.clone();
+            let mut pool_total = PoolStats::default();
+            for s in &l.worker_pools {
+                pool_total.absorb(s);
+            }
+            m.pool_hits = pool_total.hits;
+            m.pool_misses = pool_total.misses;
+            m.pool_bytes_leased = pool_total.bytes_leased;
+            m
+        };
+        m.admission = self.queue.admission_stats();
+        m.wall = self.t0.elapsed();
+        m
+    }
+
+    /// Graceful drain: close admission, let the lanes finish everything
+    /// already admitted (every outstanding ticket resolves — with a
+    /// result, an execution error, or a deadline expiry), join all
+    /// threads, and return the final session metrics (co-simulation
+    /// included when configured).
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        self.join_lanes();
+        let mut metrics = self.metrics_snapshot();
+
+        // Co-simulation: the SF-MMCN accelerator's counts for the same
+        // work — one U-net pass per executed step. Batched traffic goes
+        // through the cycle-accurate flat micro simulator (ISSUE 3: it is
+        // cheap since the §Perf rewrite, and its fixed-point numerics and
+        // event counts are real); the per-request path keeps the fast
+        // analytic model.
+        if self.cfg.cosim {
+            let acfg = AcceleratorConfig::default();
+            let g = unet(UnetConfig::default());
+            let mut totals = EventCounts {
+                total_pes: acfg.total_pes(),
+                ..Default::default()
+            };
+            if self.cfg.batched {
+                let ws = WeightStore::random(&g, self.cfg.seed);
+                let mut rng = Rng::new(self.cfg.seed ^ 0xc0_51);
+                let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| {
+                    rng.normal() * 0.5
+                });
+                let emb: Vec<f32> = (0..self.time_dim).map(|_| rng.normal() * 0.5).collect();
+                let mut acc = Accelerator::new(acfg);
+                let run = acc.run_graph(&g, &x, &ws, Some(&emb))?;
+                for _ in 0..metrics.steps_done {
+                    totals.merge_run(&run.totals);
+                }
+            } else {
+                let a = crate::compiler::analyze_graph(&acfg, &g, 0.0);
+                for _ in 0..metrics.steps_done {
+                    totals.merge_run(&a.totals);
+                }
+            }
+            metrics.sim_counts = Some(totals);
+        }
+        Ok(metrics)
+    }
+
+    /// Open the gate of a held session (see `start_session`).
+    fn release(&self) {
+        self.queue.release();
+    }
+
+    fn join_lanes(&mut self) {
+        self.queue.begin_drain();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    /// A dropped handle still drains gracefully: admission closes, the
+    /// lanes finish every admitted request (outstanding tickets remain
+    /// waitable), and the threads join. No-op after `shutdown()`.
+    fn drop(&mut self) {
+        self.join_lanes();
     }
 }
 
 /// Serving coordinator.
+#[derive(Clone)]
 pub struct DiffusionServer {
     cfg: ServeConfig,
     artifact: String,
@@ -863,145 +1495,145 @@ impl DiffusionServer {
         })
     }
 
-    /// Serve a batch of requests across `cfg.workers` threads; returns the
-    /// results (in completion order) and aggregated metrics.
-    pub fn serve(&self, requests: Vec<DenoiseRequest>) -> Result<(Vec<DenoiseResult>, ServeMetrics)> {
-        let t0 = Instant::now();
-        let n_requests = requests.len();
-        let batcher = Arc::new(Batcher::new(
-            requests,
-            self.cfg.workers,
-            self.cfg.max_batch,
-        ));
-        let (res_tx, res_rx) = channel::<Result<WorkerMsg>>();
+    /// Start a long-running serving session: spawn the worker lanes and
+    /// the metrics collector, and hand back the [`ServerHandle`] that
+    /// owns them. Requests enter through `submit`/`try_submit`; the
+    /// session ends with `shutdown` (graceful drain).
+    pub fn start(self) -> ServerHandle {
+        self.start_session(None, false)
+    }
 
-        let mut handles = Vec::new();
-        for w in 0..self.cfg.workers {
+    /// Start with an optional queue-depth override and an optional held
+    /// gate (workers wait to grab until `release()` — the legacy
+    /// `serve()` uses this to reproduce the standing-start fair division
+    /// over a preloaded workload).
+    fn start_session(self, depth_override: Option<usize>, held: bool) -> ServerHandle {
+        let cfg = self.cfg.clone();
+        let depth = depth_override.unwrap_or(cfg.queue_depth).max(1);
+        let default_deadline = (cfg.default_deadline_ms > 0)
+            .then(|| Duration::from_millis(cfg.default_deadline_ms));
+        let queue = Arc::new(AdmissionQueue::new(
+            depth,
+            cfg.priorities,
+            default_deadline,
+            cfg.workers,
+            cfg.max_batch,
+            held,
+        ));
+        let live = Arc::new(Mutex::new(SessionLive {
+            metrics: {
+                let mut m = ServeMetrics::new();
+                m.per_worker_requests = vec![0; cfg.workers];
+                m
+            },
+            worker_pools: vec![PoolStats::default(); cfg.workers],
+        }));
+        let (res_tx, res_rx) = channel::<LaneEvent>();
+        let live2 = Arc::clone(&live);
+        let collector = std::thread::Builder::new()
+            .name("sfmmcn-collector".into())
+            .spawn(move || collector_main(res_rx, live2))
+            .expect("spawn collector");
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
             let ctx = WorkerCtx {
                 worker: w,
-                backend: self.cfg.backend,
+                backend: cfg.backend,
                 artifact: self.artifact.clone(),
                 artifact_path: self.artifact_path.clone(),
                 params: Arc::clone(&self.params),
                 schedule: Arc::clone(&self.schedule),
                 img_shape: self.img_shape.clone(),
                 time_dim: self.time_dim,
-                fused: self.cfg.fused,
-                batched: self.cfg.batched,
-                pipeline: self.cfg.pipeline,
-                chunk: self.cfg.chunk,
-                pooled: self.cfg.pooled,
+                fused: cfg.fused,
+                batched: cfg.batched,
+                pipeline: cfg.pipeline,
+                chunk: cfg.chunk,
+                pooled: cfg.pooled,
             };
-            let batcher = Arc::clone(&batcher);
+            let queue = Arc::clone(&queue);
             let res_tx = res_tx.clone();
-            handles.push(
+            workers.push(
                 std::thread::Builder::new()
                     .name(format!("sfmmcn-serve-{w}"))
-                    .spawn(move || worker_main(ctx, batcher, res_tx))
+                    .spawn(move || worker_main(ctx, queue, res_tx))
                     .expect("spawn worker"),
             );
         }
         drop(res_tx);
+        ServerHandle {
+            queue,
+            live,
+            t0: Instant::now(),
+            workers,
+            collector: Some(collector),
+            cfg,
+            time_dim: self.time_dim,
+        }
+    }
 
-        let mut results = Vec::with_capacity(n_requests);
-        let mut metrics = ServeMetrics::new();
-        metrics.per_worker_requests = vec![0; self.cfg.workers];
-        // Pool counters are cumulative per worker lane, so keep each
-        // worker's latest snapshot and sum them once at the end.
-        let mut worker_pools = vec![PoolStats::default(); self.cfg.workers];
-        for msg in res_rx {
-            let m = match msg {
-                Ok(m) => m,
+    /// Serve a batch of requests across `cfg.workers` threads; returns
+    /// the results (in submission order) and aggregated metrics.
+    ///
+    /// This is the legacy one-shot drain, now a thin wrapper over the
+    /// session API: start a held session wide enough for the whole
+    /// workload, submit everything, release the lanes (so the fair
+    /// division sees the full queue at a standing start, exactly like
+    /// the historical batcher), wait every ticket, shut down. Outputs
+    /// are bit-identical to the pre-session implementation.
+    pub fn serve(
+        &self,
+        requests: Vec<DenoiseRequest>,
+    ) -> Result<(Vec<DenoiseResult>, ServeMetrics)> {
+        let n = requests.len();
+        let depth = self.cfg.queue_depth.max(n).max(1);
+        let handle = self.clone().start_session(Some(depth), true);
+        let mut tickets = Vec::with_capacity(n);
+        let mut first_err: Option<anyhow::Error> = None;
+        for req in requests {
+            match handle.submit(req) {
+                Ok(t) => tickets.push(t),
                 Err(e) => {
-                    // cancel: drain the queue so workers exit after their
-                    // in-flight batch, then wait for them (bounded)
-                    batcher.clear();
-                    for h in std::mem::take(&mut handles) {
-                        let _ = h.join();
-                    }
-                    return Err(e);
-                }
-            };
-            for res in m.results {
-                metrics
-                    .request_latency
-                    .record_us(res.latency.as_micros() as f64);
-                metrics.steps_done += res.steps;
-                metrics.requests_done += 1;
-                metrics.per_worker_requests[m.worker] += 1;
-                results.push(res);
-            }
-            for us in m.step_us {
-                metrics.step_latency.record_us(us);
-            }
-            if m.host_prep_us > 0.0 {
-                metrics.host_prep.record_us(m.host_prep_us);
-            }
-            metrics.dispatches += m.dispatches;
-            metrics.batch_items += m.batch_items;
-            if m.stalled {
-                metrics.pipeline_stalls += 1;
-            }
-            worker_pools[m.worker] = m.pool;
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-        let mut pool_total = PoolStats::default();
-        for s in &worker_pools {
-            pool_total.absorb(s);
-        }
-        metrics.pool_hits = pool_total.hits;
-        metrics.pool_misses = pool_total.misses;
-        metrics.pool_bytes_leased = pool_total.bytes_leased;
-        metrics.wall = t0.elapsed();
-
-        // Co-simulation: the SF-MMCN accelerator's counts for the same
-        // work — one U-net pass per executed step. Batched traffic goes
-        // through the cycle-accurate flat micro simulator (ISSUE 3: it is
-        // cheap since the §Perf rewrite, and its fixed-point numerics and
-        // event counts are real); the per-request path keeps the fast
-        // analytic model.
-        if self.cfg.cosim {
-            let acfg = AcceleratorConfig::default();
-            let g = unet(UnetConfig::default());
-            let mut totals = EventCounts {
-                total_pes: acfg.total_pes(),
-                ..Default::default()
-            };
-            if self.cfg.batched {
-                let ws = WeightStore::random(&g, self.cfg.seed);
-                let mut rng = Rng::new(self.cfg.seed ^ 0xc0_51);
-                let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| {
-                    rng.normal() * 0.5
-                });
-                let emb: Vec<f32> = (0..self.time_dim).map(|_| rng.normal() * 0.5).collect();
-                let mut acc = Accelerator::new(acfg);
-                let run = acc.run_graph(&g, &x, &ws, Some(&emb))?;
-                for _ in 0..metrics.steps_done {
-                    totals.merge_run(&run.totals);
-                }
-            } else {
-                let a = crate::compiler::analyze_graph(&acfg, &g, 0.0);
-                for _ in 0..metrics.steps_done {
-                    totals.merge_run(&a.totals);
+                    first_err.get_or_insert_with(|| anyhow!(e));
                 }
             }
-            metrics.sim_counts = Some(totals);
+        }
+        handle.release();
+        let mut results = Vec::with_capacity(tickets.len());
+        for t in tickets {
+            match t.wait() {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        let metrics = handle.shutdown()?;
+        if let Some(e) = first_err {
+            return Err(e);
         }
         Ok((results, metrics))
     }
+}
 
-    /// Generate a deterministic workload of `n` requests.
-    pub fn workload(&self, n: usize) -> Vec<DenoiseRequest> {
-        (0..n)
-            .map(|i| DenoiseRequest {
-                id: i as u64,
-                seed: self.cfg.seed.wrapping_add(i as u64 * 7919),
-                steps: self.cfg.steps,
-            })
-            .collect()
-    }
+/// Generate the `[range]` slice of a deterministic workload: request `i`
+/// is a pure function of `(cfg.steps, seed, i)`, so open-loop clients
+/// and shards can regenerate disjoint slices of the same workload
+/// without coordination (shard k of S takes `(k * n / S)..((k + 1) * n / S)`).
+pub fn workload(
+    cfg: &ServeConfig,
+    seed: u64,
+    range: std::ops::Range<usize>,
+) -> Vec<DenoiseRequest> {
+    range
+        .map(|i| {
+            DenoiseRequest::new(
+                i as u64,
+                seed.wrapping_add((i as u64).wrapping_mul(7919)),
+                cfg.steps,
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -1009,49 +1641,221 @@ mod tests {
     use super::*;
 
     fn req(id: u64, steps: usize) -> DenoiseRequest {
-        DenoiseRequest {
-            id,
-            seed: id,
-            steps,
-        }
+        DenoiseRequest::new(id, id, steps)
+    }
+
+    /// Queue with no default deadline, ungated, depth 64.
+    fn queue(workers: usize, max_batch: usize, levels: usize) -> AdmissionQueue {
+        AdmissionQueue::new(64, levels, None, workers, max_batch, false)
+    }
+
+    /// Admit a request through the real admission path, discarding the
+    /// ticket (tests that only look at batch formation).
+    fn admit(q: &AdmissionQueue, r: DenoiseRequest) {
+        q.admit(r, false).expect("queue has room");
     }
 
     #[test]
-    fn batcher_fair_division_prevents_starvation() {
+    fn queue_fair_division_prevents_starvation() {
         // 8 pending, 2 workers, max_batch 8: the first grab may take at
         // most ceil(8/2) = 4 — the greedy drain that let one worker
         // swallow everything is gone.
-        let b = Batcher::new((0..8).map(|i| req(i, 3)).collect(), 2, 8);
-        let sizes: Vec<usize> = std::iter::from_fn(|| b.next_batch().map(|v| v.len())).collect();
+        let q = queue(2, 8, 1);
+        for i in 0..8 {
+            admit(&q, req(i, 3));
+        }
+        q.begin_drain();
+        let sizes: Vec<usize> = std::iter::from_fn(|| q.next_batch().map(|v| v.len())).collect();
         assert_eq!(sizes, vec![4, 2, 1, 1]);
-        assert!(b.next_batch().is_none());
+        assert!(q.next_batch().is_none());
     }
 
     #[test]
-    fn batcher_respects_max_batch() {
-        let b = Batcher::new((0..12).map(|i| req(i, 3)).collect(), 1, 4);
-        let sizes: Vec<usize> = std::iter::from_fn(|| b.next_batch().map(|v| v.len())).collect();
+    fn queue_respects_max_batch() {
+        let q = queue(1, 4, 1);
+        for i in 0..12 {
+            admit(&q, req(i, 3));
+        }
+        q.begin_drain();
+        let sizes: Vec<usize> = std::iter::from_fn(|| q.next_batch().map(|v| v.len())).collect();
         assert_eq!(sizes, vec![4, 4, 4]);
     }
 
     #[test]
-    fn batcher_groups_by_step_count() {
+    fn queue_groups_by_step_count() {
         // mixed steps: a batch never mixes step counts, so the batched
         // dispatch can honor per-request steps.
-        let reqs = vec![req(0, 5), req(1, 5), req(2, 3), req(3, 3)];
-        let b = Batcher::new(reqs, 1, 8);
-        let first = b.next_batch().unwrap();
+        let q = queue(1, 8, 1);
+        for r in [req(0, 5), req(1, 5), req(2, 3), req(3, 3)] {
+            admit(&q, r);
+        }
+        q.begin_drain();
+        let first = q.next_batch().unwrap();
         assert_eq!(first.len(), 2);
-        assert!(first.iter().all(|r| r.steps == 5));
-        let second = b.next_batch().unwrap();
+        assert!(first.iter().all(|a| a.req.steps == 5));
+        let second = q.next_batch().unwrap();
         assert_eq!(second.len(), 2);
-        assert!(second.iter().all(|r| r.steps == 3));
+        assert!(second.iter().all(|a| a.req.steps == 3));
+    }
+
+    #[test]
+    fn queue_drains_priorities_most_urgent_first() {
+        let q = queue(1, 8, 3);
+        let mut low = req(0, 3);
+        low.priority = 2;
+        let mut high = req(1, 3);
+        high.priority = 0;
+        let mut over = req(2, 3);
+        over.priority = 9; // clamps to the lowest level (2)
+        admit(&q, low);
+        admit(&q, high);
+        admit(&q, over);
+        q.begin_drain();
+        let first = q.next_batch().unwrap();
+        assert_eq!(first.len(), 1, "priority lanes never mix in one batch");
+        assert_eq!(first[0].req.id, 1, "priority 0 drains first");
+        let second = q.next_batch().unwrap();
+        let ids: Vec<u64> = second.iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, vec![0, 2], "same-level FIFO, clamped priority joins it");
+    }
+
+    #[test]
+    fn queue_bounded_admission_and_shutdown_rejections() {
+        let q = AdmissionQueue::new(2, 1, None, 1, 4, false);
+        let _t0 = q.admit(req(0, 3), false).unwrap();
+        let _t1 = q.admit(req(1, 3), false).unwrap();
+        assert_eq!(
+            q.admit(req(2, 3), false).unwrap_err(),
+            AdmissionError::QueueFull
+        );
+        q.begin_drain();
+        assert_eq!(
+            q.admit(req(3, 3), false).unwrap_err(),
+            AdmissionError::ShuttingDown
+        );
+        let s = q.admission_stats();
+        assert_eq!(s.offered, 4);
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected_queue_full, 1);
+        assert_eq!(s.rejected_shutdown, 1);
+        assert_eq!(s.queue_depth, 2);
+    }
+
+    #[test]
+    fn queue_rejects_unmeetable_deadline_at_admission() {
+        let q = queue(1, 4, 1);
+        let mut r = req(0, 3);
+        r.deadline = Some(Duration::ZERO);
+        assert_eq!(q.admit(r, false).unwrap_err(), AdmissionError::Deadline);
+        assert_eq!(q.admission_stats().rejected_deadline, 1);
+    }
+
+    #[test]
+    fn queue_expires_stale_entries_at_batch_formation() {
+        let q = queue(1, 4, 1);
+        let mut stale = req(0, 3);
+        // long enough to survive the admission-time expiry check, far
+        // shorter than the sleep before the pop
+        stale.deadline = Some(Duration::from_millis(2));
+        let t_stale = q.admit(stale, false).unwrap();
+        let t_live = q.admit(req(1, 3), false).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        q.begin_drain();
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.id, 1, "only the live request executes");
+        assert!(q.next_batch().is_none());
+        let err = t_stale.wait().unwrap_err().to_string();
+        assert!(err.contains("expired"), "{err}");
+        assert_eq!(q.admission_stats().expired, 1);
+        // the live ticket is still pending (nothing executed it here)
+        drop(t_live);
+        drop(batch);
+    }
+
+    #[test]
+    fn queue_expires_low_priority_entries_while_popping_urgent_lane() {
+        // Liveness: the front-of-lane expiry sweep must cover EVERY
+        // priority lane on each batch formation — a stale low-priority
+        // entry resolves (and frees its bounded-queue slot) even though
+        // the batch itself comes from the urgent lane.
+        let q = AdmissionQueue::new(3, 3, None, 1, 8, false);
+        let mut stale_low = req(0, 3);
+        stale_low.priority = 2;
+        stale_low.deadline = Some(Duration::from_millis(2));
+        let t_stale = q.admit(stale_low, false).unwrap();
+        admit(&q, req(1, 3)); // urgent (priority 0)
+        std::thread::sleep(Duration::from_millis(25));
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch[0].req.id, 1, "batch comes from the urgent lane");
+        // the stale low-priority ticket resolved during that same pop
+        let err = t_stale.wait().unwrap_err().to_string();
+        assert!(err.contains("expired"), "{err}");
+        let s = q.admission_stats();
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.queue_depth, 0, "the dead entry released its slot");
+        // and the freed slot is admissible again (depth 3, 0 queued)
+        q.admit(req(2, 3), false).unwrap();
+    }
+
+    #[test]
+    fn queue_held_gate_blocks_grabs_until_release() {
+        let q = Arc::new(AdmissionQueue::new(8, 1, None, 1, 4, true));
+        admit(&q, req(0, 3));
+        let (tx, rx) = channel();
+        let q2 = Arc::clone(&q);
+        let grabber = std::thread::spawn(move || {
+            let b = q2.next_batch();
+            let _ = tx.send(b.map(|v| v.len()));
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "held queue must not hand out batches"
+        );
+        q.release();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Some(1),
+            "released queue serves the waiting grab"
+        );
+        grabber.join().unwrap();
+    }
+
+    #[test]
+    fn ticket_try_wait_polls_and_fuses() {
+        let q = queue(1, 4, 1);
+        let mut t = q.admit(req(0, 3), false).unwrap();
+        assert!(t.try_wait().is_none(), "unresolved ticket polls None");
+        q.begin_drain();
+        let batch = q.next_batch().unwrap();
+        let _ = batch[0].tx.send(Err(anyhow!("boom")));
+        let r = t.try_wait().expect("resolved now");
+        assert!(r.unwrap_err().to_string().contains("boom"));
+        let again = t.try_wait().expect("fused");
+        assert!(again.unwrap_err().to_string().contains("already consumed"));
+    }
+
+    /// Wrap plain requests as Admitted entries (prepare-stage tests).
+    fn admitted(reqs: Vec<DenoiseRequest>) -> Vec<Admitted> {
+        reqs.into_iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let (tx, _rx) = channel();
+                Admitted {
+                    req,
+                    ticket: i as u64,
+                    admitted_at: Instant::now(),
+                    deadline: None,
+                    tx,
+                }
+            })
+            .collect()
     }
 
     #[test]
     fn prepared_batch_layout_and_noise_order() {
         let schedule = DdpmSchedule::standard(4);
-        let reqs = vec![req(0, 4), req(1, 4)];
+        let reqs = admitted(vec![req(0, 4), req(1, 4)]);
         let pool = BufferPool::disabled();
         let pb = prepare_host_batch(reqs, &schedule, &[1, 2, 2], 8, &pool).unwrap();
         assert_eq!(pb.x0.shape, vec![2, 1, 2, 2]);
@@ -1076,9 +1880,14 @@ mod tests {
     fn noise_chunk_gather() {
         let schedule = DdpmSchedule::standard(3);
         let pool = BufferPool::disabled();
-        let pb =
-            prepare_host_batch(vec![req(0, 3), req(1, 3)], &schedule, &[1, 2, 2], 4, &pool)
-                .unwrap();
+        let pb = prepare_host_batch(
+            admitted(vec![req(0, 3), req(1, 3)]),
+            &schedule,
+            &[1, 2, 2],
+            4,
+            &pool,
+        )
+        .unwrap();
         let mut chunk = vec![0.0f32; 2 * 2 * 4];
         copy_noise_chunk_into(&pb.noises, 2, 3, 1, 2, &mut chunk).unwrap();
         // row 1 of request 0 lands at the front of the chunk
@@ -1092,11 +1901,22 @@ mod tests {
     }
 
     #[test]
-    fn prepare_rejects_bad_step_counts() {
+    fn prepare_rejects_bad_step_counts_and_returns_the_batch() {
         let schedule = DdpmSchedule::standard(4);
         let pool = BufferPool::disabled();
-        assert!(prepare_host_batch(vec![req(0, 0)], &schedule, &[1, 2, 2], 4, &pool).is_err());
-        assert!(prepare_host_batch(vec![req(0, 9)], &schedule, &[1, 2, 2], 4, &pool).is_err());
+        let (reqs, e) =
+            prepare_host_batch(admitted(vec![req(0, 0)]), &schedule, &[1, 2, 2], 4, &pool)
+                .unwrap_err();
+        assert_eq!(reqs.len(), 1, "the batch comes back for ticket resolution");
+        assert!(e.to_string().contains("out of range"), "{e}");
+        assert!(prepare_host_batch(
+            admitted(vec![req(0, 9)]),
+            &schedule,
+            &[1, 2, 2],
+            4,
+            &pool
+        )
+        .is_err());
     }
 
     #[test]
@@ -1109,7 +1929,7 @@ mod tests {
         let schedule = DdpmSchedule::standard(4);
         let mk = |pool: &BufferPool| {
             prepare_host_batch(
-                vec![req(0, 4), req(1, 4)],
+                admitted(vec![req(0, 4), req(1, 4)]),
                 &schedule,
                 &[1, 2, 2],
                 8,
@@ -1131,5 +1951,25 @@ mod tests {
         assert_eq!(recycled.t_embs, cold.t_embs);
         assert_eq!(recycled.coeffs, cold.coeffs);
         assert_eq!(recycled.noises, cold.noises);
+    }
+
+    #[test]
+    fn workload_is_deterministic_per_index() {
+        let cfg = ServeConfig {
+            steps: 7,
+            ..ServeConfig::default()
+        };
+        let whole = workload(&cfg, 42, 0..8);
+        assert_eq!(whole.len(), 8);
+        // two disjoint shards reproduce exactly the same requests
+        let lo = workload(&cfg, 42, 0..4);
+        let hi = workload(&cfg, 42, 4..8);
+        for (a, b) in whole.iter().zip(lo.iter().chain(hi.iter())) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.steps, b.steps);
+        }
+        assert!(whole.iter().all(|r| r.steps == 7));
+        assert!(whole.iter().all(|r| r.deadline.is_none() && r.priority == 0));
     }
 }

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 use sf_mmcn::baselines::mmcn;
 use sf_mmcn::compiler::analyze_graph;
 use sf_mmcn::config::{ModelChoice, RunConfig, ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::DiffusionServer;
+use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer};
 use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
 use sf_mmcn::report;
 use sf_mmcn::runtime::ArtifactStore;
@@ -37,7 +37,8 @@ USAGE: sf-mmcn <subcommand> [options]
   serve     [--steps 50] [--requests 8] [--workers 2] [--fused]
             [--backend pjrt|native] [--native] [--batched] [--no-batch]
             [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
-            [--config file.toml]
+            [--queue-depth 64] [--deadline-ms 0] [--priorities 3]
+            [--open-loop [--rate 8.0]] [--config file.toml]
   sweep     [--model resnet18] [--img 224]
   report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
             headlines|all
@@ -186,6 +187,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // per-batch-allocating baseline (ISSUE 4 comparison mode)
         cfg.pooled = false;
     }
+    cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
+    cfg.default_deadline_ms = args.get_u64("deadline-ms", cfg.default_deadline_ms)?;
+    cfg.priorities = args.get_usize("priorities", cfg.priorities)?;
+
+    if args.flag("open-loop") {
+        // Streaming session demo (ISSUE 5): requests arrive on a fixed
+        // synthetic schedule instead of being pre-staged; overload is
+        // shed at the bounded admission queue instead of growing latency.
+        let rate = args.get_f64("rate", 8.0)?;
+        return cmd_serve_open_loop(&cfg, rate);
+    }
 
     let store = ArtifactStore::default_store();
     let server = DiffusionServer::new(cfg.clone(), &store)?;
@@ -202,7 +214,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ""
         }
     );
-    let reqs = server.workload(cfg.requests);
+    let reqs = workload(&cfg, cfg.seed, 0..cfg.requests);
     let (results, metrics) = server.serve(reqs)?;
     println!("{}", metrics.render());
     if let Some(rep) = metrics.sim_report(&CAL_40NM, 8) {
@@ -221,6 +233,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "sample image: id {} shape {:?} mean {:.4}",
             r.id, r.image.shape, mean
+        );
+    }
+    Ok(())
+}
+
+/// Open-loop streaming client (ISSUE 5): submit `cfg.requests` requests
+/// at a fixed arrival rate through the session API, shedding overload at
+/// the bounded admission queue, then drain gracefully and report the
+/// live-session metrics (streaming latency percentiles included).
+fn cmd_serve_open_loop(cfg: &ServeConfig, rate: f64) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    if rate <= 0.0 || !rate.is_finite() {
+        bail!("--rate must be a positive number of requests/s, got {rate}");
+    }
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store)?;
+    println!(
+        "open-loop serving: {} requests arriving at {rate:.1} req/s ({} steps each), \
+         {} workers, queue depth {}, {} backend …",
+        cfg.requests,
+        cfg.steps,
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.backend.name(),
+    );
+    let handle = server.start();
+    let reqs = workload(cfg, cfg.seed, 0..cfg.requests);
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    let (mut shed, mut dead) = (0usize, 0usize);
+    for (i, req) in reqs.into_iter().enumerate() {
+        // fixed synthetic arrival schedule: request i is due at i/rate
+        if let Some(sleep) = interval.mul_f64(i as f64).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match handle.try_submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => shed += 1,
+            Err(AdmissionError::Deadline) => dead += 1,
+            Err(AdmissionError::ShuttingDown) => break,
+        }
+    }
+    println!(
+        "\nmid-session snapshot (arrivals done, queue draining):\n{}",
+        handle.metrics_snapshot().render()
+    );
+    let (mut completed, mut failed) = (0usize, 0usize);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let metrics = handle.shutdown()?;
+    println!("final session metrics:\n{}", metrics.render());
+    println!(
+        "open-loop summary: {completed} completed, {failed} failed/expired, \
+         {shed} shed at admission (QueueFull), {dead} rejected on deadline"
+    );
+    if let Some(rep) = metrics.sim_report(&CAL_40NM, 8) {
+        println!(
+            "co-simulated SF-MMCN: {} cycles  {:.3} ms @400 MHz  {:.1} mW core",
+            rep.cycles,
+            rep.runtime_s * 1e3,
+            rep.core_power_w * 1e3,
         );
     }
     Ok(())

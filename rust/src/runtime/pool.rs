@@ -379,6 +379,50 @@ mod tests {
     }
 
     #[test]
+    fn shrink_edge_paths() {
+        // keep >= retained: a no-op, nothing dropped
+        let p = BufferPool::new();
+        p.give_back(p.lease(8));
+        p.give_back(p.lease(16));
+        p.shrink(5);
+        assert_eq!(p.stats().retained, 2, "shrink above the count is a no-op");
+        p.shrink(2);
+        assert_eq!(p.stats().retained, 2, "shrink at the count is a no-op");
+        // shrink(0) empties the free list entirely
+        p.shrink(0);
+        let s = p.stats();
+        assert_eq!(s.retained, 0);
+        assert_eq!(s.retained_bytes, 0);
+        // and the pool still works afterwards (leases just allocate)
+        let v = p.lease(8);
+        assert_eq!(v.len(), 8);
+        // shrink of an empty pool is safe
+        p.shrink(0);
+        assert_eq!(p.stats().retained, 0);
+    }
+
+    #[test]
+    fn retain_bound_exact_boundary_and_refill() {
+        // returns land exactly at the bound, never beyond — and a lease
+        // out of the bounded list re-opens a slot for the next return
+        let p = BufferPool::with_max_retained(2);
+        p.give_back(p.lease(8));
+        p.give_back(p.lease(8));
+        assert_eq!(p.stats().retained, 2, "filled exactly to the bound");
+        p.give_back(p.lease(8)); // lease takes one out, return puts it back
+        assert_eq!(p.stats().retained, 2, "stays at the bound across churn");
+        let held = p.lease(8);
+        assert_eq!(p.stats().retained, 1, "outstanding lease frees a slot");
+        p.give_back(held);
+        assert_eq!(p.stats().retained, 2);
+        // with_max_retained(0) behaves exactly like disabled()
+        let z = BufferPool::with_max_retained(0);
+        z.give_back(z.lease(4));
+        assert_eq!(z.stats().retained, 0);
+        assert_eq!(z.stats().hits, 0);
+    }
+
+    #[test]
     fn disabled_pool_always_allocates() {
         let p = BufferPool::disabled();
         p.give_back(p.lease(8));

@@ -120,4 +120,65 @@ mod tests {
         let out: Vec<u64> = pool.map(Vec::<u64>::new(), |x| x);
         assert!(out.is_empty());
     }
+
+    #[test]
+    fn drop_runs_jobs_still_queued_at_drop_time() {
+        // Drop closes the submission side and JOINS — it must not strand
+        // jobs still sitting in the queue. One slow worker guarantees a
+        // backlog exists the moment the pool is dropped; every queued
+        // job must still execute before drop returns.
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        // head job holds the single worker so the rest stay queued
+        {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // the backlog cannot have drained yet: the head job sleeps far
+        // longer than the submission loop takes
+        drop(pool);
+        assert_eq!(
+            counter.load(Ordering::SeqCst),
+            51,
+            "drop must drain the queued backlog, not discard it"
+        );
+    }
+
+    #[test]
+    fn workers_shut_down_after_drop() {
+        // After drop returns, the worker threads are joined — submitting
+        // through a clone of nothing is impossible by construction, and
+        // a second pool can be created immediately (no thread leakage
+        // across pools sharing names).
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        let n_after_join = counter.load(Ordering::SeqCst);
+        assert_eq!(n_after_join, 10);
+        // fresh pool over the same counter works independently
+        let pool2 = ThreadPool::new(3);
+        for _ in 0..5 {
+            let c = Arc::clone(&counter);
+            pool2.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool2);
+        assert_eq!(counter.load(Ordering::SeqCst), 15);
+    }
 }

@@ -74,11 +74,29 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Retained samples per [`LatencyHist`]: counts and the mean stay exact
+/// beyond this, percentiles come from a uniform reservoir.
+const LATENCY_HIST_CAP: usize = 4096;
+
 /// Collects latency samples and reports p50/p95/p99 — used by the
 /// coordinator's serving metrics.
-#[derive(Debug, Clone, Default)]
+///
+/// Memory is bounded: the first [`LATENCY_HIST_CAP`] samples are kept
+/// exactly; beyond that, reservoir sampling (Vitter's algorithm R, with
+/// a deterministic xorshift stream) keeps a uniform subset, so a
+/// long-running serving session's metrics — and every
+/// `metrics_snapshot()` clone of them — stay O(1) no matter how many
+/// requests flow through. `count()` and `mean_us()` always cover every
+/// recorded sample; `percentile_us()` is exact below the cap and a
+/// statistically representative estimate above it.
+#[derive(Debug, Clone)]
 pub struct LatencyHist {
     samples_us: Vec<f64>,
+    /// Total samples ever recorded (not just retained).
+    seen: u64,
+    /// Exact running sum of every recorded sample.
+    sum: f64,
+    rng_state: u64,
 }
 
 impl LatencyHist {
@@ -86,12 +104,34 @@ impl LatencyHist {
         Self::default()
     }
 
-    pub fn record_us(&mut self, us: f64) {
-        self.samples_us.push(us);
+    /// Deterministic xorshift64 stream for reservoir replacement slots.
+    fn next_rand(&mut self) -> u64 {
+        let mut x = self.rng_state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng_state = x;
+        x
     }
 
+    pub fn record_us(&mut self, us: f64) {
+        self.seen += 1;
+        self.sum += us;
+        if self.samples_us.len() < LATENCY_HIST_CAP {
+            self.samples_us.push(us);
+        } else {
+            // algorithm R: keep the new sample with probability cap/seen,
+            // replacing a uniformly chosen retained one
+            let j = self.next_rand() % self.seen;
+            if (j as usize) < LATENCY_HIST_CAP {
+                self.samples_us[j as usize] = us;
+            }
+        }
+    }
+
+    /// Total samples recorded (exact, not the retained subset size).
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.seen as usize
     }
 
     pub fn percentile_us(&self, p: f64) -> f64 {
@@ -104,10 +144,212 @@ impl LatencyHist {
     }
 
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+        self.sum / self.seen as f64
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self {
+            samples_us: Vec::new(),
+            seen: 0,
+            sum: 0.0,
+            // fixed nonzero seed: xorshift has a zero fixed point
+            rng_state: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+}
+
+/// Streaming quantile estimator (the P² algorithm of Jain & Chlamtac,
+/// CACM 1985): tracks one quantile of an unbounded stream in O(1) memory
+/// — five marker heights, no sample buffer at all (the bounded-reservoir
+/// [`LatencyHist`] keeps a capped subset; this keeps nothing). The
+/// long-running serving session uses it for live e2e latency
+/// percentiles.
+///
+/// The first five observations are held exactly (and the estimate is the
+/// exact percentile over them); from the sixth on, the markers adjust by
+/// piecewise-parabolic interpolation toward their ideal positions.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    /// Target quantile in (0, 1).
+    p: f64,
+    /// Marker heights q0..q4 (q0 = min, q4 = max once initialized).
+    q: [f64; 5],
+    /// Actual marker positions (1-based observation ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    dn: [f64; 5],
+    count: u64,
+    /// The first five samples, kept until initialization.
+    boot: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "quantile must be in [0, 1]");
+        Self {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            boot: [0.0; 5],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Piecewise-parabolic (P²) candidate height for marker `i` moved by
+    /// `d` (±1).
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    /// Linear fallback when the parabolic candidate leaves (q[i-1], q[i+1]).
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.count < 5 {
+            self.boot[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                let mut b = self.boot;
+                b.sort_by(|a, c| a.partial_cmp(c).unwrap());
+                self.q = b;
+            }
+            return;
+        }
+        self.count += 1;
+        // locate the cell k with q[k] <= x < q[k+1], extending the
+        // extremes when x falls outside them
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for (i, q) in self.q.iter().enumerate().take(4) {
+                if *q <= x {
+                    k = i;
+                }
+            }
+            k
+        };
+        for n in self.n.iter_mut().skip(k + 1) {
+            *n += 1.0;
+        }
+        for (np, dn) in self.np.iter_mut().zip(self.dn) {
+            *np += dn;
+        }
+        // nudge the three interior markers toward their ideal positions
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let cand = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < cand && cand < self.q[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    /// Current estimate (exact for the first five samples; 0 when empty).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count <= 5 {
+            let mut b: Vec<f64> = self.boot[..self.count as usize].to_vec();
+            b.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            return percentile(&b, self.p * 100.0);
+        }
+        self.q[2]
+    }
+}
+
+/// Fixed-memory p50/p95/p99 latency summary over an unbounded stream —
+/// three [`P2Quantile`] markers plus running count/mean. This is what the
+/// streaming serving session reports live: unlike [`LatencyHist`] it
+/// never buffers samples, so `metrics_snapshot()` stays O(1) no matter
+/// how long the session runs.
+#[derive(Debug, Clone)]
+pub struct StreamingPercentiles {
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+    count: u64,
+    sum: f64,
+}
+
+impl StreamingPercentiles {
+    pub fn new() -> Self {
+        Self {
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.p50.add(us);
+        self.p95.add(us);
+        self.p99.add(us);
+        self.count += 1;
+        self.sum += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.p50.value()
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.p95.value()
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.p99.value()
+    }
+}
+
+impl Default for StreamingPercentiles {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -155,8 +397,137 @@ mod tests {
     }
 
     #[test]
+    fn latency_hist_memory_is_bounded_beyond_cap() {
+        // Long-session contract: counts and the mean stay exact while
+        // retained storage (and the percentile basis) stays capped.
+        let mut h = LatencyHist::new();
+        let n = 50_000u64;
+        let mut sum = 0.0;
+        for i in 0..n {
+            // uniform-ish sweep over [0, 1000)
+            let x = (i % 1000) as f64;
+            sum += x;
+            h.record_us(x);
+        }
+        assert_eq!(h.count(), n as usize, "count covers every sample");
+        assert!((h.mean_us() - sum / n as f64).abs() < 1e-9, "mean exact");
+        assert!(
+            h.samples_us.len() <= super::LATENCY_HIST_CAP,
+            "retained reservoir stays bounded ({} samples)",
+            h.samples_us.len()
+        );
+        // the reservoir is a uniform subset: its median must land near
+        // the true median (~500) — generous tolerance, deterministic rng
+        let p50 = h.percentile_us(50.0);
+        assert!(
+            (p50 - 500.0).abs() < 60.0,
+            "reservoir median drifted: {p50}"
+        );
+    }
+
+    #[test]
     fn geomean_matches_hand() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    /// Exact percentile of an unsorted sample set (test oracle).
+    fn exact(samples: &[f64], p: f64) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&s, p)
+    }
+
+    #[test]
+    fn p2_exact_below_six_samples() {
+        let mut q = P2Quantile::new(0.5);
+        assert_eq!(q.value(), 0.0, "empty estimator reports 0");
+        for (i, x) in [5.0, 1.0, 4.0, 2.0, 3.0].iter().enumerate() {
+            q.add(*x);
+            assert_eq!(q.count(), i as u64 + 1);
+        }
+        // exactly the sorted-vector median of the five samples
+        assert!((q.value() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_stream_percentiles() {
+        // seeded uniform data on [0, 1000): the P² estimate must land
+        // close to the exact sorted-vector percentile
+        let mut rng = crate::util::Rng::new(1234);
+        let samples: Vec<f64> = (0..20_000).map(|_| rng.f64() * 1000.0).collect();
+        // P² is approximate: allow 2.5% of the range (typical error on
+        // this size is well under 1%)
+        for (p, tol) in [(0.5, 25.0), (0.95, 25.0), (0.99, 25.0)] {
+            let mut est = P2Quantile::new(p);
+            for &x in &samples {
+                est.add(x);
+            }
+            let truth = exact(&samples, p * 100.0);
+            assert!(
+                (est.value() - truth).abs() < tol,
+                "p{}: estimate {} vs exact {}",
+                p * 100.0,
+                est.value(),
+                truth
+            );
+        }
+    }
+
+    #[test]
+    fn p2_tracks_skewed_latency_like_stream() {
+        // latency-shaped data: lognormal-ish via exp(normal), scaled —
+        // the skewed tail is what p99 estimation exists for
+        let mut rng = crate::util::Rng::new(99);
+        let samples: Vec<f64> = (0..20_000)
+            .map(|_| (rng.normal() as f64 * 0.5).exp() * 100.0)
+            .collect();
+        for (p, rel_tol) in [(0.5, 0.08), (0.95, 0.12), (0.99, 0.18)] {
+            let mut est = P2Quantile::new(p);
+            for &x in &samples {
+                est.add(x);
+            }
+            let truth = exact(&samples, p * 100.0);
+            let rel = (est.value() - truth).abs() / truth;
+            assert!(
+                rel < rel_tol,
+                "p{}: estimate {} vs exact {} (rel err {rel:.4})",
+                p * 100.0,
+                est.value(),
+                truth
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_percentiles_monotone_and_mean() {
+        let mut sp = StreamingPercentiles::new();
+        assert_eq!(sp.count(), 0);
+        assert_eq!(sp.mean_us(), 0.0);
+        let mut rng = crate::util::Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..5_000 {
+            let x = rng.f64() * 10_000.0;
+            sum += x;
+            sp.record_us(x);
+        }
+        assert_eq!(sp.count(), 5_000);
+        assert!((sp.mean_us() - sum / 5_000.0).abs() < 1e-6);
+        assert!(sp.p50_us() <= sp.p95_us());
+        assert!(sp.p95_us() <= sp.p99_us());
+        // uniform [0, 10000): p50 ~ 5000, p99 ~ 9900
+        assert!((sp.p50_us() - 5000.0).abs() < 300.0, "p50 {}", sp.p50_us());
+        assert!(sp.p99_us() > 9500.0, "p99 {}", sp.p99_us());
+    }
+
+    #[test]
+    fn p2_constant_stream_degenerates_safely() {
+        // identical samples collapse all marker heights; the estimator
+        // must not divide by zero or drift
+        let mut est = P2Quantile::new(0.95);
+        for _ in 0..1_000 {
+            est.add(42.0);
+        }
+        assert_eq!(est.value(), 42.0);
     }
 }

@@ -1,17 +1,23 @@
 //! End-to-end serving integration tests: the full coordinator path
-//! (queue → fair batcher → worker lanes → DDPM loop) on small workloads.
+//! (bounded admission queue → fair batcher → worker lanes → DDPM loop)
+//! on small workloads.
 //!
 //! Two tiers:
 //!
 //! * **Native tests** run unconditionally — the serving stack executes on
 //!   the host-CPU surrogate runtime with synthetic parameters, so tier-1
-//!   exercises batching, pipelining, fairness, and determinism offline.
+//!   exercises admission control, batching, pipelining, fairness, and
+//!   determinism offline.
 //! * **PJRT tests** additionally require `make artifacts` *and* a
 //!   PJRT-enabled build (`--features pjrt` against the real xla crate);
 //!   each skips cleanly when either is missing.
 
+use std::time::Duration;
+
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{DenoiseRequest, DenoiseResult, DiffusionServer};
+use sf_mmcn::coordinator::{
+    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer,
+};
 use sf_mmcn::runtime::{ArtifactStore, Executor};
 use sf_mmcn::sim::energy::CAL_40NM;
 
@@ -38,16 +44,13 @@ fn native_cfg(steps: usize, workers: usize, max_batch: usize, batched: bool) -> 
         pipeline: true,
         chunk: 0,
         pooled: true,
+        ..ServeConfig::default()
     }
 }
 
 fn reqs(n: u64, steps: usize) -> Vec<DenoiseRequest> {
     (0..n)
-        .map(|i| DenoiseRequest {
-            id: i,
-            seed: 500 + i,
-            steps,
-        })
+        .map(|i| DenoiseRequest::new(i, 500 + i, steps))
         .collect()
 }
 
@@ -65,6 +68,12 @@ fn native_serves_all_requests_exactly_once() {
     assert_eq!(metrics.step_latency.count(), 20);
     assert!(metrics.dispatches >= 1);
     assert_eq!(metrics.batch_items, 5, "each request in exactly one dispatch");
+    // the serve() wrapper goes through the admission queue now
+    assert_eq!(metrics.admission.offered, 5);
+    assert_eq!(metrics.admission.admitted, 5);
+    assert_eq!(metrics.admission.rejected_total(), 0);
+    assert_eq!(metrics.admission.queue_depth, 0, "drained at shutdown");
+    assert_eq!(metrics.e2e_latency.count(), 5);
 }
 
 #[test]
@@ -198,11 +207,7 @@ fn pooled_mixed_step_counts_bit_identical_to_allocating() {
     // storage for every size.
     let mixed = |pooled: bool| {
         let mut all = reqs(3, 6);
-        all.extend((3..6).map(|i| DenoiseRequest {
-            id: i,
-            seed: 500 + i,
-            steps: 2,
-        }));
+        all.extend((3..6).map(|i| DenoiseRequest::new(i, 500 + i, 2)));
         let mut cfg = native_cfg(6, 2, 4, true);
         cfg.pooled = pooled;
         let s = native_server(cfg);
@@ -250,13 +255,7 @@ fn pool_misses_stay_flat_after_warmup() {
 #[test]
 fn native_deterministic_per_seed() {
     let s = native_server(native_cfg(3, 1, 2, true));
-    let req = |seed| {
-        vec![DenoiseRequest {
-            id: 0,
-            seed,
-            steps: 3,
-        }]
-    };
+    let req = |seed| vec![DenoiseRequest::new(0, seed, 3)];
     let (r1, _) = s.serve(req(42)).unwrap();
     let (r2, _) = s.serve(req(42)).unwrap();
     let (r3, _) = s.serve(req(43)).unwrap();
@@ -269,7 +268,8 @@ fn native_fair_batcher_spreads_work_across_workers() {
     // Starvation regression test: with max_batch >= the whole queue, the
     // old greedy batcher let one worker swallow all 8 requests. The fair
     // batcher divides by worker count (first grab <= ceil(8/2) = 4), and
-    // the start barrier keeps any lane from draining before all exist.
+    // the start barrier plus the serve() standing-start gate keep any
+    // lane from draining before all exist.
     let s = native_server(native_cfg(6, 2, 8, true));
     let (results, m) = s.serve(reqs(8, 6)).unwrap();
     assert_eq!(results.len(), 8);
@@ -293,11 +293,7 @@ fn native_mixed_step_counts_honored_per_request() {
     // path used to ignore them). Mixed-step workloads batch in same-step
     // groups and every result reports its own step count.
     let mut all = reqs(3, 6);
-    all.extend((3..6).map(|i| DenoiseRequest {
-        id: i,
-        seed: 500 + i,
-        steps: 2,
-    }));
+    all.extend((3..6).map(|i| DenoiseRequest::new(i, 500 + i, 2)));
     let s = native_server(native_cfg(6, 2, 4, true));
     let (mut results, m) = s.serve(all).unwrap();
     results.sort_by_key(|r| r.id);
@@ -313,13 +309,7 @@ fn native_mixed_step_counts_honored_per_request() {
     // and a 2-step request batched here must equal the same request run
     // solo through the per-request path (same 6-step schedule)
     let s2 = native_server(native_cfg(6, 1, 1, false));
-    let (r2, _) = s2
-        .serve(vec![DenoiseRequest {
-            id: 3,
-            seed: 503,
-            steps: 2,
-        }])
-        .unwrap();
+    let (r2, _) = s2.serve(vec![DenoiseRequest::new(3, 503, 2)]).unwrap();
     let mixed = results.iter().find(|r| r.id == 3).unwrap();
     assert_eq!(mixed.image.data, r2[0].image.data);
 }
@@ -327,11 +317,7 @@ fn native_mixed_step_counts_honored_per_request() {
 #[test]
 fn native_rejects_out_of_range_steps() {
     let s = native_server(native_cfg(4, 1, 2, false));
-    let bad = vec![DenoiseRequest {
-        id: 9,
-        seed: 1,
-        steps: 99,
-    }];
+    let bad = vec![DenoiseRequest::new(9, 1, 99)];
     let err = s.serve(bad).unwrap_err().to_string();
     assert!(err.contains("steps 99"), "{err}");
     assert!(err.contains("out of range"), "{err}");
@@ -343,24 +329,12 @@ fn native_fused_honors_per_request_steps() {
     let mut cfg = native_cfg(6, 1, 1, false);
     cfg.fused = true;
     let s = native_server(cfg);
-    let (r, m) = s
-        .serve(vec![DenoiseRequest {
-            id: 0,
-            seed: 77,
-            steps: 4,
-        }])
-        .unwrap();
+    let (r, m) = s.serve(vec![DenoiseRequest::new(0, 77, 4)]).unwrap();
     assert_eq!(r[0].steps, 4);
     assert_eq!(m.steps_done, 4);
     // and matches the step-at-a-time result bit for bit
     let s_step = native_server(native_cfg(6, 1, 1, false));
-    let (r_step, _) = s_step
-        .serve(vec![DenoiseRequest {
-            id: 0,
-            seed: 77,
-            steps: 4,
-        }])
-        .unwrap();
+    let (r_step, _) = s_step.serve(vec![DenoiseRequest::new(0, 77, 4)]).unwrap();
     assert_eq!(r[0].image.data, r_step[0].image.data);
 }
 
@@ -396,8 +370,9 @@ fn native_cosim_uses_micro_sim_for_batched_traffic() {
 
 #[test]
 fn native_outputs_bounded() {
-    let s = native_server(native_cfg(8, 2, 4, true));
-    let (results, _) = s.serve(s.workload(3)).unwrap();
+    let cfg = native_cfg(8, 2, 4, true);
+    let s = native_server(cfg.clone());
+    let (results, _) = s.serve(workload(&cfg, cfg.seed, 0..3)).unwrap();
     for r in &results {
         let max = r.image.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         assert!(
@@ -408,11 +383,256 @@ fn native_outputs_bounded() {
     }
 }
 
+// ------------------------------------------- streaming session (ISSUE 5)
+
+#[test]
+fn session_submit_wait_matches_serve() {
+    // The session API must produce the same bits as the serve() wrapper
+    // (which itself matches the historical drain).
+    let cfg = native_cfg(4, 2, 4, true);
+    let (r_serve, _) = native_server(cfg.clone()).serve(reqs(6, 4)).unwrap();
+    let r_serve = by_id(r_serve);
+    let handle = native_server(cfg).start();
+    let tickets: Vec<_> = reqs(6, 4)
+        .into_iter()
+        .map(|r| handle.submit(r).expect("queue has room"))
+        .collect();
+    let mut r_sess: Vec<DenoiseResult> =
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    r_sess.sort_by_key(|r| r.id);
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(r_sess.len(), 6);
+    for (a, b) in r_sess.iter().zip(&r_serve) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.image.data, b.image.data,
+            "request {} diverged between session and serve() paths",
+            a.id
+        );
+    }
+    assert_eq!(metrics.requests_done, 6);
+    assert_eq!(metrics.admission.admitted, 6);
+    assert_eq!(metrics.e2e_latency.count(), 6);
+}
+
+#[test]
+fn session_try_submit_sheds_load_when_queue_full() {
+    // Bounded admission: with a depth-1 queue and one worker chewing
+    // through multi-step requests, a rapid burst of try_submit calls
+    // must bounce off QueueFull instead of growing the queue. (The
+    // worker cannot finish a 16-step request between two back-to-back
+    // submissions, so at least one rejection is guaranteed.)
+    let mut cfg = native_cfg(16, 1, 1, true);
+    cfg.queue_depth = 1;
+    // no prefetching prep stage: the lane absorbs exactly one executing
+    // request beyond the queue, so the rejection count is deterministic
+    cfg.pipeline = false;
+    let handle = native_server(cfg).start();
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for r in reqs(6, 16) {
+        match handle.try_submit(r) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(rejected >= 1, "a depth-1 queue must shed a 6-request burst");
+    let snapshot = handle.metrics_snapshot();
+    assert_eq!(snapshot.admission.rejected_queue_full, rejected as u64);
+    assert_eq!(snapshot.admission.offered, 6);
+    // every admitted ticket still resolves
+    let n_admitted = tickets.len();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, n_admitted);
+    assert_eq!(metrics.admission.admitted, n_admitted as u64);
+}
+
+#[test]
+fn session_rejects_expired_deadline_at_admission() {
+    let handle = native_server(native_cfg(3, 1, 2, true)).start();
+    let mut r = DenoiseRequest::new(0, 1, 3);
+    r.deadline = Some(Duration::ZERO);
+    assert_eq!(
+        handle.try_submit(r).unwrap_err(),
+        AdmissionError::Deadline
+    );
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.admission.rejected_deadline, 1);
+    assert_eq!(metrics.admission.admitted, 0);
+}
+
+#[test]
+fn session_expires_queued_request_behind_slow_work() {
+    // A short-deadline request stuck behind ~100 device dispatches on a
+    // single non-prefetching lane must expire in the queue (resolved
+    // with an error at batch-formation time), not execute. chunk = 1
+    // forces one dispatch per step, and every dispatch pays the
+    // surrogate's whole-parameter digest (~100 µs+), so the blockers
+    // hold the lane for tens of milliseconds — far past the deadline.
+    let mut cfg = native_cfg(50, 1, 1, true);
+    cfg.pipeline = false;
+    cfg.chunk = 1;
+    let handle = native_server(cfg).start();
+    let blockers: Vec<_> = reqs(2, 50)
+        .into_iter()
+        .map(|r| handle.submit(r).expect("room"))
+        .collect();
+    let mut doomed = DenoiseRequest::new(9, 9, 2);
+    doomed.deadline = Some(Duration::from_millis(2));
+    let doomed_ticket = handle.submit(doomed).expect("room");
+    let err = doomed_ticket.wait().unwrap_err().to_string();
+    assert!(err.contains("expired"), "{err}");
+    for t in blockers {
+        t.wait().expect("blockers run to completion");
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.admission.expired, 1);
+    assert_eq!(metrics.requests_done, 2);
+}
+
+#[test]
+fn session_priority_preempts_queue_order() {
+    // One worker, no prefetch: while a 50-step blocker executes, a
+    // low-priority and then a high-priority request are queued. The
+    // high-priority one must run (and resolve) first even though it was
+    // submitted last. chunk = 1 makes every request take 50 dispatches
+    // (milliseconds), so "low is still pending when high resolves" has
+    // a wide timing margin.
+    let mut cfg = native_cfg(50, 1, 1, true);
+    cfg.pipeline = false;
+    cfg.priorities = 3;
+    cfg.chunk = 1;
+    let handle = native_server(cfg).start();
+    let blocker = handle.submit(DenoiseRequest::new(0, 1, 50)).unwrap();
+    let mut low = DenoiseRequest::new(1, 2, 50);
+    low.priority = 2;
+    let mut low_ticket = handle.submit(low).unwrap();
+    let mut high = DenoiseRequest::new(2, 3, 50);
+    high.priority = 0;
+    let mut high_ticket = handle.submit(high).unwrap();
+    // wait for the high-priority result, then check the low one is
+    // still unresolved (it runs after, on the single lane)
+    loop {
+        if let Some(r) = high_ticket.try_wait() {
+            r.expect("high-priority request completes");
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    assert!(
+        low_ticket.try_wait().is_none(),
+        "low-priority request must still be pending when high resolves"
+    );
+    blocker.wait().unwrap();
+    // low eventually completes too
+    loop {
+        if let Some(r) = low_ticket.try_wait() {
+            r.expect("low-priority request completes");
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 3);
+}
+
+#[test]
+fn session_shutdown_drains_all_admitted_tickets() {
+    // shutdown() must resolve every admitted ticket — the lanes drain
+    // the backlog instead of abandoning it.
+    let handle = native_server(native_cfg(3, 2, 4, true)).start();
+    let tickets: Vec<_> = reqs(10, 3)
+        .into_iter()
+        .map(|r| handle.submit(r).expect("room"))
+        .collect();
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 10);
+    assert_eq!(metrics.admission.queue_depth, 0);
+    for t in tickets {
+        t.wait().expect("admitted ticket resolved by the drain");
+    }
+}
+
+#[test]
+fn session_rejects_submissions_after_begin_shutdown() {
+    let handle = native_server(native_cfg(3, 1, 2, true)).start();
+    let t = handle.submit(DenoiseRequest::new(0, 5, 3)).unwrap();
+    handle.begin_shutdown();
+    assert_eq!(
+        handle.try_submit(DenoiseRequest::new(1, 6, 3)).unwrap_err(),
+        AdmissionError::ShuttingDown
+    );
+    assert_eq!(
+        handle.submit(DenoiseRequest::new(2, 7, 3)).unwrap_err(),
+        AdmissionError::ShuttingDown,
+        "blocking submit refuses too"
+    );
+    t.wait().expect("pre-shutdown request still drains");
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.admission.rejected_shutdown, 2);
+    assert_eq!(metrics.requests_done, 1);
+}
+
+#[test]
+fn session_metrics_snapshot_reads_live_counters() {
+    let cfg = native_cfg(3, 2, 4, true);
+    let handle = native_server(cfg).start();
+    let before = handle.metrics_snapshot();
+    assert_eq!(before.admission.offered, 0);
+    assert_eq!(before.requests_done, 0);
+    let tickets: Vec<_> = reqs(4, 3)
+        .into_iter()
+        .map(|r| handle.submit(r).expect("room"))
+        .collect();
+    let mid = handle.metrics_snapshot();
+    assert_eq!(mid.admission.admitted, 4);
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 4);
+    assert!(metrics.wall >= mid.wall, "wall clock advances");
+    let rendered = metrics.render();
+    assert!(rendered.contains("admission:"), "{rendered}");
+    assert!(rendered.contains("e2e latency"), "{rendered}");
+}
+
+#[test]
+fn session_streaming_bit_identical_to_serve_under_trickled_arrivals() {
+    // Trickled arrivals change batch composition but must never change
+    // the math: every image equals the standing-start serve() result.
+    let cfg = native_cfg(4, 2, 4, true);
+    let (r_serve, _) = native_server(cfg.clone()).serve(reqs(5, 4)).unwrap();
+    let r_serve = by_id(r_serve);
+    let handle = native_server(cfg).start();
+    let mut tickets = Vec::new();
+    for r in reqs(5, 4) {
+        tickets.push(handle.submit(r).expect("room"));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut r_sess: Vec<DenoiseResult> =
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    r_sess.sort_by_key(|r| r.id);
+    handle.shutdown().unwrap();
+    for (a, b) in r_sess.iter().zip(&r_serve) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.image.data, b.image.data,
+            "request {} diverged under trickled arrivals",
+            a.id
+        );
+    }
+}
+
 // ----------------------------------------------------------------- pjrt
 
-/// Build a PJRT server, or None (with a skip note) when the artifacts or
-/// the PJRT runtime are unavailable in this build.
-fn server(steps: usize, workers: usize) -> Option<DiffusionServer> {
+/// Build a PJRT server (and its config), or None (with a skip note) when
+/// the artifacts or the PJRT runtime are unavailable in this build.
+fn server(steps: usize, workers: usize) -> Option<(DiffusionServer, ServeConfig)> {
     let cfg = ServeConfig {
         steps,
         workers,
@@ -434,18 +654,15 @@ fn server(steps: usize, workers: usize) -> Option<DiffusionServer> {
         eprintln!("skipping: PJRT runtime unavailable ({e:#})");
         return None;
     }
-    Some(DiffusionServer::new(cfg, &store).expect("artifacts resolved above"))
+    let server = DiffusionServer::new(cfg.clone(), &store).expect("artifacts resolved above");
+    Some((server, cfg))
 }
 
 #[test]
 fn serves_all_requests_exactly_once() {
-    let Some(s) = server(4, 2) else { return };
+    let Some((s, _)) = server(4, 2) else { return };
     let reqs: Vec<DenoiseRequest> = (0..5)
-        .map(|i| DenoiseRequest {
-            id: i,
-            seed: 100 + i,
-            steps: 4,
-        })
+        .map(|i| DenoiseRequest::new(i, 100 + i, 4))
         .collect();
     let (results, metrics) = s.serve(reqs).unwrap();
     assert_eq!(results.len(), 5);
@@ -460,12 +677,8 @@ fn serves_all_requests_exactly_once() {
 
 #[test]
 fn deterministic_per_seed() {
-    let Some(s) = server(3, 1) else { return };
-    let req = |seed| DenoiseRequest {
-        id: 0,
-        seed,
-        steps: 3,
-    };
+    let Some((s, _)) = server(3, 1) else { return };
+    let req = |seed| DenoiseRequest::new(0, seed, 3);
     let (r1, _) = s.serve(vec![req(42)]).unwrap();
     let (r2, _) = s.serve(vec![req(42)]).unwrap();
     let (r3, _) = s.serve(vec![req(43)]).unwrap();
@@ -475,8 +688,8 @@ fn deterministic_per_seed() {
 
 #[test]
 fn outputs_bounded_with_trained_weights() {
-    let Some(s) = server(8, 2) else { return };
-    let reqs = s.workload(3);
+    let Some((s, cfg)) = server(8, 2) else { return };
+    let reqs = workload(&cfg, cfg.seed, 0..3);
     let (results, _) = s.serve(reqs).unwrap();
     for r in &results {
         let max = r.image.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
@@ -490,8 +703,8 @@ fn outputs_bounded_with_trained_weights() {
 
 #[test]
 fn cosim_reports_accelerator_ppa() {
-    let Some(s) = server(2, 1) else { return };
-    let (_, metrics) = s.serve(s.workload(1)).unwrap();
+    let Some((s, cfg)) = server(2, 1) else { return };
+    let (_, metrics) = s.serve(workload(&cfg, cfg.seed, 0..1)).unwrap();
     let rep = metrics.sim_report(&CAL_40NM, 8).expect("cosim enabled");
     assert!(rep.cycles > 0);
     assert!(rep.gops > 10.0, "U-net sustains > 10 GOPs on the array");
@@ -522,11 +735,7 @@ fn fused_scan_matches_step_mode() {
         fused,
         ..ServeConfig::default()
     };
-    let req = DenoiseRequest {
-        id: 0,
-        seed: 777,
-        steps: 50,
-    };
+    let req = DenoiseRequest::new(0, 777, 50);
     let s_step = DiffusionServer::new(mk(false), &store).unwrap();
     let (r_step, _) = s_step.serve(vec![req.clone()]).unwrap();
     let s_fused = DiffusionServer::new(mk(true), &store).unwrap();
@@ -571,11 +780,7 @@ fn fused_rejects_mismatched_step_counts() {
     };
     let s = DiffusionServer::new(cfg, &store).unwrap();
     let err = s
-        .serve(vec![DenoiseRequest {
-            id: 0,
-            seed: 1,
-            steps: 20,
-        }])
+        .serve(vec![DenoiseRequest::new(0, 1, 20)])
         .unwrap_err()
         .to_string();
     assert!(err.contains("exactly 50 steps"), "{err}");
@@ -585,10 +790,10 @@ fn fused_rejects_mismatched_step_counts() {
 fn more_workers_not_slower() {
     // smoke check the scaling direction on a tiny workload (allow noise:
     // just require both complete and report sane wall times)
-    let Some(s1) = server(3, 1) else { return };
-    let (_, m1) = s1.serve(s1.workload(4)).unwrap();
-    let Some(s2) = server(3, 2) else { return };
-    let (_, m2) = s2.serve(s2.workload(4)).unwrap();
+    let Some((s1, cfg1)) = server(3, 1) else { return };
+    let (_, m1) = s1.serve(workload(&cfg1, cfg1.seed, 0..4)).unwrap();
+    let Some((s2, cfg2)) = server(3, 2) else { return };
+    let (_, m2) = s2.serve(workload(&cfg2, cfg2.seed, 0..4)).unwrap();
     assert!(m1.wall.as_secs_f64() > 0.0 && m2.wall.as_secs_f64() > 0.0);
     assert_eq!(m1.requests_done, m2.requests_done);
 }
