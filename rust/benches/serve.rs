@@ -32,6 +32,17 @@
 //! the per-scenario e2e latency percentiles (p50/p95/p99, streaming
 //! estimator) land in `BENCH_serve_openloop.json` for the CI artifact.
 //!
+//! Last come the **failover** scenarios of ISSUE 6 on the sharded
+//! fleet front door: a two-shard `ShardFleet` driven open-loop at half
+//! the measured single-session capacity, once with no faults and once
+//! with a deterministic mid-flight shard kill (`kill:0:2` — shard 0
+//! dies claiming its third request). The always-on gates assert the
+//! delivered set is *complete* (every offered request id delivered
+//! exactly once — failover loses nothing) and that the kill actually
+//! fired (failovers == 1); `--strict` additionally bounds the p99
+//! under failover at 10x the no-fault fleet p99. Percentiles land in
+//! `BENCH_serve_failover.json`.
+//!
 //! Run: `cargo bench --bench serve` (full) or `-- --quick` (CI profile).
 //! Results go to `BENCH_serve.json`. Every run (quick included) asserts
 //! the steady-state zero-allocation contract: the pooled `batched_b4`
@@ -48,7 +59,7 @@
 use std::time::{Duration, Instant};
 
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, ServeMetrics};
+use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, ServeMetrics, ShardFleet};
 use sf_mmcn::runtime::ArtifactStore;
 use sf_mmcn::util::bench::{check_against_baseline, BaselineRow, BenchBaseline};
 
@@ -381,6 +392,145 @@ fn write_openloop_json(mode: &str, capacity_rps: f64, rows: &[OpenRow]) {
     }
 }
 
+// --------------------------------------- fleet failover scenarios (ISSUE 6)
+
+struct FailoverRow {
+    name: String,
+    shards: usize,
+    fault_spec: String,
+    target_rps: f64,
+    offered: usize,
+    delivered: u64,
+    failed: u64,
+    failovers: u64,
+    requeued: u64,
+    dead: usize,
+    live: usize,
+    delivered_set_complete: bool,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    wall_s: f64,
+}
+
+/// One open-loop fleet session: `n` requests arrive on a fixed schedule
+/// at `rate` req/s through the two-shard front door (`submit`, which
+/// never sheds — the queue is sized to the workload), optionally with an
+/// injected fault schedule. Per-step dispatches (`chunk = 1`) keep the
+/// heartbeat gap to one native step, far inside the default tolerance.
+/// Completeness of the delivered id set is recorded, not asserted — the
+/// caller gates on it after the JSON is on disk.
+fn run_failover(name: &str, steps: usize, n: usize, rate: f64, fault_spec: &str) -> FailoverRow {
+    let mut cfg = base_cfg(steps, n);
+    cfg.batched = true;
+    cfg.max_batch = 4;
+    cfg.pipeline = false;
+    cfg.chunk = 1;
+    cfg.queue_depth = n.max(8);
+    cfg.shards = 2;
+    cfg.fault_spec = fault_spec.to_string();
+    let store = ArtifactStore::default_store();
+    let fleet = ShardFleet::start(cfg.clone(), &store).expect("fleet start");
+    let reqs = workload(&cfg, cfg.seed, 0..n);
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for (i, req) in reqs.into_iter().enumerate() {
+        // fixed synthetic arrival schedule: request i is due at i/rate
+        if let Some(sleep) = interval.mul_f64(i as f64).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        tickets.push(fleet.submit(req).expect("fleet front door admits the workload"));
+    }
+    let mut delivered_ids: Vec<u64> = Vec::with_capacity(n);
+    let mut failed = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => delivered_ids.push(r.id),
+            Err(_) => failed += 1,
+        }
+    }
+    let m = fleet.shutdown().expect("fleet shutdown");
+    delivered_ids.sort_unstable();
+    let complete = delivered_ids.len() == n
+        && delivered_ids.iter().enumerate().all(|(i, &id)| id == i as u64);
+    let row = FailoverRow {
+        name: name.to_string(),
+        shards: m.stats.shards,
+        fault_spec: fault_spec.to_string(),
+        target_rps: rate,
+        offered: n,
+        delivered: m.stats.delivered,
+        failed,
+        failovers: m.stats.failovers,
+        requeued: m.stats.requeued,
+        dead: m.stats.dead,
+        live: m.stats.live,
+        delivered_set_complete: complete,
+        p50_ms: m.e2e_latency.p50_us() / 1e3,
+        p95_ms: m.e2e_latency.p95_us() / 1e3,
+        p99_ms: m.e2e_latency.p99_us() / 1e3,
+        wall_s: m.wall.as_secs_f64(),
+    };
+    println!(
+        "bench serve::fleet_{:<10} target {:>7.1} req/s  offered {:>3}  delivered {:>3}  \
+         failovers {}  requeued {:>2}  e2e p50 {:.2} ms  p95 {:.2}  p99 {:.2}  wall {:.3}s",
+        row.name,
+        row.target_rps,
+        row.offered,
+        row.delivered,
+        row.failovers,
+        row.requeued,
+        row.p50_ms,
+        row.p95_ms,
+        row.p99_ms,
+        row.wall_s,
+    );
+    row
+}
+
+/// `BENCH_serve_failover.json`: the failover-latency artifact CI uploads
+/// (written before any gate can fire).
+fn write_failover_json(mode: &str, rows: &[FailoverRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_failover\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"name\": \"{}\", ", r.name));
+        s.push_str(&format!("\"shards\": {}, ", r.shards));
+        s.push_str(&format!("\"fault_spec\": \"{}\", ", r.fault_spec));
+        s.push_str(&format!("\"target_rps\": {}, ", json_f64(r.target_rps)));
+        s.push_str(&format!("\"offered\": {}, ", r.offered));
+        s.push_str(&format!("\"delivered\": {}, ", r.delivered));
+        s.push_str(&format!("\"failed\": {}, ", r.failed));
+        s.push_str(&format!("\"failovers\": {}, ", r.failovers));
+        s.push_str(&format!("\"requeued\": {}, ", r.requeued));
+        s.push_str(&format!("\"dead\": {}, ", r.dead));
+        s.push_str(&format!("\"live\": {}, ", r.live));
+        s.push_str(&format!(
+            "\"delivered_set_complete\": {}, ",
+            r.delivered_set_complete
+        ));
+        s.push_str(&format!("\"p50_ms\": {}, ", json_f64(r.p50_ms)));
+        s.push_str(&format!("\"p95_ms\": {}, ", json_f64(r.p95_ms)));
+        s.push_str(&format!("\"p99_ms\": {}, ", json_f64(r.p99_ms)));
+        s.push_str(&format!("\"wall_s\": {}", json_f64(r.wall_s)));
+        s.push('}');
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve_failover.json", &s) {
+        Ok(()) => println!("wrote BENCH_serve_failover.json ({} scenarios)", rows.len()),
+        Err(e) => println!("WARNING: could not write BENCH_serve_failover.json: {e}"),
+    }
+}
+
 /// CI regression gate: map this run's rows onto the shared comparator
 /// (`util::bench::check_against_baseline`; >15% drop exits 1).
 fn check_against(rows: &[Row], baseline_path: &str) {
@@ -525,6 +675,64 @@ fn main() {
         );
         failed = true;
     }
+    // ---- fleet failover scenarios (ISSUE 6): two shards, open-loop at
+    // half the measured single-session capacity (the fleet doubles the
+    // lane count, so post-kill the survivor still runs below capacity) ----
+    println!("\n---- fleet failover (sharded front door) ----");
+    let failover_rate = 0.5 * capacity;
+    let n_fleet = if quick { 24 } else { 32 };
+    let nofault = run_failover("nofault", steps, n_fleet, failover_rate, "");
+    // kill:0:2 — shard 0 dies claiming its third request, mid-flight by
+    // construction; deterministic and replayable from the spec string
+    let kill = run_failover("kill_shard", steps, n_fleet, failover_rate, "kill:0:2");
+    let failover_rows = [nofault, kill];
+    write_failover_json(if quick { "quick" } else { "full" }, &failover_rows);
+    let [nofault, kill] = &failover_rows;
+
+    // Always-on failover gates: losing a shard mid-flight must lose no
+    // work — the delivered id set stays complete — and the injected kill
+    // must actually have fired (otherwise the scenario measured nothing).
+    for r in &failover_rows {
+        if !r.delivered_set_complete || r.failed != 0 {
+            println!(
+                "FAILOVER GATE FAILED: fleet_{} delivered {}/{} requests ({} failed) — \
+                 the delivered set must be complete, faults or not",
+                r.name, r.delivered, r.offered, r.failed
+            );
+            failed = true;
+        }
+    }
+    if nofault.failovers != 0 {
+        println!(
+            "FAILOVER GATE FAILED: {} failovers in the no-fault fleet run — \
+             healthy shards must never be retired",
+            nofault.failovers
+        );
+        failed = true;
+    }
+    if kill.failovers != 1 || kill.dead != 1 {
+        println!(
+            "FAILOVER GATE FAILED: kill:0:2 produced {} failovers / {} dead shards \
+             (expected exactly 1 of each) — the injected kill did not take effect",
+            kill.failovers, kill.dead
+        );
+        failed = true;
+    }
+    if strict {
+        // Failover must degrade latency, not wreck it: re-admitted work
+        // restarts from scratch on the survivor, so the p99 roughly
+        // doubles-to-triples; 10x the no-fault fleet p99 leaves room for
+        // shared-runner noise while still catching a stuck monitor.
+        if kill.p99_ms > 10.0 * nofault.p99_ms.max(1e-3) {
+            println!(
+                "FAILOVER GATE FAILED: p99 under failover is {:.2} ms vs {:.2} ms \
+                 no-fault (strict bound: 10x) — recovery is stalling the fleet",
+                kill.p99_ms, nofault.p99_ms
+            );
+            failed = true;
+        }
+    }
+
     if strict {
         // Both named acceptance gates measure pooled batched_b4 against
         // the per-request-allocating path and are evaluated (and

@@ -304,6 +304,28 @@ steps = 200  # ddpm steps
     }
 
     #[test]
+    fn degenerate_serve_values_reject_at_config_construction() {
+        // ISSUE 6 hardening: zero-valued serve knobs must surface as a
+        // clear Err from the typed-config layer fed by this parser —
+        // never a panic, and never a silently clamped session.
+        use crate::config::ServeConfig;
+        for (toml, key) in [
+            ("[serve]\nqueue_depth = 0\n", "queue_depth"),
+            ("[serve]\npriorities = 0\n", "priorities"),
+            ("[serve]\nworkers = 0\n", "workers"),
+            ("[serve]\nshards = 0\n", "shards"),
+            // negatives clamp to 0 in get_u64_or, then reject the same way
+            ("[serve]\nqueue_depth = -4\n", "queue_depth"),
+            ("[serve]\nshards = -1\n", "shards"),
+        ] {
+            let err = ServeConfig::from_toml(toml)
+                .expect_err(&format!("`{key} = 0` must be rejected"))
+                .to_string();
+            assert!(err.contains(key), "error names `{key}`: {err}");
+        }
+    }
+
+    #[test]
     fn empty_array_and_string_array() {
         let doc = parse_toml(r#"a = []
 b = ["x", "y"]"#)

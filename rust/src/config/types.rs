@@ -142,6 +142,24 @@ pub struct ServeConfig {
     /// Number of admission priority levels. Priority 0 is the most
     /// urgent; request priorities clamp to `priorities - 1`.
     pub priorities: usize,
+    /// Shards in the fault-tolerant fleet (ISSUE 6): each shard is a
+    /// full serving session (its own lanes and admission queue) behind
+    /// the `ShardFleet` front door. 1 = no fleet (a single session).
+    pub shards: usize,
+    /// Heartbeat period in milliseconds: lanes beat their shard's pulse
+    /// at least once per period while idle; the fleet monitor samples at
+    /// the same period.
+    pub heartbeat_ms: u64,
+    /// Consecutive missed heartbeat samples before the monitor declares
+    /// a shard dead and fails its undelivered work over. Executing lanes
+    /// beat per step (per-request path) or per dispatched chunk (batched
+    /// path), so the tolerance `heartbeat_ms * heartbeat_misses` must
+    /// exceed the longest single device dispatch — raise it for big
+    /// batched chunks or PJRT scan artifacts.
+    pub heartbeat_misses: u64,
+    /// Fault-injection schedule (see `coordinator::faults`), e.g.
+    /// `"kill:1:5;stall:0:3:40"`. Empty = no injected faults.
+    pub fault_spec: String,
 }
 
 impl Default for ServeConfig {
@@ -163,6 +181,10 @@ impl Default for ServeConfig {
             queue_depth: 64,
             default_deadline_ms: 0,
             priorities: 3,
+            shards: 1,
+            heartbeat_ms: 25,
+            heartbeat_misses: 8,
+            fault_spec: String::new(),
         }
     }
 }
@@ -258,16 +280,46 @@ impl ServeConfig {
         cfg.default_deadline_ms =
             doc.get_u64_or("serve", "default_deadline_ms", cfg.default_deadline_ms);
         cfg.priorities = doc.get_u64_or("serve", "priorities", cfg.priorities as u64) as usize;
-        if cfg.steps == 0 || cfg.workers == 0 || cfg.max_batch == 0 {
-            bail!("serve.steps/workers/max_batch must be >= 1");
+        cfg.shards = doc.get_u64_or("serve", "shards", cfg.shards as u64) as usize;
+        cfg.heartbeat_ms = doc.get_u64_or("serve", "heartbeat_ms", cfg.heartbeat_ms);
+        cfg.heartbeat_misses =
+            doc.get_u64_or("serve", "heartbeat_misses", cfg.heartbeat_misses);
+        cfg.fault_spec = doc.get_str_or("serve", "fault_spec", &cfg.fault_spec);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject degenerate configurations with a clear error instead of
+    /// letting a construction-time clamp hide them (a zero-worker or
+    /// zero-depth session would otherwise hang or silently reshape
+    /// itself). Called by `from_toml`, `DiffusionServer::new`, and
+    /// `ShardFleet::start`, so every entry point fails fast.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("serve.steps must be >= 1 (a request must run at least one step)");
         }
-        if cfg.queue_depth == 0 {
+        if self.workers == 0 {
+            bail!("serve.workers must be >= 1 (zero lanes could never drain the queue)");
+        }
+        if self.max_batch == 0 {
+            bail!("serve.max_batch must be >= 1 (a grab must take at least one request)");
+        }
+        if self.queue_depth == 0 {
             bail!("serve.queue_depth must be >= 1 (bounded admission needs room for one)");
         }
-        if !(1..=16).contains(&cfg.priorities) {
-            bail!("serve.priorities must be in 1..=16, got {}", cfg.priorities);
+        if !(1..=16).contains(&self.priorities) {
+            bail!("serve.priorities must be in 1..=16, got {}", self.priorities);
         }
-        Ok(cfg)
+        if self.shards == 0 {
+            bail!("serve.shards must be >= 1 (a fleet needs at least one shard)");
+        }
+        if self.heartbeat_ms == 0 {
+            bail!("serve.heartbeat_ms must be >= 1");
+        }
+        if self.heartbeat_misses == 0 {
+            bail!("serve.heartbeat_misses must be >= 1 (zero tolerance would declare every shard dead)");
+        }
+        Ok(())
     }
 }
 
@@ -380,6 +432,53 @@ data_reuse = false
         assert!(ServeConfig::from_toml("[serve]\nqueue_depth = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\npriorities = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\npriorities = 99\n").is_err());
+    }
+
+    #[test]
+    fn serve_config_fleet_keys() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert_eq!(cfg.shards, 1, "single session by default");
+        assert_eq!(cfg.heartbeat_ms, 25);
+        assert_eq!(cfg.heartbeat_misses, 8);
+        assert!(cfg.fault_spec.is_empty(), "no injected faults by default");
+        let cfg = ServeConfig::from_toml(
+            "[serve]\nshards = 3\nheartbeat_ms = 10\nheartbeat_misses = 2\n\
+             fault_spec = \"kill:1:5\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.heartbeat_ms, 10);
+        assert_eq!(cfg.heartbeat_misses, 2);
+        assert_eq!(cfg.fault_spec, "kill:1:5");
+    }
+
+    #[test]
+    fn serve_config_rejects_degenerate_fleet_values() {
+        assert!(ServeConfig::from_toml("[serve]\nshards = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nheartbeat_ms = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nheartbeat_misses = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nworkers = 0\n").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_each_degenerate_field_with_a_clear_message() {
+        let base = ServeConfig::default();
+        base.validate().expect("default config is valid");
+        let cases: Vec<(ServeConfig, &str)> = vec![
+            (ServeConfig { workers: 0, ..base.clone() }, "workers"),
+            (ServeConfig { queue_depth: 0, ..base.clone() }, "queue_depth"),
+            (ServeConfig { priorities: 0, ..base.clone() }, "priorities"),
+            (ServeConfig { priorities: 17, ..base.clone() }, "priorities"),
+            (ServeConfig { shards: 0, ..base.clone() }, "shards"),
+            (ServeConfig { steps: 0, ..base.clone() }, "steps"),
+            (ServeConfig { max_batch: 0, ..base.clone() }, "max_batch"),
+            (ServeConfig { heartbeat_ms: 0, ..base.clone() }, "heartbeat_ms"),
+            (ServeConfig { heartbeat_misses: 0, ..base }, "heartbeat_misses"),
+        ];
+        for (cfg, key) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(key), "error for {key} names the field: {err}");
+        }
     }
 
     #[test]

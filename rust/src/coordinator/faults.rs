@@ -1,0 +1,341 @@
+//! Seeded, schedulable fault-injection plane (ISSUE 6).
+//!
+//! Every failure mode the fleet layer recovers from — shard kill, lane
+//! stall, panic-in-step, delayed delivery — is driven by a [`FaultSpec`]:
+//! a parseable schedule of [`FaultEvent`]s keyed on *executed-request
+//! ordinals per shard*. The schedule is data, not randomness scattered
+//! through the code, so every recovery scenario in tests, benches, and
+//! EXPERIMENTS.md reproduces from the spec string (or from the seed that
+//! generated it via [`FaultSpec::seeded_kill`]).
+//!
+//! Grammar (`;`-separated events):
+//!
+//! ```text
+//! event   := kind ':' shard ':' request (':' arg)?
+//! kind    := 'kill' | 'stall' | 'panic' | 'delay'
+//! shard   := shard index (usize)
+//! request := 0-based executed-request ordinal on that shard (u64)
+//! arg     := stall/delay: milliseconds (u64); panic: message string
+//! ```
+//!
+//! Examples: `kill:1:5` (hard-kill shard 1 when its lanes reach the 5th
+//! executed request), `stall:0:3:40` (sleep 40 ms before executing),
+//! `panic:0:2:boom` (panic with message "boom" inside request
+//! execution), `delay:1:0:15` (resolve tickets 15 ms late). Combined:
+//! `kill:1:5;stall:0:3:40`.
+//!
+//! At runtime each shard gets one [`FaultPlane`]: worker lanes call
+//! [`FaultPlane::on_requests`] as they pick up work, which advances a
+//! shard-global atomic request counter and returns the folded
+//! [`FaultAction`] for any events whose ordinal falls in the window.
+//! Each event fires exactly once — `fetch_add` hands every ordinal to
+//! exactly one lane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+/// What one scheduled fault does when it fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hard-kill the shard: lanes stop without resolving tickets (the
+    /// software analogue of the host dying). Heartbeats stop; the fleet
+    /// fails over.
+    Kill,
+    /// Sleep this long before executing the request/batch (a slow or
+    /// wedged device lane).
+    Stall(Duration),
+    /// Panic inside request execution with this message. With panic
+    /// isolation (ISSUE 6) only the affected ticket(s) fail.
+    Panic(String),
+    /// Resolve the request's ticket this much later than the result was
+    /// ready (a slow delivery path).
+    DelayDelivery(Duration),
+}
+
+/// One scheduled fault: fires when shard `shard` executes its
+/// `at_request`-th request (0-based, counted across all its lanes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub shard: usize,
+    pub at_request: u64,
+    pub kind: FaultKind,
+}
+
+/// A parsed fault schedule. Construct with [`FaultSpec::parse`] (the
+/// canonical reproducible form) or [`FaultSpec::seeded_kill`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSpec {
+    /// Parse the `;`-separated event grammar (see module docs). The
+    /// empty string parses to the no-fault spec.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for ev in spec.split(';') {
+            let ev = ev.trim();
+            if ev.is_empty() {
+                continue;
+            }
+            // panic messages may contain ':', so split only the first 4
+            let mut parts = ev.splitn(4, ':');
+            let kind = parts.next().unwrap_or("");
+            let shard: usize = parts
+                .next()
+                .with_context(|| format!("fault event `{ev}`: missing shard index"))?
+                .trim()
+                .parse()
+                .with_context(|| format!("fault event `{ev}`: bad shard index"))?;
+            let at_request: u64 = parts
+                .next()
+                .with_context(|| format!("fault event `{ev}`: missing request ordinal"))?
+                .trim()
+                .parse()
+                .with_context(|| format!("fault event `{ev}`: bad request ordinal"))?;
+            let arg = parts.next();
+            let kind = match kind.trim() {
+                "kill" => FaultKind::Kill,
+                "stall" => FaultKind::Stall(parse_ms(ev, arg)?),
+                "delay" => FaultKind::DelayDelivery(parse_ms(ev, arg)?),
+                "panic" => FaultKind::Panic(
+                    arg.map(str::to_string)
+                        .unwrap_or_else(|| "injected panic".into()),
+                ),
+                other => bail!(
+                    "fault event `{ev}`: unknown kind `{other}` (kill|stall|panic|delay)"
+                ),
+            };
+            events.push(FaultEvent {
+                shard,
+                at_request,
+                kind,
+            });
+        }
+        Ok(Self { events })
+    }
+
+    /// Render back to the canonical spec string (parse ∘ render = id).
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match &e.kind {
+                FaultKind::Kill => format!("kill:{}:{}", e.shard, e.at_request),
+                FaultKind::Stall(d) => {
+                    format!("stall:{}:{}:{}", e.shard, e.at_request, d.as_millis())
+                }
+                FaultKind::Panic(m) => format!("panic:{}:{}:{m}", e.shard, e.at_request),
+                FaultKind::DelayDelivery(d) => {
+                    format!("delay:{}:{}:{}", e.shard, e.at_request, d.as_millis())
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Generate the canonical seeded scenario: one hard kill on a
+    /// pseudo-random shard at a pseudo-random executed-request ordinal
+    /// in `1..horizon`. Same seed → same schedule; `render()` gives the
+    /// equivalent literal spec for the experiment log.
+    pub fn seeded_kill(seed: u64, shards: usize, horizon: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xfa_17);
+        let shard = rng.below(shards.max(1) as u64) as usize;
+        let at_request = 1 + rng.below(horizon.max(2) - 1);
+        Self {
+            events: vec![FaultEvent {
+                shard,
+                at_request,
+                kind: FaultKind::Kill,
+            }],
+        }
+    }
+
+    /// The per-shard runtime plane for shard `shard` (only its events).
+    pub fn plane_for(&self, shard: usize) -> FaultPlane {
+        let mut events: Vec<FaultEvent> = self
+            .events
+            .iter()
+            .filter(|e| e.shard == shard)
+            .cloned()
+            .collect();
+        events.sort_by_key(|e| e.at_request);
+        FaultPlane {
+            events,
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+fn parse_ms(ev: &str, arg: Option<&str>) -> Result<Duration> {
+    let ms: u64 = arg
+        .with_context(|| format!("fault event `{ev}`: missing duration (ms)"))?
+        .trim()
+        .trim_end_matches("ms")
+        .parse()
+        .with_context(|| format!("fault event `{ev}`: bad duration (integer ms)"))?;
+    Ok(Duration::from_millis(ms))
+}
+
+/// The folded effect of every fault event that fired in one
+/// [`FaultPlane::on_requests`] window. Defaults to "no fault".
+#[derive(Debug, Clone, Default)]
+pub struct FaultAction {
+    /// Hard-kill the shard before executing this work.
+    pub kill: bool,
+    /// Sleep this long before executing.
+    pub stall: Option<Duration>,
+    /// Panic with this message inside execution.
+    pub panic_msg: Option<String>,
+    /// Resolve tickets this much late.
+    pub delay: Option<Duration>,
+}
+
+impl FaultAction {
+    pub fn is_none(&self) -> bool {
+        !self.kill && self.stall.is_none() && self.panic_msg.is_none() && self.delay.is_none()
+    }
+}
+
+/// One shard's live fault plane: a shard-global executed-request counter
+/// plus that shard's scheduled events. Lanes share it behind an `Arc`;
+/// `on_requests` is lock-free.
+#[derive(Debug)]
+pub struct FaultPlane {
+    /// Sorted by `at_request`.
+    events: Vec<FaultEvent>,
+    counter: AtomicU64,
+}
+
+impl FaultPlane {
+    /// A plane with no scheduled events (counts requests, fires nothing).
+    pub fn none() -> Self {
+        Self {
+            events: Vec::new(),
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Advance the shard's executed-request counter by `n` (one batch)
+    /// and fold every event whose ordinal falls in the claimed window.
+    /// Disjoint windows per call mean each event fires exactly once even
+    /// with concurrent lanes.
+    pub fn on_requests(&self, n: u64) -> FaultAction {
+        let mut action = FaultAction::default();
+        if n == 0 {
+            return action;
+        }
+        let start = self.counter.fetch_add(n, Ordering::Relaxed);
+        let end = start + n;
+        for e in &self.events {
+            if e.at_request < start {
+                continue;
+            }
+            if e.at_request >= end {
+                break;
+            }
+            match &e.kind {
+                FaultKind::Kill => action.kill = true,
+                FaultKind::Stall(d) => {
+                    action.stall = Some(action.stall.map_or(*d, |s| s.max(*d)));
+                }
+                FaultKind::Panic(m) => {
+                    action.panic_msg.get_or_insert_with(|| m.clone());
+                }
+                FaultKind::DelayDelivery(d) => {
+                    action.delay = Some(action.delay.map_or(*d, |s| s.max(*d)));
+                }
+            }
+        }
+        action
+    }
+
+    /// Requests this shard's lanes have claimed so far.
+    pub fn requests_seen(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let spec = FaultSpec::parse("kill:1:5;stall:0:3:40;panic:0:2:boom;delay:1:0:15")
+            .unwrap();
+        assert_eq!(spec.events.len(), 4);
+        assert_eq!(spec.events[0].kind, FaultKind::Kill);
+        assert_eq!(
+            spec.events[1].kind,
+            FaultKind::Stall(Duration::from_millis(40))
+        );
+        assert_eq!(spec.events[2].kind, FaultKind::Panic("boom".into()));
+        assert_eq!(
+            spec.events[3].kind,
+            FaultKind::DelayDelivery(Duration::from_millis(15))
+        );
+        let rendered = spec.render();
+        assert_eq!(FaultSpec::parse(&rendered).unwrap(), spec);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_events() {
+        assert!(FaultSpec::parse("kill:1").is_err(), "missing ordinal");
+        assert!(FaultSpec::parse("kill:x:5").is_err(), "bad shard");
+        assert!(FaultSpec::parse("stall:0:3").is_err(), "missing duration");
+        assert!(FaultSpec::parse("explode:0:1").is_err(), "unknown kind");
+        assert!(FaultSpec::parse("").unwrap().is_empty(), "empty = no faults");
+        assert!(FaultSpec::parse(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn panic_message_may_contain_colons() {
+        let spec = FaultSpec::parse("panic:0:1:a:b:c").unwrap();
+        assert_eq!(spec.events[0].kind, FaultKind::Panic("a:b:c".into()));
+    }
+
+    #[test]
+    fn plane_fires_each_event_exactly_once_per_window() {
+        let spec = FaultSpec::parse("kill:0:5;stall:0:2:10").unwrap();
+        let plane = spec.plane_for(0);
+        // window [0, 2): nothing
+        assert!(plane.on_requests(2).is_none());
+        // window [2, 6): both the stall (at 2) and the kill (at 5)
+        let a = plane.on_requests(4);
+        assert!(a.kill);
+        assert_eq!(a.stall, Some(Duration::from_millis(10)));
+        // later windows: nothing left
+        assert!(plane.on_requests(10).is_none());
+        assert_eq!(plane.requests_seen(), 16);
+    }
+
+    #[test]
+    fn plane_filters_by_shard() {
+        let spec = FaultSpec::parse("kill:1:0").unwrap();
+        let p0 = spec.plane_for(0);
+        let p1 = spec.plane_for(1);
+        assert!(!p0.on_requests(4).kill, "shard 0 has no events");
+        assert!(p1.on_requests(1).kill, "shard 1 kills at its first request");
+    }
+
+    #[test]
+    fn seeded_kill_is_reproducible() {
+        let a = FaultSpec::seeded_kill(42, 3, 20);
+        let b = FaultSpec::seeded_kill(42, 3, 20);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 1);
+        assert_eq!(a.events[0].kind, FaultKind::Kill);
+        assert!(a.events[0].shard < 3);
+        assert!((1..20).contains(&a.events[0].at_request));
+        // the rendered spec is the reproducible artifact
+        assert_eq!(FaultSpec::parse(&a.render()).unwrap(), a);
+    }
+}

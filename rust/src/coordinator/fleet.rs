@@ -1,0 +1,837 @@
+//! Fault-tolerant sharded serving: the [`ShardFleet`] front door
+//! (ISSUE 6).
+//!
+//! A fleet owns N independent serving sessions ("shards" — each a full
+//! [`DiffusionServer`] session with its own lanes and bounded admission
+//! queue) and presents one submit surface. Three mechanisms make it
+//! robust:
+//!
+//! * **Routing** — power-of-two-choices on *live* queue depth: sample two
+//!   live shards, admit to the shallower queue. If the p2c winner sheds
+//!   (`QueueFull`), the remaining live shards are tried before the fleet
+//!   itself reports full. This keeps load near-balanced without a global
+//!   scheduler — the operational analogue of the paper's Server Flow
+//!   principle of keeping heterogeneous units saturated behind one front
+//!   door.
+//! * **Health** — each shard's lanes publish a heartbeat sequence
+//!   ([`ShardPulse`]): at least one beat per `serve.heartbeat_ms` while
+//!   alive (idle lanes use a timed condvar wait, so an empty queue still
+//!   beats) plus one per dispatched chunk. The fleet monitor samples every
+//!   period; a sequence frozen for `serve.heartbeat_misses` consecutive
+//!   samples declares the shard dead. A shard killed outright is detected
+//!   faster, through the ticket channel: its undelivered tickets read
+//!   [`TicketPoll::Lost`].
+//! * **Failover** — a dead shard's undelivered requests are re-admitted
+//!   onto survivors. This is lossless *and* bit-identical because request
+//!   execution is a pure function of `(seed, steps)` (the
+//!   per-index-deterministic `workload()` contract): a recovery run
+//!   delivers exactly the images the no-fault run would have. Duplicate
+//!   execution (shard died after computing but before the fleet saw the
+//!   result) is harmless for the same reason — fleet delivery is
+//!   single-shot per ticket.
+//!
+//! Preemption is the graceful third path: [`ShardFleet::begin_preempt`]
+//! stops routing to a shard and drains it (every admitted ticket
+//! resolves), modelling a preemption notice rather than a crash. After
+//! the drain the shard parks as `Drained`.
+//!
+//! Failure injection comes from [`FaultSpec`] (`serve.fault_spec` /
+//! `--fault-spec`): each shard's lanes consult their own `FaultPlane`, so
+//! every kill/stall/panic/delay scenario in tests and benches replays
+//! exactly from a spec string or seed.
+//!
+//! Semantics worth knowing:
+//!
+//! * A request's relative deadline restarts when failover re-admits it —
+//!   the budget is per-admission, not per-fleet-lifetime.
+//! * [`ShardFleet::submit`] never sheds: when every live shard's queue is
+//!   full it parks the request fleet-side and the monitor admits it as
+//!   soon as a queue has room. [`ShardFleet::try_submit`] sheds
+//!   (`QueueFull`) like the single-session API.
+//! * Shard sessions run with co-simulation off (fleet metrics are about
+//!   delivery robustness; PPA co-sim belongs to single-session runs).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::faults::FaultSpec;
+use crate::coordinator::metrics::{FleetMetrics, FleetStats, ServeMetrics};
+use crate::coordinator::server::{
+    AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, ServerHandle, ShardPulse,
+    Ticket, TicketPoll,
+};
+use crate::runtime::ArtifactStore;
+use crate::util::stats::StreamingPercentiles;
+use crate::util::Rng;
+
+/// Monitor pump interval: how often pending tickets are polled. Distinct
+/// from (and much shorter than) the heartbeat sampling period.
+const PUMP_INTERVAL: Duration = Duration::from_micros(500);
+
+/// Lifecycle of one shard inside the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    /// Routable: accepting new and failed-over work.
+    Live,
+    /// Preemption notice received: draining admitted work, not routable.
+    Preempting,
+    /// Declared dead (missed heartbeats or lost tickets); its undelivered
+    /// work was re-admitted to survivors.
+    Dead,
+    /// Finished a preemption drain; session joined, final metrics kept.
+    Drained,
+}
+
+/// One shard slot: the session handle (until joined), its heartbeat
+/// pulse, and the monitor's last heartbeat observation.
+struct Shard {
+    handle: Option<ServerHandle>,
+    pulse: Arc<ShardPulse>,
+    state: ShardState,
+    last_seq: u64,
+    misses: u64,
+    final_metrics: Option<ServeMetrics>,
+}
+
+/// One fleet-admitted request in flight. `ticket` is the claim on the
+/// currently-assigned shard; `None` means the request is waiting for
+/// (re-)admission — either parked by `submit` while every queue was full,
+/// or stripped from a dead shard and awaiting a survivor.
+struct Pending {
+    req: DenoiseRequest,
+    shard: usize,
+    ticket: Option<Ticket>,
+    tx: Sender<Result<DenoiseResult>>,
+    submitted_at: Instant,
+}
+
+struct FleetState {
+    shards: Vec<Shard>,
+    pending: Vec<Pending>,
+    rng: Rng,
+    stats: FleetStats,
+    e2e: StreamingPercentiles,
+    draining: bool,
+}
+
+/// Claim on one fleet-admitted request. Same single-shot semantics as the
+/// per-session [`Ticket`], but it survives shard death: the fleet monitor
+/// re-admits lost work transparently, so the ticket resolves with the
+/// (deterministic) result unless no live shard remains.
+#[derive(Debug)]
+pub struct FleetTicket {
+    id: u64,
+    rx: Receiver<Result<DenoiseResult>>,
+    done: bool,
+}
+
+impl FleetTicket {
+    /// Fleet-unique ticket id (monotonic front-door admission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request resolves (possibly after failover).
+    pub fn wait(self) -> Result<DenoiseResult> {
+        if self.done {
+            bail!("fleet ticket {}: already consumed by try_wait", self.id);
+        }
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => bail!("fleet ticket {}: fleet dropped without resolving it", self.id),
+        }
+    }
+
+    /// Non-blocking poll: `None` while in flight, `Some(result)` exactly
+    /// once on resolution; spent tickets report an error.
+    pub fn try_wait(&mut self) -> Option<Result<DenoiseResult>> {
+        if self.done {
+            return Some(Err(anyhow!(
+                "fleet ticket {}: already consumed by try_wait",
+                self.id
+            )));
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = true;
+                Some(r)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(anyhow!(
+                    "fleet ticket {}: fleet dropped without resolving it",
+                    self.id
+                )))
+            }
+        }
+    }
+}
+
+/// The fault-tolerant sharded front door. See the module docs for the
+/// failure model; see [`ShardFleet::start`] for construction.
+pub struct ShardFleet {
+    state: Arc<Mutex<FleetState>>,
+    monitor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    t0: Instant,
+    next_id: AtomicU64,
+}
+
+impl ShardFleet {
+    /// Start `cfg.shards` independent serving sessions behind one front
+    /// door, with the fault schedule parsed from `cfg.fault_spec` (empty
+    /// = no injected faults).
+    pub fn start(cfg: ServeConfig, store: &ArtifactStore) -> Result<ShardFleet> {
+        let spec = FaultSpec::parse(&cfg.fault_spec)
+            .context("parsing serve.fault_spec for the fleet")?;
+        Self::start_with_spec(cfg, store, spec)
+    }
+
+    /// Start with an explicit fault schedule (tests and seeded bench
+    /// scenarios construct the spec directly).
+    pub fn start_with_spec(
+        cfg: ServeConfig,
+        store: &ArtifactStore,
+        spec: FaultSpec,
+    ) -> Result<ShardFleet> {
+        cfg.validate()?;
+        let n = cfg.shards;
+        let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1));
+        let misses_allowed = cfg.heartbeat_misses.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for s in 0..n {
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.shards = 1;
+            shard_cfg.cosim = false;
+            shard_cfg.fault_spec = String::new();
+            let server = DiffusionServer::new(shard_cfg, store)
+                .with_context(|| format!("starting fleet shard {s}"))?;
+            let plane = (!spec.is_empty()).then(|| Arc::new(spec.plane_for(s)));
+            let handle = server.start_with_faults(plane);
+            let pulse = handle.pulse();
+            shards.push(Shard {
+                handle: Some(handle),
+                pulse,
+                state: ShardState::Live,
+                last_seq: 0,
+                misses: 0,
+                final_metrics: None,
+            });
+        }
+        let state = Arc::new(Mutex::new(FleetState {
+            shards,
+            pending: Vec::new(),
+            rng: Rng::new(cfg.seed ^ 0xf1ee_7),
+            stats: FleetStats::default(),
+            e2e: StreamingPercentiles::new(),
+            draining: false,
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let monitor = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("fleet-monitor".into())
+                .spawn(move || Self::monitor_main(state, stop, heartbeat, misses_allowed))
+                .expect("spawn fleet monitor")
+        };
+        Ok(ShardFleet {
+            state,
+            monitor: Some(monitor),
+            stop,
+            t0: Instant::now(),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Shards the fleet was started with (slots, regardless of state).
+    pub fn shards(&self) -> usize {
+        self.state.lock().unwrap().shards.len()
+    }
+
+    /// Instantaneous per-shard lifecycle states, in shard order.
+    pub fn shard_states(&self) -> Vec<ShardState> {
+        let st = self.state.lock().unwrap();
+        st.shards.iter().map(|s| s.state).collect()
+    }
+
+    /// Fleet counters plus the instantaneous shard census.
+    pub fn stats(&self) -> FleetStats {
+        Self::census(&self.state.lock().unwrap())
+    }
+
+    /// Admit a request; never sheds. If every live shard's queue is full
+    /// the request parks fleet-side and the monitor admits it when room
+    /// frees up. Fails only when no live shard exists (or the fleet is
+    /// shutting down).
+    pub fn submit(&self, req: DenoiseRequest) -> std::result::Result<FleetTicket, AdmissionError> {
+        self.admit(req, true)
+    }
+
+    /// Admit without parking: a fleet where every live shard sheds
+    /// returns [`AdmissionError::QueueFull`] immediately.
+    pub fn try_submit(
+        &self,
+        req: DenoiseRequest,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        self.admit(req, false)
+    }
+
+    fn admit(
+        &self,
+        req: DenoiseRequest,
+        park: bool,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        let mut st = self.state.lock().unwrap();
+        if st.draining {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let entry = match Self::assign(&mut st, &req) {
+            Ok((shard, ticket)) => Pending {
+                req,
+                shard,
+                ticket: Some(ticket),
+                tx,
+                submitted_at: now,
+            },
+            // QueueFull: park until room frees. ShuttingDown: a shard the
+            // fault plane just killed but the monitor has not yet marked
+            // dead — park; the monitor re-admits once it catches up.
+            Err(AdmissionError::QueueFull | AdmissionError::ShuttingDown) if park => Pending {
+                req,
+                shard: 0,
+                ticket: None,
+                tx,
+                submitted_at: now,
+            },
+            Err(e) => return Err(e),
+        };
+        st.pending.push(entry);
+        st.stats.submitted += 1;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(FleetTicket { id, rx, done: false })
+    }
+
+    /// Power-of-two-choices admission: sample two live shards, try the
+    /// one with the shallower queue first, then fall through the rest of
+    /// the live set before reporting the fleet full.
+    fn assign(
+        st: &mut FleetState,
+        req: &DenoiseRequest,
+    ) -> std::result::Result<(usize, Ticket), AdmissionError> {
+        let live: Vec<usize> = st
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state == ShardState::Live && s.handle.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            return Err(AdmissionError::NoLiveShards);
+        }
+        let a = live[st.rng.below(live.len() as u64) as usize];
+        let b = live[st.rng.below(live.len() as u64) as usize];
+        let depth_of = |st: &FleetState, i: usize| {
+            st.shards[i].handle.as_ref().map_or(usize::MAX, |h| h.queue_depth())
+        };
+        let first = if depth_of(st, a) <= depth_of(st, b) { a } else { b };
+        let mut last = AdmissionError::QueueFull;
+        let order = std::iter::once(first).chain(live.into_iter().filter(|&i| i != first));
+        for i in order {
+            let Some(h) = st.shards[i].handle.as_ref() else {
+                continue;
+            };
+            match h.try_submit(req.clone()) {
+                Ok(t) => return Ok((i, t)),
+                // a genuinely expired deadline is terminal, not routable
+                Err(AdmissionError::Deadline) => return Err(AdmissionError::Deadline),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// Operational hard kill (the test/ops analogue of a `kill` fault
+    /// event): declare the shard dead now and fail its work over.
+    pub fn kill_shard(&self, shard: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.shards.len();
+        if shard >= n {
+            bail!("kill_shard: shard {shard} out of range ({n} shards)");
+        }
+        Self::declare_dead(&mut st, shard);
+        Ok(())
+    }
+
+    /// Preemption notice: stop routing to `shard` and drain it — every
+    /// already-admitted ticket resolves normally, then the session joins
+    /// and the shard parks as [`ShardState::Drained`]. Nothing is lost
+    /// and nothing re-executes; contrast the hard-kill failover path.
+    pub fn begin_preempt(&self, shard: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.shards.len();
+        if shard >= n {
+            bail!("begin_preempt: shard {shard} out of range ({n} shards)");
+        }
+        match st.shards[shard].state {
+            ShardState::Live => {
+                st.shards[shard].state = ShardState::Preempting;
+                if let Some(h) = st.shards[shard].handle.as_ref() {
+                    h.begin_shutdown();
+                }
+                Ok(())
+            }
+            other => bail!("begin_preempt: shard {shard} is {other:?}, not Live"),
+        }
+    }
+
+    /// Live snapshot of fleet counters, per-shard metrics, and the
+    /// fleet-level e2e percentiles.
+    pub fn metrics_snapshot(&self) -> FleetMetrics {
+        let st = self.state.lock().unwrap();
+        FleetMetrics {
+            stats: Self::census(&st),
+            per_shard: Self::per_shard_metrics(&st),
+            e2e_latency: st.e2e.clone(),
+            wall: self.t0.elapsed(),
+        }
+    }
+
+    /// Graceful fleet shutdown: close the front door, let the monitor
+    /// resolve every outstanding fleet ticket (draining live shards,
+    /// failing over any shard that dies on the way out), join every
+    /// session, and return the final fleet metrics.
+    pub fn shutdown(mut self) -> Result<FleetMetrics> {
+        self.close();
+        let mut st = self.state.lock().unwrap();
+        for s in st.shards.iter_mut() {
+            if let Some(h) = s.handle.take() {
+                let m = h.shutdown()?;
+                if s.final_metrics.is_none() {
+                    s.final_metrics = Some(m);
+                }
+            }
+        }
+        let metrics = FleetMetrics {
+            stats: Self::census(&st),
+            per_shard: Self::per_shard_metrics(&st),
+            e2e_latency: st.e2e.clone(),
+            wall: self.t0.elapsed(),
+        };
+        drop(st);
+        Ok(metrics)
+    }
+
+    /// Close admission, start draining every live shard, and join the
+    /// monitor (which exits only once no fleet ticket is outstanding).
+    fn close(&mut self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.draining = true;
+            for s in st.shards.iter() {
+                if s.state == ShardState::Live {
+                    if let Some(h) = s.handle.as_ref() {
+                        h.begin_shutdown();
+                    }
+                }
+            }
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+    }
+
+    fn census(st: &FleetState) -> FleetStats {
+        let mut s = st.stats;
+        s.shards = st.shards.len();
+        for sh in &st.shards {
+            match sh.state {
+                ShardState::Live => s.live += 1,
+                ShardState::Preempting => s.preempting += 1,
+                ShardState::Dead => s.dead += 1,
+                ShardState::Drained => s.drained += 1,
+            }
+        }
+        s
+    }
+
+    fn per_shard_metrics(st: &FleetState) -> Vec<ServeMetrics> {
+        st.shards
+            .iter()
+            .map(|sh| match (&sh.handle, &sh.final_metrics) {
+                (_, Some(m)) => m.clone(),
+                (Some(h), None) => h.metrics_snapshot(),
+                (None, None) => ServeMetrics::new(),
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------ monitor
+
+    fn monitor_main(
+        state: Arc<Mutex<FleetState>>,
+        stop: Arc<AtomicBool>,
+        heartbeat: Duration,
+        misses_allowed: u64,
+    ) {
+        let mut last_hb = Instant::now();
+        loop {
+            let done = {
+                let mut st = state.lock().unwrap();
+                if last_hb.elapsed() >= heartbeat {
+                    last_hb = Instant::now();
+                    Self::sample_heartbeats(&mut st, misses_allowed);
+                }
+                let draining = st.draining;
+                Self::pump(&mut st, draining);
+                Self::finish_drained(&mut st);
+                stop.load(Ordering::Relaxed) && st.pending.is_empty()
+            };
+            if done {
+                break;
+            }
+            std::thread::sleep(PUMP_INTERVAL);
+        }
+    }
+
+    /// One monitor pass over the pending set: deliver resolved tickets,
+    /// turn lost tickets into dead-shard declarations (which strip and
+    /// requeue), and (re-)admit unassigned requests onto live shards.
+    fn pump(st: &mut FleetState, draining: bool) {
+        // 1) Poll assigned tickets.
+        let mut dead: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < st.pending.len() {
+            let poll = match st.pending[i].ticket.as_mut() {
+                Some(t) => t.poll(),
+                None => {
+                    i += 1;
+                    continue;
+                }
+            };
+            match poll {
+                TicketPoll::Pending => i += 1,
+                TicketPoll::Ready(r) => {
+                    let p = st.pending.swap_remove(i);
+                    Self::deliver(st, p, r);
+                }
+                TicketPoll::Lost => {
+                    // the assigned shard dropped this ticket unresolved —
+                    // the shard is dead; declare_dead strips the rest
+                    if !dead.contains(&st.pending[i].shard) {
+                        dead.push(st.pending[i].shard);
+                    }
+                    i += 1;
+                }
+            }
+        }
+        for s in dead {
+            Self::declare_dead(st, s);
+        }
+        // 2) (Re-)admit unassigned requests.
+        let mut i = 0;
+        while i < st.pending.len() {
+            if st.pending[i].ticket.is_some() {
+                i += 1;
+                continue;
+            }
+            let req = st.pending[i].req.clone();
+            match Self::assign(st, &req) {
+                Ok((shard, ticket)) => {
+                    st.pending[i].shard = shard;
+                    st.pending[i].ticket = Some(ticket);
+                    i += 1;
+                }
+                Err(AdmissionError::QueueFull) | Err(AdmissionError::ShuttingDown)
+                    if !draining =>
+                {
+                    // transient: a queue will free up, or the heartbeat
+                    // monitor will soon retire the shard; retry next pump
+                    i += 1;
+                }
+                Err(e) => {
+                    let p = st.pending.swap_remove(i);
+                    let req_id = p.req.id;
+                    Self::deliver(
+                        st,
+                        p,
+                        Err(anyhow!("request {req_id}: not re-admittable after failover ({e})")),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Resolve one fleet ticket (single-shot) and account for it.
+    fn deliver(st: &mut FleetState, p: Pending, r: Result<DenoiseResult>) {
+        match r {
+            Ok(res) => {
+                st.stats.delivered += 1;
+                st.e2e.record_us(p.submitted_at.elapsed().as_micros() as f64);
+                let _ = p.tx.send(Ok(res));
+            }
+            Err(e) => {
+                st.stats.failed += 1;
+                let _ = p.tx.send(Err(e));
+            }
+        }
+    }
+
+    /// Declare a shard dead: hard-close its queue, salvage any results it
+    /// already delivered, and mark everything else for re-admission.
+    fn declare_dead(st: &mut FleetState, shard: usize) {
+        if !matches!(
+            st.shards[shard].state,
+            ShardState::Live | ShardState::Preempting
+        ) {
+            return;
+        }
+        st.shards[shard].state = ShardState::Dead;
+        st.stats.failovers += 1;
+        if let Some(h) = st.shards[shard].handle.as_ref() {
+            h.kill();
+        }
+        let mut i = 0;
+        while i < st.pending.len() {
+            if st.pending[i].shard != shard || st.pending[i].ticket.is_none() {
+                i += 1;
+                continue;
+            }
+            // a result the dying shard already sent still counts — keep
+            // it instead of re-running
+            if let Some(TicketPoll::Ready(r)) = st.pending[i].ticket.as_mut().map(Ticket::poll) {
+                let p = st.pending.swap_remove(i);
+                Self::deliver(st, p, r);
+                continue;
+            }
+            st.pending[i].ticket = None;
+            st.stats.requeued += 1;
+            i += 1;
+        }
+    }
+
+    /// A `Preempting` shard with no assigned pending work has finished
+    /// its drain: join the session and park it as `Drained`.
+    fn finish_drained(st: &mut FleetState) {
+        for idx in 0..st.shards.len() {
+            if st.shards[idx].state != ShardState::Preempting {
+                continue;
+            }
+            let busy = st
+                .pending
+                .iter()
+                .any(|p| p.ticket.is_some() && p.shard == idx);
+            if busy {
+                continue;
+            }
+            st.shards[idx].state = ShardState::Drained;
+            if let Some(h) = st.shards[idx].handle.take() {
+                if let Ok(m) = h.shutdown() {
+                    st.shards[idx].final_metrics = Some(m);
+                }
+            }
+        }
+    }
+
+    /// Sample every routable shard's heartbeat sequence; a sequence
+    /// frozen for `allowed` consecutive samples retires the shard. With
+    /// lanes beating at least once per period and `allowed >= 2`, a live
+    /// idle shard can never be falsely retired by sampling phase alone.
+    fn sample_heartbeats(st: &mut FleetState, allowed: u64) {
+        let mut retire: Vec<usize> = Vec::new();
+        for (i, s) in st.shards.iter_mut().enumerate() {
+            if !matches!(s.state, ShardState::Live | ShardState::Preempting) {
+                continue;
+            }
+            let seq = s.pulse.seq();
+            if seq == s.last_seq {
+                s.misses += 1;
+                if s.misses >= allowed {
+                    retire.push(i);
+                }
+            } else {
+                s.last_seq = seq;
+                s.misses = 0;
+            }
+        }
+        for i in retire {
+            Self::declare_dead(st, i);
+        }
+    }
+}
+
+impl Drop for ShardFleet {
+    fn drop(&mut self) {
+        if self.monitor.is_some() {
+            self.close();
+        }
+        let mut st = self.state.lock().unwrap();
+        for s in st.shards.iter_mut() {
+            // dropping a ServerHandle drains and joins the session
+            drop(s.handle.take());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeBackend;
+    use crate::coordinator::server::workload;
+
+    fn fleet_cfg(shards: usize) -> ServeConfig {
+        ServeConfig {
+            steps: 2,
+            requests: 0,
+            workers: 1,
+            max_batch: 2,
+            seed: 11,
+            artifact: "unet_denoise_16".into(),
+            cosim: false,
+            fused: false,
+            backend: ServeBackend::Native,
+            batched: true,
+            pipeline: false,
+            // per-step dispatches keep the heartbeat gap to one step
+            chunk: 1,
+            pooled: true,
+            queue_depth: 64,
+            priorities: 2,
+            shards,
+            heartbeat_ms: 10,
+            heartbeat_misses: 8,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::new("artifacts")
+    }
+
+    #[test]
+    fn fleet_serves_everything_with_no_faults() {
+        let cfg = fleet_cfg(2);
+        let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+        let tickets: Vec<FleetTicket> = workload(&cfg, cfg.seed, 0..6)
+            .into_iter()
+            .map(|r| fleet.submit(r).unwrap())
+            .collect();
+        let mut ids: Vec<u64> = tickets.into_iter().map(|t| t.wait().unwrap().id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.stats.submitted, 6);
+        assert_eq!(m.stats.delivered, 6);
+        assert_eq!(m.stats.failed, 0);
+        assert_eq!(m.stats.failovers, 0);
+        assert_eq!(m.stats.requeued, 0);
+        assert_eq!(m.stats.shards, 2);
+        assert_eq!(m.e2e_latency.count(), 6);
+        // both shards produced final (joined) metrics
+        assert_eq!(m.per_shard.len(), 2);
+        let done: usize = m.per_shard.iter().map(|s| s.requests_done).sum();
+        assert_eq!(done, 6);
+    }
+
+    #[test]
+    fn kill_shard_fails_over_without_losing_tickets() {
+        let cfg = fleet_cfg(2);
+        let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+        let tickets: Vec<FleetTicket> = workload(&cfg, cfg.seed, 0..8)
+            .into_iter()
+            .map(|r| fleet.submit(r).unwrap())
+            .collect();
+        fleet.kill_shard(0).unwrap();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.stats.delivered, 8);
+        assert_eq!(m.stats.failed, 0);
+        assert_eq!(m.stats.failovers, 1);
+        assert_eq!(m.stats.dead, 1);
+    }
+
+    #[test]
+    fn all_shards_dead_reports_no_live_shards() {
+        let cfg = fleet_cfg(2);
+        let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+        fleet.kill_shard(0).unwrap();
+        fleet.kill_shard(1).unwrap();
+        let err = fleet.submit(DenoiseRequest::new(0, 1, 2)).unwrap_err();
+        assert_eq!(err, AdmissionError::NoLiveShards);
+        assert_eq!(
+            fleet.shard_states(),
+            vec![ShardState::Dead, ShardState::Dead]
+        );
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.stats.dead, 2);
+        assert_eq!(m.stats.live, 0);
+    }
+
+    #[test]
+    fn preempt_drains_to_drained_state() {
+        let cfg = fleet_cfg(2);
+        let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+        let tickets: Vec<FleetTicket> = workload(&cfg, cfg.seed, 0..4)
+            .into_iter()
+            .map(|r| fleet.submit(r).unwrap())
+            .collect();
+        fleet.begin_preempt(0).unwrap();
+        // double preemption of the same shard is an error
+        assert!(fleet.begin_preempt(0).is_err());
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // the monitor parks the drained shard asynchronously
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.shard_states()[0] != ShardState::Drained {
+            assert!(Instant::now() < deadline, "shard 0 never drained");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // the survivor still serves
+        let t = fleet.submit(DenoiseRequest::new(99, 99, 2)).unwrap();
+        assert_eq!(t.wait().unwrap().id, 99);
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.stats.drained, 1);
+        assert_eq!(m.stats.live, 1);
+        assert_eq!(m.stats.delivered, 5);
+        assert_eq!(m.stats.failed, 0);
+    }
+
+    #[test]
+    fn fleet_ticket_try_wait_is_single_shot() {
+        let cfg = fleet_cfg(1);
+        let fleet = ShardFleet::start(cfg, &store()).unwrap();
+        let mut t = fleet.submit(DenoiseRequest::new(7, 7, 2)).unwrap();
+        let r = loop {
+            if let Some(r) = t.try_wait() {
+                break r;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(r.unwrap().id, 7);
+        // spent: second poll reports the consumed error
+        let again = t.try_wait().expect("spent ticket must resolve");
+        assert!(again.unwrap_err().to_string().contains("already consumed"));
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_shard_ops_error() {
+        let fleet = ShardFleet::start(fleet_cfg(1), &store()).unwrap();
+        assert!(fleet.kill_shard(5).is_err());
+        assert!(fleet.begin_preempt(5).is_err());
+        fleet.shutdown().unwrap();
+    }
+}

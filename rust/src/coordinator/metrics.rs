@@ -248,6 +248,108 @@ impl Default for ServeMetrics {
     }
 }
 
+/// Fleet-level counters of a fault-tolerant sharded session (ISSUE 6).
+/// Shard-state counts are the instantaneous census at snapshot time;
+/// the rest are cumulative since the fleet started.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Shards the fleet was started with.
+    pub shards: usize,
+    /// Shards currently routable.
+    pub live: usize,
+    /// Shards draining after a preemption notice.
+    pub preempting: usize,
+    /// Shards declared dead (missed heartbeats or injected kill).
+    pub dead: usize,
+    /// Shards that finished a preemption drain (or fleet shutdown).
+    pub drained: usize,
+    /// Requests accepted by the fleet front door.
+    pub submitted: u64,
+    /// Fleet tickets resolved with a result.
+    pub delivered: u64,
+    /// Fleet tickets resolved with an error (execution failures, queue
+    /// expiry, or requests unroutable after repeated failover).
+    pub failed: u64,
+    /// Shards the monitor failed over (dead declarations).
+    pub failovers: u64,
+    /// Undelivered requests re-admitted onto surviving shards.
+    pub requeued: u64,
+}
+
+/// Aggregated results of one fleet session: fleet-level counters and
+/// end-to-end (submit → delivery, failover included) percentiles, plus
+/// each shard's full [`ServeMetrics`] for per-shard drill-down.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub stats: FleetStats,
+    /// One entry per shard, in shard order. A dead shard contributes its
+    /// last observable snapshot.
+    pub per_shard: Vec<ServeMetrics>,
+    /// Fleet-level end-to-end latency (front-door submit → ticket
+    /// delivery), which spans queue wait, execution, and any failover
+    /// re-execution — the number a client actually experiences.
+    pub e2e_latency: StreamingPercentiles,
+    pub wall: Duration,
+}
+
+impl FleetMetrics {
+    /// Requests completed across all shards (shard-side view; the
+    /// fleet-side view is `stats.delivered`).
+    pub fn requests_done(&self) -> usize {
+        self.per_shard.iter().map(|m| m.requests_done).sum()
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.stats.delivered as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Human-readable summary block (fleet header + per-shard lines).
+    pub fn render(&self) -> String {
+        let s = &self.stats;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet: {} shards ({} live / {} preempting / {} dead / {} drained)\n",
+            s.shards, s.live, s.preempting, s.dead, s.drained,
+        ));
+        out.push_str(&format!(
+            "delivered: {} of {} submitted ({} failed) in {:.2}s  ({:.2} req/s)\n",
+            s.delivered,
+            s.submitted,
+            s.failed,
+            self.wall.as_secs_f64(),
+            self.requests_per_s(),
+        ));
+        if s.failovers > 0 || s.requeued > 0 {
+            out.push_str(&format!(
+                "failover: {} shard(s) failed over, {} request(s) re-admitted\n",
+                s.failovers, s.requeued,
+            ));
+        }
+        if self.e2e_latency.count() > 0 {
+            out.push_str(&format!(
+                "fleet e2e latency: mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}\n",
+                self.e2e_latency.mean_us() / 1e3,
+                self.e2e_latency.p50_us() / 1e3,
+                self.e2e_latency.p95_us() / 1e3,
+                self.e2e_latency.p99_us() / 1e3,
+            ));
+        }
+        for (i, m) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                "shard {i}: {} done, {} failed, {} expired, {} lanes down\n",
+                m.requests_done,
+                m.requests_failed,
+                m.admission.expired,
+                m.lanes_down,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,6 +423,36 @@ mod tests {
         let s = m.render();
         assert!(s.contains("failed requests: 2"), "{s}");
         assert!(s.contains("worker lanes down: 1"), "{s}");
+    }
+
+    #[test]
+    fn fleet_metrics_render_and_rates() {
+        let mut fm = FleetMetrics {
+            stats: FleetStats {
+                shards: 3,
+                live: 2,
+                dead: 1,
+                submitted: 24,
+                delivered: 24,
+                failovers: 1,
+                requeued: 5,
+                ..Default::default()
+            },
+            per_shard: vec![ServeMetrics::new(), ServeMetrics::new()],
+            e2e_latency: StreamingPercentiles::new(),
+            wall: Duration::from_secs(2),
+        };
+        fm.per_shard[0].requests_done = 14;
+        fm.per_shard[1].requests_done = 15;
+        fm.e2e_latency.record_us(1000.0);
+        assert_eq!(fm.requests_done(), 29, "shard-side view counts retries");
+        assert!((fm.requests_per_s() - 12.0).abs() < 1e-9);
+        let s = fm.render();
+        assert!(s.contains("fleet: 3 shards"), "{s}");
+        assert!(s.contains("delivered: 24 of 24"), "{s}");
+        assert!(s.contains("1 shard(s) failed over"), "{s}");
+        assert!(s.contains("shard 0:"), "{s}");
+        assert!(s.contains("fleet e2e latency"), "{s}");
     }
 
     #[test]

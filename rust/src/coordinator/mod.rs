@@ -16,23 +16,37 @@
 //!   ticket-based result delivery; graceful drain; co-simulation of the
 //!   SF-MMCN accelerator for cycles/energy alongside the functional run
 //!   (micro-sim for batched traffic, analytic otherwise).
+//! * [`fleet`] — the fault-tolerant sharded front door (ISSUE 6): a
+//!   [`fleet::ShardFleet`] owns N independent serving sessions (shards),
+//!   routes with power-of-two-choices on live queue depth, watches shard
+//!   health via heartbeat sequence numbers, and on a dead shard re-admits
+//!   every undelivered ticket onto survivors. Request execution is a pure
+//!   function of `(seed, steps)`, so a failover run is bit-identical to a
+//!   no-fault run.
+//! * [`faults`] — the seeded, schedulable fault-injection plane that
+//!   drives every recovery scenario reproducibly (kill-shard-at-request,
+//!   stall-lane, panic-in-step, delayed delivery).
 //! * [`metrics`] — latency histograms, fixed-memory streaming
-//!   percentiles, admission/batching/pipeline counters, and simulated
-//!   PPA aggregation.
+//!   percentiles, admission/batching/pipeline counters, fleet-level
+//!   failover counters, and simulated PPA aggregation.
 //!
 //! Python never runs here: workers execute `artifacts/*.hlo.txt` through
 //! the PJRT C API (or the offline native surrogate — see
 //! `crate::runtime::NativeDenoise`).
 
 pub mod ddpm;
+pub mod faults;
+pub mod fleet;
 pub mod metrics;
 pub mod params;
 pub mod server;
 
 pub use ddpm::DdpmSchedule;
-pub use metrics::{AdmissionStats, ServeMetrics};
+pub use faults::{FaultAction, FaultEvent, FaultKind, FaultPlane, FaultSpec};
+pub use fleet::{FleetTicket, ShardFleet, ShardState};
+pub use metrics::{AdmissionStats, FleetMetrics, FleetStats, ServeMetrics};
 pub use params::UnetParams;
 pub use server::{
     workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, ServerHandle,
-    Ticket,
+    ShardPulse, Ticket, TicketPoll,
 };

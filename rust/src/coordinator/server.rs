@@ -46,6 +46,7 @@
 //! and the serve benchmarks exercise.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, TryRecvError};
@@ -55,6 +56,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ServeBackend, ServeConfig};
+use crate::coordinator::faults::{FaultAction, FaultPlane};
 use crate::coordinator::ddpm::{time_embedding, time_embedding_into, DdpmSchedule};
 use crate::coordinator::metrics::{AdmissionStats, ServeMetrics};
 use crate::coordinator::params::UnetParams;
@@ -122,6 +124,10 @@ pub enum AdmissionError {
     /// [`ServerHandle::shutdown`] (or `begin_shutdown`) already closed
     /// admission.
     ShuttingDown,
+    /// The fleet front door found no live shard to route to (every shard
+    /// dead, drained, or preempting). Fleet-only; a single session never
+    /// returns this.
+    NoLiveShards,
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -130,11 +136,55 @@ impl std::fmt::Display for AdmissionError {
             AdmissionError::QueueFull => write!(f, "admission queue full (bounded depth)"),
             AdmissionError::Deadline => write!(f, "deadline already expired at admission"),
             AdmissionError::ShuttingDown => write!(f, "server is shutting down"),
+            AdmissionError::NoLiveShards => write!(f, "no live shards available"),
         }
     }
 }
 
 impl std::error::Error for AdmissionError {}
+
+/// Heartbeat sequence published by one session's worker lanes (ISSUE 6).
+/// Every lane bumps it at least once per heartbeat period while alive
+/// (idle waits use a timed condvar, so an empty queue still beats) and
+/// per dispatched chunk while executing. A reader that samples the
+/// sequence and sees no movement across several periods may conclude the
+/// shard's lanes are gone — the fleet monitor's failover trigger.
+#[derive(Debug, Default)]
+pub struct ShardPulse {
+    seq: AtomicU64,
+}
+
+impl ShardPulse {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bump the heartbeat (lane-side).
+    pub fn beat(&self) {
+        self.seq.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sample the heartbeat sequence (monitor-side).
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a non-consuming [`Ticket::poll`]: distinguishes "still in
+/// flight" and "resolved" from "the lane died without resolving it" —
+/// the signal the fleet uses to re-admit work after a shard kill.
+#[derive(Debug)]
+pub enum TicketPoll {
+    /// Still queued or executing.
+    Pending,
+    /// Resolved: the request's result or a genuine execution/expiry
+    /// error (deliver it; do not retry).
+    Ready(Result<DenoiseResult>),
+    /// The serving lane dropped the ticket without resolving it (shard
+    /// death). The request is safe to re-admit elsewhere: execution is a
+    /// pure function of `(seed, steps)`, so a retry is bit-identical.
+    Lost,
+}
 
 /// Claim on one admitted request's future result. Delivery is
 /// single-shot: `wait()` consumes the ticket; after `try_wait()` has
@@ -191,6 +241,29 @@ impl Ticket {
             }
         }
     }
+
+    /// Non-blocking poll that keeps "lane died" distinct from a genuine
+    /// error (see [`TicketPoll`]). Used by the fleet's delivery pumps to
+    /// decide between forwarding a result and re-admitting the request
+    /// on a surviving shard. A ticket already spent by `try_wait`/`poll`
+    /// reports `Lost` (re-admission is always safe: results are
+    /// deterministic and fleet delivery is single-shot).
+    pub fn poll(&mut self) -> TicketPoll {
+        if self.done {
+            return TicketPoll::Lost;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = true;
+                TicketPoll::Ready(r)
+            }
+            Err(TryRecvError::Empty) => TicketPoll::Pending,
+            Err(TryRecvError::Disconnected) => {
+                self.done = true;
+                TicketPoll::Lost
+            }
+        }
+    }
 }
 
 /// An admitted request: the queue entry the lanes execute. Carries the
@@ -231,6 +304,11 @@ struct QueueState {
     len: usize,
     /// Admission closed; lanes drain what is already queued, then exit.
     draining: bool,
+    /// Hard death (injected or operational): lanes exit *without*
+    /// resolving tickets — the backlog was dropped at kill time, so
+    /// undelivered tickets read as disconnected ([`TicketPoll::Lost`]),
+    /// which is what lets a fleet re-admit them elsewhere.
+    killed: bool,
     /// Workers gated at the starting line (the legacy `serve()` preload
     /// uses this so the fair division sees the whole workload at once).
     held: bool,
@@ -265,9 +343,15 @@ struct AdmissionQueue {
     start: Barrier,
     next_ticket: AtomicU64,
     counters: AdmissionCounters,
+    /// Lane heartbeats (ISSUE 6): bumped by every pass through the
+    /// `next_batch` wait loop, whose blocking wait is bounded by
+    /// `heartbeat` so idle lanes still beat.
+    pulse: Arc<ShardPulse>,
+    heartbeat: Duration,
 }
 
 impl AdmissionQueue {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         depth: usize,
         levels: usize,
@@ -275,6 +359,8 @@ impl AdmissionQueue {
         workers: usize,
         max_batch: usize,
         held: bool,
+        pulse: Arc<ShardPulse>,
+        heartbeat: Duration,
     ) -> Self {
         let workers = workers.max(1);
         let levels = levels.max(1);
@@ -283,6 +369,7 @@ impl AdmissionQueue {
                 lanes: (0..levels).map(|_| VecDeque::new()).collect(),
                 len: 0,
                 draining: false,
+                killed: false,
                 held,
                 alive: workers,
             }),
@@ -296,6 +383,8 @@ impl AdmissionQueue {
             start: Barrier::new(workers),
             next_ticket: AtomicU64::new(0),
             counters: AdmissionCounters::default(),
+            pulse,
+            heartbeat: heartbeat.max(Duration::from_millis(1)),
         }
     }
 
@@ -375,6 +464,30 @@ impl AdmissionQueue {
         st.held = false;
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+
+    /// Hard death (ISSUE 6): simulate the host dying mid-flight. The
+    /// queued backlog is dropped *unresolved* — each entry's response
+    /// sender drops, so undelivered tickets read as
+    /// [`TicketPoll::Lost`] — admission closes, and every lane exits at
+    /// its next grab without touching the in-flight tickets it holds.
+    /// Heartbeats stop with the lanes, which is how a fleet monitor
+    /// notices. Contrast `begin_drain`, where every ticket resolves.
+    fn kill_now(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.killed = true;
+        st.draining = true;
+        st.held = false;
+        for lane in st.lanes.iter_mut() {
+            lane.clear();
+        }
+        st.len = 0;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn is_killed(&self) -> bool {
+        self.state.lock().unwrap().killed
     }
 
     /// Open the gate of a held session (the `serve()` preload path).
@@ -502,10 +615,17 @@ impl AdmissionQueue {
 
     /// Take the next fair batch, blocking while the queue is empty (or
     /// held). `None` once the session is draining and nothing is left —
-    /// the lane's signal to exit.
+    /// the lane's signal to exit. Every pass through the loop beats the
+    /// session pulse, and the blocking wait is bounded by the heartbeat
+    /// period, so an idle (but alive) lane still publishes heartbeats.
     fn next_batch(&self) -> Option<Vec<Admitted>> {
         let mut st = self.state.lock().unwrap();
         loop {
+            if st.killed {
+                // hard death: abandon everything, beat nothing
+                return None;
+            }
+            self.pulse.beat();
             if !st.held {
                 let before = st.len;
                 let batch = self.take_batch(&mut st);
@@ -520,7 +640,11 @@ impl AdmissionQueue {
                     return None;
                 }
             }
-            st = self.not_empty.wait(st).unwrap();
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(st, self.heartbeat)
+                .unwrap();
+            st = guard;
         }
     }
 }
@@ -540,6 +664,13 @@ struct WorkerCtx {
     pipeline: bool,
     chunk: usize,
     pooled: bool,
+    /// Fault-injection plane shared by this session's lanes (ISSUE 6).
+    /// `None` in production sessions: the only per-batch cost is an
+    /// `Option` check.
+    faults: Option<Arc<FaultPlane>>,
+    /// Session heartbeat, beaten per dispatched chunk while executing
+    /// (the queue's wait loop covers idle periods).
+    pulse: Arc<ShardPulse>,
 }
 
 /// Per-batch metrics report from a worker lane (results themselves go
@@ -789,6 +920,9 @@ fn denoise_one_fused(
 /// §Perf: the 33 weight tensors (~530 KB) are pre-converted once per
 /// worker ([`Executor::prepare`]); each step only converts the six
 /// small per-step tensors (~1.3 KB).
+///
+/// Beats the shard pulse per executed step (ISSUE 6), so a long request
+/// never looks like a dead lane to the fleet's heartbeat monitor.
 #[allow(clippy::too_many_arguments)]
 fn denoise_one(
     exe: &Executor,
@@ -797,6 +931,7 @@ fn denoise_one(
     schedule: &DdpmSchedule,
     img_shape: &[usize],
     time_dim: usize,
+    pulse: &ShardPulse,
     req: &DenoiseRequest,
     step_latency_us: &mut Vec<f64>,
 ) -> Result<DenoiseResult> {
@@ -835,6 +970,7 @@ fn denoise_one(
         };
         let out = exe.run_prepared(artifact, &dynamic, prepared)?;
         x = out.into_iter().next().context("artifact returned nothing")?;
+        pulse.beat();
         step_latency_us.push(s0.elapsed().as_micros() as f64);
     }
     Ok(DenoiseResult {
@@ -856,36 +992,38 @@ fn dispatch_chunk(
     artifact: &str,
     prepared: &PreparedInputs,
     pool: &BufferPool,
-    pb: &PreparedBatch,
+    b: usize,
+    steps: usize,
+    t_embs: &TensorBuf,
+    coeffs: &TensorBuf,
+    noises: &TensorBuf,
     x: &TensorBuf,
     out: &mut TensorBuf,
     lo: usize,
     len: usize,
 ) -> Result<()> {
-    let b = pb.reqs.len();
-    let steps = pb.steps;
     if lo == 0 && len == steps {
         let d = BatchDispatch {
             batch: b,
             steps: len,
             x,
-            t_embs: &pb.t_embs,
-            coeffs: &pb.coeffs,
-            noises: &pb.noises,
+            t_embs,
+            coeffs,
+            noises,
         };
         return exe.run_batched_into(artifact, &d, prepared, out);
     }
     // gather scratch is fully overwritten by the exact-length copies, so
     // it takes the no-memset dirty lease
-    let time_dim = pb.t_embs.shape[1];
+    let time_dim = t_embs.shape[1];
     let mut te = pool.lease_tensor_dirty(&[len, time_dim]);
-    pb.t_embs.copy_rows_into(lo, len, &mut te.data)?;
+    t_embs.copy_rows_into(lo, len, &mut te.data)?;
     let mut co = pool.lease_tensor_dirty(&[len, 3]);
-    pb.coeffs.copy_rows_into(lo, len, &mut co.data)?;
+    coeffs.copy_rows_into(lo, len, &mut co.data)?;
     let mut nshape = vec![b, len];
-    nshape.extend_from_slice(&pb.noises.shape[2..]);
+    nshape.extend_from_slice(&noises.shape[2..]);
     let mut no = pool.lease_tensor_dirty(&nshape);
-    copy_noise_chunk_into(&pb.noises, b, steps, lo, len, &mut no.data)?;
+    copy_noise_chunk_into(noises, b, steps, lo, len, &mut no.data)?;
     let d = BatchDispatch {
         batch: b,
         steps: len,
@@ -901,11 +1039,29 @@ fn dispatch_chunk(
     r
 }
 
+/// Extract a readable message from a caught panic payload.
+fn panic_payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Stage 2 of a batched lane: run one prepared batch through the device
 /// in timestep chunks — in place against two rotating pool-leased image
 /// slabs — resolve every ticket, and report metrics. All leased slabs
 /// (the prepared batch's and the rotating pair) go back to the pool on
 /// completion.
+///
+/// The dispatch loop runs under `catch_unwind` (ISSUE 6): a panic —
+/// whether injected by the fault plane (`inject_panic`) or real — fails
+/// only this batch's tickets, with the panic message in the error; the
+/// lane itself keeps serving. The batch's `Admitted` entries stay
+/// outside the unwind region so their tickets can always be resolved.
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     ctx: &WorkerCtx,
     exe: &Executor,
@@ -914,6 +1070,8 @@ fn execute_batch(
     pb: PreparedBatch,
     stalled: bool,
     res_tx: &Sender<LaneEvent>,
+    inject_panic: Option<String>,
+    delay: Option<Duration>,
 ) {
     let t0 = Instant::now();
     let b = pb.reqs.len();
@@ -938,82 +1096,6 @@ fn execute_batch(
     } else {
         ctx.chunk.min(steps)
     };
-    // Rotating image slabs, materialized lazily: each dispatch reads the
-    // current images and writes a destination slab, then the old current
-    // becomes the next destination — in-place ping-pong instead of a
-    // fresh output allocation per chunk. The first chunk reads `pb.x0`
-    // directly, so a whole-request batch (chunk = 0, the default) leases
-    // exactly one slab and a chunked batch exactly two.
-    let mut cur: Option<TensorBuf> = None;
-    let mut spare: Option<TensorBuf> = None;
-    let mut dispatches = 0usize;
-    let mut batch_items = 0usize;
-    let mut done = 0usize;
-    while done < steps {
-        let c = chunk.min(steps - done);
-        // the dispatch fully overwrites its destination, so the rotation
-        // slabs take the no-memset dirty lease
-        let mut dst = spare
-            .take()
-            .unwrap_or_else(|| pool.lease_tensor_dirty(&pb.x0.shape));
-        let src = cur.as_ref().unwrap_or(&pb.x0);
-        if let Err(e) = dispatch_chunk(
-            exe,
-            &ctx.artifact,
-            prepared,
-            pool,
-            &pb,
-            src,
-            &mut dst,
-            done,
-            c,
-        ) {
-            resolve_batch_err(&pb.reqs, &e);
-            let _ = res_tx.send(LaneEvent::Failed { count: b });
-            return;
-        }
-        spare = cur.replace(dst);
-        dispatches += 1;
-        batch_items += b;
-        done += c;
-    }
-    let latency = t0.elapsed();
-    // per-step latency: each request experienced the batch's wall time,
-    // spread over its steps — one sample per request-step, so the
-    // histogram counts line up with `steps_done` across modes.
-    let per_step = latency.as_micros() as f64 / steps as f64;
-    let step_us = vec![per_step; steps * b];
-    // The result images escape to the caller, so they are the one
-    // allocation this path keeps (sized exactly, filled by unstack_into);
-    // every scratch slab goes back. `cur` is always Some here: prepare
-    // guarantees steps >= 1, so at least one chunk dispatched.
-    let final_x = match cur {
-        Some(t) => t,
-        None => {
-            let e = anyhow!("batched dispatch loop executed no chunks for {steps} steps");
-            resolve_batch_err(&pb.reqs, &e);
-            let _ = res_tx.send(LaneEvent::Failed { count: b });
-            return;
-        }
-    };
-    let n_inner: usize = pb.x0.shape[1..].iter().product();
-    // capacity-only construction: unstack_into rewrites shape and data,
-    // so pre-zeroing the images would be a dead fill pass
-    let mut images: Vec<TensorBuf> = (0..b)
-        .map(|_| TensorBuf {
-            shape: vec![0],
-            data: Vec::with_capacity(n_inner),
-        })
-        .collect();
-    if let Err(e) = final_x.unstack_into(&mut images) {
-        resolve_batch_err(&pb.reqs, &e);
-        let _ = res_tx.send(LaneEvent::Failed { count: b });
-        return;
-    }
-    pool.reclaim(final_x);
-    if let Some(s) = spare {
-        pool.reclaim(s);
-    }
     let PreparedBatch {
         reqs,
         x0,
@@ -1023,10 +1105,110 @@ fn execute_batch(
         prep_us,
         ..
     } = pb;
+    // Rotating image slabs, materialized lazily: each dispatch reads the
+    // current images and writes a destination slab, then the old current
+    // becomes the next destination — in-place ping-pong instead of a
+    // fresh output allocation per chunk. The first chunk reads `x0`
+    // directly, so a whole-request batch (chunk = 0, the default) leases
+    // exactly one slab and a chunked batch exactly two.
+    let unwound = catch_unwind(AssertUnwindSafe(
+        || -> Result<(Vec<TensorBuf>, usize, usize)> {
+            if let Some(msg) = &inject_panic {
+                panic!("{}", msg);
+            }
+            let mut cur: Option<TensorBuf> = None;
+            let mut spare: Option<TensorBuf> = None;
+            let mut dispatches = 0usize;
+            let mut batch_items = 0usize;
+            let mut done = 0usize;
+            while done < steps {
+                let c = chunk.min(steps - done);
+                // the dispatch fully overwrites its destination, so the
+                // rotation slabs take the no-memset dirty lease
+                let mut dst = spare
+                    .take()
+                    .unwrap_or_else(|| pool.lease_tensor_dirty(&x0.shape));
+                let src = cur.as_ref().unwrap_or(&x0);
+                dispatch_chunk(
+                    exe,
+                    &ctx.artifact,
+                    prepared,
+                    pool,
+                    b,
+                    steps,
+                    &t_embs,
+                    &coeffs,
+                    &noises,
+                    src,
+                    &mut dst,
+                    done,
+                    c,
+                )?;
+                ctx.pulse.beat();
+                spare = cur.replace(dst);
+                dispatches += 1;
+                batch_items += b;
+                done += c;
+            }
+            // The result images escape to the caller, so they are the one
+            // allocation this path keeps (sized exactly, filled by
+            // unstack_into); every scratch slab goes back. `cur` is always
+            // Some here: prepare guarantees steps >= 1, so at least one
+            // chunk dispatched.
+            let final_x = cur.ok_or_else(|| {
+                anyhow!("batched dispatch loop executed no chunks for {steps} steps")
+            })?;
+            let n_inner: usize = x0.shape[1..].iter().product();
+            // capacity-only construction: unstack_into rewrites shape and
+            // data, so pre-zeroing the images would be a dead fill pass
+            let mut images: Vec<TensorBuf> = (0..b)
+                .map(|_| TensorBuf {
+                    shape: vec![0],
+                    data: Vec::with_capacity(n_inner),
+                })
+                .collect();
+            final_x.unstack_into(&mut images)?;
+            pool.reclaim(final_x);
+            if let Some(s) = spare {
+                pool.reclaim(s);
+            }
+            Ok((images, dispatches, batch_items))
+        },
+    ));
+    let outcome = match unwound {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow!(
+            "panic in serving lane {}: {}",
+            ctx.worker,
+            panic_payload_msg(&payload)
+        )),
+    };
+    let (images, dispatches, batch_items) = match outcome {
+        Ok(v) => v,
+        Err(e) => {
+            // a failed (or panicked) batch fails exactly its own tickets;
+            // the slabs it was holding simply drop (a missed recycle, not
+            // a leak) and the lane keeps serving
+            resolve_batch_err(&reqs, &e);
+            let _ = res_tx.send(LaneEvent::Failed { count: b });
+            return;
+        }
+    };
+    let latency = t0.elapsed();
+    // per-step latency: each request experienced the batch's wall time,
+    // spread over its steps — one sample per request-step, so the
+    // histogram counts line up with `steps_done` across modes.
+    let per_step = latency.as_micros() as f64 / steps as f64;
+    let step_us = vec![per_step; steps * b];
     pool.reclaim(x0);
     pool.reclaim(t_embs);
     pool.reclaim(coeffs);
     pool.reclaim(noises);
+    // fault plane: a delayed-delivery event holds the completed results
+    // back before ticket resolution (a slow delivery path)
+    if let Some(d) = delay {
+        std::thread::sleep(d);
+    }
     // resolve every ticket, measuring admission → resolution latency
     // (a dispatch that returned the wrong leading dim already failed
     // above: unstack_into rejects a row-count mismatch)
@@ -1119,13 +1301,60 @@ fn run_batched_lane(
                 Err(TryRecvError::Disconnected) => break,
             };
             first = false;
-            execute_batch(ctx, exe, prepared, &pool, pb, stalled, res_tx);
+            // Fault plane (ISSUE 6): claim this batch's executed-request
+            // window before dispatch. A kill drops the batch unresolved
+            // (its tickets read as Lost) and stops the shard's lanes —
+            // the software analogue of the host dying mid-flight.
+            let action = lane_fault_action(ctx, pb.reqs.len());
+            if action.kill {
+                queue.kill_now();
+                drop(pb);
+                break;
+            }
+            if queue.is_killed() {
+                // another lane's kill landed while this batch was buffered
+                drop(pb);
+                break;
+            }
+            if let Some(d) = action.stall {
+                std::thread::sleep(d);
+            }
+            execute_batch(
+                ctx,
+                exe,
+                prepared,
+                &pool,
+                pb,
+                stalled,
+                res_tx,
+                action.panic_msg,
+                action.delay,
+            );
         }
         let _ = prep.join();
     } else {
         while let Some(reqs) = queue.next_batch() {
+            let action = lane_fault_action(ctx, reqs.len());
+            if action.kill {
+                queue.kill_now();
+                drop(reqs);
+                break;
+            }
+            if let Some(d) = action.stall {
+                std::thread::sleep(d);
+            }
             match prepare_host_batch(reqs, &ctx.schedule, &ctx.img_shape, ctx.time_dim, &pool) {
-                Ok(pb) => execute_batch(ctx, exe, prepared, &pool, pb, false, res_tx),
+                Ok(pb) => execute_batch(
+                    ctx,
+                    exe,
+                    prepared,
+                    &pool,
+                    pb,
+                    false,
+                    res_tx,
+                    action.panic_msg,
+                    action.delay,
+                ),
                 Err((reqs, e)) => {
                     resolve_batch_err(&reqs, &e);
                     let _ = res_tx.send(LaneEvent::Failed { count: reqs.len() });
@@ -1133,6 +1362,15 @@ fn run_batched_lane(
             }
         }
     }
+}
+
+/// Claim `n` executed requests on the session's fault plane (no-op
+/// without one).
+fn lane_fault_action(ctx: &WorkerCtx, n: usize) -> FaultAction {
+    ctx.faults
+        .as_ref()
+        .map(|f| f.on_requests(n as u64))
+        .unwrap_or_default()
 }
 
 /// Per-request lane (the pre-ISSUE-3 execution mode, kept as the
@@ -1145,33 +1383,64 @@ fn run_request_lane(
     queue: &Arc<AdmissionQueue>,
     res_tx: &Sender<LaneEvent>,
 ) {
-    while let Some(batch) = queue.next_batch() {
+    'outer: while let Some(batch) = queue.next_batch() {
         for adm in batch {
+            // Fault plane (ISSUE 6): one executed request per claim on
+            // this path, so a panic event fails exactly one ticket.
+            let action = lane_fault_action(ctx, 1);
+            if action.kill {
+                // the current entry and the rest of the grabbed batch
+                // drop unresolved (Lost) — host death mid-flight
+                queue.kill_now();
+                break 'outer;
+            }
+            if let Some(d) = action.stall {
+                std::thread::sleep(d);
+            }
             let mut step_us = Vec::new();
-            let r = if ctx.fused {
-                denoise_one_fused(
-                    exe,
-                    &ctx.artifact,
-                    prepared,
-                    &ctx.schedule,
-                    &ctx.img_shape,
-                    ctx.time_dim,
-                    ctx.backend == ServeBackend::Native,
-                    &adm.req,
-                    &mut step_us,
-                )
-            } else {
-                denoise_one(
-                    exe,
-                    &ctx.artifact,
-                    prepared,
-                    &ctx.schedule,
-                    &ctx.img_shape,
-                    ctx.time_dim,
-                    &adm.req,
-                    &mut step_us,
-                )
+            // Panic isolation: a panicking request (injected or real)
+            // fails only its own ticket; the lane keeps serving.
+            let unwound = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(msg) = &action.panic_msg {
+                    panic!("{}", msg);
+                }
+                if ctx.fused {
+                    denoise_one_fused(
+                        exe,
+                        &ctx.artifact,
+                        prepared,
+                        &ctx.schedule,
+                        &ctx.img_shape,
+                        ctx.time_dim,
+                        ctx.backend == ServeBackend::Native,
+                        &adm.req,
+                        &mut step_us,
+                    )
+                } else {
+                    denoise_one(
+                        exe,
+                        &ctx.artifact,
+                        prepared,
+                        &ctx.schedule,
+                        &ctx.img_shape,
+                        ctx.time_dim,
+                        &ctx.pulse,
+                        &adm.req,
+                        &mut step_us,
+                    )
+                }
+            }));
+            let r = match unwound {
+                Ok(r) => r,
+                Err(payload) => Err(anyhow!(
+                    "panic in serving lane {}: {}",
+                    ctx.worker,
+                    panic_payload_msg(&payload)
+                )),
             };
+            if let Some(d) = action.delay {
+                std::thread::sleep(d);
+            }
             match r {
                 Ok(res) => {
                     let dispatches = if ctx.fused { 1 } else { res.steps };
@@ -1309,6 +1578,7 @@ pub struct ServerHandle {
     collector: Option<std::thread::JoinHandle<()>>,
     cfg: ServeConfig,
     time_dim: usize,
+    pulse: Arc<ShardPulse>,
 }
 
 impl ServerHandle {
@@ -1334,6 +1604,24 @@ impl ServerHandle {
     /// wait and join.
     pub fn begin_shutdown(&self) {
         self.queue.begin_drain();
+    }
+
+    /// Hard-kill the session (ISSUE 6): simulate the host dying. The
+    /// queued backlog drops *unresolved* — undelivered tickets read as
+    /// [`TicketPoll::Lost`] — lanes exit at their next grab without
+    /// resolving in-flight work, and heartbeats stop. The operational /
+    /// test analogue of the fault plane's `kill` event; contrast the
+    /// graceful `begin_shutdown`, where every ticket resolves.
+    pub fn kill(&self) {
+        self.queue.kill_now();
+    }
+
+    /// This session's heartbeat pulse (ISSUE 6). Lanes beat it at least
+    /// once per `serve.heartbeat_ms` while alive; a fleet monitor that
+    /// samples a frozen sequence for `serve.heartbeat_misses` periods
+    /// declares the shard dead and fails its work over.
+    pub fn pulse(&self) -> Arc<ShardPulse> {
+        Arc::clone(&self.pulse)
     }
 
     /// Requests waiting in the admission queue right now.
@@ -1452,6 +1740,9 @@ impl DiffusionServer {
     /// workers); the native backend synthesizes deterministic parameters
     /// and needs no artifacts at all.
     pub fn new(cfg: ServeConfig, store: &ArtifactStore) -> Result<Self> {
+        // degenerate configs (zero workers/depth/priorities) error here
+        // instead of panicking or hanging a session later
+        cfg.validate()?;
         let ucfg = UnetConfig::default();
         let schedule = DdpmSchedule::standard(cfg.steps);
         // the fused artifact bakes T into its name and signature
@@ -1500,18 +1791,34 @@ impl DiffusionServer {
     /// owns them. Requests enter through `submit`/`try_submit`; the
     /// session ends with `shutdown` (graceful drain).
     pub fn start(self) -> ServerHandle {
-        self.start_session(None, false)
+        self.start_session(None, false, None)
+    }
+
+    /// Start a session with a fault-injection plane attached (ISSUE 6):
+    /// the lanes claim executed-request windows on the plane and act out
+    /// whatever it schedules (kill / stall / panic / delayed delivery).
+    /// `None` behaves exactly like [`DiffusionServer::start`]. The fleet
+    /// uses this to give each shard its slice of a [`crate::coordinator::
+    /// faults::FaultSpec`].
+    pub fn start_with_faults(self, faults: Option<Arc<FaultPlane>>) -> ServerHandle {
+        self.start_session(None, false, faults)
     }
 
     /// Start with an optional queue-depth override and an optional held
     /// gate (workers wait to grab until `release()` — the legacy
     /// `serve()` uses this to reproduce the standing-start fair division
     /// over a preloaded workload).
-    fn start_session(self, depth_override: Option<usize>, held: bool) -> ServerHandle {
+    fn start_session(
+        self,
+        depth_override: Option<usize>,
+        held: bool,
+        faults: Option<Arc<FaultPlane>>,
+    ) -> ServerHandle {
         let cfg = self.cfg.clone();
         let depth = depth_override.unwrap_or(cfg.queue_depth).max(1);
         let default_deadline = (cfg.default_deadline_ms > 0)
             .then(|| Duration::from_millis(cfg.default_deadline_ms));
+        let pulse = Arc::new(ShardPulse::new());
         let queue = Arc::new(AdmissionQueue::new(
             depth,
             cfg.priorities,
@@ -1519,6 +1826,8 @@ impl DiffusionServer {
             cfg.workers,
             cfg.max_batch,
             held,
+            Arc::clone(&pulse),
+            Duration::from_millis(cfg.heartbeat_ms.max(1)),
         ));
         let live = Arc::new(Mutex::new(SessionLive {
             metrics: {
@@ -1550,6 +1859,8 @@ impl DiffusionServer {
                 pipeline: cfg.pipeline,
                 chunk: cfg.chunk,
                 pooled: cfg.pooled,
+                faults: faults.clone(),
+                pulse: Arc::clone(&pulse),
             };
             let queue = Arc::clone(&queue);
             let res_tx = res_tx.clone();
@@ -1569,6 +1880,7 @@ impl DiffusionServer {
             collector: Some(collector),
             cfg,
             time_dim: self.time_dim,
+            pulse,
         }
     }
 
@@ -1587,7 +1899,7 @@ impl DiffusionServer {
     ) -> Result<(Vec<DenoiseResult>, ServeMetrics)> {
         let n = requests.len();
         let depth = self.cfg.queue_depth.max(n).max(1);
-        let handle = self.clone().start_session(Some(depth), true);
+        let handle = self.clone().start_session(Some(depth), true, None);
         let mut tickets = Vec::with_capacity(n);
         let mut first_err: Option<anyhow::Error> = None;
         for req in requests {
@@ -1644,9 +1956,30 @@ mod tests {
         DenoiseRequest::new(id, id, steps)
     }
 
+    /// Test queue with explicit depth/levels/held (new signature's
+    /// pulse + heartbeat filled with defaults).
+    fn raw_queue(
+        depth: usize,
+        levels: usize,
+        workers: usize,
+        max_batch: usize,
+        held: bool,
+    ) -> AdmissionQueue {
+        AdmissionQueue::new(
+            depth,
+            levels,
+            None,
+            workers,
+            max_batch,
+            held,
+            Arc::new(ShardPulse::new()),
+            Duration::from_millis(25),
+        )
+    }
+
     /// Queue with no default deadline, ungated, depth 64.
     fn queue(workers: usize, max_batch: usize, levels: usize) -> AdmissionQueue {
-        AdmissionQueue::new(64, levels, None, workers, max_batch, false)
+        raw_queue(64, levels, workers, max_batch, false)
     }
 
     /// Admit a request through the real admission path, discarding the
@@ -1721,7 +2054,7 @@ mod tests {
 
     #[test]
     fn queue_bounded_admission_and_shutdown_rejections() {
-        let q = AdmissionQueue::new(2, 1, None, 1, 4, false);
+        let q = raw_queue(2, 1, 1, 4, false);
         let _t0 = q.admit(req(0, 3), false).unwrap();
         let _t1 = q.admit(req(1, 3), false).unwrap();
         assert_eq!(
@@ -1779,7 +2112,7 @@ mod tests {
         // priority lane on each batch formation — a stale low-priority
         // entry resolves (and frees its bounded-queue slot) even though
         // the batch itself comes from the urgent lane.
-        let q = AdmissionQueue::new(3, 3, None, 1, 8, false);
+        let q = raw_queue(3, 3, 1, 8, false);
         let mut stale_low = req(0, 3);
         stale_low.priority = 2;
         stale_low.deadline = Some(Duration::from_millis(2));
@@ -1800,7 +2133,7 @@ mod tests {
 
     #[test]
     fn queue_held_gate_blocks_grabs_until_release() {
-        let q = Arc::new(AdmissionQueue::new(8, 1, None, 1, 4, true));
+        let q = Arc::new(raw_queue(8, 1, 1, 4, true));
         admit(&q, req(0, 3));
         let (tx, rx) = channel();
         let q2 = Arc::clone(&q);
@@ -1951,6 +2284,79 @@ mod tests {
         assert_eq!(recycled.t_embs, cold.t_embs);
         assert_eq!(recycled.coeffs, cold.coeffs);
         assert_eq!(recycled.noises, cold.noises);
+    }
+
+    #[test]
+    fn kill_drops_backlog_unresolved_and_stops_grabs() {
+        let q = queue(1, 4, 1);
+        let mut t = q.admit(req(0, 3), false).unwrap();
+        q.kill_now();
+        // the lane's next grab sees death immediately, even with work queued
+        assert!(q.next_batch().is_none(), "killed queue hands out nothing");
+        // the queued entry was dropped unresolved: its ticket reads Lost
+        match t.poll() {
+            TicketPoll::Lost => {}
+            other => panic!("expected Lost after kill, got {other:?}"),
+        }
+        // admission is closed
+        assert_eq!(
+            q.admit(req(1, 3), false).unwrap_err(),
+            AdmissionError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn ticket_poll_distinguishes_ready_from_lost() {
+        let q = queue(1, 4, 1);
+        let mut t = q.admit(req(0, 3), false).unwrap();
+        assert!(matches!(t.poll(), TicketPoll::Pending));
+        q.begin_drain();
+        let batch = q.next_batch().unwrap();
+        let _ = batch[0].tx.send(Err(anyhow!("boom")));
+        match t.poll() {
+            TicketPoll::Ready(r) => {
+                assert!(r.unwrap_err().to_string().contains("boom"));
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        // a second ticket whose lane drops it reads Lost, not Ready
+        let q2 = queue(1, 4, 1);
+        let mut t2 = q2.admit(req(1, 3), false).unwrap();
+        q2.kill_now();
+        assert!(matches!(t2.poll(), TicketPoll::Lost));
+    }
+
+    #[test]
+    fn idle_lanes_beat_the_pulse() {
+        let pulse = Arc::new(ShardPulse::new());
+        let q = Arc::new(AdmissionQueue::new(
+            8,
+            1,
+            None,
+            1,
+            4,
+            false,
+            Arc::clone(&pulse),
+            Duration::from_millis(5),
+        ));
+        let q2 = Arc::clone(&q);
+        let lane = std::thread::spawn(move || q2.next_batch());
+        // an empty queue still beats: the wait loop wakes per heartbeat
+        let t0 = Instant::now();
+        let s0 = pulse.seq();
+        while pulse.seq() < s0 + 3 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "idle lane never beat the pulse"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        q.kill_now();
+        assert!(lane.join().unwrap().is_none());
+        // after death the pulse freezes
+        let s1 = pulse.seq();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(pulse.seq(), s1, "dead lanes must not beat");
     }
 
     #[test]

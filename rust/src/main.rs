@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 use sf_mmcn::baselines::mmcn;
 use sf_mmcn::compiler::analyze_graph;
 use sf_mmcn::config::{ModelChoice, RunConfig, ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer};
+use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, FaultSpec, ShardFleet};
 use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
 use sf_mmcn::report;
 use sf_mmcn::runtime::ArtifactStore;
@@ -39,6 +39,8 @@ USAGE: sf-mmcn <subcommand> [options]
             [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
             [--queue-depth 64] [--deadline-ms 0] [--priorities 3]
             [--open-loop [--rate 8.0]] [--config file.toml]
+            [--shards 1] [--heartbeat-ms 25] [--heartbeat-misses 8]
+            [--fault-spec \"kill:1:5;stall:0:3:40\"] [--fault-seed N]
   sweep     [--model resnet18] [--img 224]
   report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
             headlines|all
@@ -190,6 +192,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     cfg.default_deadline_ms = args.get_u64("deadline-ms", cfg.default_deadline_ms)?;
     cfg.priorities = args.get_usize("priorities", cfg.priorities)?;
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
+    cfg.heartbeat_misses = args.get_u64("heartbeat-misses", cfg.heartbeat_misses)?;
+    if let Some(spec) = args.get("fault-spec") {
+        cfg.fault_spec = spec.to_string();
+    }
+    let fault_seed = match args.get("fault-seed") {
+        Some(_) => Some(args.get_u64("fault-seed", 0)?),
+        None => None,
+    };
+
+    // The fleet front door (ISSUE 6): multiple shards, or any fault
+    // injection, serve through ShardFleet so failures are survivable.
+    if cfg.shards > 1 || !cfg.fault_spec.is_empty() || fault_seed.is_some() {
+        if args.flag("open-loop") {
+            bail!("--open-loop serves a single session; drop it or use the failover bench scenario");
+        }
+        return cmd_serve_fleet(&cfg, fault_seed);
+    }
 
     if args.flag("open-loop") {
         // Streaming session demo (ISSUE 5): requests arrive on a fixed
@@ -302,6 +323,52 @@ fn cmd_serve_open_loop(cfg: &ServeConfig, rate: f64) -> Result<()> {
             rep.core_power_w * 1e3,
         );
     }
+    Ok(())
+}
+
+/// Fleet serving demo (ISSUE 6): shard the session, inject the requested
+/// faults, and let failover deliver the full workload anyway. The fault
+/// schedule comes from `--fault-spec` (literal) or `--fault-seed`
+/// (canonical seeded kill-one-shard scenario); either way the printed
+/// spec replays the exact run.
+fn cmd_serve_fleet(cfg: &ServeConfig, fault_seed: Option<u64>) -> Result<()> {
+    let store = ArtifactStore::default_store();
+    let spec = match fault_seed {
+        Some(seed) => FaultSpec::seeded_kill(seed, cfg.shards, cfg.requests as u64),
+        None => FaultSpec::parse(&cfg.fault_spec)?,
+    };
+    println!(
+        "fleet serving: {} requests ({} steps each) over {} shards × {} workers, {} backend …",
+        cfg.requests,
+        cfg.steps,
+        cfg.shards,
+        cfg.workers,
+        cfg.backend.name(),
+    );
+    if !spec.is_empty() {
+        println!("fault plane: {}", spec.render());
+    }
+    let fleet = ShardFleet::start_with_spec(cfg.clone(), &store, spec)?;
+    let mut tickets = Vec::new();
+    for req in workload(cfg, cfg.seed, 0..cfg.requests) {
+        match fleet.submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(e) => println!("request rejected at the front door: {e}"),
+        }
+    }
+    let (mut delivered, mut failed) = (0usize, 0usize);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => delivered += 1,
+            Err(e) => {
+                failed += 1;
+                eprintln!("{e}");
+            }
+        }
+    }
+    let metrics = fleet.shutdown()?;
+    println!("{}", metrics.render());
+    println!("fleet summary: {delivered} delivered, {failed} failed");
     Ok(())
 }
 

@@ -1,0 +1,237 @@
+//! Fleet failover end-to-end tests (ISSUE 6): the acceptance criteria
+//! for fault-tolerant sharded serving, on the offline native backend.
+//!
+//! The central claim is **bit-identical recovery**: request execution is
+//! a pure function of `(seed, steps)`, so when a shard dies mid-flight
+//! and the fleet re-admits its undelivered work onto survivors, every
+//! delivered image equals the no-fault run byte for byte — failover is
+//! invisible except in the failover counters.
+//!
+//! All scenarios are driven by the seeded fault plane (`FaultSpec`), so
+//! a failing run replays exactly from the spec string in the assertion
+//! message.
+
+use std::time::{Duration, Instant};
+
+use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::{
+    workload, DenoiseResult, DiffusionServer, FaultSpec, FleetTicket, ShardFleet, ShardState,
+};
+use sf_mmcn::runtime::ArtifactStore;
+
+/// Fleet config on the native surrogate: two-ish small shards, per-step
+/// dispatches (chunk = 1) so executing lanes beat the pulse every few
+/// milliseconds — far inside the 10 ms × 8 heartbeat tolerance.
+fn fleet_cfg(shards: usize, steps: usize) -> ServeConfig {
+    ServeConfig {
+        steps,
+        requests: 0,
+        workers: 1,
+        max_batch: 2,
+        seed: 11,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: false,
+        backend: ServeBackend::Native,
+        batched: true,
+        pipeline: false,
+        chunk: 1,
+        pooled: true,
+        queue_depth: 64,
+        priorities: 2,
+        shards,
+        heartbeat_ms: 10,
+        heartbeat_misses: 8,
+        ..ServeConfig::default()
+    }
+}
+
+fn store() -> ArtifactStore {
+    ArtifactStore::new("artifacts")
+}
+
+/// The no-fault reference: the same workload through a plain single
+/// session. Results are sorted by id for positional comparison.
+fn baseline(cfg: &ServeConfig, n: usize) -> Vec<DenoiseResult> {
+    let mut solo = cfg.clone();
+    solo.shards = 1;
+    solo.fault_spec = String::new();
+    let server = DiffusionServer::new(solo, &store()).expect("native baseline server");
+    let (mut r, _) = server
+        .serve(workload(cfg, cfg.seed, 0..n))
+        .expect("no-fault baseline serves everything");
+    r.sort_by_key(|x| x.id);
+    r
+}
+
+fn submit_all(fleet: &ShardFleet, cfg: &ServeConfig, n: usize) -> Vec<FleetTicket> {
+    workload(cfg, cfg.seed, 0..n)
+        .into_iter()
+        .map(|r| fleet.submit(r).expect("front door admits the workload"))
+        .collect()
+}
+
+fn wait_all(tickets: Vec<FleetTicket>, what: &str) -> Vec<DenoiseResult> {
+    let mut results: Vec<DenoiseResult> = tickets
+        .into_iter()
+        .map(|t| {
+            let id = t.id();
+            t.wait()
+                .unwrap_or_else(|e| panic!("{what}: fleet ticket {id} lost or failed: {e}"))
+        })
+        .collect();
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+fn assert_bit_identical(got: &[DenoiseResult], want: &[DenoiseResult], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: delivered-set size");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id, "{what}: delivered-set ids");
+        assert_eq!(
+            g.image.data, w.image.data,
+            "{what}: request {} diverged from the no-fault run — recovery must be bit-identical",
+            g.id
+        );
+    }
+}
+
+#[test]
+fn seeded_shard_kill_recovers_bit_identically_with_zero_lost_tickets() {
+    // THE acceptance test: a seeded mid-flight shard kill, then failover.
+    // Every ticket resolves Ok (zero lost), and every delivered image is
+    // byte-equal to the no-fault run.
+    let n = 16;
+    let cfg = fleet_cfg(2, 3);
+    let want = baseline(&cfg, n);
+    // horizon 2 pins the kill to the victim's second executed request,
+    // so the event is guaranteed to fire early in any balanced routing
+    let spec = FaultSpec::seeded_kill(0xf0, 2, 2);
+    let rendered = spec.render();
+    let fleet = ShardFleet::start_with_spec(cfg.clone(), &store(), spec).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    let got = wait_all(tickets, "seeded kill");
+    assert_bit_identical(&got, &want, "seeded kill");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.submitted, n as u64);
+    assert_eq!(m.stats.delivered, n as u64, "zero lost tickets");
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 1, "the seeded kill fired ({rendered})");
+    assert!(
+        m.stats.requeued >= 1,
+        "the killed shard held undelivered work ({rendered})"
+    );
+    assert_eq!(m.stats.dead, 1);
+    assert_eq!(m.stats.live, 1);
+    assert_eq!(m.e2e_latency.count(), n as u64);
+}
+
+#[test]
+fn literal_fault_spec_kill_matches_seeded_path() {
+    // The same scenario via the literal spec grammar — the reproducible
+    // form EXPERIMENTS.md documents. kill:0:1 = shard 0 dies claiming
+    // its second request.
+    let n = 12;
+    let mut cfg = fleet_cfg(2, 3);
+    cfg.fault_spec = "kill:0:1".into();
+    let want = baseline(&cfg, n);
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    let got = wait_all(tickets, "literal kill");
+    assert_bit_identical(&got, &want, "literal kill");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failovers, 1);
+    assert_eq!(m.stats.dead, 1);
+}
+
+#[test]
+fn preemption_drain_loses_nothing_and_reexecutes_nothing() {
+    // Companion acceptance test: a preemption notice drains the shard —
+    // every admitted ticket resolves in place (no requeue, no duplicate
+    // execution) and the shard parks as Drained.
+    let n = 12;
+    let cfg = fleet_cfg(2, 3);
+    let want = baseline(&cfg, n);
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    fleet.begin_preempt(0).unwrap();
+    let got = wait_all(tickets, "preemption");
+    assert_bit_identical(&got, &want, "preemption");
+    // the monitor parks the drained shard asynchronously
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.shard_states()[0] != ShardState::Drained {
+        assert!(Instant::now() < deadline, "shard 0 never finished its drain");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 0, "preemption is not a failure");
+    assert_eq!(m.stats.requeued, 0, "drain resolves work in place");
+    assert_eq!(m.stats.drained, 1);
+    assert_eq!(m.stats.live, 1);
+    let done: usize = m.per_shard.iter().map(|s| s.requests_done).sum();
+    assert_eq!(done, n, "every request executed exactly once");
+}
+
+#[test]
+fn stalled_shard_fails_over_via_missed_heartbeats() {
+    // A wedged lane never drops its tickets, so the Lost fast path stays
+    // silent — only the heartbeat monitor can notice. Stall shard 0 for
+    // 800 ms against a 10 ms x 5 = 50 ms tolerance: the monitor must
+    // declare it dead and move its work to the survivor.
+    let n = 10;
+    let mut cfg = fleet_cfg(2, 3);
+    cfg.heartbeat_ms = 10;
+    cfg.heartbeat_misses = 5;
+    cfg.fault_spec = "stall:0:0:800".into();
+    let want = baseline(&cfg, n);
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    let got = wait_all(tickets, "stall failover");
+    assert_bit_identical(&got, &want, "stall failover");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(
+        m.stats.failovers, 1,
+        "missed heartbeats retired the wedged shard"
+    );
+    assert!(m.stats.requeued >= 1, "the wedged shard held claimed work");
+    assert_eq!(m.stats.dead, 1);
+}
+
+#[test]
+fn delayed_delivery_fault_slows_but_loses_nothing() {
+    // delay events sit inside the heartbeat tolerance: nothing fails
+    // over, nothing is lost — latency is the only casualty.
+    let n = 6;
+    let mut cfg = fleet_cfg(2, 2);
+    cfg.fault_spec = "delay:0:1:30;delay:1:1:30".into();
+    let want = baseline(&cfg, n);
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    let got = wait_all(tickets, "delayed delivery");
+    assert_bit_identical(&got, &want, "delayed delivery");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failovers, 0, "a slow delivery is not a death");
+    assert_eq!(m.stats.requeued, 0);
+}
+
+#[test]
+fn fleet_render_reports_failover_counters() {
+    let n = 8;
+    let mut cfg = fleet_cfg(2, 2);
+    cfg.fault_spec = "kill:1:0".into();
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    wait_all(tickets, "render scenario");
+    let m = fleet.shutdown().unwrap();
+    let rendered = m.render();
+    assert!(rendered.contains("fleet: 2 shards"), "{rendered}");
+    assert!(rendered.contains("failover:"), "{rendered}");
+    assert!(rendered.contains("shard 0:"), "{rendered}");
+    assert!(rendered.contains("shard 1:"), "{rendered}");
+}

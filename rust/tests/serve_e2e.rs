@@ -12,11 +12,12 @@
 //!   PJRT-enabled build (`--features pjrt` against the real xla crate);
 //!   each skips cleanly when either is missing.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use sf_mmcn::config::{ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::{
-    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer,
+    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, FaultSpec,
 };
 use sf_mmcn::runtime::{ArtifactStore, Executor};
 use sf_mmcn::sim::energy::CAL_40NM;
@@ -626,6 +627,118 @@ fn session_streaming_bit_identical_to_serve_under_trickled_arrivals() {
             a.id
         );
     }
+}
+
+// ------------------------------------------------- admission races (ISSUE 6)
+
+#[test]
+fn session_deadline_expires_between_admit_and_pop() {
+    // The race the satellite names: admission accepts the request (its
+    // deadline is still in the future) but the deadline passes before a
+    // lane pops it. It must count as *expired in queue* — admitted, then
+    // resolved with an error at batch-formation time — not as a
+    // rejected_deadline admission refusal.
+    let mut cfg = native_cfg(50, 1, 1, true);
+    cfg.pipeline = false;
+    cfg.chunk = 1;
+    let handle = native_server(cfg).start();
+    let blocker = handle.submit(DenoiseRequest::new(0, 1, 50)).expect("room");
+    let mut doomed = DenoiseRequest::new(9, 9, 2);
+    doomed.deadline = Some(Duration::from_millis(1));
+    let mut doomed_ticket = handle.submit(doomed).expect("admitted: deadline still live");
+    // deliverance arrives through polling, not a blocking wait
+    let err = loop {
+        if let Some(r) = doomed_ticket.try_wait() {
+            break r.expect_err("deadline passed while queued");
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    assert!(err.to_string().contains("expired"), "{err}");
+    blocker.wait().unwrap();
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.admission.admitted, 2, "the doomed request was admitted");
+    assert_eq!(metrics.admission.rejected_deadline, 0);
+    assert_eq!(metrics.admission.expired, 1);
+    assert_eq!(metrics.requests_done, 1, "the expired request never executed");
+}
+
+#[test]
+fn ticket_try_wait_before_and_after_delivery() {
+    // try_wait: None while in flight, Some(Ok) exactly once on delivery,
+    // then the spent-ticket error forever after.
+    let mut cfg = native_cfg(50, 1, 1, true);
+    cfg.pipeline = false;
+    cfg.chunk = 1;
+    let handle = native_server(cfg).start();
+    // a 50-dispatch request cannot finish between submit and the first
+    // poll, so the None branch is observed deterministically
+    let mut t = handle.submit(DenoiseRequest::new(0, 1, 50)).unwrap();
+    assert!(t.try_wait().is_none(), "still executing on the single lane");
+    let r = loop {
+        if let Some(r) = t.try_wait() {
+            break r;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    assert_eq!(r.expect("delivered").id, 0);
+    let spent = t.try_wait().expect("spent ticket resolves immediately");
+    let msg = spent.expect_err("single-shot delivery").to_string();
+    assert!(msg.contains("already consumed"), "{msg}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn ticket_wait_after_try_wait_is_single_shot() {
+    // Double-wait on a resolved ticket: once try_wait has returned Some,
+    // the blocking wait() must fail fast instead of hanging on a channel
+    // that will never receive a second result.
+    let handle = native_server(native_cfg(2, 1, 1, true)).start();
+    let mut t = handle.submit(DenoiseRequest::new(3, 3, 2)).unwrap();
+    loop {
+        if let Some(r) = t.try_wait() {
+            r.expect("request completes");
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let err = t.wait().expect_err("resolved ticket cannot be waited again");
+    assert!(err.to_string().contains("already consumed"), "{err}");
+    handle.shutdown().unwrap();
+}
+
+// ------------------------------------------------- panic isolation (ISSUE 6)
+
+#[test]
+fn lane_panic_fails_exactly_one_ticket() {
+    // Fault plane: panic while executing the shard's third request. On
+    // the per-request path each executed request is one fault-plane
+    // claim, so exactly one ticket fails — with the panic message — and
+    // the lane keeps serving everything else.
+    let mut cfg = native_cfg(3, 1, 2, false);
+    cfg.pipeline = false;
+    let spec = FaultSpec::parse("panic:0:2:injected boom").unwrap();
+    let server = native_server(cfg);
+    let handle = server.start_with_faults(Some(Arc::new(spec.plane_for(0))));
+    let tickets: Vec<_> = reqs(5, 3)
+        .into_iter()
+        .map(|r| handle.submit(r).expect("room"))
+        .collect();
+    let mut failures = Vec::new();
+    let mut ok = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(e) => failures.push(e.to_string()),
+        }
+    }
+    assert_eq!(failures.len(), 1, "exactly one ticket fails: {failures:?}");
+    assert!(failures[0].contains("panic"), "{}", failures[0]);
+    assert!(failures[0].contains("injected boom"), "{}", failures[0]);
+    assert_eq!(ok, 4, "the lane survives and serves the rest");
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_failed, 1);
+    assert_eq!(metrics.requests_done, 4);
+    assert_eq!(metrics.lanes_down, 0, "panic isolation keeps the lane up");
 }
 
 // ----------------------------------------------------------------- pjrt
