@@ -32,6 +32,15 @@
 //! the per-scenario e2e latency percentiles (p50/p95/p99, streaming
 //! estimator) land in `BENCH_serve_openloop.json` for the CI artifact.
 //!
+//! Next, the **mixed multi-mode** scenario of ISSUE 7: one session
+//! serving U-net denoise plus ResNet-18 / VGG-16 classification
+//! (`model_mix = unet:2,resnet18:1,vgg16:1`) open-loop at nominal load
+//! with co-simulation on, so shutdown prices each mode's share of the
+//! accelerator separately. Always-on gates (quick included): batches
+//! never mix models, all three modes are served cleanly, and each mode
+//! prices to a positive GOPs/mm² FoM on the 40 nm calibration. Per-mode
+//! req/s, p50/p99, cycles, and FoM land in `BENCH_serve_mixed.json`.
+//!
 //! Last come the **failover** scenarios of ISSUE 6 on the sharded
 //! fleet front door: a two-shard `ShardFleet` driven open-loop at half
 //! the measured single-session capacity, once with no faults and once
@@ -61,6 +70,7 @@ use std::time::{Duration, Instant};
 use sf_mmcn::config::{ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, ServeMetrics, ShardFleet};
 use sf_mmcn::runtime::ArtifactStore;
+use sf_mmcn::sim::energy::CAL_40NM;
 use sf_mmcn::util::bench::{check_against_baseline, BaselineRow, BenchBaseline};
 
 /// Serving workers in every measured config (keep in sync with the
@@ -392,6 +402,178 @@ fn write_openloop_json(mode: &str, capacity_rps: f64, rows: &[OpenRow]) {
     }
 }
 
+// --------------------------------------- mixed multi-mode traffic (ISSUE 7)
+
+/// Per-mode slice of one mixed open-loop session: serving stats plus the
+/// co-simulated accelerator figures for that model's share of the work.
+struct MixedRow {
+    model: &'static str,
+    done: usize,
+    failed: usize,
+    steps: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    sim_cycles: Option<u64>,
+    sim_gops: Option<f64>,
+    sim_gops_per_mm2: Option<f64>,
+    sim_u_pe: Option<f64>,
+}
+
+struct MixedRun {
+    model_mix: String,
+    target_rps: f64,
+    offered: usize,
+    admitted: u64,
+    cross_model_batches: usize,
+    wall_s: f64,
+    rows: Vec<MixedRow>,
+}
+
+/// One mixed-traffic open-loop session (ISSUE 7): U-net denoise plus
+/// ResNet-18 / VGG-16 classification interleaved 2:1:1 on the arrival
+/// schedule, co-simulation on, so shutdown prices each mode's share of
+/// the work separately on the 40 nm calibration — the per-mode GOPs/mm²
+/// FoM the paper's multi-mode comparison tables report.
+fn run_mixed(steps: usize, n: usize, rate: f64) -> MixedRun {
+    let mut cfg = base_cfg(steps, n);
+    cfg.batched = true;
+    cfg.max_batch = 4;
+    cfg.queue_depth = n; // sized to the workload: admission never sheds
+    cfg.cosim = true;
+    cfg.model_mix = "unet:2,resnet18:1,vgg16:1".into();
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store).expect("native mixed server");
+    let handle = server.start();
+    let reqs = workload(&cfg, cfg.seed, 0..n);
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for (i, req) in reqs.into_iter().enumerate() {
+        // fixed synthetic arrival schedule: request i is due at i/rate
+        if let Some(sleep) = interval.mul_f64(i as f64).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        tickets.push(
+            handle
+                .try_submit(req)
+                .expect("queue is sized to the workload"),
+        );
+    }
+    let mut failed_waits = 0usize;
+    for t in tickets {
+        if t.wait().is_err() {
+            failed_waits += 1;
+        }
+    }
+    let m = handle.shutdown().expect("graceful drain");
+    assert_eq!(failed_waits, 0, "mixed traffic must not fail any ticket");
+    let wall = m.wall.as_secs_f64().max(1e-9);
+    let rows: Vec<MixedRow> = m
+        .per_model
+        .iter()
+        .filter(|r| r.requests_done + r.requests_failed > 0)
+        .map(|r| {
+            let rep = r.sim_report(&CAL_40NM, 8);
+            MixedRow {
+                model: r.model.name(),
+                done: r.requests_done,
+                failed: r.requests_failed,
+                steps: r.steps_done,
+                req_per_s: r.requests_done as f64 / wall,
+                p50_ms: r.e2e_latency.p50_us() / 1e3,
+                p99_ms: r.e2e_latency.p99_us() / 1e3,
+                sim_cycles: rep.as_ref().map(|p| p.cycles),
+                sim_gops: rep.as_ref().map(|p| p.gops),
+                sim_gops_per_mm2: rep.as_ref().map(|p| p.gops_per_mm2),
+                sim_u_pe: rep.as_ref().map(|p| p.u_pe),
+            }
+        })
+        .collect();
+    for r in &rows {
+        println!(
+            "bench serve::mixed_{:<9} {:>3} done  {:>4} steps  {:>7.1} req/s  \
+             e2e p50 {:.2} ms  p99 {:.2} ms  sim {} cycles  {:.1} GOPs/mm2",
+            r.model,
+            r.done,
+            r.steps,
+            r.req_per_s,
+            r.p50_ms,
+            r.p99_ms,
+            r.sim_cycles.unwrap_or(0),
+            r.sim_gops_per_mm2.unwrap_or(0.0),
+        );
+    }
+    MixedRun {
+        model_mix: cfg.model_mix,
+        target_rps: rate,
+        offered: n,
+        admitted: m.admission.admitted,
+        cross_model_batches: m.cross_model_batches,
+        wall_s: m.wall.as_secs_f64(),
+        rows,
+    }
+}
+
+fn opt_u64(v: Option<u64>) -> String {
+    v.map_or("null".to_string(), |x| x.to_string())
+}
+
+/// `BENCH_serve_mixed.json`: the per-mode serving + co-sim artifact CI
+/// uploads (written before any gate can fire).
+fn write_mixed_json(mode: &str, run: &MixedRun) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_mixed\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!("  \"model_mix\": \"{}\",\n", run.model_mix));
+    s.push_str(&format!(
+        "  \"target_rps\": {},\n",
+        json_f64(run.target_rps)
+    ));
+    s.push_str(&format!("  \"offered\": {},\n", run.offered));
+    s.push_str(&format!("  \"admitted\": {},\n", run.admitted));
+    s.push_str(&format!(
+        "  \"cross_model_batches\": {},\n",
+        run.cross_model_batches
+    ));
+    s.push_str(&format!("  \"wall_s\": {},\n", json_f64(run.wall_s)));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in run.rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"model\": \"{}\", ", r.model));
+        s.push_str(&format!("\"requests_done\": {}, ", r.done));
+        s.push_str(&format!("\"requests_failed\": {}, ", r.failed));
+        s.push_str(&format!("\"steps_done\": {}, ", r.steps));
+        s.push_str(&format!("\"req_per_s\": {}, ", json_f64(r.req_per_s)));
+        s.push_str(&format!("\"p50_ms\": {}, ", json_f64(r.p50_ms)));
+        s.push_str(&format!("\"p99_ms\": {}, ", json_f64(r.p99_ms)));
+        s.push_str(&format!("\"sim_cycles\": {}, ", opt_u64(r.sim_cycles)));
+        s.push_str(&format!(
+            "\"sim_gops\": {}, ",
+            r.sim_gops.map_or("null".into(), json_f64)
+        ));
+        s.push_str(&format!(
+            "\"sim_gops_per_mm2\": {}, ",
+            r.sim_gops_per_mm2.map_or("null".into(), json_f64)
+        ));
+        s.push_str(&format!(
+            "\"sim_u_pe\": {}",
+            r.sim_u_pe.map_or("null".into(), json_f64)
+        ));
+        s.push('}');
+        if i + 1 < run.rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve_mixed.json", &s) {
+        Ok(()) => println!("wrote BENCH_serve_mixed.json ({} modes)", run.rows.len()),
+        Err(e) => println!("WARNING: could not write BENCH_serve_mixed.json: {e}"),
+    }
+}
+
 // --------------------------------------- fleet failover scenarios (ISSUE 6)
 
 struct FailoverRow {
@@ -675,6 +857,55 @@ fn main() {
         );
         failed = true;
     }
+    // ---- mixed multi-mode traffic (ISSUE 7): U-net + ResNet-18 + VGG-16
+    // through one session, open-loop at nominal load, co-sim pricing each
+    // mode's share of the accelerator separately ----
+    println!("\n---- mixed multi-mode traffic (unet:2,resnet18:1,vgg16:1) ----");
+    let n_mixed = if quick { 24 } else { 48 };
+    let mixed = run_mixed(steps, n_mixed, nominal_rate);
+    // JSON goes to disk before the gates so a failing run still uploads
+    // its per-mode diagnostics from the CI artifact step.
+    write_mixed_json(if quick { "quick" } else { "full" }, &mixed);
+
+    // Always-on mixed-mode gates (quick included): the batcher must never
+    // mix models in one dispatch, every mode must actually get served,
+    // and each served mode must price to a positive area-efficiency FoM.
+    if mixed.cross_model_batches != 0 {
+        println!(
+            "MIXED GATE FAILED: {} batch(es) mixed models in one dispatch — \
+             batches must be model-pure",
+            mixed.cross_model_batches
+        );
+        failed = true;
+    }
+    if mixed.rows.len() != 3 {
+        println!(
+            "MIXED GATE FAILED: only {} of 3 modes saw traffic under \
+             model_mix {}",
+            mixed.rows.len(),
+            mixed.model_mix
+        );
+        failed = true;
+    }
+    for r in &mixed.rows {
+        if r.failed != 0 || r.done == 0 {
+            println!(
+                "MIXED GATE FAILED: mode {} finished {} requests with {} \
+                 failures — mixed traffic must serve every mode cleanly",
+                r.model, r.done, r.failed
+            );
+            failed = true;
+        }
+        if r.sim_gops_per_mm2.unwrap_or(0.0) <= 0.0 {
+            println!(
+                "MIXED GATE FAILED: mode {} priced {:?} GOPs/mm2 — per-mode \
+                 co-sim must report a positive area-efficiency FoM",
+                r.model, r.sim_gops_per_mm2
+            );
+            failed = true;
+        }
+    }
+
     // ---- fleet failover scenarios (ISSUE 6): two shards, open-loop at
     // half the measured single-session capacity (the fleet doubles the
     // lane count, so post-kill the survivor still runs below capacity) ----

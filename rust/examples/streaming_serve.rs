@@ -56,10 +56,10 @@ fn main() -> Result<()> {
         .enumerate()
     {
         if i % 3 == 2 {
-            req.priority = 2; // batch-job lane
+            req.set_priority(2); // batch-job lane
         }
         if i == 5 {
-            req.deadline = Some(Duration::from_nanos(1)); // unmeetable
+            req.set_deadline(Some(Duration::from_nanos(1))); // unmeetable
         }
         match handle.try_submit(req) {
             Ok(t) => tickets.push(t),

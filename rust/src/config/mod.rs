@@ -5,4 +5,4 @@ mod toml_lite;
 mod types;
 
 pub use toml_lite::{parse_toml, Value};
-pub use types::{ModelChoice, RunConfig, ServeBackend, ServeConfig, SweepConfig};
+pub use types::{ModelChoice, ModelMix, RunConfig, ServeBackend, ServeConfig, SweepConfig};

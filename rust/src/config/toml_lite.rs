@@ -179,9 +179,10 @@ pub trait DocExt {
     fn get_float_or(&self, section: &str, key: &str, default: f64) -> f64;
     fn get_bool_or(&self, section: &str, key: &str, default: bool) -> bool;
     /// Unsigned integer getter for keys where a negative value has no
-    /// meaning (queue depths, millisecond budgets): negatives clamp to 0
-    /// so callers can validate against a single "disabled" sentinel.
-    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> u64;
+    /// meaning (queue depths, millisecond budgets): a negative value is a
+    /// per-key configuration error naming `section.key`, never a clamp
+    /// or a silent `as u64` wrap to a huge number.
+    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64>;
 }
 
 impl DocExt for Doc {
@@ -214,11 +215,14 @@ impl DocExt for Doc {
             .unwrap_or(default)
     }
 
-    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
-        self.get_val(section, key)
-            .and_then(|v| v.as_int())
-            .map(|i| i.max(0) as u64)
-            .unwrap_or(default)
+    fn get_u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64> {
+        match self.get_val(section, key).and_then(|v| v.as_int()) {
+            Some(i) if i < 0 => bail!(
+                "`{section}.{key}` must be a non-negative integer, got {i}"
+            ),
+            Some(i) => Ok(i as u64),
+            None => Ok(default),
+        }
     }
 }
 
@@ -296,11 +300,17 @@ steps = 200  # ddpm steps
     }
 
     #[test]
-    fn u64_getter_clamps_negatives() {
+    fn u64_getter_rejects_negatives_with_per_key_error() {
+        // Regression (ISSUE 7): negatives used to clamp to 0 (and before
+        // that, an unchecked `as u64` would have wrapped `-1` to 2^64-1).
+        // They are configuration errors and must say which key is wrong.
         let doc = parse_toml("[s]\nx = 3\nneg = -7").unwrap();
-        assert_eq!(doc.get_u64_or("s", "x", 0), 3);
-        assert_eq!(doc.get_u64_or("s", "neg", 9), 0, "negatives clamp to 0");
-        assert_eq!(doc.get_u64_or("s", "missing", 9), 9);
+        assert_eq!(doc.get_u64_or("s", "x", 0).unwrap(), 3);
+        assert_eq!(doc.get_u64_or("s", "missing", 9).unwrap(), 9);
+        let err = doc.get_u64_or("s", "neg", 9).unwrap_err().to_string();
+        assert!(err.contains("`s.neg`"), "error names the key: {err}");
+        assert!(err.contains("-7"), "error shows the offending value: {err}");
+        assert!(err.contains("non-negative"), "{err}");
     }
 
     #[test]
@@ -314,9 +324,11 @@ steps = 200  # ddpm steps
             ("[serve]\npriorities = 0\n", "priorities"),
             ("[serve]\nworkers = 0\n", "workers"),
             ("[serve]\nshards = 0\n", "shards"),
-            // negatives clamp to 0 in get_u64_or, then reject the same way
+            // negatives reject in get_u64_or itself, naming the key
             ("[serve]\nqueue_depth = -4\n", "queue_depth"),
             ("[serve]\nshards = -1\n", "shards"),
+            ("[serve]\nheartbeat_ms = -25\n", "heartbeat_ms"),
+            ("[serve]\ndefault_deadline_ms = -1\n", "default_deadline_ms"),
         ] {
             let err = ServeConfig::from_toml(toml)
                 .expect_err(&format!("`{key} = 0` must be rejected"))

@@ -10,7 +10,7 @@ use crate::sim::array::AcceleratorConfig;
 use super::toml_lite::{parse_toml, DocExt};
 
 /// Which network to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ModelChoice {
     Vgg16,
     Resnet18,
@@ -18,6 +18,10 @@ pub enum ModelChoice {
 }
 
 impl ModelChoice {
+    /// Every serveable model, in the order per-model metrics rows use.
+    pub const ALL: [ModelChoice; 3] =
+        [ModelChoice::Unet, ModelChoice::Resnet18, ModelChoice::Vgg16];
+
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "vgg16" | "vgg" | "vgg-16" => ModelChoice::Vgg16,
@@ -33,6 +37,84 @@ impl ModelChoice {
             ModelChoice::Resnet18 => "resnet18",
             ModelChoice::Unet => "unet",
         }
+    }
+
+    /// Stable position in [`ModelChoice::ALL`] (per-model metrics rows).
+    pub fn index(&self) -> usize {
+        match self {
+            ModelChoice::Unet => 0,
+            ModelChoice::Resnet18 => 1,
+            ModelChoice::Vgg16 => 2,
+        }
+    }
+}
+
+/// Deterministic traffic mix over the serveable models: a weighted
+/// round-robin pattern, so request `i` of a workload maps to
+/// `pattern[i % len]` — a pure function of the index, which is what
+/// keeps mixed-traffic failover re-execution bit-identical (the fleet
+/// regenerates exactly the same request from the same index).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMix {
+    pattern: Vec<ModelChoice>,
+}
+
+impl ModelMix {
+    /// The historical single-mode workload: every request is a U-net
+    /// denoise.
+    pub fn all_unet() -> Self {
+        Self {
+            pattern: vec![ModelChoice::Unet],
+        }
+    }
+
+    /// Parse `"unet:2,resnet18:1,vgg16:1"` — comma-separated
+    /// `model[:weight]` entries (weight defaults to 1, capped at 64).
+    /// The weights expand into a repeating pattern in entry order
+    /// (`unet,unet,resnet18,vgg16` for the example). Empty input is the
+    /// all-U-net mix.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(Self::all_unet());
+        }
+        let mut pattern = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            let (name, weight) = match entry.split_once(':') {
+                Some((n, w)) => {
+                    let w: u64 = w.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("model mix entry `{entry}`: bad weight `{w}`")
+                    })?;
+                    (n.trim(), w)
+                }
+                None => (entry, 1),
+            };
+            if !(1..=64).contains(&weight) {
+                bail!("model mix entry `{entry}`: weight must be in 1..=64");
+            }
+            let model = ModelChoice::parse(name)?;
+            pattern.extend((0..weight).map(|_| model));
+        }
+        Ok(Self { pattern })
+    }
+
+    /// The model request `index` of a workload carries.
+    pub fn model_for(&self, index: u64) -> ModelChoice {
+        self.pattern[(index % self.pattern.len() as u64) as usize]
+    }
+
+    /// True when the mix is the single-mode all-U-net workload.
+    pub fn is_all_unet(&self) -> bool {
+        self.pattern.iter().all(|m| *m == ModelChoice::Unet)
+    }
+
+    /// Distinct models present, in [`ModelChoice::ALL`] order.
+    pub fn models(&self) -> Vec<ModelChoice> {
+        ModelChoice::ALL
+            .into_iter()
+            .filter(|m| self.pattern.contains(m))
+            .collect()
     }
 }
 
@@ -160,6 +242,10 @@ pub struct ServeConfig {
     /// Fault-injection schedule (see `coordinator::faults`), e.g.
     /// `"kill:1:5;stall:0:3:40"`. Empty = no injected faults.
     pub fault_spec: String,
+    /// Traffic mix for the workload generator (ISSUE 7), e.g.
+    /// `"unet:2,resnet18:1,vgg16:1"` — see [`ModelMix::parse`]. Empty =
+    /// the historical all-U-net workload.
+    pub model_mix: String,
 }
 
 impl Default for ServeConfig {
@@ -185,6 +271,7 @@ impl Default for ServeConfig {
             heartbeat_ms: 25,
             heartbeat_misses: 8,
             fault_spec: String::new(),
+            model_mix: String::new(),
         }
     }
 }
@@ -276,17 +363,24 @@ impl ServeConfig {
         }
         cfg.chunk = chunk as usize;
         cfg.queue_depth =
-            doc.get_u64_or("serve", "queue_depth", cfg.queue_depth as u64) as usize;
+            doc.get_u64_or("serve", "queue_depth", cfg.queue_depth as u64)? as usize;
         cfg.default_deadline_ms =
-            doc.get_u64_or("serve", "default_deadline_ms", cfg.default_deadline_ms);
-        cfg.priorities = doc.get_u64_or("serve", "priorities", cfg.priorities as u64) as usize;
-        cfg.shards = doc.get_u64_or("serve", "shards", cfg.shards as u64) as usize;
-        cfg.heartbeat_ms = doc.get_u64_or("serve", "heartbeat_ms", cfg.heartbeat_ms);
+            doc.get_u64_or("serve", "default_deadline_ms", cfg.default_deadline_ms)?;
+        cfg.priorities =
+            doc.get_u64_or("serve", "priorities", cfg.priorities as u64)? as usize;
+        cfg.shards = doc.get_u64_or("serve", "shards", cfg.shards as u64)? as usize;
+        cfg.heartbeat_ms = doc.get_u64_or("serve", "heartbeat_ms", cfg.heartbeat_ms)?;
         cfg.heartbeat_misses =
-            doc.get_u64_or("serve", "heartbeat_misses", cfg.heartbeat_misses);
+            doc.get_u64_or("serve", "heartbeat_misses", cfg.heartbeat_misses)?;
         cfg.fault_spec = doc.get_str_or("serve", "fault_spec", &cfg.fault_spec);
+        cfg.model_mix = doc.get_str_or("serve", "model_mix", &cfg.model_mix);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The parsed traffic mix (validated by [`ServeConfig::validate`]).
+    pub fn parsed_model_mix(&self) -> Result<ModelMix> {
+        ModelMix::parse(&self.model_mix)
     }
 
     /// Reject degenerate configurations with a clear error instead of
@@ -319,6 +413,8 @@ impl ServeConfig {
         if self.heartbeat_misses == 0 {
             bail!("serve.heartbeat_misses must be >= 1 (zero tolerance would declare every shard dead)");
         }
+        ModelMix::parse(&self.model_mix)
+            .map_err(|e| anyhow::anyhow!("serve.model_mix: {e}"))?;
         Ok(())
     }
 }
@@ -491,5 +587,59 @@ data_reuse = false
     fn model_choice_aliases() {
         assert_eq!(ModelChoice::parse("VGG-16").unwrap(), ModelChoice::Vgg16);
         assert_eq!(ModelChoice::parse("u-net").unwrap(), ModelChoice::Unet);
+    }
+
+    #[test]
+    fn model_mix_parses_weighted_pattern() {
+        let mix = ModelMix::parse("unet:2,resnet18:1,vgg16:1").unwrap();
+        // weighted round-robin in entry order: U U R V U U R V ...
+        let want = [
+            ModelChoice::Unet,
+            ModelChoice::Unet,
+            ModelChoice::Resnet18,
+            ModelChoice::Vgg16,
+        ];
+        for i in 0..12u64 {
+            assert_eq!(mix.model_for(i), want[(i % 4) as usize], "index {i}");
+        }
+        assert!(!mix.is_all_unet());
+        assert_eq!(
+            mix.models(),
+            vec![ModelChoice::Unet, ModelChoice::Resnet18, ModelChoice::Vgg16]
+        );
+    }
+
+    #[test]
+    fn model_mix_defaults_and_rejects() {
+        let mix = ModelMix::parse("").unwrap();
+        assert!(mix.is_all_unet());
+        assert_eq!(mix.model_for(7), ModelChoice::Unet);
+        // weight defaults to 1 per entry
+        let mix = ModelMix::parse("resnet18,vgg16").unwrap();
+        assert_eq!(mix.model_for(0), ModelChoice::Resnet18);
+        assert_eq!(mix.model_for(1), ModelChoice::Vgg16);
+        assert!(mix.models() == vec![ModelChoice::Resnet18, ModelChoice::Vgg16]);
+        assert!(ModelMix::parse("alexnet:1").is_err());
+        assert!(ModelMix::parse("unet:0").is_err());
+        assert!(ModelMix::parse("unet:65").is_err());
+        assert!(ModelMix::parse("unet:x").is_err());
+    }
+
+    #[test]
+    fn serve_config_model_mix_key() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert!(cfg.model_mix.is_empty(), "all-unet workload by default");
+        assert!(cfg.parsed_model_mix().unwrap().is_all_unet());
+        let cfg = ServeConfig::from_toml(
+            "[serve]\nmodel_mix = \"unet:2,resnet18:1,vgg16:1\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model_mix, "unet:2,resnet18:1,vgg16:1");
+        let mix = cfg.parsed_model_mix().unwrap();
+        assert_eq!(mix.models().len(), 3);
+        let err = ServeConfig::from_toml("[serve]\nmodel_mix = \"alexnet\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("model_mix"), "{err}");
     }
 }

@@ -23,8 +23,9 @@
 //!   [`TicketPoll::Lost`].
 //! * **Failover** — a dead shard's undelivered requests are re-admitted
 //!   onto survivors. This is lossless *and* bit-identical because request
-//!   execution is a pure function of `(seed, steps)` (the
-//!   per-index-deterministic `workload()` contract): a recovery run
+//!   execution is a pure function of `(model, seed, steps)` (the
+//!   per-index-deterministic `workload()` contract — classification
+//!   requests included, ISSUE 7): a recovery run
 //!   delivers exactly the images the no-fault run would have. Duplicate
 //!   execution (shard died after computing but before the fleet saw the
 //!   result) is harmless for the same reason — fleet delivery is
@@ -61,10 +62,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ServeConfig;
 use crate::coordinator::faults::FaultSpec;
-use crate::coordinator::metrics::{FleetMetrics, FleetStats, ServeMetrics};
+use crate::coordinator::metrics::{FleetMetrics, FleetStats, ModelMetrics, ServeMetrics};
 use crate::coordinator::server::{
-    AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, ServerHandle, ShardPulse,
-    Ticket, TicketPoll,
+    AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, InferenceRequest,
+    ServerHandle, ShardPulse, Ticket, TicketPoll,
 };
 use crate::runtime::ArtifactStore;
 use crate::util::stats::StreamingPercentiles;
@@ -104,7 +105,7 @@ struct Shard {
 /// (re-)admission — either parked by `submit` while every queue was full,
 /// or stripped from a dead shard and awaiting a survivor.
 struct Pending {
-    req: DenoiseRequest,
+    req: InferenceRequest,
     shard: usize,
     ticket: Option<Ticket>,
     tx: Sender<Result<DenoiseResult>>,
@@ -117,6 +118,10 @@ struct FleetState {
     rng: Rng,
     stats: FleetStats,
     e2e: StreamingPercentiles,
+    /// Fleet-level per-model rows (ISSUE 7): delivered/failed counts and
+    /// e2e percentiles recorded at delivery; steps are summed over the
+    /// shards at snapshot time.
+    per_model: Vec<ModelMetrics>,
     draining: bool,
 }
 
@@ -231,6 +236,7 @@ impl ShardFleet {
             rng: Rng::new(cfg.seed ^ 0xf1ee_7),
             stats: FleetStats::default(),
             e2e: StreamingPercentiles::new(),
+            per_model: ModelMetrics::rows(),
             draining: false,
         }));
         let stop = Arc::new(AtomicBool::new(false));
@@ -271,22 +277,25 @@ impl ShardFleet {
     /// the request parks fleet-side and the monitor admits it when room
     /// frees up. Fails only when no live shard exists (or the fleet is
     /// shutting down).
-    pub fn submit(&self, req: DenoiseRequest) -> std::result::Result<FleetTicket, AdmissionError> {
-        self.admit(req, true)
+    pub fn submit(
+        &self,
+        req: impl Into<InferenceRequest>,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        self.admit(req.into(), true)
     }
 
     /// Admit without parking: a fleet where every live shard sheds
     /// returns [`AdmissionError::QueueFull`] immediately.
     pub fn try_submit(
         &self,
-        req: DenoiseRequest,
+        req: impl Into<InferenceRequest>,
     ) -> std::result::Result<FleetTicket, AdmissionError> {
-        self.admit(req, false)
+        self.admit(req.into(), false)
     }
 
     fn admit(
         &self,
-        req: DenoiseRequest,
+        req: InferenceRequest,
         park: bool,
     ) -> std::result::Result<FleetTicket, AdmissionError> {
         let mut st = self.state.lock().unwrap();
@@ -326,7 +335,7 @@ impl ShardFleet {
     /// the live set before reporting the fleet full.
     fn assign(
         st: &mut FleetState,
-        req: &DenoiseRequest,
+        req: &InferenceRequest,
     ) -> std::result::Result<(usize, Ticket), AdmissionError> {
         let live: Vec<usize> = st
             .shards
@@ -338,8 +347,8 @@ impl ShardFleet {
         if live.is_empty() {
             return Err(AdmissionError::NoLiveShards);
         }
-        let a = live[st.rng.below(live.len() as u64) as usize];
-        let b = live[st.rng.below(live.len() as u64) as usize];
+        let (ai, bi) = Self::p2c_candidates(&mut st.rng, live.len());
+        let (a, b) = (live[ai], live[bi]);
         let depth_of = |st: &FleetState, i: usize| {
             st.shards[i].handle.as_ref().map_or(usize::MAX, |h| h.queue_depth())
         };
@@ -358,6 +367,23 @@ impl ShardFleet {
             }
         }
         Err(last)
+    }
+
+    /// The two power-of-two-choices candidate slots out of `n`. The draws
+    /// are *distinct* whenever `n >= 2`: the second samples the remaining
+    /// `n - 1` slots and skips past the first. (Two independent draws
+    /// would collide with probability `1/n` and silently degrade that
+    /// admission to single-choice routing.)
+    fn p2c_candidates(rng: &mut Rng, n: usize) -> (usize, usize) {
+        let a = rng.below(n as u64) as usize;
+        if n < 2 {
+            return (a, a);
+        }
+        let mut b = rng.below(n as u64 - 1) as usize;
+        if b >= a {
+            b += 1;
+        }
+        (a, b)
     }
 
     /// Operational hard kill (the test/ops analogue of a `kill` fault
@@ -398,10 +424,13 @@ impl ShardFleet {
     /// fleet-level e2e percentiles.
     pub fn metrics_snapshot(&self) -> FleetMetrics {
         let st = self.state.lock().unwrap();
+        let per_shard = Self::per_shard_metrics(&st);
+        let per_model = Self::fleet_per_model(&st, &per_shard);
         FleetMetrics {
             stats: Self::census(&st),
-            per_shard: Self::per_shard_metrics(&st),
+            per_shard,
             e2e_latency: st.e2e.clone(),
+            per_model,
             wall: self.t0.elapsed(),
         }
     }
@@ -421,10 +450,13 @@ impl ShardFleet {
                 }
             }
         }
+        let per_shard = Self::per_shard_metrics(&st);
+        let per_model = Self::fleet_per_model(&st, &per_shard);
         let metrics = FleetMetrics {
             stats: Self::census(&st),
-            per_shard: Self::per_shard_metrics(&st),
+            per_shard,
             e2e_latency: st.e2e.clone(),
+            per_model,
             wall: self.t0.elapsed(),
         };
         drop(st);
@@ -463,6 +495,20 @@ impl ShardFleet {
             }
         }
         s
+    }
+
+    /// Fleet per-model rows: front-door delivered/failed counts and e2e
+    /// percentiles (recorded by [`Self::deliver`], failover included)
+    /// plus executed steps summed over the shards — retries count, so a
+    /// failed-over request's duplicate steps are visible here.
+    fn fleet_per_model(st: &FleetState, per_shard: &[ServeMetrics]) -> Vec<ModelMetrics> {
+        let mut rows = st.per_model.clone();
+        for m in per_shard {
+            for (row, sm) in rows.iter_mut().zip(&m.per_model) {
+                row.steps_done += sm.steps_done;
+            }
+        }
+        rows
     }
 
     fn per_shard_metrics(st: &FleetState) -> Vec<ServeMetrics> {
@@ -561,7 +607,7 @@ impl ShardFleet {
                 }
                 Err(e) => {
                     let p = st.pending.swap_remove(i);
-                    let req_id = p.req.id;
+                    let req_id = p.req.id();
                     Self::deliver(
                         st,
                         p,
@@ -572,16 +618,22 @@ impl ShardFleet {
         }
     }
 
-    /// Resolve one fleet ticket (single-shot) and account for it.
+    /// Resolve one fleet ticket (single-shot) and account for it, on the
+    /// fleet aggregate and on the request's per-model row.
     fn deliver(st: &mut FleetState, p: Pending, r: Result<DenoiseResult>) {
+        let row = &mut st.per_model[p.req.model().index()];
         match r {
             Ok(res) => {
                 st.stats.delivered += 1;
-                st.e2e.record_us(p.submitted_at.elapsed().as_micros() as f64);
+                row.requests_done += 1;
+                let us = p.submitted_at.elapsed().as_micros() as f64;
+                row.e2e_latency.record_us(us);
+                st.e2e.record_us(us);
                 let _ = p.tx.send(Ok(res));
             }
             Err(e) => {
                 st.stats.failed += 1;
+                row.requests_failed += 1;
                 let _ = p.tx.send(Err(e));
             }
         }
@@ -825,6 +877,39 @@ mod tests {
         let again = t.try_wait().expect("spent ticket must resolve");
         assert!(again.unwrap_err().to_string().contains("already consumed"));
         fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn p2c_candidates_are_distinct_and_uniform() {
+        // Regression (ISSUE 7): both candidates used to be independent
+        // draws over the live set, so a == b with probability 1/n. The
+        // distinct-draw property must hold on every draw, and the second
+        // candidate must still reach every slot other than the first.
+        for n in 2..=8usize {
+            let mut rng = Rng::new(0xdead ^ n as u64);
+            let mut pair_seen = vec![vec![false; n]; n];
+            for _ in 0..2_000 {
+                let (a, b) = ShardFleet::p2c_candidates(&mut rng, n);
+                assert_ne!(a, b, "n = {n}: p2c drew the same shard twice");
+                assert!(a < n && b < n);
+                pair_seen[a][b] = true;
+            }
+            for a in 0..n {
+                for b in 0..n {
+                    if a == b {
+                        assert!(!pair_seen[a][b]);
+                    } else {
+                        assert!(
+                            pair_seen[a][b],
+                            "n = {n}: ordered pair ({a}, {b}) never drawn"
+                        );
+                    }
+                }
+            }
+        }
+        // the degenerate single-shard fleet keeps returning the only slot
+        let mut rng = Rng::new(1);
+        assert_eq!(ShardFleet::p2c_candidates(&mut rng, 1), (0, 0));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::config::ModelChoice;
 use crate::runtime::PoolStats;
 use crate::sim::energy::{EnergyModel, EventCounts, PpaReport};
 use crate::util::stats::{LatencyHist, StreamingPercentiles};
@@ -34,6 +35,72 @@ impl AdmissionStats {
     /// Total submissions turned away (for any reason).
     pub fn rejected_total(&self) -> u64 {
         self.rejected_queue_full + self.rejected_deadline + self.rejected_shutdown
+    }
+}
+
+/// Per-model slice of a multi-mode session's counters (ISSUE 7): the
+/// SF-MMCN fleet serves U-net denoise plus ResNet-18 / VGG-16
+/// classification side by side, and capacity planning needs each mode's
+/// throughput, tail latency, and co-simulated accelerator counts on its
+/// own row — the aggregate hides an 8× per-request cost spread.
+#[derive(Debug, Clone)]
+pub struct ModelMetrics {
+    pub model: ModelChoice,
+    /// Requests of this model that resolved with a result.
+    pub requests_done: usize,
+    /// Executed steps (denoise steps for the U-net; one per
+    /// classification request).
+    pub steps_done: usize,
+    /// Requests of this model whose ticket resolved with an error.
+    pub requests_failed: usize,
+    /// End-to-end latency (admission → ticket resolution) of this
+    /// model's requests, P² fixed-memory percentiles.
+    pub e2e_latency: StreamingPercentiles,
+    /// Co-simulated accelerator counts for this model's share of the
+    /// work (attached by shutdown when co-simulation is enabled).
+    pub sim_counts: Option<EventCounts>,
+}
+
+impl ModelMetrics {
+    pub fn new(model: ModelChoice) -> Self {
+        Self {
+            model,
+            requests_done: 0,
+            steps_done: 0,
+            requests_failed: 0,
+            e2e_latency: StreamingPercentiles::new(),
+            sim_counts: None,
+        }
+    }
+
+    /// One row per model in [`ModelChoice::ALL`] order — every
+    /// `per_model` vector in this module is indexable by
+    /// [`ModelChoice::index`].
+    pub fn rows() -> Vec<Self> {
+        ModelChoice::ALL.iter().map(|&m| Self::new(m)).collect()
+    }
+
+    /// Anything to report for this model?
+    pub fn has_traffic(&self) -> bool {
+        self.requests_done + self.requests_failed > 0
+    }
+
+    /// Price this model's co-simulated counts under an energy model —
+    /// the per-mode cycles/energy and GOPs/mm² area-efficiency FoM.
+    pub fn sim_report(&self, model: &EnergyModel, units: u64) -> Option<PpaReport> {
+        self.sim_counts.as_ref().map(|c| model.report(c, units))
+    }
+
+    fn render_line(&self) -> String {
+        format!(
+            "  {}: {} done, {} steps, {} failed  e2e p50 {:.2} ms  p99 {:.2} ms\n",
+            self.model.name(),
+            self.requests_done,
+            self.steps_done,
+            self.requests_failed,
+            self.e2e_latency.p50_us() / 1e3,
+            self.e2e_latency.p99_us() / 1e3,
+        )
     }
 }
 
@@ -87,6 +154,13 @@ pub struct ServeMetrics {
     /// O(1) in session length, so live snapshots of a week-long session
     /// cost the same as minute-one snapshots.
     pub e2e_latency: StreamingPercentiles,
+    /// Per-model breakdown (ISSUE 7), one row per [`ModelChoice::ALL`]
+    /// entry, indexable by [`ModelChoice::index`]. Pure-diffusion
+    /// sessions leave the classification rows at zero.
+    pub per_model: Vec<ModelMetrics>,
+    /// Batches that mixed models — the batcher invariant says this stays
+    /// 0; anything else is a routing bug (rendered as a warning).
+    pub cross_model_batches: usize,
 }
 
 impl ServeMetrics {
@@ -110,7 +184,17 @@ impl ServeMetrics {
             requests_failed: 0,
             lanes_down: 0,
             e2e_latency: StreamingPercentiles::new(),
+            per_model: ModelMetrics::rows(),
+            cross_model_batches: 0,
         }
+    }
+
+    /// True when any non-U-net model carried traffic — the signal that
+    /// per-model breakdown lines are worth rendering.
+    pub fn is_multi_mode(&self) -> bool {
+        self.per_model
+            .iter()
+            .any(|r| r.model != ModelChoice::Unet && r.has_traffic())
     }
 
     pub fn requests_per_s(&self) -> f64 {
@@ -195,6 +279,18 @@ impl ServeMetrics {
                 self.admission.rejected_shutdown,
                 self.admission.expired,
                 self.admission.queue_depth,
+            ));
+        }
+        if self.is_multi_mode() {
+            s.push_str("per-model:\n");
+            for row in self.per_model.iter().filter(|r| r.has_traffic()) {
+                s.push_str(&row.render_line());
+            }
+        }
+        if self.cross_model_batches > 0 {
+            s.push_str(&format!(
+                "WARNING: {} batch(es) mixed models — batcher invariant violated\n",
+                self.cross_model_batches
             ));
         }
         if self.requests_failed > 0 {
@@ -289,6 +385,11 @@ pub struct FleetMetrics {
     /// delivery), which spans queue wait, execution, and any failover
     /// re-execution — the number a client actually experiences.
     pub e2e_latency: StreamingPercentiles,
+    /// Fleet-level per-model breakdown (ISSUE 7): delivered/failed counts
+    /// and e2e percentiles are recorded at the front door (failover
+    /// included), steps are summed over the shards. One row per
+    /// [`ModelChoice::ALL`] entry, indexable by [`ModelChoice::index`].
+    pub per_model: Vec<ModelMetrics>,
     pub wall: Duration,
 }
 
@@ -336,6 +437,16 @@ impl FleetMetrics {
                 self.e2e_latency.p95_us() / 1e3,
                 self.e2e_latency.p99_us() / 1e3,
             ));
+        }
+        if self
+            .per_model
+            .iter()
+            .any(|r| r.model != ModelChoice::Unet && r.has_traffic())
+        {
+            out.push_str("per-model:\n");
+            for row in self.per_model.iter().filter(|r| r.has_traffic()) {
+                out.push_str(&row.render_line());
+            }
         }
         for (i, m) in self.per_shard.iter().enumerate() {
             out.push_str(&format!(
@@ -440,6 +551,7 @@ mod tests {
             },
             per_shard: vec![ServeMetrics::new(), ServeMetrics::new()],
             e2e_latency: StreamingPercentiles::new(),
+            per_model: ModelMetrics::rows(),
             wall: Duration::from_secs(2),
         };
         fm.per_shard[0].requests_done = 14;
@@ -453,6 +565,49 @@ mod tests {
         assert!(s.contains("1 shard(s) failed over"), "{s}");
         assert!(s.contains("shard 0:"), "{s}");
         assert!(s.contains("fleet e2e latency"), "{s}");
+    }
+
+    #[test]
+    fn per_model_rows_render_only_under_mixed_traffic() {
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.per_model.len(), ModelChoice::ALL.len());
+        for (i, row) in m.per_model.iter().enumerate() {
+            assert_eq!(row.model.index(), i, "rows are index-aligned");
+        }
+        // pure-diffusion traffic keeps the summary unchanged
+        m.per_model[ModelChoice::Unet.index()].requests_done = 4;
+        assert!(!m.is_multi_mode());
+        assert!(!m.render().contains("per-model:"), "{}", m.render());
+        // classification traffic flips the breakdown on
+        let r = &mut m.per_model[ModelChoice::Resnet18.index()];
+        r.requests_done = 3;
+        r.steps_done = 3;
+        r.e2e_latency.record_us(2000.0);
+        assert!(m.is_multi_mode());
+        let s = m.render();
+        assert!(s.contains("per-model:"), "{s}");
+        assert!(s.contains("unet: 4 done"), "{s}");
+        assert!(s.contains("resnet18: 3 done, 3 steps"), "{s}");
+        assert!(!s.contains("vgg16"), "zero-traffic rows stay hidden: {s}");
+        assert!(!s.contains("WARNING"), "{s}");
+        m.cross_model_batches = 1;
+        assert!(m.render().contains("WARNING: 1 batch(es) mixed models"));
+    }
+
+    #[test]
+    fn model_metrics_price_sim_counts_per_mode() {
+        use crate::sim::energy::CAL_40NM;
+        let mut row = ModelMetrics::new(ModelChoice::Vgg16);
+        assert!(row.sim_report(&CAL_40NM, 8).is_none());
+        let mut counts = EventCounts {
+            total_pes: 256,
+            cycles: 10_000,
+            ..Default::default()
+        };
+        counts.pe.macs = 1_000_000;
+        row.sim_counts = Some(counts);
+        let rep = row.sim_report(&CAL_40NM, 8).expect("counts attached");
+        assert!(rep.gops_per_mm2 > 0.0, "per-mode FoM must price");
     }
 
     #[test]

@@ -15,14 +15,19 @@
 //!   executor; batched `[B, ...]` fused dispatch across the queue;
 //!   ticket-based result delivery; graceful drain; co-simulation of the
 //!   SF-MMCN accelerator for cycles/energy alongside the functional run
-//!   (micro-sim for batched traffic, analytic otherwise).
+//!   (micro-sim for batched traffic, analytic otherwise). Since ISSUE 7
+//!   the request path is multi-mode — [`server::InferenceRequest`] covers
+//!   U-net denoise plus ResNet-18 / VGG-16 classification, batches never
+//!   mix models, and metrics carry per-model rows — mirroring the paper's
+//!   multi-mode CNN operation of one engine serving U-net, ResNet-18 and
+//!   VGG-16.
 //! * [`fleet`] — the fault-tolerant sharded front door (ISSUE 6): a
 //!   [`fleet::ShardFleet`] owns N independent serving sessions (shards),
 //!   routes with power-of-two-choices on live queue depth, watches shard
 //!   health via heartbeat sequence numbers, and on a dead shard re-admits
 //!   every undelivered ticket onto survivors. Request execution is a pure
-//!   function of `(seed, steps)`, so a failover run is bit-identical to a
-//!   no-fault run.
+//!   function of `(model, seed, steps)`, so a failover run is
+//!   bit-identical to a no-fault run.
 //! * [`faults`] — the seeded, schedulable fault-injection plane that
 //!   drives every recovery scenario reproducibly (kill-shard-at-request,
 //!   stall-lane, panic-in-step, delayed delivery).
@@ -44,9 +49,9 @@ pub mod server;
 pub use ddpm::DdpmSchedule;
 pub use faults::{FaultAction, FaultEvent, FaultKind, FaultPlane, FaultSpec};
 pub use fleet::{FleetTicket, ShardFleet, ShardState};
-pub use metrics::{AdmissionStats, FleetMetrics, FleetStats, ServeMetrics};
+pub use metrics::{AdmissionStats, FleetMetrics, FleetStats, ModelMetrics, ServeMetrics};
 pub use params::UnetParams;
 pub use server::{
-    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, ServerHandle,
-    ShardPulse, Ticket, TicketPoll,
+    workload, AdmissionError, ClassifyRequest, DenoiseRequest, DenoiseResult, DiffusionServer,
+    InferenceRequest, ServerHandle, ShardPulse, Ticket, TicketPoll,
 };

@@ -8,7 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::models::graph::{Layer, Residual};
+use crate::models::graph::{Layer, ModelGraph, Residual};
 use crate::models::{unet, UnetConfig};
 use crate::runtime::TensorBuf;
 use crate::util::Rng;
@@ -82,6 +82,16 @@ impl UnetParams {
     /// the serving stack run offline with no `make artifacts`. Same seed,
     /// same tensors, bit-for-bit.
     pub fn synthetic(cfg: &UnetConfig, seed: u64) -> Self {
+        Self::synthetic_for_graph(&unet(*cfg), seed)
+    }
+
+    /// Graph-generic synthetic parameters (ISSUE 7): walks any
+    /// [`ModelGraph`] — the U-net, but also the ResNet-18 / VGG-16
+    /// classification graphs, whose Dense heads get `w`/`b` tensors too.
+    /// Generation order is the node walk, so a given (graph, seed) pair
+    /// is bit-for-bit reproducible anywhere (the failover and batched ≡
+    /// per-request identities depend on this).
+    pub fn synthetic_for_graph(g: &ModelGraph, seed: u64) -> Self {
         fn gen(rng: &mut Rng, shape: Vec<usize>) -> TensorBuf {
             let n: usize = shape.iter().product();
             TensorBuf {
@@ -89,32 +99,39 @@ impl UnetParams {
                 data: (0..n).map(|_| rng.normal() * 0.05).collect(),
             }
         }
-        let g = unet(*cfg);
         let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
         let mut names = Vec::new();
         let mut tensors = Vec::new();
         for (i, node) in g.nodes.iter().enumerate() {
-            if let Layer::Conv {
-                c_in,
-                c_out,
-                k,
-                residual,
-                time_dense,
-                ..
-            } = &node.layer
-            {
-                names.push(format!("n{i}.w"));
-                tensors.push(gen(&mut rng, vec![*c_out, *c_in, *k, *k]));
-                names.push(format!("n{i}.b"));
-                tensors.push(gen(&mut rng, vec![*c_out]));
-                if let Some(td) = time_dense {
-                    names.push(format!("n{i}.wt"));
-                    tensors.push(gen(&mut rng, vec![*c_out, *td]));
+            match &node.layer {
+                Layer::Conv {
+                    c_in,
+                    c_out,
+                    k,
+                    residual,
+                    time_dense,
+                    ..
+                } => {
+                    names.push(format!("n{i}.w"));
+                    tensors.push(gen(&mut rng, vec![*c_out, *c_in, *k, *k]));
+                    names.push(format!("n{i}.b"));
+                    tensors.push(gen(&mut rng, vec![*c_out]));
+                    if let Some(td) = time_dense {
+                        names.push(format!("n{i}.wt"));
+                        tensors.push(gen(&mut rng, vec![*c_out, *td]));
+                    }
+                    if let Residual::Conv { from, .. } = residual {
+                        names.push(format!("n{i}.wr"));
+                        tensors.push(gen(&mut rng, vec![*c_out, g.nodes[*from].out_shape.c]));
+                    }
                 }
-                if let Residual::Conv { from, .. } = residual {
-                    names.push(format!("n{i}.wr"));
-                    tensors.push(gen(&mut rng, vec![*c_out, g.nodes[*from].out_shape.c]));
+                Layer::Dense { in_f, out_f, .. } => {
+                    names.push(format!("n{i}.w"));
+                    tensors.push(gen(&mut rng, vec![*out_f, *in_f]));
+                    names.push(format!("n{i}.b"));
+                    tensors.push(gen(&mut rng, vec![*out_f]));
                 }
+                _ => {}
             }
         }
         Self { names, tensors }
@@ -192,6 +209,33 @@ mod tests {
         // shaped like the real blob: tens of tensors, >50k scalars
         assert!(a.count() > 10, "{} tensors", a.count());
         assert!(a.total_values() > 50_000, "{} values", a.total_values());
+    }
+
+    #[test]
+    fn synthetic_for_graph_covers_classifier_graphs() {
+        use crate::models::{resnet18, vgg16};
+        let r = UnetParams::synthetic_for_graph(&resnet18(32, 10), 7);
+        let r2 = UnetParams::synthetic_for_graph(&resnet18(32, 10), 7);
+        assert_eq!(r.names, r2.names);
+        for (ta, tb) in r.tensors.iter().zip(&r2.tensors) {
+            assert_eq!(ta, tb, "same (graph, seed) must be bit-identical");
+        }
+        // the Dense head gets parameters too: last two tensors are w/b
+        assert!(r.names.last().unwrap().ends_with(".b"));
+        assert_eq!(r.tensors.last().unwrap().shape, vec![10]);
+        let w = &r.tensors[r.tensors.len() - 2];
+        assert_eq!(w.shape, vec![10, 512]);
+        // distinct graphs under the same seed yield distinct sets
+        let v = UnetParams::synthetic_for_graph(&vgg16(32, 10), 7);
+        assert_ne!(r.count(), v.count());
+        // and the unet wrapper is exactly the graph walk it always was
+        let cfg = UnetConfig::default();
+        let u = UnetParams::synthetic(&cfg, 7);
+        let ug = UnetParams::synthetic_for_graph(&unet(cfg), 7);
+        assert_eq!(u.names, ug.names);
+        for (ta, tb) in u.tensors.iter().zip(&ug.tensors) {
+            assert_eq!(ta, tb);
+        }
     }
 
     #[test]

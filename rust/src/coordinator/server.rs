@@ -55,15 +55,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{ServeBackend, ServeConfig};
+use crate::config::{ModelChoice, ModelMix, ServeBackend, ServeConfig};
 use crate::coordinator::faults::{FaultAction, FaultPlane};
 use crate::coordinator::ddpm::{time_embedding, time_embedding_into, DdpmSchedule};
 use crate::coordinator::metrics::{AdmissionStats, ServeMetrics};
 use crate::coordinator::params::UnetParams;
-use crate::models::{unet, UnetConfig};
+use crate::models::{resnet18, unet, vgg16, UnetConfig};
 use crate::runtime::{
-    ArtifactStore, BatchDispatch, BufferPool, Executor, NativeDenoise, PoolStats,
-    PreparedInputs, TensorBuf,
+    ArtifactStore, BatchDispatch, BufferPool, Executor, NativeClassify, NativeDenoise,
+    PoolStats, PreparedInputs, TensorBuf,
 };
 use crate::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
 use crate::sim::energy::EventCounts;
@@ -101,15 +101,144 @@ impl DenoiseRequest {
     }
 }
 
+/// One classification request (ISSUE 7): run one seeded synthetic image
+/// through a provisioned classifier (ResNet-18 / VGG-16), yielding a
+/// `[classes]` logits vector in the result's `image`.
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    pub id: u64,
+    /// Seeds the deterministic input image — the classification analogue
+    /// of the denoise request's starting noise, and what makes retry /
+    /// failover re-execution bit-identical.
+    pub seed: u64,
+    /// Which classifier serves this request. [`ModelChoice::Unet`] is not
+    /// a classifier; such a request fails at batch preparation.
+    pub model: ModelChoice,
+    /// Admission priority, same semantics as [`DenoiseRequest::priority`].
+    pub priority: u8,
+    /// Relative completion budget, same semantics as
+    /// [`DenoiseRequest::deadline`].
+    pub deadline: Option<Duration>,
+}
+
+impl ClassifyRequest {
+    /// Request with default admission attributes (most-urgent priority,
+    /// no explicit deadline).
+    pub fn new(id: u64, seed: u64, model: ModelChoice) -> Self {
+        Self {
+            id,
+            seed,
+            model,
+            priority: 0,
+            deadline: None,
+        }
+    }
+}
+
+/// A request for any of the session's serveable models (ISSUE 7): the
+/// admission queue, batcher, lanes, and fleet all speak this type.
+/// Single-model call sites stay source-compatible through the `From`
+/// impls — `submit(DenoiseRequest::new(..))` still compiles.
+#[derive(Debug, Clone)]
+pub enum InferenceRequest {
+    Denoise(DenoiseRequest),
+    Classify(ClassifyRequest),
+}
+
+impl InferenceRequest {
+    pub fn id(&self) -> u64 {
+        match self {
+            InferenceRequest::Denoise(r) => r.id,
+            InferenceRequest::Classify(r) => r.id,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        match self {
+            InferenceRequest::Denoise(r) => r.seed,
+            InferenceRequest::Classify(r) => r.seed,
+        }
+    }
+
+    /// The model this request runs on (denoise is always the U-net).
+    pub fn model(&self) -> ModelChoice {
+        match self {
+            InferenceRequest::Denoise(_) => ModelChoice::Unet,
+            InferenceRequest::Classify(r) => r.model,
+        }
+    }
+
+    /// Device step count (classification is a single forward pass).
+    pub fn steps(&self) -> usize {
+        match self {
+            InferenceRequest::Denoise(r) => r.steps,
+            InferenceRequest::Classify(_) => 1,
+        }
+    }
+
+    pub fn priority(&self) -> u8 {
+        match self {
+            InferenceRequest::Denoise(r) => r.priority,
+            InferenceRequest::Classify(r) => r.priority,
+        }
+    }
+
+    pub fn deadline(&self) -> Option<Duration> {
+        match self {
+            InferenceRequest::Denoise(r) => r.deadline,
+            InferenceRequest::Classify(r) => r.deadline,
+        }
+    }
+
+    /// Set the admission priority lane (0 = highest) on either mode.
+    pub fn set_priority(&mut self, priority: u8) {
+        match self {
+            InferenceRequest::Denoise(r) => r.priority = priority,
+            InferenceRequest::Classify(r) => r.priority = priority,
+        }
+    }
+
+    /// Set the admission-to-dispatch deadline on either mode.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        match self {
+            InferenceRequest::Denoise(r) => r.deadline = deadline,
+            InferenceRequest::Classify(r) => r.deadline = deadline,
+        }
+    }
+
+    /// Batch compatibility key: a batch only groups requests with the
+    /// same model and step count, so one device dispatch serves them all.
+    fn batch_key(&self) -> (ModelChoice, usize) {
+        (self.model(), self.steps())
+    }
+}
+
+impl From<DenoiseRequest> for InferenceRequest {
+    fn from(r: DenoiseRequest) -> Self {
+        InferenceRequest::Denoise(r)
+    }
+}
+
+impl From<ClassifyRequest> for InferenceRequest {
+    fn from(r: ClassifyRequest) -> Self {
+        InferenceRequest::Classify(r)
+    }
+}
+
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct DenoiseResult {
     pub id: u64,
+    /// Denoise: the generated `[c, h, w]` image. Classification: the
+    /// `[classes]` logits vector.
     pub image: TensorBuf,
     /// Service latency (batch wall time for batched execution); queue
     /// wait is reported separately via the session's e2e percentiles.
     pub latency: Duration,
+    /// Denoise steps executed (1 for classification).
     pub steps: usize,
+    /// Which model served this request.
+    pub model: ModelChoice,
 }
 
 /// Why a submission was turned away at the admission queue.
@@ -271,7 +400,7 @@ impl Ticket {
 /// admission.
 #[derive(Debug)]
 struct Admitted {
-    req: DenoiseRequest,
+    req: InferenceRequest,
     ticket: u64,
     admitted_at: Instant,
     deadline: Option<Instant>,
@@ -298,8 +427,12 @@ struct AdmissionCounters {
 }
 
 struct QueueState {
-    /// One FIFO per priority level; index 0 drains first.
-    lanes: Vec<VecDeque<Admitted>>,
+    /// Per-(priority, model) FIFO sub-lanes: `lanes[pri][model.index()]`.
+    /// Priority 0 drains first; within a priority, the sub-lane whose
+    /// front waited longest is served next (ISSUE 7) — so interleaved
+    /// multi-model traffic still forms full same-model batches instead of
+    /// degrading to batch-size-1, without starving any model.
+    lanes: Vec<Vec<VecDeque<Admitted>>>,
     /// Total queued entries across all lanes.
     len: usize,
     /// Admission closed; lanes drain what is already queued, then exit.
@@ -366,7 +499,9 @@ impl AdmissionQueue {
         let levels = levels.max(1);
         Self {
             state: Mutex::new(QueueState {
-                lanes: (0..levels).map(|_| VecDeque::new()).collect(),
+                lanes: (0..levels)
+                    .map(|_| ModelChoice::ALL.iter().map(|_| VecDeque::new()).collect())
+                    .collect(),
                 len: 0,
                 draining: false,
                 killed: false,
@@ -397,12 +532,13 @@ impl AdmissionQueue {
     /// Admit one request, blocking for queue space when `block`.
     fn admit(
         &self,
-        req: DenoiseRequest,
+        req: impl Into<InferenceRequest>,
         block: bool,
     ) -> std::result::Result<Ticket, AdmissionError> {
+        let req: InferenceRequest = req.into();
         self.counters.offered.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
-        let rel = req.deadline.or(self.default_deadline);
+        let rel = req.deadline().or(self.default_deadline);
         if rel.is_some_and(|d| d.is_zero()) {
             self.counters.rejected_deadline.fetch_add(1, Ordering::Relaxed);
             return Err(AdmissionError::Deadline);
@@ -438,8 +574,9 @@ impl AdmissionQueue {
         }
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        let pri = (req.priority as usize).min(self.levels - 1);
-        st.lanes[pri].push_back(Admitted {
+        let pri = (req.priority() as usize).min(self.levels - 1);
+        let sub = req.model().index();
+        st.lanes[pri][sub].push_back(Admitted {
             req,
             ticket,
             admitted_at: now,
@@ -478,7 +615,7 @@ impl AdmissionQueue {
         st.killed = true;
         st.draining = true;
         st.held = false;
-        for lane in st.lanes.iter_mut() {
+        for lane in st.lanes.iter_mut().flatten() {
             lane.clear();
         }
         st.len = 0;
@@ -505,11 +642,11 @@ impl AdmissionQueue {
         st.alive = st.alive.saturating_sub(1);
         if st.alive == 0 {
             st.draining = true;
-            for lane in st.lanes.iter_mut() {
+            for lane in st.lanes.iter_mut().flatten() {
                 for a in lane.drain(..) {
                     let _ = a.tx.send(Err(anyhow!(
                         "request {} (ticket {}): serving lane failed during setup: {error:#}",
-                        a.req.id,
+                        a.req.id(),
                         a.ticket
                     )));
                 }
@@ -543,7 +680,7 @@ impl AdmissionQueue {
         self.counters.expired.fetch_add(1, Ordering::Relaxed);
         let _ = a.tx.send(Err(anyhow!(
             "request {} (ticket {}): deadline expired after {:.1} ms in queue",
-            a.req.id,
+            a.req.id(),
             a.ticket,
             a.admitted_at.elapsed().as_secs_f64() * 1e3
         )));
@@ -555,7 +692,7 @@ impl AdmissionQueue {
     /// they surface, or by the in-group check during batch formation.)
     fn sweep_expired(&self, st: &mut QueueState, now: Instant) -> usize {
         let mut freed = 0;
-        for lane in st.lanes.iter_mut() {
+        for lane in st.lanes.iter_mut().flatten() {
             while lane
                 .front()
                 .is_some_and(|a| a.deadline.is_some_and(|d| d <= now))
@@ -582,17 +719,26 @@ impl AdmissionQueue {
         self.sweep_expired(st, now);
         let mut pri = 0;
         while pri < st.lanes.len() {
-            if st.lanes[pri].is_empty() {
+            // Among this priority's per-model sub-lanes, serve the one
+            // whose front waited longest (smallest admission ticket) —
+            // cross-model fairness without ever mixing models in a batch.
+            let Some(sub) = st.lanes[pri]
+                .iter()
+                .enumerate()
+                .filter_map(|(m, lane)| lane.front().map(|a| (a.ticket, m)))
+                .min()
+                .map(|(_, m)| m)
+            else {
                 pri += 1;
                 continue;
-            }
+            };
             let fair = st.len.div_ceil(self.workers).clamp(1, self.max_batch);
-            let steps0 = st.lanes[pri].front().unwrap().req.steps;
+            let key0 = st.lanes[pri][sub].front().unwrap().req.batch_key();
             let mut batch = Vec::with_capacity(fair);
             while batch.len() < fair {
-                match st.lanes[pri].front() {
-                    Some(a) if a.req.steps == steps0 => {
-                        let a = st.lanes[pri].pop_front().unwrap();
+                match st.lanes[pri][sub].front() {
+                    Some(a) if a.req.batch_key() == key0 => {
+                        let a = st.lanes[pri][sub].pop_front().unwrap();
                         st.len -= 1;
                         if a.deadline.is_some_and(|d| d <= now) {
                             self.expire(a);
@@ -604,7 +750,7 @@ impl AdmissionQueue {
                 }
             }
             if batch.is_empty() {
-                // the whole step-group at the front had expired; the lane
+                // the whole group at the front had expired; the sub-lane
                 // front changed, so retry this priority level
                 continue;
             }
@@ -649,6 +795,61 @@ impl AdmissionQueue {
     }
 }
 
+/// Serving-side classifier graph size: 32×32 inputs keep the synthetic
+/// parameter sets and the co-sim graph runs cheap while preserving each
+/// model's depth and the models' relative MAC cost.
+const CLASSIFY_IMG: usize = 32;
+const CLASSIFY_CLASSES: usize = 10;
+
+/// One provisioned classification model (ISSUE 7): everything the lanes
+/// need to serve ResNet-18 / VGG-16 requests. Built once per server from
+/// the parsed `serve.model_mix` — only models actually named in the mix
+/// are provisioned, because each synthetic parameter set costs tens of
+/// megabytes; a classify request for an unprovisioned model fails with
+/// an error naming the knob.
+#[derive(Debug, Clone)]
+struct ClassifyModel {
+    model: ModelChoice,
+    /// Registry name the surrogate engine answers under.
+    artifact: String,
+    /// `[c, h, w]` input shape.
+    img_shape: Vec<usize>,
+    classes: usize,
+    /// Surrogate sweeps per request, derived from the graph's MAC count
+    /// so a VGG-16 request costs proportionally more host work than a
+    /// ResNet-18 request.
+    passes: usize,
+    params: Arc<UnetParams>,
+}
+
+impl ClassifyModel {
+    fn build(model: ModelChoice, seed: u64) -> Result<Self> {
+        let g = match model {
+            ModelChoice::Resnet18 => resnet18(CLASSIFY_IMG, CLASSIFY_CLASSES),
+            ModelChoice::Vgg16 => vgg16(CLASSIFY_IMG, CLASSIFY_CLASSES),
+            ModelChoice::Unet => {
+                bail!("the U-net serves denoise requests, not classification")
+            }
+        };
+        let img_shape = vec![g.input.c, g.input.h, g.input.w];
+        let pixels = img_shape.iter().product::<usize>().max(1) as u64;
+        let passes = (g.total_macs() / pixels / 128).clamp(1, 1024) as usize;
+        let classes = g
+            .nodes
+            .last()
+            .map(|n| n.out_shape.c)
+            .unwrap_or(CLASSIFY_CLASSES);
+        Ok(Self {
+            model,
+            artifact: g.name.clone(),
+            img_shape,
+            classes,
+            passes,
+            params: Arc::new(UnetParams::synthetic_for_graph(&g, seed)),
+        })
+    }
+}
+
 /// Everything a worker lane needs, owned (moved into its thread).
 struct WorkerCtx {
     worker: usize,
@@ -671,6 +872,9 @@ struct WorkerCtx {
     /// Session heartbeat, beaten per dispatched chunk while executing
     /// (the queue's wait loop covers idle periods).
     pulse: Arc<ShardPulse>,
+    /// Classification models provisioned from `serve.model_mix`
+    /// (ISSUE 7); empty for unet-only sessions.
+    classify: Arc<Vec<ClassifyModel>>,
 }
 
 /// Per-batch metrics report from a worker lane (results themselves go
@@ -691,6 +895,12 @@ struct WorkerMsg {
     /// Cumulative snapshot of this worker's buffer pool at send time; the
     /// collector keeps the latest per worker and sums them on read.
     pool: PoolStats,
+    /// The model this batch ran on (per-model metrics rows, ISSUE 7).
+    model: ModelChoice,
+    /// True if the batch mixed models or step counts — the batcher
+    /// invariant says this never happens; the collector counts
+    /// violations so tests can assert zero.
+    cross_model: bool,
 }
 
 /// Lane → collector events.
@@ -698,7 +908,7 @@ enum LaneEvent {
     Batch(WorkerMsg),
     /// Tickets resolved with an error by the lane (bad step counts,
     /// dispatch failures).
-    Failed { count: usize },
+    Failed { count: usize, model: ModelChoice },
     /// A lane died during setup.
     LaneDown,
 }
@@ -713,7 +923,11 @@ enum LaneEvent {
 struct PreparedBatch {
     reqs: Vec<Admitted>,
     steps: usize,
-    /// `[B, c, h, w]` initial noise images.
+    /// The batch's model (the batcher never mixes models). Classify
+    /// batches carry seeded input images in `x0` and leave the
+    /// denoise-only tensors empty.
+    model: ModelChoice,
+    /// `[B, c, h, w]` initial noise (denoise) or input (classify) images.
     x0: TensorBuf,
     /// `[steps, time_dim]`, rows in descending-t order.
     t_embs: TensorBuf,
@@ -731,14 +945,22 @@ fn prepare_host_batch(
     schedule: &DdpmSchedule,
     img_shape: &[usize],
     time_dim: usize,
+    classify: &[ClassifyModel],
     pool: &BufferPool,
 ) -> std::result::Result<PreparedBatch, (Vec<Admitted>, anyhow::Error)> {
     let t0 = Instant::now();
-    let steps = reqs.first().map(|a| a.req.steps).unwrap_or(0);
+    let model = reqs
+        .first()
+        .map(|a| a.req.model())
+        .unwrap_or(ModelChoice::Unet);
+    if model != ModelChoice::Unet {
+        return prepare_classify_batch(reqs, model, classify, pool, t0);
+    }
+    let steps = reqs.first().map(|a| a.req.steps()).unwrap_or(0);
     if steps == 0 || steps > schedule.t_max() {
         let e = anyhow!(
             "request {}: steps {steps} out of range 1..={} (server schedule)",
-            reqs.first().map(|a| a.req.id).unwrap_or(0),
+            reqs.first().map(|a| a.req.id()).unwrap_or(0),
             schedule.t_max()
         );
         return Err((reqs, e));
@@ -753,8 +975,8 @@ fn prepare_host_batch(
     let mut x0 = pool.lease_dirty(b * n);
     let mut noises = pool.lease_dirty(b * steps * n);
     for (i, a) in reqs.iter().enumerate() {
-        debug_assert_eq!(a.req.steps, steps, "batcher groups by step count");
-        let mut rng = Rng::new(a.req.seed);
+        debug_assert_eq!(a.req.batch_key(), (model, steps), "batcher groups by (model, steps)");
+        let mut rng = Rng::new(a.req.seed());
         rng.normal_fill(&mut x0[i * n..(i + 1) * n]);
         for (r, t) in (0..steps).rev().enumerate() {
             let base = (i * steps + r) * n;
@@ -794,11 +1016,61 @@ fn prepare_host_batch(
     };
     Ok(PreparedBatch {
         steps,
+        model,
         x0,
         t_embs,
         coeffs,
         noises,
         reqs,
+        prep_us: t0.elapsed().as_micros() as f64,
+    })
+}
+
+/// Classification host prep (ISSUE 7): one `[B, c, h, w]` input slab,
+/// each row drawn from its request's seed — the same "a request is a
+/// pure function of its fields" contract the denoise path has, which is
+/// what keeps failover re-execution and batched ≡ per-request
+/// bit-identical across modes.
+fn prepare_classify_batch(
+    reqs: Vec<Admitted>,
+    model: ModelChoice,
+    classify: &[ClassifyModel],
+    pool: &BufferPool,
+    t0: Instant,
+) -> std::result::Result<PreparedBatch, (Vec<Admitted>, anyhow::Error)> {
+    let Some(cm) = classify.iter().find(|c| c.model == model) else {
+        let e = anyhow!(
+            "request {}: model {} is not provisioned on this session — add it to \
+             serve.model_mix (--model-mix)",
+            reqs.first().map(|a| a.req.id()).unwrap_or(0),
+            model.name()
+        );
+        return Err((reqs, e));
+    };
+    let n: usize = cm.img_shape.iter().product();
+    let b = reqs.len();
+    // fully overwritten below, so the slab takes the no-memset dirty
+    // lease (the same stream `classify_one` draws with `normal_vec`)
+    let mut x0 = pool.lease_dirty(b * n);
+    for (i, a) in reqs.iter().enumerate() {
+        debug_assert_eq!(a.req.model(), model, "batcher groups by model");
+        let mut rng = Rng::new(a.req.seed());
+        rng.normal_fill(&mut x0[i * n..(i + 1) * n]);
+    }
+    let mut xshape = vec![b];
+    xshape.extend_from_slice(&cm.img_shape);
+    let x0 = match TensorBuf::new(xshape, x0) {
+        Ok(t) => t,
+        Err(e) => return Err((reqs, e)),
+    };
+    Ok(PreparedBatch {
+        reqs,
+        steps: 1,
+        model,
+        x0,
+        t_embs: TensorBuf::zeros(&[0]),
+        coeffs: TensorBuf::zeros(&[0]),
+        noises: TensorBuf::zeros(&[0]),
         prep_us: t0.elapsed().as_micros() as f64,
     })
 }
@@ -912,6 +1184,7 @@ fn denoise_one_fused(
         image,
         latency: total,
         steps,
+        model: ModelChoice::Unet,
     })
 }
 
@@ -978,6 +1251,7 @@ fn denoise_one(
         image: x,
         latency: t0.elapsed(),
         steps,
+        model: ModelChoice::Unet,
     })
 }
 
@@ -1066,6 +1340,7 @@ fn execute_batch(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
+    classify_prepared: &[(ModelChoice, PreparedInputs)],
     pool: &BufferPool,
     pb: PreparedBatch,
     stalled: bool,
@@ -1073,6 +1348,20 @@ fn execute_batch(
     inject_panic: Option<String>,
     delay: Option<Duration>,
 ) {
+    if pb.model != ModelChoice::Unet {
+        execute_classify_batch(
+            ctx,
+            exe,
+            classify_prepared,
+            pool,
+            pb,
+            stalled,
+            res_tx,
+            inject_panic,
+            delay,
+        );
+        return;
+    }
     let t0 = Instant::now();
     let b = pb.reqs.len();
     let steps = pb.steps;
@@ -1083,12 +1372,12 @@ fn execute_batch(
         let e = anyhow!(
             "request {}: the fused scan artifact executes exactly {} steps but the \
              request asked for {steps} — send steps = {} or use the native backend",
-            pb.reqs[0].req.id,
+            pb.reqs[0].req.id(),
             ctx.schedule.t_max(),
             ctx.schedule.t_max()
         );
         resolve_batch_err(&pb.reqs, &e);
-        let _ = res_tx.send(LaneEvent::Failed { count: b });
+        let _ = res_tx.send(LaneEvent::Failed { count: b, model: ModelChoice::Unet });
         return;
     }
     let chunk = if ctx.chunk == 0 {
@@ -1105,6 +1394,8 @@ fn execute_batch(
         prep_us,
         ..
     } = pb;
+    let cross_model =
+        reqs.iter().any(|a| a.req.batch_key() != (ModelChoice::Unet, steps));
     // Rotating image slabs, materialized lazily: each dispatch reads the
     // current images and writes a destination slab, then the old current
     // becomes the next destination — in-place ping-pong instead of a
@@ -1190,7 +1481,7 @@ fn execute_batch(
             // the slabs it was holding simply drop (a missed recycle, not
             // a leak) and the lane keeps serving
             resolve_batch_err(&reqs, &e);
-            let _ = res_tx.send(LaneEvent::Failed { count: b });
+            let _ = res_tx.send(LaneEvent::Failed { count: b, model: ModelChoice::Unet });
             return;
         }
     };
@@ -1216,10 +1507,11 @@ fn execute_batch(
     let mut e2e_us = Vec::with_capacity(b);
     for (adm, image) in reqs.iter().zip(images) {
         let res = DenoiseResult {
-            id: adm.req.id,
+            id: adm.req.id(),
             image,
             latency,
             steps,
+            model: ModelChoice::Unet,
         };
         e2e_us.push(adm.admitted_at.elapsed().as_micros() as f64);
         let _ = adm.tx.send(Ok(res));
@@ -1236,7 +1528,155 @@ fn execute_batch(
         batch_items,
         stalled,
         pool: pool.stats(),
+        model: ModelChoice::Unet,
+        cross_model,
     }));
+}
+
+/// Classification analogue of [`execute_batch`] (ISSUE 7): one
+/// `[B, c, h, w]` → `[B, classes]` dispatch through the registered
+/// surrogate, every ticket resolved with its logits row. Runs under the
+/// same `catch_unwind` panic isolation and fault-plane delay hook as the
+/// denoise path.
+#[allow(clippy::too_many_arguments)]
+fn execute_classify_batch(
+    ctx: &WorkerCtx,
+    exe: &Executor,
+    classify_prepared: &[(ModelChoice, PreparedInputs)],
+    pool: &BufferPool,
+    pb: PreparedBatch,
+    stalled: bool,
+    res_tx: &Sender<LaneEvent>,
+    inject_panic: Option<String>,
+    delay: Option<Duration>,
+) {
+    let t0 = Instant::now();
+    let b = pb.reqs.len();
+    let model = pb.model;
+    let PreparedBatch {
+        reqs, x0, prep_us, ..
+    } = pb;
+    let cross_model = reqs.iter().any(|a| a.req.model() != model);
+    let unwound = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<TensorBuf>> {
+        if let Some(msg) = &inject_panic {
+            panic!("{}", msg);
+        }
+        let (cm, prep) = classify_lookup(ctx, classify_prepared, model)?;
+        let logits = exe.run_classifier(&cm.artifact, b, &x0, prep)?;
+        ctx.pulse.beat();
+        logits.unstack()
+    }));
+    let outcome = match unwound {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow!(
+            "panic in serving lane {}: {}",
+            ctx.worker,
+            panic_payload_msg(&payload)
+        )),
+    };
+    let rows = match outcome {
+        Ok(v) if v.len() == b => v,
+        Ok(v) => {
+            let e = anyhow!("classifier returned {} rows for a batch of {b}", v.len());
+            resolve_batch_err(&reqs, &e);
+            let _ = res_tx.send(LaneEvent::Failed { count: b, model });
+            return;
+        }
+        Err(e) => {
+            resolve_batch_err(&reqs, &e);
+            let _ = res_tx.send(LaneEvent::Failed { count: b, model });
+            return;
+        }
+    };
+    let latency = t0.elapsed();
+    pool.reclaim(x0);
+    if let Some(d) = delay {
+        std::thread::sleep(d);
+    }
+    let service_us = latency.as_micros() as f64;
+    let mut e2e_us = Vec::with_capacity(b);
+    for (adm, image) in reqs.iter().zip(rows) {
+        let res = DenoiseResult {
+            id: adm.req.id(),
+            image,
+            latency,
+            steps: 1,
+            model,
+        };
+        e2e_us.push(adm.admitted_at.elapsed().as_micros() as f64);
+        let _ = adm.tx.send(Ok(res));
+    }
+    let _ = res_tx.send(LaneEvent::Batch(WorkerMsg {
+        worker: ctx.worker,
+        requests: b,
+        steps_done: b,
+        service_us: vec![service_us; b],
+        e2e_us,
+        // one forward pass per request: the batch wall, spread per item
+        step_us: vec![service_us; b],
+        host_prep_us: prep_us,
+        dispatches: 1,
+        batch_items: b,
+        stalled,
+        pool: pool.stats(),
+        model,
+        cross_model,
+    }));
+}
+
+/// Find a provisioned model's descriptor + prepared parameter set.
+fn classify_lookup<'a>(
+    ctx: &'a WorkerCtx,
+    classify_prepared: &'a [(ModelChoice, PreparedInputs)],
+    model: ModelChoice,
+) -> Result<(&'a ClassifyModel, &'a PreparedInputs)> {
+    let cm = ctx.classify.iter().find(|c| c.model == model);
+    let prep = classify_prepared
+        .iter()
+        .find(|(m, _)| *m == model)
+        .map(|(_, p)| p);
+    cm.zip(prep).ok_or_else(|| {
+        anyhow!(
+            "model {} is not provisioned on this session — add it to serve.model_mix \
+             (--model-mix)",
+            model.name()
+        )
+    })
+}
+
+/// Solo classification (the per-request comparison baseline): identical
+/// math to the batched path at B = 1, so batched ≡ per-request holds
+/// bit-for-bit for classification exactly as it does for denoise.
+fn classify_one(
+    ctx: &WorkerCtx,
+    exe: &Executor,
+    classify_prepared: &[(ModelChoice, PreparedInputs)],
+    req: &ClassifyRequest,
+    step_latency_us: &mut Vec<f64>,
+) -> Result<DenoiseResult> {
+    let t0 = Instant::now();
+    let (cm, prep) = classify_lookup(ctx, classify_prepared, req.model)?;
+    let n: usize = cm.img_shape.iter().product();
+    let mut rng = Rng::new(req.seed);
+    let mut xshape = vec![1];
+    xshape.extend_from_slice(&cm.img_shape);
+    let x = TensorBuf::new(xshape, rng.normal_vec(n))?;
+    let out = exe.run_classifier(&cm.artifact, 1, &x, prep)?;
+    let image = out
+        .unstack()?
+        .into_iter()
+        .next()
+        .context("classifier returned nothing")?;
+    ctx.pulse.beat();
+    let total = t0.elapsed();
+    step_latency_us.push(total.as_micros() as f64);
+    Ok(DenoiseResult {
+        id: req.id,
+        image,
+        latency: total,
+        steps: 1,
+        model: req.model,
+    })
 }
 
 /// Batched lane: host-prep stage (optionally on its own thread, double-
@@ -1245,6 +1685,7 @@ fn run_batched_lane(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
+    classify_prepared: &[(ModelChoice, PreparedInputs)],
     queue: &Arc<AdmissionQueue>,
     res_tx: &Sender<LaneEvent>,
 ) {
@@ -1264,14 +1705,16 @@ fn run_batched_lane(
         let schedule = Arc::clone(&ctx.schedule);
         let img_shape = ctx.img_shape.clone();
         let time_dim = ctx.time_dim;
+        let classify = Arc::clone(&ctx.classify);
         let prep_pool = Arc::clone(&pool);
         let prep_res_tx = res_tx.clone();
         let prep = std::thread::Builder::new()
             .name(format!("sfmmcn-hostprep-{}", ctx.worker))
             .spawn(move || {
                 while let Some(reqs) = q2.next_batch() {
-                    match prepare_host_batch(reqs, &schedule, &img_shape, time_dim, &prep_pool)
-                    {
+                    match prepare_host_batch(
+                        reqs, &schedule, &img_shape, time_dim, &classify, &prep_pool,
+                    ) {
                         Ok(pb) => {
                             if prep_tx.send(pb).is_err() {
                                 return;
@@ -1280,8 +1723,13 @@ fn run_batched_lane(
                         Err((reqs, e)) => {
                             // a bad batch fails its own tickets; the lane
                             // keeps serving the stream
+                            let model = reqs
+                                .first()
+                                .map(|a| a.req.model())
+                                .unwrap_or(ModelChoice::Unet);
                             resolve_batch_err(&reqs, &e);
-                            let _ = prep_res_tx.send(LaneEvent::Failed { count: reqs.len() });
+                            let _ = prep_res_tx
+                                .send(LaneEvent::Failed { count: reqs.len(), model });
                         }
                     }
                 }
@@ -1323,6 +1771,7 @@ fn run_batched_lane(
                 ctx,
                 exe,
                 prepared,
+                classify_prepared,
                 &pool,
                 pb,
                 stalled,
@@ -1343,11 +1792,19 @@ fn run_batched_lane(
             if let Some(d) = action.stall {
                 std::thread::sleep(d);
             }
-            match prepare_host_batch(reqs, &ctx.schedule, &ctx.img_shape, ctx.time_dim, &pool) {
+            match prepare_host_batch(
+                reqs,
+                &ctx.schedule,
+                &ctx.img_shape,
+                ctx.time_dim,
+                &ctx.classify,
+                &pool,
+            ) {
                 Ok(pb) => execute_batch(
                     ctx,
                     exe,
                     prepared,
+                    classify_prepared,
                     &pool,
                     pb,
                     false,
@@ -1356,8 +1813,12 @@ fn run_batched_lane(
                     action.delay,
                 ),
                 Err((reqs, e)) => {
+                    let model = reqs
+                        .first()
+                        .map(|a| a.req.model())
+                        .unwrap_or(ModelChoice::Unet);
                     resolve_batch_err(&reqs, &e);
-                    let _ = res_tx.send(LaneEvent::Failed { count: reqs.len() });
+                    let _ = res_tx.send(LaneEvent::Failed { count: reqs.len(), model });
                 }
             }
         }
@@ -1380,6 +1841,7 @@ fn run_request_lane(
     ctx: &WorkerCtx,
     exe: &Executor,
     prepared: &PreparedInputs,
+    classify_prepared: &[(ModelChoice, PreparedInputs)],
     queue: &Arc<AdmissionQueue>,
     res_tx: &Sender<LaneEvent>,
 ) {
@@ -1404,8 +1866,11 @@ fn run_request_lane(
                 if let Some(msg) = &action.panic_msg {
                     panic!("{}", msg);
                 }
-                if ctx.fused {
-                    denoise_one_fused(
+                match &adm.req {
+                    InferenceRequest::Classify(creq) => {
+                        classify_one(ctx, exe, classify_prepared, creq, &mut step_us)
+                    }
+                    InferenceRequest::Denoise(dreq) if ctx.fused => denoise_one_fused(
                         exe,
                         &ctx.artifact,
                         prepared,
@@ -1413,11 +1878,10 @@ fn run_request_lane(
                         &ctx.img_shape,
                         ctx.time_dim,
                         ctx.backend == ServeBackend::Native,
-                        &adm.req,
+                        dreq,
                         &mut step_us,
-                    )
-                } else {
-                    denoise_one(
+                    ),
+                    InferenceRequest::Denoise(dreq) => denoise_one(
                         exe,
                         &ctx.artifact,
                         prepared,
@@ -1425,9 +1889,9 @@ fn run_request_lane(
                         &ctx.img_shape,
                         ctx.time_dim,
                         &ctx.pulse,
-                        &adm.req,
+                        dreq,
                         &mut step_us,
-                    )
+                    ),
                 }
             }));
             let r = match unwound {
@@ -1445,6 +1909,7 @@ fn run_request_lane(
                 Ok(res) => {
                     let dispatches = if ctx.fused { 1 } else { res.steps };
                     let steps_done = res.steps;
+                    let model = res.model;
                     let service_us = res.latency.as_micros() as f64;
                     let e2e_us = adm.admitted_at.elapsed().as_micros() as f64;
                     let _ = adm.tx.send(Ok(res));
@@ -1462,20 +1927,27 @@ fn run_request_lane(
                         // the per-request lane allocates per dispatch by
                         // design (it is the comparison baseline)
                         pool: PoolStats::default(),
+                        model,
+                        cross_model: false,
                     }));
                 }
                 Err(e) => {
+                    let model = adm.req.model();
                     let _ = adm.tx.send(Err(e));
-                    let _ = res_tx.send(LaneEvent::Failed { count: 1 });
+                    let _ = res_tx.send(LaneEvent::Failed { count: 1, model });
                 }
             }
         }
     }
 }
 
-/// Executor setup for one worker: create, compile/register the artifact,
-/// pre-convert the weights (§Perf).
-fn worker_setup(ctx: &WorkerCtx) -> Result<(Executor, PreparedInputs)> {
+/// Executor setup for one worker: create, compile/register the denoise
+/// artifact, register every provisioned classifier (on BOTH backends —
+/// no HLO lowering exists for the classifier graphs), and pre-convert
+/// the parameter sets (§Perf).
+fn worker_setup(
+    ctx: &WorkerCtx,
+) -> Result<(Executor, PreparedInputs, Vec<(ModelChoice, PreparedInputs)>)> {
     let mut exe = Executor::new()?;
     match ctx.backend {
         ServeBackend::Pjrt => {
@@ -1492,8 +1964,18 @@ fn worker_setup(ctx: &WorkerCtx) -> Result<(Executor, PreparedInputs)> {
             );
         }
     }
+    for cm in ctx.classify.iter() {
+        exe.register_classifier(
+            &cm.artifact,
+            NativeClassify::new(cm.img_shape.clone(), cm.classes, cm.passes),
+        );
+    }
     let prepared = exe.prepare(&ctx.params.tensors)?;
-    Ok((exe, prepared))
+    let mut classify_prepared = Vec::with_capacity(ctx.classify.len());
+    for cm in ctx.classify.iter() {
+        classify_prepared.push((cm.model, exe.prepare(&cm.params.tensors)?));
+    }
+    Ok((exe, prepared, classify_prepared))
 }
 
 fn worker_main(ctx: WorkerCtx, queue: Arc<AdmissionQueue>, res_tx: Sender<LaneEvent>) {
@@ -1503,7 +1985,7 @@ fn worker_main(ctx: WorkerCtx, queue: Arc<AdmissionQueue>, res_tx: Sender<LaneEv
     // the fair queue division starts from a simultaneous standing start.
     let setup = worker_setup(&ctx);
     queue.ready_wait();
-    let (exe, prepared) = match setup {
+    let (exe, prepared, classify_prepared) = match setup {
         Ok(v) => v,
         Err(e) => {
             let _ = res_tx.send(LaneEvent::LaneDown);
@@ -1512,9 +1994,9 @@ fn worker_main(ctx: WorkerCtx, queue: Arc<AdmissionQueue>, res_tx: Sender<LaneEv
         }
     };
     if ctx.batched {
-        run_batched_lane(&ctx, &exe, &prepared, &queue, &res_tx);
+        run_batched_lane(&ctx, &exe, &prepared, &classify_prepared, &queue, &res_tx);
     } else {
-        run_request_lane(&ctx, &exe, &prepared, &queue, &res_tx);
+        run_request_lane(&ctx, &exe, &prepared, &classify_prepared, &queue, &res_tx);
     }
 }
 
@@ -1533,7 +2015,7 @@ fn collector_main(rx: Receiver<LaneEvent>, live: Arc<Mutex<SessionLive>>) {
                 for us in m.service_us {
                     l.metrics.request_latency.record_us(us);
                 }
-                for us in m.e2e_us {
+                for &us in &m.e2e_us {
                     l.metrics.e2e_latency.record_us(us);
                 }
                 for us in m.step_us {
@@ -1552,12 +2034,23 @@ fn collector_main(rx: Receiver<LaneEvent>, live: Arc<Mutex<SessionLive>>) {
                 if m.stalled {
                     l.metrics.pipeline_stalls += 1;
                 }
+                // per-model rows (ISSUE 7)
+                let row = &mut l.metrics.per_model[m.model.index()];
+                row.requests_done += m.requests;
+                row.steps_done += m.steps_done;
+                for &us in &m.e2e_us {
+                    row.e2e_latency.record_us(us);
+                }
+                if m.cross_model {
+                    l.metrics.cross_model_batches += 1;
+                }
                 if let Some(p) = l.worker_pools.get_mut(m.worker) {
                     *p = m.pool;
                 }
             }
-            LaneEvent::Failed { count } => {
+            LaneEvent::Failed { count, model } => {
                 l.metrics.requests_failed += count;
+                l.metrics.per_model[model.index()].requests_failed += count;
             }
             LaneEvent::LaneDown => {
                 l.metrics.lanes_down += 1;
@@ -1582,11 +2075,15 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Admit a request, blocking while the bounded queue is full.
-    /// Returns the ticket that will deliver this request's result, or
-    /// why admission refused it ([`AdmissionError::QueueFull`] never
-    /// occurs on this path).
-    pub fn submit(&self, req: DenoiseRequest) -> std::result::Result<Ticket, AdmissionError> {
+    /// Admit a request ([`DenoiseRequest`], [`ClassifyRequest`], or a
+    /// pre-wrapped [`InferenceRequest`]), blocking while the bounded
+    /// queue is full. Returns the ticket that will deliver this
+    /// request's result, or why admission refused it
+    /// ([`AdmissionError::QueueFull`] never occurs on this path).
+    pub fn submit(
+        &self,
+        req: impl Into<InferenceRequest>,
+    ) -> std::result::Result<Ticket, AdmissionError> {
         self.queue.admit(req, true)
     }
 
@@ -1594,7 +2091,7 @@ impl ServerHandle {
     /// [`AdmissionError::QueueFull`] immediately (load shedding).
     pub fn try_submit(
         &self,
-        req: DenoiseRequest,
+        req: impl Into<InferenceRequest>,
     ) -> std::result::Result<Ticket, AdmissionError> {
         self.queue.admit(req, false)
     }
@@ -1662,35 +2159,81 @@ impl ServerHandle {
         let mut metrics = self.metrics_snapshot();
 
         // Co-simulation: the SF-MMCN accelerator's counts for the same
-        // work — one U-net pass per executed step. Batched traffic goes
-        // through the cycle-accurate flat micro simulator (ISSUE 3: it is
-        // cheap since the §Perf rewrite, and its fixed-point numerics and
-        // event counts are real); the per-request path keeps the fast
-        // analytic model.
+        // work, per mode (ISSUE 7) — one U-net pass per executed denoise
+        // step, one classifier-graph pass per classification request.
+        // Batched traffic goes through the cycle-accurate flat micro
+        // simulator (ISSUE 3: it is cheap since the §Perf rewrite, and
+        // its fixed-point numerics and event counts are real); the
+        // per-request path keeps the fast analytic model.
         if self.cfg.cosim {
             let acfg = AcceleratorConfig::default();
-            let g = unet(UnetConfig::default());
             let mut totals = EventCounts {
                 total_pes: acfg.total_pes(),
                 ..Default::default()
             };
-            if self.cfg.batched {
-                let ws = WeightStore::random(&g, self.cfg.seed);
-                let mut rng = Rng::new(self.cfg.seed ^ 0xc0_51);
-                let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| {
-                    rng.normal() * 0.5
-                });
-                let emb: Vec<f32> = (0..self.time_dim).map(|_| rng.normal() * 0.5).collect();
-                let mut acc = Accelerator::new(acfg);
-                let run = acc.run_graph(&g, &x, &ws, Some(&emb))?;
-                for _ in 0..metrics.steps_done {
-                    totals.merge_run(&run.totals);
+            let unet_steps = metrics.per_model[ModelChoice::Unet.index()].steps_done;
+            if unet_steps > 0 {
+                let g = unet(UnetConfig::default());
+                let mut mt = EventCounts {
+                    total_pes: acfg.total_pes(),
+                    ..Default::default()
+                };
+                if self.cfg.batched {
+                    let ws = WeightStore::random(&g, self.cfg.seed);
+                    let mut rng = Rng::new(self.cfg.seed ^ 0xc0_51);
+                    let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| {
+                        rng.normal() * 0.5
+                    });
+                    let emb: Vec<f32> =
+                        (0..self.time_dim).map(|_| rng.normal() * 0.5).collect();
+                    let mut acc = Accelerator::new(acfg);
+                    let run = acc.run_graph(&g, &x, &ws, Some(&emb))?;
+                    for _ in 0..unet_steps {
+                        mt.merge_run(&run.totals);
+                        totals.merge_run(&run.totals);
+                    }
+                } else {
+                    let a = crate::compiler::analyze_graph(&acfg, &g, 0.0);
+                    for _ in 0..unet_steps {
+                        mt.merge_run(&a.totals);
+                        totals.merge_run(&a.totals);
+                    }
                 }
-            } else {
-                let a = crate::compiler::analyze_graph(&acfg, &g, 0.0);
-                for _ in 0..metrics.steps_done {
-                    totals.merge_run(&a.totals);
+                metrics.per_model[ModelChoice::Unet.index()].sim_counts = Some(mt);
+            }
+            for model in [ModelChoice::Resnet18, ModelChoice::Vgg16] {
+                let done = metrics.per_model[model.index()].requests_done;
+                if done == 0 {
+                    continue;
                 }
+                let g = match model {
+                    ModelChoice::Resnet18 => resnet18(CLASSIFY_IMG, CLASSIFY_CLASSES),
+                    _ => vgg16(CLASSIFY_IMG, CLASSIFY_CLASSES),
+                };
+                let mut mt = EventCounts {
+                    total_pes: acfg.total_pes(),
+                    ..Default::default()
+                };
+                if self.cfg.batched {
+                    let ws = WeightStore::random(&g, self.cfg.seed);
+                    let mut rng = Rng::new(self.cfg.seed ^ 0xc1_a5);
+                    let x = Tensor::from_fn(&[g.input.c, g.input.h, g.input.w], |_| {
+                        rng.normal() * 0.5
+                    });
+                    let mut acc = Accelerator::new(acfg);
+                    let run = acc.run_graph(&g, &x, &ws, None)?;
+                    for _ in 0..done {
+                        mt.merge_run(&run.totals);
+                        totals.merge_run(&run.totals);
+                    }
+                } else {
+                    let a = crate::compiler::analyze_graph(&acfg, &g, 0.0);
+                    for _ in 0..done {
+                        mt.merge_run(&a.totals);
+                        totals.merge_run(&a.totals);
+                    }
+                }
+                metrics.per_model[model.index()].sim_counts = Some(mt);
             }
             metrics.sim_counts = Some(totals);
         }
@@ -1732,6 +2275,10 @@ pub struct DiffusionServer {
     schedule: Arc<DdpmSchedule>,
     img_shape: Vec<usize>,
     time_dim: usize,
+    /// Classification models provisioned for this server (ISSUE 7): one
+    /// entry per non-U-net model named in `serve.model_mix`. Empty for a
+    /// pure-diffusion server, so the U-net-only path pays nothing.
+    classify: Arc<Vec<ClassifyModel>>,
 }
 
 impl DiffusionServer {
@@ -1775,6 +2322,18 @@ impl DiffusionServer {
                 );
             }
         }
+        // Provision classification models lazily (ISSUE 7): synthetic
+        // parameter sets are tens of MB, so only the models named in
+        // serve.model_mix are built. A classify request for a model not
+        // listed there errors at prepare time, naming the knob.
+        let mix = cfg.parsed_model_mix()?;
+        let mut classify = Vec::new();
+        for m in mix.models() {
+            if m == ModelChoice::Unet {
+                continue;
+            }
+            classify.push(ClassifyModel::build(m, cfg.seed)?);
+        }
         Ok(Self {
             cfg,
             artifact,
@@ -1783,6 +2342,7 @@ impl DiffusionServer {
             schedule: Arc::new(schedule),
             img_shape: vec![ucfg.img_channels, ucfg.img, ucfg.img],
             time_dim: ucfg.time_dim,
+            classify: Arc::new(classify),
         })
     }
 
@@ -1861,6 +2421,7 @@ impl DiffusionServer {
                 pooled: cfg.pooled,
                 faults: faults.clone(),
                 pulse: Arc::clone(&pulse),
+                classify: Arc::clone(&self.classify),
             };
             let queue = Arc::clone(&queue);
             let res_tx = res_tx.clone();
@@ -1893,9 +2454,9 @@ impl DiffusionServer {
     /// division sees the full queue at a standing start, exactly like
     /// the historical batcher), wait every ticket, shut down. Outputs
     /// are bit-identical to the pre-session implementation.
-    pub fn serve(
+    pub fn serve<R: Into<InferenceRequest>>(
         &self,
-        requests: Vec<DenoiseRequest>,
+        requests: Vec<R>,
     ) -> Result<(Vec<DenoiseResult>, ServeMetrics)> {
         let n = requests.len();
         let depth = self.cfg.queue_depth.max(n).max(1);
@@ -1929,21 +2490,28 @@ impl DiffusionServer {
 }
 
 /// Generate the `[range]` slice of a deterministic workload: request `i`
-/// is a pure function of `(cfg.steps, seed, i)`, so open-loop clients
-/// and shards can regenerate disjoint slices of the same workload
-/// without coordination (shard k of S takes `(k * n / S)..((k + 1) * n / S)`).
+/// is a pure function of `(cfg.steps, cfg.model_mix, seed, i)`, so
+/// open-loop clients and shards can regenerate disjoint slices of the
+/// same workload without coordination (shard k of S takes
+/// `(k * n / S)..((k + 1) * n / S)`). With a non-empty `serve.model_mix`
+/// the weighted pattern assigns each index its model (ISSUE 7) — an
+/// unparsable mix degrades to all-U-net rather than panicking, since
+/// `ServeConfig::validate` already rejects it on every serving path.
 pub fn workload(
     cfg: &ServeConfig,
     seed: u64,
     range: std::ops::Range<usize>,
-) -> Vec<DenoiseRequest> {
+) -> Vec<InferenceRequest> {
+    let mix = cfg
+        .parsed_model_mix()
+        .unwrap_or_else(|_| ModelMix::all_unet());
     range
         .map(|i| {
-            DenoiseRequest::new(
-                i as u64,
-                seed.wrapping_add((i as u64).wrapping_mul(7919)),
-                cfg.steps,
-            )
+            let s = seed.wrapping_add((i as u64).wrapping_mul(7919));
+            match mix.model_for(i as u64) {
+                ModelChoice::Unet => DenoiseRequest::new(i as u64, s, cfg.steps).into(),
+                m => ClassifyRequest::new(i as u64, s, m).into(),
+            }
         })
         .collect()
 }
@@ -2025,10 +2593,52 @@ mod tests {
         q.begin_drain();
         let first = q.next_batch().unwrap();
         assert_eq!(first.len(), 2);
-        assert!(first.iter().all(|a| a.req.steps == 5));
+        assert!(first.iter().all(|a| a.req.steps() == 5));
         let second = q.next_batch().unwrap();
         assert_eq!(second.len(), 2);
-        assert!(second.iter().all(|a| a.req.steps == 3));
+        assert!(second.iter().all(|a| a.req.steps() == 3));
+    }
+
+    #[test]
+    fn queue_never_mixes_models_and_serves_oldest_lane_first() {
+        // ISSUE 7: interleaved U-net / ResNet-18 / VGG-16 admissions. A
+        // batch never mixes models, and among the per-model sub-lanes of
+        // a priority level the one whose FRONT entry is oldest goes
+        // first — so no model starves behind a busier one.
+        let q = queue(1, 8, 1);
+        admit(&q, req(0, 3)); // unet, oldest
+        q.admit(ClassifyRequest::new(1, 1, ModelChoice::Resnet18), false)
+            .unwrap();
+        admit(&q, req(2, 3));
+        q.admit(ClassifyRequest::new(3, 3, ModelChoice::Vgg16), false)
+            .unwrap();
+        q.admit(ClassifyRequest::new(4, 4, ModelChoice::Resnet18), false)
+            .unwrap();
+        q.begin_drain();
+        let mut batches = Vec::new();
+        while let Some(b) = q.next_batch() {
+            assert_eq!(
+                b.iter()
+                    .map(|a| a.req.batch_key())
+                    .collect::<std::collections::HashSet<_>>()
+                    .len(),
+                1,
+                "a batch must hold exactly one (model, steps) key"
+            );
+            batches.push((
+                b[0].req.model(),
+                b.iter().map(|a| a.req.id()).collect::<Vec<_>>(),
+            ));
+        }
+        assert_eq!(
+            batches,
+            vec![
+                (ModelChoice::Unet, vec![0, 2]),
+                (ModelChoice::Resnet18, vec![1, 4]),
+                (ModelChoice::Vgg16, vec![3]),
+            ],
+            "oldest front ticket picks the lane; same-model requests coalesce"
+        );
     }
 
     #[test]
@@ -2046,9 +2656,9 @@ mod tests {
         q.begin_drain();
         let first = q.next_batch().unwrap();
         assert_eq!(first.len(), 1, "priority lanes never mix in one batch");
-        assert_eq!(first[0].req.id, 1, "priority 0 drains first");
+        assert_eq!(first[0].req.id(), 1, "priority 0 drains first");
         let second = q.next_batch().unwrap();
-        let ids: Vec<u64> = second.iter().map(|a| a.req.id).collect();
+        let ids: Vec<u64> = second.iter().map(|a| a.req.id()).collect();
         assert_eq!(ids, vec![0, 2], "same-level FIFO, clamped priority joins it");
     }
 
@@ -2096,7 +2706,7 @@ mod tests {
         q.begin_drain();
         let batch = q.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].req.id, 1, "only the live request executes");
+        assert_eq!(batch[0].req.id(), 1, "only the live request executes");
         assert!(q.next_batch().is_none());
         let err = t_stale.wait().unwrap_err().to_string();
         assert!(err.contains("expired"), "{err}");
@@ -2120,7 +2730,7 @@ mod tests {
         admit(&q, req(1, 3)); // urgent (priority 0)
         std::thread::sleep(Duration::from_millis(25));
         let batch = q.next_batch().unwrap();
-        assert_eq!(batch[0].req.id, 1, "batch comes from the urgent lane");
+        assert_eq!(batch[0].req.id(), 1, "batch comes from the urgent lane");
         // the stale low-priority ticket resolved during that same pop
         let err = t_stale.wait().unwrap_err().to_string();
         assert!(err.contains("expired"), "{err}");
@@ -2175,7 +2785,7 @@ mod tests {
             .map(|(i, req)| {
                 let (tx, _rx) = channel();
                 Admitted {
-                    req,
+                    req: req.into(),
                     ticket: i as u64,
                     admitted_at: Instant::now(),
                     deadline: None,
@@ -2190,7 +2800,7 @@ mod tests {
         let schedule = DdpmSchedule::standard(4);
         let reqs = admitted(vec![req(0, 4), req(1, 4)]);
         let pool = BufferPool::disabled();
-        let pb = prepare_host_batch(reqs, &schedule, &[1, 2, 2], 8, &pool).unwrap();
+        let pb = prepare_host_batch(reqs, &schedule, &[1, 2, 2], 8, &[], &pool).unwrap();
         assert_eq!(pb.x0.shape, vec![2, 1, 2, 2]);
         assert_eq!(pb.t_embs.shape, vec![4, 8]);
         assert_eq!(pb.coeffs.shape, vec![4, 3]);
@@ -2218,6 +2828,7 @@ mod tests {
             &schedule,
             &[1, 2, 2],
             4,
+            &[],
             &pool,
         )
         .unwrap();
@@ -2237,9 +2848,15 @@ mod tests {
     fn prepare_rejects_bad_step_counts_and_returns_the_batch() {
         let schedule = DdpmSchedule::standard(4);
         let pool = BufferPool::disabled();
-        let (reqs, e) =
-            prepare_host_batch(admitted(vec![req(0, 0)]), &schedule, &[1, 2, 2], 4, &pool)
-                .unwrap_err();
+        let (reqs, e) = prepare_host_batch(
+            admitted(vec![req(0, 0)]),
+            &schedule,
+            &[1, 2, 2],
+            4,
+            &[],
+            &pool,
+        )
+        .unwrap_err();
         assert_eq!(reqs.len(), 1, "the batch comes back for ticket resolution");
         assert!(e.to_string().contains("out of range"), "{e}");
         assert!(prepare_host_batch(
@@ -2247,6 +2864,7 @@ mod tests {
             &schedule,
             &[1, 2, 2],
             4,
+            &[],
             &pool
         )
         .is_err());
@@ -2266,6 +2884,7 @@ mod tests {
                 &schedule,
                 &[1, 2, 2],
                 8,
+                &[],
                 pool,
             )
             .unwrap()
@@ -2371,11 +2990,52 @@ mod tests {
         let lo = workload(&cfg, 42, 0..4);
         let hi = workload(&cfg, 42, 4..8);
         for (a, b) in whole.iter().zip(lo.iter().chain(hi.iter())) {
-            assert_eq!(a.id, b.id);
-            assert_eq!(a.seed, b.seed);
-            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.id(), b.id());
+            assert_eq!(a.seed(), b.seed());
+            assert_eq!(a.steps(), b.steps());
         }
-        assert!(whole.iter().all(|r| r.steps == 7));
-        assert!(whole.iter().all(|r| r.deadline.is_none() && r.priority == 0));
+        assert!(whole.iter().all(|r| r.steps() == 7));
+        assert!(whole
+            .iter()
+            .all(|r| r.deadline().is_none() && r.priority() == 0));
+        assert!(
+            whole.iter().all(|r| r.model() == ModelChoice::Unet),
+            "an empty serve.model_mix stays pure-diffusion"
+        );
+    }
+
+    #[test]
+    fn workload_applies_the_model_mix_pattern() {
+        let cfg = ServeConfig {
+            steps: 5,
+            model_mix: "unet:2,resnet18:1,vgg16:1".into(),
+            ..ServeConfig::default()
+        };
+        let reqs = workload(&cfg, 42, 0..8);
+        let models: Vec<ModelChoice> = reqs.iter().map(|r| r.model()).collect();
+        assert_eq!(
+            models,
+            vec![
+                ModelChoice::Unet,
+                ModelChoice::Unet,
+                ModelChoice::Resnet18,
+                ModelChoice::Vgg16,
+                ModelChoice::Unet,
+                ModelChoice::Unet,
+                ModelChoice::Resnet18,
+                ModelChoice::Vgg16,
+            ]
+        );
+        // classification requests keep the same per-index seed stream and
+        // carry one logical step each
+        assert_eq!(reqs[2].seed(), 42u64.wrapping_add(2 * 7919));
+        assert_eq!(reqs[2].steps(), 1);
+        // shard slices reproduce the same mixed workload
+        let hi = workload(&cfg, 42, 4..8);
+        for (a, b) in reqs[4..].iter().zip(hi.iter()) {
+            assert_eq!(a.id(), b.id());
+            assert_eq!(a.seed(), b.seed());
+            assert_eq!(a.model(), b.model());
+        }
     }
 }

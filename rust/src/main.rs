@@ -39,6 +39,7 @@ USAGE: sf-mmcn <subcommand> [options]
             [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
             [--queue-depth 64] [--deadline-ms 0] [--priorities 3]
             [--open-loop [--rate 8.0]] [--config file.toml]
+            [--model-mix \"unet:2,resnet18:1,vgg16:1\"]
             [--shards 1] [--heartbeat-ms 25] [--heartbeat-misses 8]
             [--fault-spec \"kill:1:5;stall:0:3:40\"] [--fault-seed N]
   sweep     [--model resnet18] [--img 224]
@@ -192,6 +193,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     cfg.default_deadline_ms = args.get_u64("deadline-ms", cfg.default_deadline_ms)?;
     cfg.priorities = args.get_usize("priorities", cfg.priorities)?;
+    if let Some(mix) = args.get("model-mix") {
+        // multi-mode traffic (ISSUE 7): weighted U-net / ResNet-18 /
+        // VGG-16 pattern, e.g. "unet:2,resnet18:1,vgg16:1"
+        cfg.model_mix = mix.to_string();
+    }
     cfg.shards = args.get_usize("shards", cfg.shards)?;
     cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.heartbeat_misses = args.get_u64("heartbeat-misses", cfg.heartbeat_misses)?;
@@ -235,6 +241,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ""
         }
     );
+    if !cfg.model_mix.is_empty() {
+        println!("model mix: {}", cfg.model_mix);
+    }
     let reqs = workload(&cfg, cfg.seed, 0..cfg.requests);
     let (results, metrics) = server.serve(reqs)?;
     println!("{}", metrics.render());
@@ -248,6 +257,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             rep.gops,
             rep.u_pe * 100.0
         );
+        // per-mode accelerator rows (ISSUE 7): the paper's area-efficiency
+        // FoM (GOPs/mm²) for each mode's slice of the mixed traffic
+        for row in metrics.per_model.iter().filter(|r| r.sim_counts.is_some()) {
+            if let Some(mrep) = row.sim_report(&CAL_40NM, 8) {
+                println!(
+                    "  {}: {} cycles  {:.1} GOPs  {:.1} GOPs/mm2  U_PE {:.1}%",
+                    row.model.name(),
+                    mrep.cycles,
+                    mrep.gops,
+                    mrep.gops_per_mm2,
+                    mrep.u_pe * 100.0
+                );
+            }
+        }
     }
     if let Some(r) = results.first() {
         let mean: f32 = r.image.data.iter().sum::<f32>() / r.image.len() as f32;

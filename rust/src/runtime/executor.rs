@@ -16,7 +16,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::native::{BatchDispatch, NativeDenoise};
+use super::native::{BatchDispatch, NativeClassify, NativeDenoise};
 use super::tensor_buf::TensorBuf;
 
 fn to_literal(t: &TensorBuf) -> Result<xla::Literal> {
@@ -35,6 +35,7 @@ pub struct Executor {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     natives: HashMap<String, NativeDenoise>,
+    classifiers: HashMap<String, NativeClassify>,
 }
 
 impl Executor {
@@ -45,6 +46,7 @@ impl Executor {
             client,
             executables: HashMap::new(),
             natives: HashMap::new(),
+            classifiers: HashMap::new(),
         })
     }
 
@@ -73,9 +75,18 @@ impl Executor {
         self.natives.insert(name.to_string(), engine);
     }
 
+    /// Register a host-CPU classification surrogate (ISSUE 7). No HLO
+    /// lowering exists for the classifier graphs, so classification
+    /// executes natively even on the PJRT backend.
+    pub fn register_classifier(&mut self, name: &str, engine: NativeClassify) {
+        self.classifiers.insert(name.to_string(), engine);
+    }
+
     /// True if anything executable is loaded under `name`.
     pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name) || self.natives.contains_key(name)
+        self.executables.contains_key(name)
+            || self.natives.contains_key(name)
+            || self.classifiers.contains_key(name)
     }
 
     pub fn loaded_names(&self) -> Vec<&str> {
@@ -83,6 +94,7 @@ impl Executor {
             .executables
             .keys()
             .chain(self.natives.keys())
+            .chain(self.classifiers.keys())
             .map(|s| s.as_str())
             .collect();
         v.sort();
@@ -233,6 +245,22 @@ impl Executor {
         // caller's old slab drops and this one enters the rotation)
         *out = self.run_batched(name, d, prepared)?;
         Ok(())
+    }
+
+    /// Classification entry point (ISSUE 7): `B` stacked images →
+    /// `[B, classes]` logits via the registered [`NativeClassify`]
+    /// surrogate (always native; see [`Executor::register_classifier`]).
+    pub fn run_classifier(
+        &self,
+        name: &str,
+        batch: usize,
+        x: &TensorBuf,
+        prepared: &PreparedInputs,
+    ) -> Result<TensorBuf> {
+        if let Some(engine) = self.classifiers.get(name) {
+            return engine.run_batch(batch, x, &prepared.host);
+        }
+        bail!("classifier `{name}` not registered")
     }
 
     fn execute_refs(&self, name: &str, refs: &[&xla::Literal]) -> Result<Vec<TensorBuf>> {

@@ -25,7 +25,7 @@ mod tensor_buf;
 pub use artifact::{ArtifactSpec, ArtifactStore};
 #[cfg(feature = "pjrt")]
 pub use executor::{Executor, PreparedInputs};
-pub use native::{BatchDispatch, NativeDenoise};
+pub use native::{BatchDispatch, NativeClassify, NativeDenoise};
 pub use pool::{BufferPool, PoolStats};
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{Executor, PreparedInputs};

@@ -22,10 +22,46 @@
 //!
 //! It makes no attempt to match the trained U-net's numerics — for that,
 //! build with `--features pjrt` against real artifacts.
+//!
+//! Since ISSUE 7 the module also hosts [`NativeClassify`], the
+//! classification surrogate for the multi-mode serving path (ResNet-18 /
+//! VGG-16 alongside U-net denoise, the paper's multi-mode claim). It
+//! follows the same two rules: deterministic bounded math with mutually
+//! independent batch rows (batched ≡ per-request, bit for bit), and a
+//! per-dispatch parameter digest plus per-image work scaled by the real
+//! model's MAC count, so mixed-traffic benches see classification cost
+//! in realistic proportion to denoise steps.
 
 use anyhow::{bail, Result};
 
 use super::tensor_buf::TensorBuf;
+
+/// Fold a prepared parameter set into two bounded mixing coefficients.
+/// Sequential f64 accumulation in manifest order keeps the result
+/// bit-stable across dispatch shapes; running it *per dispatch* (not
+/// once at prepare time) is deliberate — it is the surrogates'
+/// per-dispatch weight-streaming / invocation overhead term.
+fn param_digest(params: &[TensorBuf]) -> (f32, f32) {
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut n = 0usize;
+    for t in params {
+        for &v in &t.data {
+            let v = v as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        n += t.data.len();
+    }
+    if n == 0 {
+        return (0.71, 0.23);
+    }
+    let mean = s1 / n as f64;
+    let rms = (s2 / n as f64).sqrt();
+    let g0 = 0.75 + 0.5 * mean.tanh();
+    let g1 = 0.2 + 0.3 * (rms / (1.0 + rms));
+    (g0 as f32, g1 as f32)
+}
 
 /// One batched device dispatch: B requests × a chunk of `steps` reverse
 /// timesteps, all tensors stacked. Rows of `t_embs`/`coeffs`/`noises` are
@@ -66,31 +102,9 @@ impl NativeDenoise {
         self.img_shape.iter().product()
     }
 
-    /// Fold the prepared parameter tensors into two bounded mixing
-    /// coefficients. Sequential f64 accumulation in manifest order keeps
-    /// the result bit-stable across dispatch shapes; doing it *per
-    /// dispatch* (not once at prepare time) is deliberate — it is the
-    /// surrogate's per-dispatch overhead term (see module docs).
+    /// The per-dispatch overhead term (see [`param_digest`]).
     fn digest(params: &[TensorBuf]) -> (f32, f32) {
-        let mut s1 = 0.0f64;
-        let mut s2 = 0.0f64;
-        let mut n = 0usize;
-        for t in params {
-            for &v in &t.data {
-                let v = v as f64;
-                s1 += v;
-                s2 += v * v;
-            }
-            n += t.data.len();
-        }
-        if n == 0 {
-            return (0.71, 0.23);
-        }
-        let mean = s1 / n as f64;
-        let rms = (s2 / n as f64).sqrt();
-        let g0 = 0.75 + 0.5 * mean.tanh();
-        let g1 = 0.2 + 0.3 * (rms / (1.0 + rms));
-        (g0 as f32, g1 as f32)
+        param_digest(params)
     }
 
     /// One reverse step, in place. `eps = tanh(g0·x + g1·mean(emb) + pos)`
@@ -336,6 +350,152 @@ impl NativeDenoise {
     }
 }
 
+/// Deterministic host-CPU classification surrogate (ISSUE 7): the
+/// multi-mode analogue of [`NativeDenoise`] for the ResNet-18 / VGG-16
+/// serving modes.
+///
+/// Same surrogate contract:
+///
+/// * **Deterministic and bounded** — logits are a pure function of
+///   `(x, params)`; every batch row is computed independently with a
+///   fixed accumulation order, so batched and per-request execution are
+///   bit-identical at any batch size or thread count.
+/// * **Cost-shaped like the real model** — every dispatch pays the
+///   [`param_digest`] weight-streaming term, then `passes` full sweeps
+///   over each image. The server derives `passes` from the model graph's
+///   MAC count, so VGG-16 requests cost proportionally more host work
+///   than ResNet-18 requests, the way they would on the accelerator.
+#[derive(Debug, Clone)]
+pub struct NativeClassify {
+    /// Input image shape `[c, h, w]`.
+    pub img_shape: Vec<usize>,
+    /// Output logit count.
+    pub classes: usize,
+    /// Sweeps over the image per request (the MAC-count cost knob).
+    pub passes: usize,
+}
+
+impl NativeClassify {
+    pub fn new(img_shape: Vec<usize>, classes: usize, passes: usize) -> Self {
+        Self {
+            img_shape,
+            classes,
+            passes: passes.max(1),
+        }
+    }
+
+    fn pixels(&self) -> usize {
+        self.img_shape.iter().product()
+    }
+
+    /// One image → `classes` logits. Each pass scatters the image into
+    /// the class accumulators under a rotating weight table (the same
+    /// 31-entry position-table idiom as the denoise kernel); the mean
+    /// accumulator then maps through a bounded tanh head mixed with the
+    /// parameter digest. Fixed sequential order — bit-stable everywhere.
+    fn forward_row(&self, x: &[f32], g: (f32, f32), logits: &mut [f32]) {
+        const P: usize = 31;
+        let (g0, g1) = g;
+        let mut wtab = [0.0f32; P];
+        for (k, w) in wtab.iter_mut().enumerate() {
+            *w = (k as f32) * 0.017 - 0.26;
+        }
+        let k_n = self.classes;
+        let mut acc = vec![0.0f64; k_n];
+        for p in 0..self.passes {
+            let rot = p * 7 + 1;
+            for (i, &v) in x.iter().enumerate() {
+                let w = wtab[(i * rot + p) % P];
+                acc[(i + p) % k_n] += (v * w) as f64;
+            }
+        }
+        // acc holds ~n*passes/k_n products of O(0.1) terms; normalize to
+        // O(1) before the bounded head so logits stay discriminative
+        let norm = (k_n as f64) / (x.len().max(1) as f64 * self.passes as f64);
+        for (k, l) in logits.iter_mut().enumerate() {
+            let a = (acc[k] * norm) as f32;
+            *l = (g0 * a * 8.0 + g1 * wtab[k % P]).tanh();
+        }
+    }
+
+    /// Shape/size validation shared by the batched entry points; returns
+    /// the per-image pixel count.
+    fn validate_batch(&self, batch: usize, x: &TensorBuf) -> Result<usize> {
+        let n = self.pixels();
+        if batch == 0 {
+            bail!("empty classification dispatch");
+        }
+        if n == 0 || self.classes == 0 {
+            bail!(
+                "native classify: degenerate engine (shape {:?}, {} classes)",
+                self.img_shape,
+                self.classes
+            );
+        }
+        if x.len() != batch * n {
+            bail!(
+                "classification dispatch: x length {} != B*{n} (B = {batch})",
+                x.len()
+            );
+        }
+        Ok(n)
+    }
+
+    /// Batched forward: B stacked images `[B, c, h, w]` → logits
+    /// `[B, classes]` in one dispatch (digest once).
+    pub fn run_batch(
+        &self,
+        batch: usize,
+        x: &TensorBuf,
+        params: &[TensorBuf],
+    ) -> Result<TensorBuf> {
+        let mut out = TensorBuf::zeros(&[batch, self.classes]);
+        self.run_batch_into(batch, x, params, &mut out.data)?;
+        Ok(out)
+    }
+
+    /// Zero-allocation batched forward: logits written into the caller's
+    /// `out` slab (`B * classes` elements). Rows are independent, so
+    /// large dispatches fan out across threads bit-identically.
+    pub fn run_batch_into(
+        &self,
+        batch: usize,
+        x: &TensorBuf,
+        params: &[TensorBuf],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = self.validate_batch(batch, x)?;
+        if out.len() != batch * self.classes {
+            bail!(
+                "classification dispatch: out slab {} != B*{} (B = {batch})",
+                out.len(),
+                self.classes
+            );
+        }
+        let g = param_digest(params);
+        let k_n = self.classes;
+        let threads = fanout_threads(batch, self.passes * n);
+        if threads <= 1 {
+            for (i, logits) in out.chunks_mut(k_n).enumerate() {
+                self.forward_row(&x.data[i * n..(i + 1) * n], g, logits);
+            }
+        } else {
+            let rows_per = batch.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (shard, ls) in out.chunks_mut(rows_per * k_n).enumerate() {
+                    s.spawn(move || {
+                        for (j, logits) in ls.chunks_mut(k_n).enumerate() {
+                            let i = shard * rows_per + j;
+                            self.forward_row(&x.data[i * n..(i + 1) * n], g, logits);
+                        }
+                    });
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
 /// How many threads to fan a batched dispatch across: bounded by the
 /// hardware, the row count, and a minimum per-thread workload so small
 /// dispatches stay on the calling thread (spawning costs ~tens of µs).
@@ -565,5 +725,89 @@ mod tests {
         bad[0] = TensorBuf::zeros(&[1, 2, 2]);
         assert!(e.run_step(&bad, &p).is_err());
         assert!(e.run_dynamic(&step_inputs(0.1)[..3], &p).is_err());
+    }
+
+    fn classify_engine() -> NativeClassify {
+        NativeClassify::new(vec![3, 8, 8], 10, 4)
+    }
+
+    fn images(batch: usize, seed: f32) -> TensorBuf {
+        let n = 3 * 8 * 8;
+        let data: Vec<f32> = (0..batch * n)
+            .map(|i| seed + (i as f32 * 0.013).sin() * 0.4)
+            .collect();
+        TensorBuf::new(vec![batch, 3, 8, 8], data).unwrap()
+    }
+
+    #[test]
+    fn classify_deterministic_bounded_and_input_sensitive() {
+        let e = classify_engine();
+        let p = params();
+        let a = e.run_batch(2, &images(2, 0.3), &p).unwrap();
+        let b = e.run_batch(2, &images(2, 0.3), &p).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.shape, vec![2, 10]);
+        assert!(a.data.iter().all(|v| v.abs() < 1.0), "tanh head bounds logits");
+        let c = e.run_batch(2, &images(2, 0.4), &p).unwrap();
+        assert_ne!(a.data, c.data, "logits must depend on the input image");
+        // and on the parameter digest
+        let d = e.run_batch(2, &images(2, 0.3), &[]).unwrap();
+        assert_ne!(a.data, d.data, "logits must depend on the params");
+        // rows aren't all the same value
+        assert!(a.data[..10].iter().any(|v| (v - a.data[0]).abs() > 1e-6));
+    }
+
+    #[test]
+    fn classify_batched_matches_solo_bitwise() {
+        // Large enough batch to cross the thread-fanout path on big rows:
+        // use a heavier pass count so work exceeds MIN_WORK_PER_THREAD.
+        let e = NativeClassify::new(vec![3, 32, 32], 10, 64);
+        let p = params();
+        let b = 6;
+        let n = 3 * 32 * 32;
+        let all: Vec<f32> = (0..b * n)
+            .map(|i| ((i as f32) * 0.007).cos() * 0.5)
+            .collect();
+        let x = TensorBuf::new(vec![b, 3, 32, 32], all.clone()).unwrap();
+        let batched = e.run_batch(b, &x, &p).unwrap();
+        for i in 0..b {
+            let solo_x =
+                TensorBuf::new(vec![1, 3, 32, 32], all[i * n..(i + 1) * n].to_vec()).unwrap();
+            let solo = e.run_batch(1, &solo_x, &p).unwrap();
+            assert_eq!(
+                batched.data[i * 10..(i + 1) * 10],
+                solo.data[..],
+                "classify row {i} diverged between batched and per-request"
+            );
+        }
+    }
+
+    #[test]
+    fn classify_pass_count_shapes_output_and_cost() {
+        let e1 = NativeClassify::new(vec![3, 8, 8], 10, 1);
+        let e2 = NativeClassify::new(vec![3, 8, 8], 10, 8);
+        let p = params();
+        let a = e1.run_batch(1, &images(1, 0.2), &p).unwrap();
+        let b = e2.run_batch(1, &images(1, 0.2), &p).unwrap();
+        assert_ne!(a.data, b.data, "pass count is part of the function");
+        // passes=0 clamps to 1
+        let e0 = NativeClassify::new(vec![3, 8, 8], 10, 0);
+        assert_eq!(e0.passes, 1);
+        let c = e0.run_batch(1, &images(1, 0.2), &p).unwrap();
+        assert_eq!(a.data, c.data);
+    }
+
+    #[test]
+    fn classify_shape_mismatches_rejected() {
+        let e = classify_engine();
+        let p = params();
+        assert!(e.run_batch(0, &images(1, 0.1), &p).is_err());
+        assert!(e.run_batch(2, &images(1, 0.1), &p).is_err());
+        let mut short = vec![0.0f32; 5];
+        assert!(e
+            .run_batch_into(1, &images(1, 0.1), &p, &mut short)
+            .is_err());
+        let degenerate = NativeClassify::new(vec![], 10, 1);
+        assert!(degenerate.run_batch(1, &TensorBuf::zeros(&[0]), &p).is_err());
     }
 }

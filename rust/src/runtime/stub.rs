@@ -19,7 +19,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::native::{BatchDispatch, NativeDenoise};
+use super::native::{BatchDispatch, NativeClassify, NativeDenoise};
 use super::tensor_buf::TensorBuf;
 
 fn unavailable(what: &str) -> anyhow::Error {
@@ -34,6 +34,7 @@ fn unavailable(what: &str) -> anyhow::Error {
 /// typed error; registered native surrogates execute for real.
 pub struct Executor {
     natives: HashMap<String, NativeDenoise>,
+    classifiers: HashMap<String, NativeClassify>,
 }
 
 impl Executor {
@@ -41,6 +42,7 @@ impl Executor {
     pub fn new() -> Result<Self> {
         Ok(Self {
             natives: HashMap::new(),
+            classifiers: HashMap::new(),
         })
     }
 
@@ -64,13 +66,24 @@ impl Executor {
         self.natives.insert(name.to_string(), engine);
     }
 
+    /// Register a host-CPU classification surrogate (ISSUE 7) under an
+    /// artifact name; `run_classifier` on that name executes it.
+    pub fn register_classifier(&mut self, name: &str, engine: NativeClassify) {
+        self.classifiers.insert(name.to_string(), engine);
+    }
+
     /// True if anything executable is registered under `name`.
     pub fn has(&self, name: &str) -> bool {
-        self.natives.contains_key(name)
+        self.natives.contains_key(name) || self.classifiers.contains_key(name)
     }
 
     pub fn loaded_names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.natives.keys().map(|s| s.as_str()).collect();
+        let mut v: Vec<&str> = self
+            .natives
+            .keys()
+            .chain(self.classifiers.keys())
+            .map(|s| s.as_str())
+            .collect();
         v.sort();
         v
     }
@@ -114,6 +127,23 @@ impl Executor {
             "artifact `{name}` not loaded ({})",
             unavailable("batched execution")
         )
+    }
+
+    /// Classification entry point (ISSUE 7): `B` stacked images →
+    /// `[B, classes]` logits via the registered [`NativeClassify`]
+    /// surrogate. Classification always executes natively — there is no
+    /// HLO lowering for the classifier graphs, on either backend.
+    pub fn run_classifier(
+        &self,
+        name: &str,
+        batch: usize,
+        x: &TensorBuf,
+        prepared: &PreparedInputs,
+    ) -> Result<TensorBuf> {
+        if let Some(engine) = self.classifiers.get(name) {
+            return engine.run_batch(batch, x, &prepared.tensors);
+        }
+        bail!("classifier `{name}` not registered")
     }
 
     /// In-place batched entry point (ISSUE 4): like
@@ -203,5 +233,21 @@ mod tests {
         assert_eq!(out[0].shape, vec![1, 2, 2]);
         // unknown names still error even with natives registered
         assert!(exe.run_prepared("other", &dynamic, &prepared).is_err());
+    }
+
+    #[test]
+    fn registered_classifier_executes_offline() {
+        let mut exe = Executor::new().unwrap();
+        exe.register_classifier("resnet18", NativeClassify::new(vec![1, 2, 2], 3, 2));
+        assert!(exe.has("resnet18"));
+        assert_eq!(exe.loaded_names(), vec!["resnet18"]);
+        let prepared = exe
+            .prepare(&[TensorBuf::new(vec![2], vec![0.1, -0.1]).unwrap()])
+            .unwrap();
+        let x = TensorBuf::new(vec![2, 1, 2, 2], (0..8).map(|i| i as f32 * 0.1).collect())
+            .unwrap();
+        let out = exe.run_classifier("resnet18", 2, &x, &prepared).unwrap();
+        assert_eq!(out.shape, vec![2, 3]);
+        assert!(exe.run_classifier("other", 2, &x, &prepared).is_err());
     }
 }

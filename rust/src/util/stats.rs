@@ -60,7 +60,12 @@ impl Summary {
     }
 }
 
-/// Percentile over a *sorted* slice using nearest-rank interpolation.
+/// Percentile over a *sorted* slice using linear interpolation between
+/// the two closest ranks (the "exclusive" definition NumPy calls
+/// `linear`): the rank is `p/100 * (len-1)` and the result blends the
+/// floor/ceil neighbors by the fractional part. When the rank is
+/// integral (always the case for p=0 and p=100) the blend weight is
+/// exactly 0, so the returned value is the element itself, bit for bit.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p));
@@ -383,6 +388,33 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 100.0), 4.0);
         assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_extremes_are_exact_not_interpolated() {
+        // p=0 and p=100 land on integral ranks (frac = 0), so the result
+        // must be the boundary element *bit for bit* — values chosen so
+        // any stray lerp arithmetic would perturb the low bits.
+        let v = [0.1, 0.3, 0.7];
+        assert_eq!(percentile(&v, 0.0).to_bits(), 0.1f64.to_bits());
+        assert_eq!(percentile(&v, 100.0).to_bits(), 0.7f64.to_bits());
+        // singleton: every p returns the one element exactly
+        let one = [0.3];
+        for p in [0.0, 37.5, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&one, p).to_bits(), 0.3f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn percentile_two_element_slice() {
+        // len 2: rank = p/100. The endpoints hit lo == hi and must stay
+        // exact; interior percentiles blend linearly between the two.
+        let v = [0.1, 0.3];
+        assert_eq!(percentile(&v, 0.0).to_bits(), 0.1f64.to_bits());
+        assert_eq!(percentile(&v, 100.0).to_bits(), 0.3f64.to_bits());
+        assert!((percentile(&v, 50.0) - 0.2).abs() < 1e-12);
+        assert!((percentile(&v, 25.0) - 0.15).abs() < 1e-12);
+        assert!((percentile(&v, 75.0) - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -15,9 +15,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::config::{ModelChoice, ServeBackend, ServeConfig};
 use sf_mmcn::coordinator::{
-    workload, AdmissionError, DenoiseRequest, DenoiseResult, DiffusionServer, FaultSpec,
+    workload, AdmissionError, ClassifyRequest, DenoiseRequest, DenoiseResult, DiffusionServer,
+    FaultSpec,
 };
 use sf_mmcn::runtime::{ArtifactStore, Executor};
 use sf_mmcn::sim::energy::CAL_40NM;
@@ -380,6 +381,136 @@ fn native_outputs_bounded() {
             max < 20.0,
             "request {} diverged (max |px| = {max})",
             r.id
+        );
+    }
+}
+
+// ---------------------------------------------- multi-mode (ISSUE 7)
+
+/// Native config carrying a balanced three-model mix.
+fn mixed_cfg(steps: usize, workers: usize, max_batch: usize, batched: bool) -> ServeConfig {
+    let mut cfg = native_cfg(steps, workers, max_batch, batched);
+    cfg.model_mix = "unet:1,resnet18:1,vgg16:1".into();
+    cfg
+}
+
+#[test]
+fn mixed_workload_batched_bit_identical_to_per_request() {
+    // ISSUE 7 acceptance: a mixed U-net + ResNet-18 + VGG-16 workload
+    // through the batched path must be bit-identical to the same
+    // requests through the per-request path.
+    let cfg_b = mixed_cfg(4, 2, 4, true);
+    let reqs_b = workload(&cfg_b, cfg_b.seed, 0..9);
+    let (r_bat, m) = native_server(cfg_b).serve(reqs_b).unwrap();
+    let r_bat = by_id(r_bat);
+    let cfg_s = mixed_cfg(4, 1, 1, false);
+    let reqs_s = workload(&cfg_s, cfg_s.seed, 0..9);
+    let (r_seq, _) = native_server(cfg_s).serve(reqs_s).unwrap();
+    let r_seq = by_id(r_seq);
+    assert_eq!(r_bat.len(), 9);
+    for (a, b) in r_bat.iter().zip(&r_seq) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.model, b.model);
+        assert_eq!(
+            a.image.data, b.image.data,
+            "request {} ({}) diverged between batched and per-request paths",
+            a.id,
+            a.model.name()
+        );
+    }
+    // per-mode result shapes: U-net images vs classification logits
+    for r in &r_bat {
+        match r.model {
+            ModelChoice::Unet => {
+                assert_eq!(r.steps, 4);
+                assert_eq!(r.image.shape.len(), 3);
+            }
+            _ => {
+                assert_eq!(r.steps, 1, "classification is one logical step");
+                assert_eq!(r.image.shape, vec![10], "logits over 10 classes");
+            }
+        }
+    }
+    // the batcher invariant and the per-model accounting
+    assert_eq!(m.cross_model_batches, 0, "a batch never mixes models");
+    let pm = &m.per_model;
+    assert_eq!(pm[ModelChoice::Unet.index()].requests_done, 3);
+    assert_eq!(pm[ModelChoice::Unet.index()].steps_done, 12);
+    assert_eq!(pm[ModelChoice::Resnet18.index()].requests_done, 3);
+    assert_eq!(pm[ModelChoice::Resnet18.index()].steps_done, 3);
+    assert_eq!(pm[ModelChoice::Vgg16.index()].requests_done, 3);
+    assert_eq!(pm[ModelChoice::Vgg16.index()].steps_done, 3);
+    for row in pm {
+        assert_eq!(row.e2e_latency.count(), 3, "{}", row.model.name());
+        assert_eq!(row.requests_failed, 0);
+    }
+    assert_eq!(m.requests_done, 9);
+    assert_eq!(m.steps_done, 12 + 3 + 3);
+    assert!(m.is_multi_mode());
+    assert!(m.render().contains("per-model:"), "{}", m.render());
+}
+
+#[test]
+fn mixed_classification_deterministic_per_seed() {
+    let s = native_server(mixed_cfg(2, 1, 2, true));
+    let req = |seed| vec![ClassifyRequest::new(0, seed, ModelChoice::Resnet18)];
+    let (r1, _) = s.serve(req(42)).unwrap();
+    let (r2, _) = s.serve(req(42)).unwrap();
+    let (r3, _) = s.serve(req(43)).unwrap();
+    assert_eq!(r1[0].image.data, r2[0].image.data, "same seed, same logits");
+    assert_ne!(r1[0].image.data, r3[0].image.data, "different seed differs");
+    assert!(
+        r1[0].image.data.iter().all(|v| v.is_finite()),
+        "logits stay finite"
+    );
+}
+
+#[test]
+fn mixed_cosim_reports_per_mode_counts() {
+    // Per-mode co-simulation: each mode's accelerator counts land on its
+    // own row, the rows partition the aggregate, and each row prices to
+    // a positive area-efficiency FoM (GOPs/mm²). The per-request path
+    // keeps the fast analytic model, so this stays cheap in debug.
+    let mut cfg = mixed_cfg(2, 1, 1, false);
+    cfg.cosim = true;
+    let reqs = workload(&cfg, cfg.seed, 0..6);
+    let (_, m) = native_server(cfg).serve(reqs).unwrap();
+    let totals = m.sim_counts.expect("cosim enabled");
+    assert!(totals.cycles > 0);
+    let mut cycle_sum = 0u64;
+    for row in &m.per_model {
+        let c = row.sim_counts.expect("every mode saw traffic");
+        assert!(c.cycles > 0, "{}", row.model.name());
+        cycle_sum += c.cycles;
+        let rep = row.sim_report(&CAL_40NM, 8).unwrap();
+        assert!(
+            rep.gops_per_mm2 > 0.0,
+            "{} prices a positive FoM",
+            row.model.name()
+        );
+    }
+    assert_eq!(cycle_sum, totals.cycles, "per-mode counts partition the total");
+}
+
+#[test]
+fn classify_without_provisioning_errors_with_guidance() {
+    // A classification request on a server whose model_mix never named
+    // the model must resolve its ticket with an error that points at the
+    // provisioning knob — on the batched and per-request paths alike.
+    for batched in [true, false] {
+        let handle = native_server(native_cfg(3, 1, 2, batched)).start();
+        let t = handle
+            .submit(ClassifyRequest::new(0, 1, ModelChoice::Vgg16))
+            .unwrap();
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("not provisioned"), "batched={batched}: {err}");
+        assert!(err.contains("model_mix"), "batched={batched}: {err}");
+        let m = handle.shutdown().unwrap();
+        assert_eq!(m.requests_failed, 1);
+        assert_eq!(
+            m.per_model[ModelChoice::Vgg16.index()].requests_failed,
+            1,
+            "the failure lands on the model's own row"
         );
     }
 }
