@@ -52,6 +52,21 @@
 //! under failover at 10x the no-fault fleet p99. Percentiles land in
 //! `BENCH_serve_failover.json`.
 //!
+//! Finally the **scale-sweep capacity map** of ISSUE 8: a grid of
+//! (shard count × traffic profile) cells, each an open-loop session or
+//! fleet driven by a seeded `TrafficProfile` arrival schedule (uniform /
+//! Poisson / OU / burst / ramp / sine), writing per-cell p50/p95/p99,
+//! shed rate and failover counts to `BENCH_scale.json`. The default run
+//! covers a quick slice (shards {1,2} × {uniform, ou, burst} at nominal
+//! load plus one shedding overload cell); the `workflow_dispatch` CI
+//! matrix job passes `--scale-only --scale-profiles P --scale-shards
+//! 1,2,4` for the full map. Always-on gates: nominal cells shed
+//! nothing and deliver everything, the overload cell sheds, and a
+//! recorded trace re-parses request-for-request and replays to
+//! bit-identical results. Flags: `--scale-only` (skip everything else,
+//! calibrate + sweep), `--scale-profiles LIST` (shorthand names or full
+//! specs like `ou:80:2:20`), `--scale-shards LIST`, `--scale-requests N`.
+//!
 //! Run: `cargo bench --bench serve` (full) or `-- --quick` (CI profile).
 //! Results go to `BENCH_serve.json`. Every run (quick included) asserts
 //! the steady-state zero-allocation contract: the pooled `batched_b4`
@@ -68,7 +83,10 @@
 use std::time::{Duration, Instant};
 
 use sf_mmcn::config::{ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, ServeMetrics, ShardFleet};
+use sf_mmcn::coordinator::{
+    read_trace, recorded_workload, workload, write_trace, AdmissionError, DenoiseResult,
+    DiffusionServer, ServeMetrics, ShardFleet, TrafficProfile,
+};
 use sf_mmcn::runtime::ArtifactStore;
 use sf_mmcn::sim::energy::CAL_40NM;
 use sf_mmcn::util::bench::{check_against_baseline, BaselineRow, BenchBaseline};
@@ -713,6 +731,383 @@ fn write_failover_json(mode: &str, rows: &[FailoverRow]) {
     }
 }
 
+// ------------------------------- scale-sweep capacity map (ISSUE 8)
+
+/// One (shard count × traffic profile × queue depth) cell of the
+/// capacity map: offered/admitted/shed accounting plus the client-side
+/// e2e latency percentiles at that operating point.
+struct ScaleCell {
+    name: String,
+    shards: usize,
+    profile: String,
+    queue_depth: usize,
+    target_mean_rps: f64,
+    offered: usize,
+    admitted: u64,
+    shed: u64,
+    shed_rate: f64,
+    delivered: usize,
+    failed: usize,
+    failovers: u64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    wall_s: f64,
+    req_per_s: f64,
+}
+
+/// Map a `--scale-profiles` entry onto a concrete profile at `rate`
+/// mean req/s. Shorthand names parameterize off the calibrated rate
+/// (so one matrix job definition works at any measured capacity); an
+/// entry containing `:` is parsed as a full spec verbatim.
+fn profile_for(key: &str, rate: f64) -> TrafficProfile {
+    match key {
+        "uniform" => TrafficProfile::Uniform { rate },
+        "poisson" => TrafficProfile::Poisson { rate },
+        "ou" => TrafficProfile::Ou {
+            mean: rate,
+            theta: 2.0,
+            sigma: rate * 0.25,
+        },
+        // duty-cycle-weighted mean = 0.75r + 2.25r * 0.1 = 0.975r ≈ r
+        "burst" => TrafficProfile::Burst {
+            base: rate * 0.75,
+            peak: rate * 3.0,
+            period_ms: 1000.0,
+            burst_ms: 100.0,
+        },
+        "ramp" => TrafficProfile::Ramp {
+            from: rate * 0.5,
+            to: rate,
+            ramp_ms: 2000.0,
+        },
+        "sine" => TrafficProfile::Sine {
+            base: rate,
+            amp: rate * 0.5,
+            period_ms: 1000.0,
+        },
+        spec => TrafficProfile::parse(spec)
+            .expect("--scale-profiles entries are shorthand names or full traffic specs"),
+    }
+}
+
+/// One open-loop cell: `n` requests arrive on the profile's seeded
+/// schedule via `try_submit` (overload shed, never parked), then the
+/// session/fleet drains gracefully. Single-shard cells run the pooled
+/// pipelined session; multi-shard cells run the fleet front door with
+/// per-step dispatches (same settings as the failover scenarios).
+fn run_scale_cell(
+    name: &str,
+    steps: usize,
+    n: usize,
+    shards: usize,
+    profile: &TrafficProfile,
+    queue_depth: usize,
+) -> ScaleCell {
+    let mut cfg = base_cfg(steps, n);
+    cfg.batched = true;
+    cfg.max_batch = 4;
+    cfg.queue_depth = queue_depth;
+    cfg.shards = shards;
+    if shards > 1 {
+        // per-step dispatches keep the heartbeat gap to one native step
+        cfg.pipeline = false;
+        cfg.chunk = 1;
+    }
+    let store = ArtifactStore::default_store();
+    let reqs = workload(&cfg, cfg.seed, 0..n);
+    let arrivals = profile.schedule(cfg.seed, n);
+    let mut shed = 0u64;
+    let (mut delivered, mut failed) = (0usize, 0usize);
+    let (admitted, failovers, p50_ms, p95_ms, p99_ms, wall_s) = if shards > 1 {
+        let fleet = ShardFleet::start(cfg.clone(), &store).expect("fleet start");
+        let t0 = Instant::now();
+        let mut tickets = Vec::with_capacity(n);
+        for (req, &due_ns) in reqs.into_iter().zip(&arrivals) {
+            if let Some(sleep) = Duration::from_nanos(due_ns).checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            match fleet.try_submit(req) {
+                Ok(t) => tickets.push(t),
+                Err(AdmissionError::QueueFull) => shed += 1,
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => delivered += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let m = fleet.shutdown().expect("fleet shutdown");
+        (
+            m.stats.submitted,
+            m.stats.failovers,
+            m.e2e_latency.p50_us() / 1e3,
+            m.e2e_latency.p95_us() / 1e3,
+            m.e2e_latency.p99_us() / 1e3,
+            m.wall.as_secs_f64(),
+        )
+    } else {
+        let server = DiffusionServer::new(cfg.clone(), &store).expect("native server");
+        let handle = server.start();
+        let t0 = Instant::now();
+        let mut tickets = Vec::with_capacity(n);
+        for (req, &due_ns) in reqs.into_iter().zip(&arrivals) {
+            if let Some(sleep) = Duration::from_nanos(due_ns).checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            match handle.try_submit(req) {
+                Ok(t) => tickets.push(t),
+                Err(AdmissionError::QueueFull) => shed += 1,
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => delivered += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let m = handle.shutdown().expect("graceful drain");
+        (
+            m.admission.admitted,
+            0,
+            m.e2e_latency.p50_us() / 1e3,
+            m.e2e_latency.p95_us() / 1e3,
+            m.e2e_latency.p99_us() / 1e3,
+            m.wall.as_secs_f64(),
+        )
+    };
+    let cell = ScaleCell {
+        name: name.to_string(),
+        shards,
+        profile: profile.render(),
+        queue_depth,
+        target_mean_rps: profile.mean_rate(),
+        offered: n,
+        admitted,
+        shed,
+        shed_rate: shed as f64 / n.max(1) as f64,
+        delivered,
+        failed,
+        failovers,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        wall_s,
+        req_per_s: delivered as f64 / wall_s.max(1e-9),
+    };
+    println!(
+        "bench serve::scale_{:<22} `{}`  target {:>7.1} req/s  offered {:>3}  \
+         delivered {:>3}  shed {:>3}  p50 {:.2} ms  p95 {:.2}  p99 {:.2}  wall {:.3}s",
+        cell.name,
+        cell.profile,
+        cell.target_mean_rps,
+        cell.offered,
+        cell.delivered,
+        cell.shed,
+        cell.p50_ms,
+        cell.p95_ms,
+        cell.p99_ms,
+        cell.wall_s,
+    );
+    cell
+}
+
+/// Run the (shards × profile) grid at nominal load (0.4× the calibrated
+/// single-session capacity per shard, queue sized to the workload) plus
+/// one shedding overload cell (4× capacity into a small bounded queue).
+fn run_scale_sweep(
+    quick: bool,
+    steps: usize,
+    capacity: f64,
+    profiles: &[String],
+    shards_list: &[usize],
+    n: usize,
+) -> Vec<ScaleCell> {
+    println!("\n---- scale-sweep capacity map (shards x traffic profile) ----");
+    let mut cells = Vec::new();
+    for &shards in shards_list {
+        let rate = 0.4 * capacity * shards as f64;
+        for key in profiles {
+            let profile = profile_for(key, rate);
+            let name = format!("s{shards}_{key}_nominal");
+            cells.push(run_scale_cell(&name, steps, n, shards, &profile, n));
+        }
+    }
+    // overload: same operating point as open_loop_overload_10x — 4x the
+    // calibrated capacity into a 2-batches-per-lane bounded queue
+    let n_over = if quick { 80 } else { 120 };
+    let overload = profile_for("uniform", 4.0 * capacity);
+    cells.push(run_scale_cell(
+        "s1_uniform_overload",
+        steps,
+        n_over,
+        1,
+        &overload,
+        2 * WORKERS * 4,
+    ));
+    cells
+}
+
+/// `BENCH_scale.json`: the per-cell capacity map CI uploads (written
+/// before any gate can fire).
+fn write_scale_json(mode: &str, capacity_rps: f64, cells: &[ScaleCell]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_scale\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!(
+        "  \"calibrated_capacity_rps\": {},\n",
+        json_f64(capacity_rps)
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"name\": \"{}\", ", c.name));
+        s.push_str(&format!("\"shards\": {}, ", c.shards));
+        s.push_str(&format!("\"profile\": \"{}\", ", c.profile));
+        s.push_str(&format!("\"queue_depth\": {}, ", c.queue_depth));
+        s.push_str(&format!(
+            "\"target_mean_rps\": {}, ",
+            json_f64(c.target_mean_rps)
+        ));
+        s.push_str(&format!("\"offered\": {}, ", c.offered));
+        s.push_str(&format!("\"admitted\": {}, ", c.admitted));
+        s.push_str(&format!("\"shed\": {}, ", c.shed));
+        s.push_str(&format!("\"shed_rate\": {}, ", json_f64(c.shed_rate)));
+        s.push_str(&format!("\"delivered\": {}, ", c.delivered));
+        s.push_str(&format!("\"failed\": {}, ", c.failed));
+        s.push_str(&format!("\"failovers\": {}, ", c.failovers));
+        s.push_str(&format!("\"p50_ms\": {}, ", json_f64(c.p50_ms)));
+        s.push_str(&format!("\"p95_ms\": {}, ", json_f64(c.p95_ms)));
+        s.push_str(&format!("\"p99_ms\": {}, ", json_f64(c.p99_ms)));
+        s.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
+        s.push_str(&format!("\"req_per_s\": {}", json_f64(c.req_per_s)));
+        s.push('}');
+        if i + 1 < cells.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_scale.json", &s) {
+        Ok(()) => println!("wrote BENCH_scale.json ({} cells)", cells.len()),
+        Err(e) => println!("WARNING: could not write BENCH_scale.json: {e}"),
+    }
+}
+
+/// Always-on scale gates (quick included): nominal cells — queue sized
+/// to the workload, load below capacity — must shed nothing and deliver
+/// everything; the overload cell must actually shed (otherwise it
+/// measured nothing). Returns true when all cells pass.
+fn check_scale_gates(cells: &[ScaleCell]) -> bool {
+    let mut ok = true;
+    for c in cells {
+        let clean = c.shed == 0 && c.failed == 0 && c.delivered == c.offered;
+        if c.name.ends_with("_nominal") && !clean {
+            println!(
+                "SCALE GATE FAILED: {} delivered {}/{} with {} shed / {} failed — \
+                 nominal cells must admit and deliver the whole workload",
+                c.name, c.delivered, c.offered, c.shed, c.failed
+            );
+            ok = false;
+        }
+        if c.name.ends_with("_overload") && c.shed == 0 {
+            println!(
+                "SCALE GATE FAILED: {} shed nothing at {:.1} req/s against queue \
+                 depth {} — overload must be shed at admission, not absorbed",
+                c.name, c.target_mean_rps, c.queue_depth
+            );
+            ok = false;
+        }
+    }
+    if ok {
+        println!("scale gates OK: {} cells", cells.len());
+    }
+    ok
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a over `(id, image bits)` of every result, id-ordered — the
+/// bit-identity fingerprint the trace gate compares.
+fn results_digest(results: &[DenoiseResult]) -> u64 {
+    let mut ordered: Vec<&DenoiseResult> = results.iter().collect();
+    ordered.sort_by_key(|r| r.id);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for r in ordered {
+        h = fnv1a(h, &r.id.to_le_bytes());
+        for &v in &r.image.data {
+            h = fnv1a(h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Always-on trace gate (ISSUE 8): record a mixed-model OU workload to
+/// a JSON-lines trace, read it back, and serve both the recorded and
+/// the reparsed request sequences — the trace must round-trip
+/// request-for-request, and because request execution is a pure
+/// function of `(model, seed, steps)` the replayed results must be
+/// bit-identical. Returns true when both hold.
+fn check_trace_roundtrip(steps: usize, quick: bool) -> bool {
+    let n = if quick { 8 } else { 16 };
+    let mut cfg = base_cfg(steps, n);
+    cfg.batched = true;
+    cfg.max_batch = 4;
+    cfg.model_mix = "unet:2,resnet18:1,vgg16:1".into();
+    let profile = TrafficProfile::Ou {
+        mean: 200.0,
+        theta: 2.0,
+        sigma: 50.0,
+    };
+    let records = recorded_workload(&cfg, &profile, cfg.seed, n);
+    let path = std::env::temp_dir().join("sf_mmcn_bench_scale_trace.jsonl");
+    write_trace(&path, &records).expect("write trace");
+    let back = read_trace(&path).expect("read trace");
+    if back != records {
+        println!(
+            "TRACE GATE FAILED: reparsed trace differs from the recorded one \
+             ({} vs {} records) — the JSON-lines format must round-trip exactly",
+            back.len(),
+            records.len()
+        );
+        return false;
+    }
+    let store = ArtifactStore::default_store();
+    let recorded: Vec<_> = records.iter().map(|r| r.request.clone()).collect();
+    let replayed: Vec<_> = back.into_iter().map(|r| r.request).collect();
+    let (res_a, _) = DiffusionServer::new(cfg.clone(), &store)
+        .expect("native server")
+        .serve(recorded)
+        .expect("serve recorded workload");
+    let (res_b, _) = DiffusionServer::new(cfg.clone(), &store)
+        .expect("native server")
+        .serve(replayed)
+        .expect("serve replayed workload");
+    let (da, db) = (results_digest(&res_a), results_digest(&res_b));
+    if da != db {
+        println!(
+            "TRACE GATE FAILED: replayed results digest {db:#018x} != recorded \
+             {da:#018x} — replay must be bit-identical"
+        );
+        return false;
+    }
+    println!(
+        "trace round-trip OK: {} records re-parse identically and replay to digest {da:#018x}",
+        records.len()
+    );
+    true
+}
+
 /// CI regression gate: map this run's rows onto the shared comparator
 /// (`util::bench::check_against_baseline`; >15% drop exits 1).
 fn check_against(rows: &[Row], baseline_path: &str) {
@@ -744,6 +1139,73 @@ fn main() {
     // that the pooled lane runs several steady-state batches per worker
     // (the pool smoke check needs warmup to be a minority of the session).
     let (steps, requests, iters) = if quick { (4, 48, 2) } else { (16, 48, 3) };
+
+    // Scale-sweep controls (ISSUE 8). The defaults are the quick slice
+    // every run covers; the workflow_dispatch matrix job passes
+    // explicit lists for the full capacity map.
+    let scale_only = args.iter().any(|a| a == "--scale-only");
+    let arg_after = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let scale_profiles: Vec<String> = arg_after("--scale-profiles")
+        .map(|s| {
+            s.split(',')
+                .map(|t| t.trim().to_string())
+                .filter(|t| !t.is_empty())
+                .collect()
+        })
+        .unwrap_or_else(|| vec!["uniform".into(), "ou".into(), "burst".into()]);
+    let scale_shards: Vec<usize> = arg_after("--scale-shards")
+        .map(|s| {
+            s.split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .expect("--scale-shards takes a comma list of shard counts")
+                })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1, 2]);
+    let default_scale_requests = if quick { 24 } else { 40 };
+    let scale_requests: usize = match arg_after("--scale-requests") {
+        Some(s) => s.trim().parse().expect("--scale-requests takes an integer"),
+        None => default_scale_requests,
+    };
+
+    if scale_only {
+        println!(
+            "==================== SERVE BENCH (scale-only{}) ====================\n\
+             native surrogate backend, {WORKERS} workers, {scale_requests} requests x {steps} \
+             steps per cell\n",
+            if quick { ", quick" } else { "" }
+        );
+        // one calibration run of the pooled batched_b4 session fixes the
+        // capacity every cell's target rate is expressed against
+        let mut b4 = base_cfg(steps, requests);
+        b4.batched = true;
+        b4.max_batch = 4;
+        let capacity = measure("batched_b4_calibration", &b4, 1).req_per_s.max(1e-6);
+        let cells = run_scale_sweep(
+            quick,
+            steps,
+            capacity,
+            &scale_profiles,
+            &scale_shards,
+            scale_requests,
+        );
+        write_scale_json(if quick { "quick" } else { "full" }, capacity, &cells);
+        let mut failed = !check_scale_gates(&cells);
+        failed |= !check_trace_roundtrip(steps, quick);
+        if failed {
+            std::process::exit(1);
+        }
+        println!("\nserve bench OK (scale-only)");
+        return;
+    }
+
     println!(
         "==================== SERVE BENCH ({}) ====================\n\
          native surrogate backend, {WORKERS} workers, {requests} requests x {steps} steps\n",
@@ -963,6 +1425,21 @@ fn main() {
             failed = true;
         }
     }
+
+    // ---- scale-sweep capacity map + trace gates (ISSUE 8): the quick
+    // slice runs in every mode; the workflow_dispatch matrix job runs
+    // the full map via --scale-only ----
+    let cells = run_scale_sweep(
+        quick,
+        steps,
+        capacity,
+        &scale_profiles,
+        &scale_shards,
+        scale_requests,
+    );
+    write_scale_json(if quick { "quick" } else { "full" }, capacity, &cells);
+    failed |= !check_scale_gates(&cells);
+    failed |= !check_trace_roundtrip(steps, quick);
 
     if strict {
         // Both named acceptance gates measure pooled batched_b4 against

@@ -12,14 +12,20 @@ use anyhow::{bail, Context, Result};
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[a, b, c]` array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, `None` for other variants.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -27,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, `None` for other variants.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -34,6 +41,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload as `f64` (integers widen), `None` otherwise.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -42,6 +50,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, `None` for other variants.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -49,6 +58,7 @@ impl Value {
         }
     }
 
+    /// The array payload, `None` for other variants.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),

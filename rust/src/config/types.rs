@@ -12,8 +12,11 @@ use super::toml_lite::{parse_toml, DocExt};
 /// Which network to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ModelChoice {
+    /// VGG-16 classifier (the paper's Mode 1 reference CNN).
     Vgg16,
+    /// ResNet-18 classifier (the paper's residual-mode CNN).
     Resnet18,
+    /// The diffusion U-net (denoise requests always run here).
     Unet,
 }
 
@@ -22,6 +25,8 @@ impl ModelChoice {
     pub const ALL: [ModelChoice; 3] =
         [ModelChoice::Unet, ModelChoice::Resnet18, ModelChoice::Vgg16];
 
+    /// Parse a model name; hyphenated aliases (`vgg-16`, `u-net`, …)
+    /// are accepted.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "vgg16" | "vgg" | "vgg-16" => ModelChoice::Vgg16,
@@ -31,6 +36,8 @@ impl ModelChoice {
         })
     }
 
+    /// Canonical lowercase name (what configs, metrics rows, and trace
+    /// files spell).
     pub fn name(&self) -> &'static str {
         match self {
             ModelChoice::Vgg16 => "vgg16",
@@ -121,11 +128,15 @@ impl ModelMix {
 /// `sf-mmcn run` configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Network to simulate.
     pub model: ModelChoice,
+    /// Input image side length (pixels).
     pub img: usize,
+    /// Simulated accelerator geometry and feature toggles.
     pub accel: AcceleratorConfig,
     /// Post-ReLU activation sparsity assumed by the analytic model.
     pub sparsity: f64,
+    /// Seed for synthetic inputs.
     pub seed: u64,
 }
 
@@ -154,6 +165,7 @@ pub enum ServeBackend {
 }
 
 impl ServeBackend {
+    /// Parse a backend name (`pjrt`, `native`; `stub` is an alias).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "pjrt" => ServeBackend::Pjrt,
@@ -162,6 +174,7 @@ impl ServeBackend {
         })
     }
 
+    /// Canonical backend name.
     pub fn name(&self) -> &'static str {
         match self {
             ServeBackend::Pjrt => "pjrt",
@@ -183,6 +196,9 @@ pub struct ServeConfig {
     /// they stack into one `[B, ...]` device dispatch; without it they
     /// amortize queueing only (each image still runs solo — §III.D).
     pub max_batch: usize,
+    /// Workload seed: every request's content derives from
+    /// `(seed, index)`, which is what makes replay and failover
+    /// re-execution bit-identical.
     pub seed: u64,
     /// Artifact name for the denoise step.
     pub artifact: String,
@@ -246,6 +262,11 @@ pub struct ServeConfig {
     /// `"unet:2,resnet18:1,vgg16:1"` — see [`ModelMix::parse`]. Empty =
     /// the historical all-U-net workload.
     pub model_mix: String,
+    /// Arrival-rate profile for open-loop serving (ISSUE 8), e.g.
+    /// `"ou:60:2:15"` or `"burst:40:200:1000:100"` — see
+    /// `coordinator::traffic::TrafficProfile` for the grammar. Empty =
+    /// no profile (closed-loop, or the legacy fixed `--rate` schedule).
+    pub traffic: String,
 }
 
 impl Default for ServeConfig {
@@ -272,6 +293,7 @@ impl Default for ServeConfig {
             heartbeat_misses: 8,
             fault_spec: String::new(),
             model_mix: String::new(),
+            traffic: String::new(),
         }
     }
 }
@@ -279,9 +301,13 @@ impl Default for ServeConfig {
 /// `sf-mmcn sweep` (design space) configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
+    /// Server-flow unit counts to sweep over.
     pub unit_counts: Vec<usize>,
+    /// Network to price at each design point.
     pub model: ModelChoice,
+    /// Input image side length (pixels).
     pub img: usize,
+    /// Post-ReLU activation sparsity assumed by the analytic model.
     pub sparsity: f64,
 }
 
@@ -303,6 +329,7 @@ impl RunConfig {
         Self::from_toml(&text)
     }
 
+    /// Parse from TOML text; missing keys keep defaults.
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = parse_toml(text)?;
         let mut cfg = Self::default();
@@ -336,11 +363,14 @@ impl RunConfig {
 }
 
 impl ServeConfig {
+    /// Load from a TOML file; missing keys keep defaults.
     pub fn from_file(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::from_toml(&text)
     }
 
+    /// Parse from TOML text; missing keys keep defaults, and the result
+    /// is [`ServeConfig::validate`]d.
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = parse_toml(text)?;
         let mut cfg = Self::default();
@@ -374,8 +404,18 @@ impl ServeConfig {
             doc.get_u64_or("serve", "heartbeat_misses", cfg.heartbeat_misses)?;
         cfg.fault_spec = doc.get_str_or("serve", "fault_spec", &cfg.fault_spec);
         cfg.model_mix = doc.get_str_or("serve", "model_mix", &cfg.model_mix);
+        cfg.traffic = doc.get_str_or("serve", "traffic", &cfg.traffic);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The parsed traffic profile, `None` when `serve.traffic` is empty
+    /// (validated by [`ServeConfig::validate`]).
+    pub fn parsed_traffic(&self) -> Result<Option<crate::coordinator::traffic::TrafficProfile>> {
+        if self.traffic.trim().is_empty() {
+            return Ok(None);
+        }
+        crate::coordinator::traffic::TrafficProfile::parse(&self.traffic).map(Some)
     }
 
     /// The parsed traffic mix (validated by [`ServeConfig::validate`]).
@@ -415,11 +455,16 @@ impl ServeConfig {
         }
         ModelMix::parse(&self.model_mix)
             .map_err(|e| anyhow::anyhow!("serve.model_mix: {e}"))?;
+        if !self.traffic.trim().is_empty() {
+            crate::coordinator::traffic::TrafficProfile::parse(&self.traffic)
+                .map_err(|e| anyhow::anyhow!("serve.traffic: {e}"))?;
+        }
         Ok(())
     }
 }
 
 impl SweepConfig {
+    /// Parse from TOML text; missing keys keep defaults.
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = parse_toml(text)?;
         let mut cfg = Self::default();
@@ -641,5 +686,29 @@ data_reuse = false
             .unwrap_err()
             .to_string();
         assert!(err.contains("model_mix"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_traffic_key() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert!(cfg.traffic.is_empty(), "no traffic profile by default");
+        assert!(cfg.parsed_traffic().unwrap().is_none());
+
+        let cfg =
+            ServeConfig::from_toml("[serve]\ntraffic = \"ou:60:2:15\"\n").unwrap();
+        assert_eq!(cfg.traffic, "ou:60:2:15");
+        let profile = cfg.parsed_traffic().unwrap().expect("profile set");
+        assert_eq!(profile.render(), "ou:60:2:15");
+
+        // errors name both the config key and the bad grammar key
+        let err = ServeConfig::from_toml("[serve]\ntraffic = \"ou:60:x:15\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serve.traffic"), "{err}");
+        assert!(err.contains("bad theta"), "{err}");
+        let err = ServeConfig::from_toml("[serve]\ntraffic = \"warp:9\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serve.traffic") && err.contains("unknown profile"), "{err}");
     }
 }

@@ -12,8 +12,11 @@
 /// Precomputed schedule for `t_max` steps.
 #[derive(Debug, Clone)]
 pub struct DdpmSchedule {
+    /// Per-step noise variances `beta_t`.
     pub betas: Vec<f64>,
+    /// `alpha_t = 1 - beta_t`.
     pub alphas: Vec<f64>,
+    /// Cumulative products `alpha_bar_t = prod(alpha_0..=alpha_t)`.
     pub alpha_bars: Vec<f64>,
 }
 
@@ -51,6 +54,7 @@ impl DdpmSchedule {
         Self::linear(t_max, 1e-4, 0.02)
     }
 
+    /// Number of steps in the schedule.
     pub fn t_max(&self) -> usize {
         self.betas.len()
     }

@@ -60,8 +60,11 @@ pub enum FaultKind {
 /// `at_request`-th request (0-based, counted across all its lanes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FaultEvent {
+    /// Target shard index.
     pub shard: usize,
+    /// 0-based executed-request ordinal on that shard at which to fire.
     pub at_request: u64,
+    /// What the fault does.
     pub kind: FaultKind,
 }
 
@@ -69,6 +72,7 @@ pub struct FaultEvent {
 /// canonical reproducible form) or [`FaultSpec::seeded_kill`].
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultSpec {
+    /// The scheduled events, in spec order.
     pub events: Vec<FaultEvent>,
 }
 
@@ -169,6 +173,7 @@ impl FaultSpec {
         }
     }
 
+    /// True for the no-fault spec (no scheduled events).
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -199,6 +204,7 @@ pub struct FaultAction {
 }
 
 impl FaultAction {
+    /// True when no fault event fired in the window.
     pub fn is_none(&self) -> bool {
         !self.kill && self.stall.is_none() && self.panic_msg.is_none() && self.delay.is_none()
     }

@@ -45,6 +45,7 @@ impl AdmissionStats {
 /// own row — the aggregate hides an 8× per-request cost spread.
 #[derive(Debug, Clone)]
 pub struct ModelMetrics {
+    /// The model this row covers.
     pub model: ModelChoice,
     /// Requests of this model that resolved with a result.
     pub requests_done: usize,
@@ -62,6 +63,7 @@ pub struct ModelMetrics {
 }
 
 impl ModelMetrics {
+    /// An empty row for `model`.
     pub fn new(model: ModelChoice) -> Self {
         Self {
             model,
@@ -114,7 +116,9 @@ pub struct ServeMetrics {
     /// Host-side batch preparation latency (noise + embeddings), one
     /// sample per prepared batch. Empty on the per-request path.
     pub host_prep: LatencyHist,
+    /// Requests that resolved with a result.
     pub requests_done: usize,
+    /// Denoise steps executed (one per classification request).
     pub steps_done: usize,
     /// Device dispatches issued (batched mode: one per timestep chunk;
     /// per-request mode: one per step, or per request when fused).
@@ -136,6 +140,7 @@ pub struct ServeMetrics {
     pub pool_bytes_leased: u64,
     /// Requests completed per worker — the batcher-fairness signal.
     pub per_worker_requests: Vec<usize>,
+    /// Session wall time (start → drain complete).
     pub wall: Duration,
     /// Co-simulated accelerator counts for all served work (if enabled).
     pub sim_counts: Option<EventCounts>,
@@ -164,6 +169,7 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// An all-zero metrics block (what a session starts from).
     pub fn new() -> Self {
         Self {
             request_latency: LatencyHist::new(),
@@ -197,6 +203,7 @@ impl ServeMetrics {
             .any(|r| r.model != ModelChoice::Unet && r.has_traffic())
     }
 
+    /// Completed-request throughput over the session wall time.
     pub fn requests_per_s(&self) -> f64 {
         if self.wall.as_secs_f64() == 0.0 {
             return 0.0;
@@ -204,6 +211,7 @@ impl ServeMetrics {
         self.requests_done as f64 / self.wall.as_secs_f64()
     }
 
+    /// Executed-step throughput over the session wall time.
     pub fn steps_per_s(&self) -> f64 {
         if self.wall.as_secs_f64() == 0.0 {
             return 0.0;
@@ -377,6 +385,7 @@ pub struct FleetStats {
 /// each shard's full [`ServeMetrics`] for per-shard drill-down.
 #[derive(Debug, Clone)]
 pub struct FleetMetrics {
+    /// Fleet-level counters (routing, health, failover).
     pub stats: FleetStats,
     /// One entry per shard, in shard order. A dead shard contributes its
     /// last observable snapshot.
@@ -390,6 +399,7 @@ pub struct FleetMetrics {
     /// included), steps are summed over the shards. One row per
     /// [`ModelChoice::ALL`] entry, indexable by [`ModelChoice::index`].
     pub per_model: Vec<ModelMetrics>,
+    /// Fleet wall time (start → shutdown complete).
     pub wall: Duration,
 }
 
@@ -400,6 +410,7 @@ impl FleetMetrics {
         self.per_shard.iter().map(|m| m.requests_done).sum()
     }
 
+    /// Delivered-request throughput over the fleet wall time.
     pub fn requests_per_s(&self) -> f64 {
         if self.wall.as_secs_f64() == 0.0 {
             return 0.0;

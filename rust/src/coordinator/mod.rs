@@ -31,6 +31,11 @@
 //! * [`faults`] — the seeded, schedulable fault-injection plane that
 //!   drives every recovery scenario reproducibly (kill-shard-at-request,
 //!   stall-lane, panic-in-step, delayed delivery).
+//! * [`traffic`] — arrival-process realism (ISSUE 8): seeded
+//!   Ornstein–Uhlenbeck / burst / ramp / sinusoid rate profiles behind
+//!   the `serve.traffic` grammar, plus the JSON-lines trace
+//!   record/replay format that makes any open-loop incident reproduce
+//!   bit-for-bit from a seed or a trace file.
 //! * [`metrics`] — latency histograms, fixed-memory streaming
 //!   percentiles, admission/batching/pipeline counters, fleet-level
 //!   failover counters, and simulated PPA aggregation.
@@ -45,6 +50,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod params;
 pub mod server;
+pub mod traffic;
 
 pub use ddpm::DdpmSchedule;
 pub use faults::{FaultAction, FaultEvent, FaultKind, FaultPlane, FaultSpec};
@@ -54,4 +60,8 @@ pub use params::UnetParams;
 pub use server::{
     workload, AdmissionError, ClassifyRequest, DenoiseRequest, DenoiseResult, DiffusionServer,
     InferenceRequest, ServerHandle, ShardPulse, Ticket, TicketPoll,
+};
+pub use traffic::{
+    parse_trace, read_trace, recorded_workload, render_trace, write_trace, TraceRecord,
+    TrafficProfile,
 };

@@ -16,7 +16,9 @@ use crate::util::Rng;
 /// The loaded parameter set.
 #[derive(Debug, Clone)]
 pub struct UnetParams {
+    /// Parameter names, in manifest order.
     pub names: Vec<String>,
+    /// Parameter tensors, aligned with `names`.
     pub tensors: Vec<TensorBuf>,
 }
 
@@ -137,6 +139,7 @@ impl UnetParams {
         Self { names, tensors }
     }
 
+    /// Number of parameter tensors.
     pub fn count(&self) -> usize {
         self.tensors.len()
     }

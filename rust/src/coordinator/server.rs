@@ -13,7 +13,7 @@
 //!   [`DenoiseResult`]. This is the software analogue of the paper's
 //!   Server Flow: a small fixed resource set (the lanes) continuously
 //!   fed by streaming work, instead of a pre-staged burst (§III).
-//! * **Bounded admission** ([`AdmissionQueue`]): at most
+//! * **Bounded admission** (`AdmissionQueue`): at most
 //!   `serve.queue_depth` requests wait at once, split across
 //!   `serve.priorities` FIFO lanes (priority 0 drains first). Overload
 //!   is rejected at the door — latency stays bounded and memory flat.
@@ -70,9 +70,12 @@ use crate::sim::energy::EventCounts;
 use crate::util::{Rng, Tensor};
 
 /// One de-noising request (generate an image from noise).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DenoiseRequest {
+    /// Caller-chosen request id, echoed in the result.
     pub id: u64,
+    /// Seeds the starting noise — what makes retry / failover / trace
+    /// replay re-execution bit-identical.
     pub seed: u64,
     /// Reverse steps (defaults to the server's schedule length).
     pub steps: usize,
@@ -104,8 +107,9 @@ impl DenoiseRequest {
 /// One classification request (ISSUE 7): run one seeded synthetic image
 /// through a provisioned classifier (ResNet-18 / VGG-16), yielding a
 /// `[classes]` logits vector in the result's `image`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClassifyRequest {
+    /// Caller-chosen request id, echoed in the result.
     pub id: u64,
     /// Seeds the deterministic input image — the classification analogue
     /// of the denoise request's starting noise, and what makes retry /
@@ -139,13 +143,16 @@ impl ClassifyRequest {
 /// admission queue, batcher, lanes, and fleet all speak this type.
 /// Single-model call sites stay source-compatible through the `From`
 /// impls — `submit(DenoiseRequest::new(..))` still compiles.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum InferenceRequest {
+    /// A U-net de-noising request.
     Denoise(DenoiseRequest),
+    /// A ResNet-18 / VGG-16 classification request.
     Classify(ClassifyRequest),
 }
 
 impl InferenceRequest {
+    /// The caller-chosen request id (either mode).
     pub fn id(&self) -> u64 {
         match self {
             InferenceRequest::Denoise(r) => r.id,
@@ -153,6 +160,7 @@ impl InferenceRequest {
         }
     }
 
+    /// The seed deriving this request's deterministic input.
     pub fn seed(&self) -> u64 {
         match self {
             InferenceRequest::Denoise(r) => r.seed,
@@ -176,6 +184,7 @@ impl InferenceRequest {
         }
     }
 
+    /// The admission priority lane (0 = highest).
     pub fn priority(&self) -> u8 {
         match self {
             InferenceRequest::Denoise(r) => r.priority,
@@ -183,6 +192,7 @@ impl InferenceRequest {
         }
     }
 
+    /// The relative completion budget, if any.
     pub fn deadline(&self) -> Option<Duration> {
         match self {
             InferenceRequest::Denoise(r) => r.deadline,
@@ -228,6 +238,7 @@ impl From<ClassifyRequest> for InferenceRequest {
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct DenoiseResult {
+    /// The request id this result answers.
     pub id: u64,
     /// Denoise: the generated `[c, h, w]` image. Classification: the
     /// `[classes]` logits vector.
@@ -284,6 +295,7 @@ pub struct ShardPulse {
 }
 
 impl ShardPulse {
+    /// A fresh pulse at sequence 0.
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,0 +1,787 @@
+//! Traffic realism (ISSUE 8): seeded arrival-process generators beyond
+//! constant-rate Poisson, plus a trace record/replay format so any
+//! incident reproduces bit-for-bit from a seed or a trace file.
+//!
+//! Production serving traffic is not a fixed-rate drip: it has diurnal
+//! cycles, flash crowds, and slow drifts. This module models those as a
+//! time-varying arrival *intensity* `rate(t)` (requests per second) and
+//! generates arrival offsets by the intensity time-change method:
+//! integrate `rate(t)` and emit an arrival each time the cumulative
+//! intensity crosses a threshold — unit-spaced thresholds for the
+//! deterministic profiles, Exp(1)-spaced thresholds for the stochastic
+//! ones (which makes them inhomogeneous Poisson processes).
+//!
+//! Profiles ([`TrafficProfile`]), spelled in a colon grammar mirroring
+//! `--fault-spec`:
+//!
+//! * `uniform:RATE` — fixed inter-arrival gap `1/RATE`, first arrival at
+//!   t = 0. Matches the historical `serve --open-loop --rate` schedule.
+//! * `poisson:RATE` — homogeneous Poisson: i.i.d. exponential gaps.
+//! * `ou:MEAN:THETA:SIGMA` — the rate itself follows a mean-reverting
+//!   Ornstein–Uhlenbeck process (Euler–Maruyama on a fixed
+//!   [`OU_GRID_S`] grid, clamped to the band reported by
+//!   [`TrafficProfile::ou_bounds`]); arrivals are Poisson at the
+//!   current rate. `THETA` is the reversion rate (1/s), `SIGMA` the
+//!   volatility (req/s per √s). This is the load analogue of the
+//!   OU spot-price models used for preemption studies.
+//! * `burst:BASE:PEAK:PERIOD_MS:BURST_MS` — deterministic square wave:
+//!   `PEAK` req/s for the first `BURST_MS` of every `PERIOD_MS`, `BASE`
+//!   otherwise. Flash-crowd shape.
+//! * `ramp:FROM:TO:RAMP_MS` — linear ramp from `FROM` to `TO` over
+//!   `RAMP_MS`, then steady at `TO`. Launch-day shape.
+//! * `sine:BASE:AMP:PERIOD_MS` — `BASE + AMP·sin(2πt/PERIOD)`, the
+//!   diurnal cycle compressed to a benchable period.
+//!
+//! Everything is deterministic given `(spec, seed)`: the same spec
+//! string and seed always yield the same arrival schedule, and
+//! [`TrafficProfile::rate_trace`] exposes the exact OU rate path the
+//! schedule integrated. Parsing and rendering are inverses
+//! (`parse(render(p)) == p`), so a spec survives a round trip through
+//! config files, CLI flags, and `BENCH_scale.json` cells.
+//!
+//! The trace format ([`TraceRecord`]) is one compact JSON object per
+//! line: `(arrival_ns, request)` via `util/json_lite`. Request seeds are
+//! serialized as decimal *strings* because the JSON parser reads numbers
+//! through `f64` (exact only to 2^53) and workload seeds span the full
+//! `u64` range; `arrival_ns` / `id` / `deadline_ns` stay plain numbers
+//! and are validated against the 2^53 exactness bound (2^53 ns ≈ 104
+//! days of arrival offset). Replaying a trace re-submits the identical
+//! request sequence, and because request execution is a pure function of
+//! `(model, seed, steps)`, the replayed results are bit-identical to the
+//! recorded run's.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelChoice, ServeConfig};
+use crate::coordinator::server::{workload, ClassifyRequest, DenoiseRequest, InferenceRequest};
+use crate::util::json_lite::Json;
+use crate::util::Rng;
+
+/// Spacing (seconds) of the Ornstein–Uhlenbeck rate grid: the OU rate
+/// path advances one Euler–Maruyama step per grid cell and is held
+/// constant within a cell, so per-cell intensity integration is exact.
+pub const OU_GRID_S: f64 = 0.01;
+
+/// Integration step (seconds) for the deterministic time-varying
+/// profiles (burst / ramp / sine): the rate is treated as constant over
+/// each step and arrival instants are linearly interpolated within it.
+const INTEGRATE_DT_S: f64 = 1e-3;
+
+/// Stream-splitting constant: the arrival-threshold RNG is seeded with
+/// `seed ^ ARRIVAL_STREAM` so it never shares draws with the rate-path
+/// RNG (seeded with `seed`), keeping [`TrafficProfile::rate_trace`]
+/// exactly the path [`TrafficProfile::schedule`] integrates.
+const ARRIVAL_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Largest integer exactly representable in an `f64` (2^53): the bound
+/// for numeric fields in the JSON trace format.
+const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+
+/// A seeded arrival-rate profile: how request arrival times are spread
+/// over wall-clock time. Parsed from the `serve.traffic` config key or
+/// the `--traffic` CLI flag; see the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrafficProfile {
+    /// `uniform:RATE` — fixed inter-arrival gap, first arrival at t = 0.
+    Uniform {
+        /// Arrival rate, requests per second.
+        rate: f64,
+    },
+    /// `poisson:RATE` — homogeneous Poisson (i.i.d. exponential gaps).
+    Poisson {
+        /// Mean arrival rate, requests per second.
+        rate: f64,
+    },
+    /// `ou:MEAN:THETA:SIGMA` — mean-reverting Ornstein–Uhlenbeck rate
+    /// modulation driving an inhomogeneous Poisson arrival process.
+    Ou {
+        /// Long-run mean rate, requests per second.
+        mean: f64,
+        /// Mean-reversion rate, 1/seconds (larger = snappier reversion).
+        theta: f64,
+        /// Volatility, requests per second per √second.
+        sigma: f64,
+    },
+    /// `burst:BASE:PEAK:PERIOD_MS:BURST_MS` — deterministic square-wave
+    /// flash crowds.
+    Burst {
+        /// Off-burst rate, requests per second.
+        base: f64,
+        /// In-burst rate, requests per second (≥ `base`).
+        peak: f64,
+        /// Full cycle length, milliseconds.
+        period_ms: f64,
+        /// Burst duration at the start of each cycle, milliseconds
+        /// (in `(0, period_ms]`).
+        burst_ms: f64,
+    },
+    /// `ramp:FROM:TO:RAMP_MS` — linear ramp, then steady at `TO`.
+    Ramp {
+        /// Rate at t = 0, requests per second.
+        from: f64,
+        /// Rate from `ramp_ms` onward, requests per second.
+        to: f64,
+        /// Ramp duration, milliseconds.
+        ramp_ms: f64,
+    },
+    /// `sine:BASE:AMP:PERIOD_MS` — sinusoidal (diurnal) modulation
+    /// `BASE + AMP·sin(2πt/PERIOD)`.
+    Sine {
+        /// Mean rate, requests per second.
+        base: f64,
+        /// Modulation amplitude, requests per second (in `[0, base]` so
+        /// the rate never goes negative).
+        amp: f64,
+        /// Cycle length, milliseconds.
+        period_ms: f64,
+    },
+}
+
+impl TrafficProfile {
+    /// Parse a traffic spec string (see the module docs for the
+    /// grammar). Errors name the offending key — `bad theta`, `unknown
+    /// profile`, … — and always quote the full spec.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let s = spec.trim();
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        let kind = parts[0];
+        let (arity, usage) = match kind {
+            "uniform" => (1, "uniform:RATE"),
+            "poisson" => (1, "poisson:RATE"),
+            "ou" => (3, "ou:MEAN:THETA:SIGMA"),
+            "burst" => (4, "burst:BASE:PEAK:PERIOD_MS:BURST_MS"),
+            "ramp" => (3, "ramp:FROM:TO:RAMP_MS"),
+            "sine" => (3, "sine:BASE:AMP:PERIOD_MS"),
+            other => bail!(
+                "traffic spec `{s}`: unknown profile `{other}` \
+                 (expected uniform | poisson | ou | burst | ramp | sine)"
+            ),
+        };
+        if parts.len() - 1 != arity {
+            bail!(
+                "traffic spec `{s}`: expected `{usage}`, got {} arg(s)",
+                parts.len() - 1
+            );
+        }
+        let field = |i: usize, key: &str| -> Result<f64> {
+            let raw = parts[i];
+            let v: f64 = raw.parse().map_err(|_| {
+                anyhow!("traffic spec `{s}`: bad {key} `{raw}` (expected a number)")
+            })?;
+            if !v.is_finite() {
+                bail!("traffic spec `{s}`: bad {key} `{raw}` (must be finite)");
+            }
+            Ok(v)
+        };
+        let check = |ok: bool, msg: &str| -> Result<()> {
+            if ok {
+                Ok(())
+            } else {
+                bail!("traffic spec `{s}`: {msg}")
+            }
+        };
+        let profile = match kind {
+            "uniform" => {
+                let rate = field(1, "rate")?;
+                check(rate > 0.0, "rate must be positive")?;
+                TrafficProfile::Uniform { rate }
+            }
+            "poisson" => {
+                let rate = field(1, "rate")?;
+                check(rate > 0.0, "rate must be positive")?;
+                TrafficProfile::Poisson { rate }
+            }
+            "ou" => {
+                let mean = field(1, "mean")?;
+                let theta = field(2, "theta")?;
+                let sigma = field(3, "sigma")?;
+                check(mean > 0.0, "mean must be positive")?;
+                check(theta > 0.0, "theta must be positive")?;
+                check(sigma >= 0.0, "sigma must be >= 0")?;
+                TrafficProfile::Ou { mean, theta, sigma }
+            }
+            "burst" => {
+                let base = field(1, "base")?;
+                let peak = field(2, "peak")?;
+                let period_ms = field(3, "period_ms")?;
+                let burst_ms = field(4, "burst_ms")?;
+                check(base > 0.0, "base must be positive")?;
+                check(peak >= base, "peak must be >= base")?;
+                check(period_ms > 0.0, "period_ms must be positive")?;
+                check(
+                    burst_ms > 0.0 && burst_ms <= period_ms,
+                    "burst_ms must be in (0, period_ms]",
+                )?;
+                TrafficProfile::Burst {
+                    base,
+                    peak,
+                    period_ms,
+                    burst_ms,
+                }
+            }
+            "ramp" => {
+                let from = field(1, "from")?;
+                let to = field(2, "to")?;
+                let ramp_ms = field(3, "ramp_ms")?;
+                check(from > 0.0, "from must be positive")?;
+                check(to > 0.0, "to must be positive")?;
+                check(ramp_ms > 0.0, "ramp_ms must be positive")?;
+                TrafficProfile::Ramp { from, to, ramp_ms }
+            }
+            "sine" => {
+                let base = field(1, "base")?;
+                let amp = field(2, "amp")?;
+                let period_ms = field(3, "period_ms")?;
+                check(base > 0.0, "base must be positive")?;
+                check(
+                    (0.0..=base).contains(&amp),
+                    "amp must be in [0, base] (the rate may not go negative)",
+                )?;
+                check(period_ms > 0.0, "period_ms must be positive")?;
+                TrafficProfile::Sine {
+                    base,
+                    amp,
+                    period_ms,
+                }
+            }
+            _ => unreachable!("kind was validated above"),
+        };
+        Ok(profile)
+    }
+
+    /// Render the canonical spec string: `parse(render(p)) == p` (f64
+    /// `Display` is shortest-round-trip, so values survive exactly).
+    pub fn render(&self) -> String {
+        match self {
+            TrafficProfile::Uniform { rate } => format!("uniform:{rate}"),
+            TrafficProfile::Poisson { rate } => format!("poisson:{rate}"),
+            TrafficProfile::Ou { mean, theta, sigma } => format!("ou:{mean}:{theta}:{sigma}"),
+            TrafficProfile::Burst {
+                base,
+                peak,
+                period_ms,
+                burst_ms,
+            } => format!("burst:{base}:{peak}:{period_ms}:{burst_ms}"),
+            TrafficProfile::Ramp { from, to, ramp_ms } => format!("ramp:{from}:{to}:{ramp_ms}"),
+            TrafficProfile::Sine {
+                base,
+                amp,
+                period_ms,
+            } => format!("sine:{base}:{amp}:{period_ms}"),
+        }
+    }
+
+    /// Long-run mean arrival rate (req/s): the duty-cycle-weighted rate
+    /// for `burst`, the steady-state `to` for `ramp`, the centerline for
+    /// `sine`/`ou`. Used to size bench cells against measured capacity.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            TrafficProfile::Uniform { rate } | TrafficProfile::Poisson { rate } => *rate,
+            TrafficProfile::Ou { mean, .. } => *mean,
+            TrafficProfile::Burst {
+                base,
+                peak,
+                period_ms,
+                burst_ms,
+            } => base + (peak - base) * burst_ms / period_ms,
+            TrafficProfile::Ramp { to, .. } => *to,
+            TrafficProfile::Sine { base, .. } => *base,
+        }
+    }
+
+    /// Peak instantaneous target rate (req/s): what the fleet must
+    /// absorb at the worst moment. For `ou` this is the upper clamp
+    /// bound from [`TrafficProfile::ou_bounds`].
+    pub fn peak_rate(&self) -> f64 {
+        match self {
+            TrafficProfile::Uniform { rate } | TrafficProfile::Poisson { rate } => *rate,
+            TrafficProfile::Ou { .. } => self.ou_bounds().expect("ou has bounds").1,
+            TrafficProfile::Burst { peak, .. } => *peak,
+            TrafficProfile::Ramp { from, to, .. } => from.max(*to),
+            TrafficProfile::Sine { base, amp, .. } => base + amp,
+        }
+    }
+
+    /// Instantaneous target rate (req/s) at `t` seconds for the
+    /// deterministic profiles. The stochastic profiles (`poisson`, `ou`)
+    /// return their long-run mean level — use
+    /// [`TrafficProfile::rate_trace`] for the seeded OU path.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            TrafficProfile::Uniform { rate } | TrafficProfile::Poisson { rate } => *rate,
+            TrafficProfile::Ou { mean, .. } => *mean,
+            TrafficProfile::Burst {
+                base,
+                peak,
+                period_ms,
+                burst_ms,
+            } => {
+                let phase = t.rem_euclid(period_ms / 1e3);
+                if phase < burst_ms / 1e3 {
+                    *peak
+                } else {
+                    *base
+                }
+            }
+            TrafficProfile::Ramp { from, to, ramp_ms } => {
+                let ramp_s = ramp_ms / 1e3;
+                if t >= ramp_s {
+                    *to
+                } else {
+                    from + (to - from) * (t / ramp_s)
+                }
+            }
+            TrafficProfile::Sine {
+                base,
+                amp,
+                period_ms,
+            } => base + amp * (2.0 * std::f64::consts::PI * t / (period_ms / 1e3)).sin(),
+        }
+    }
+
+    /// Clamp band for the OU rate path: `[0.05·mean, mean + 8·σ/√(2θ)]`
+    /// (8 stationary standard deviations above the mean, floored at 5%
+    /// of the mean so the rate can neither go negative nor collapse).
+    /// `None` for non-OU profiles.
+    pub fn ou_bounds(&self) -> Option<(f64, f64)> {
+        match self {
+            TrafficProfile::Ou { mean, theta, sigma } => Some(ou_bounds(*mean, *theta, *sigma)),
+            _ => None,
+        }
+    }
+
+    /// Sample the modulated rate on the [`OU_GRID_S`] grid. For the OU
+    /// profile this is the *exact* seeded path that
+    /// [`TrafficProfile::schedule`] integrates (same RNG stream); for
+    /// deterministic profiles it samples [`TrafficProfile::rate_at`].
+    pub fn rate_trace(&self, seed: u64, points: usize) -> Vec<f64> {
+        match self {
+            TrafficProfile::Ou { mean, theta, sigma } => {
+                let mut rng = Rng::new(seed);
+                let (lo, hi) = ou_bounds(*mean, *theta, *sigma);
+                let mut x = *mean;
+                (0..points)
+                    .map(|_| {
+                        let cur = x;
+                        x = ou_step(x, *mean, *theta, *sigma, lo, hi, &mut rng);
+                        cur
+                    })
+                    .collect()
+            }
+            _ => (0..points)
+                .map(|k| self.rate_at(k as f64 * OU_GRID_S))
+                .collect(),
+        }
+    }
+
+    /// Generate `n` arrival offsets (nanoseconds from session start,
+    /// nondecreasing), deterministic in `(self, seed)`.
+    pub fn schedule(&self, seed: u64, n: usize) -> Vec<u64> {
+        match self {
+            TrafficProfile::Uniform { rate } => (0..n)
+                .map(|i| (i as f64 / rate * 1e9).round() as u64)
+                .collect(),
+            TrafficProfile::Poisson { rate } => {
+                let mut arr_rng = Rng::new(seed ^ ARRIVAL_STREAM);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += exp1(&mut arr_rng) / rate;
+                        (t * 1e9).round() as u64
+                    })
+                    .collect()
+            }
+            _ => self.schedule_time_change(seed, n),
+        }
+    }
+
+    /// Intensity time-change generator for the time-varying profiles:
+    /// hold the rate constant over each integration step, accumulate
+    /// intensity, and emit an arrival (linearly interpolated within the
+    /// step) at every threshold crossing.
+    fn schedule_time_change(&self, seed: u64, n: usize) -> Vec<u64> {
+        let stochastic = matches!(self, TrafficProfile::Ou { .. });
+        let mut rate_rng = Rng::new(seed);
+        let mut arr_rng = Rng::new(seed ^ ARRIVAL_STREAM);
+
+        let (mut ou_x, ou_lo, ou_hi) = match self {
+            TrafficProfile::Ou { mean, theta, sigma } => {
+                let (lo, hi) = ou_bounds(*mean, *theta, *sigma);
+                (*mean, lo, hi)
+            }
+            _ => (0.0, 0.0, 0.0),
+        };
+
+        let dt = if stochastic { OU_GRID_S } else { INTEGRATE_DT_S };
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64; // segment start, seconds
+        let mut acc = 0.0f64; // cumulative intensity at segment start
+        // Deterministic profiles place thresholds at 0, 1, 2, … so the
+        // first arrival lands at t = 0 (matching `uniform`); stochastic
+        // ones draw Exp(1)-spaced thresholds.
+        let mut target = if stochastic { exp1(&mut arr_rng) } else { 0.0 };
+
+        while out.len() < n {
+            let seg_rate = if let TrafficProfile::Ou { mean, theta, sigma } = self {
+                let cur = ou_x;
+                ou_x = ou_step(ou_x, *mean, *theta, *sigma, ou_lo, ou_hi, &mut rate_rng);
+                cur
+            } else {
+                self.rate_at(t)
+            };
+            let seg_end_acc = acc + seg_rate * dt;
+            while out.len() < n && seg_rate > 0.0 && target <= seg_end_acc {
+                let cross = t + (target - acc) / seg_rate;
+                out.push((cross * 1e9).round() as u64);
+                target += if stochastic { exp1(&mut arr_rng) } else { 1.0 };
+            }
+            acc = seg_end_acc;
+            t += dt;
+        }
+        out
+    }
+}
+
+/// Standard exponential draw (mean 1). `f64()` is in `[0, 1)` so the
+/// argument to `ln` stays in `(0, 1]` — never a NaN/∞.
+fn exp1(rng: &mut Rng) -> f64 {
+    -(1.0 - rng.f64()).ln()
+}
+
+/// One Euler–Maruyama step of the clamped OU rate process on the
+/// [`OU_GRID_S`] grid.
+fn ou_step(x: f64, mean: f64, theta: f64, sigma: f64, lo: f64, hi: f64, rng: &mut Rng) -> f64 {
+    let h = OU_GRID_S;
+    let z = rng.normal() as f64;
+    (x + theta * (mean - x) * h + sigma * h.sqrt() * z).clamp(lo, hi)
+}
+
+fn ou_bounds(mean: f64, theta: f64, sigma: f64) -> (f64, f64) {
+    let stationary_sd = if sigma == 0.0 {
+        0.0
+    } else {
+        sigma / (2.0 * theta).sqrt()
+    };
+    (0.05 * mean, mean + 8.0 * stationary_sd)
+}
+
+/// One recorded arrival: when a request hit the front door (nanoseconds
+/// from session start) and the request itself. One JSON object per line
+/// in a trace file; see the module docs for the field encoding rules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Arrival offset from session start, nanoseconds.
+    pub arrival_ns: u64,
+    /// The request as submitted (id, seed, model, steps, priority,
+    /// deadline) — everything replay needs for bit-identical results.
+    pub request: InferenceRequest,
+}
+
+impl TraceRecord {
+    /// Render one compact JSON line (no trailing newline).
+    pub fn render(&self) -> String {
+        match &self.request {
+            InferenceRequest::Denoise(r) => format!(
+                "{{\"arrival_ns\":{},\"kind\":\"denoise\",\"id\":{},\"seed\":\"{}\",\
+                 \"steps\":{},\"priority\":{},\"deadline_ns\":{}}}",
+                self.arrival_ns,
+                r.id,
+                r.seed,
+                r.steps,
+                r.priority,
+                deadline_json(r.deadline)
+            ),
+            InferenceRequest::Classify(r) => format!(
+                "{{\"arrival_ns\":{},\"kind\":\"classify\",\"id\":{},\"seed\":\"{}\",\
+                 \"model\":\"{}\",\"priority\":{},\"deadline_ns\":{}}}",
+                self.arrival_ns,
+                r.id,
+                r.seed,
+                r.model.name(),
+                r.priority,
+                deadline_json(r.deadline)
+            ),
+        }
+    }
+
+    /// Parse one JSON trace line. Errors name the bad or missing field.
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = Json::parse(line).context("not a JSON object")?;
+        let arrival_ns = field_u64(&v, "arrival_ns")?;
+        let id = field_u64(&v, "id")?;
+        let seed: u64 = field_str(&v, "seed")?
+            .parse()
+            .map_err(|_| anyhow!("bad `seed` (expected a decimal u64 string)"))?;
+        let priority_raw = field_u64(&v, "priority")?;
+        if priority_raw > u8::MAX as u64 {
+            bail!("`priority` out of range: {priority_raw}");
+        }
+        let priority = priority_raw as u8;
+        let deadline = match v.get("deadline_ns") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(Duration::from_nanos(field_u64(&v, "deadline_ns")?)),
+        };
+        let request = match field_str(&v, "kind")? {
+            "denoise" => {
+                let steps = field_u64(&v, "steps")? as usize;
+                if steps == 0 {
+                    bail!("`steps` must be >= 1");
+                }
+                InferenceRequest::Denoise(DenoiseRequest {
+                    id,
+                    seed,
+                    steps,
+                    priority,
+                    deadline,
+                })
+            }
+            "classify" => {
+                let model = ModelChoice::parse(field_str(&v, "model")?)
+                    .context("bad `model`")?;
+                InferenceRequest::Classify(ClassifyRequest {
+                    id,
+                    seed,
+                    model,
+                    priority,
+                    deadline,
+                })
+            }
+            other => bail!("unknown `kind` `{other}` (expected denoise | classify)"),
+        };
+        Ok(TraceRecord {
+            arrival_ns,
+            request,
+        })
+    }
+}
+
+fn deadline_json(d: Option<Duration>) -> String {
+    match d {
+        Some(d) => format!("{}", d.as_nanos()),
+        None => "null".into(),
+    }
+}
+
+/// Exact-integer numeric field: rejects negatives, fractions, and
+/// values beyond 2^53 (where `f64` stops being exact).
+fn field_u64(v: &Json, key: &str) -> Result<u64> {
+    let f = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing or non-numeric `{key}`"))?;
+    if !(0.0..=MAX_EXACT).contains(&f) || f.fract() != 0.0 {
+        bail!("`{key}` out of exact-integer range: {f}");
+    }
+    Ok(f as u64)
+}
+
+fn field_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing or non-string `{key}`"))
+}
+
+/// Render a full trace: one JSON line per record, trailing newline.
+pub fn render_trace(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a trace back. Blank lines are skipped; errors carry the
+/// 1-based line number; arrivals must be nondecreasing.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>> {
+    let mut out = Vec::new();
+    let mut last = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let rec = TraceRecord::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        if rec.arrival_ns < last {
+            bail!(
+                "trace line {}: arrivals must be nondecreasing ({} < {})",
+                i + 1,
+                rec.arrival_ns,
+                last
+            );
+        }
+        last = rec.arrival_ns;
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+/// Write a trace file (JSON lines).
+pub fn write_trace(path: &Path, records: &[TraceRecord]) -> Result<()> {
+    std::fs::write(path, render_trace(records))
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// Read a trace file written by [`write_trace`] (or by `serve
+/// --trace-out`).
+pub fn read_trace(path: &Path) -> Result<Vec<TraceRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// The record half of record/replay: pair the first `n` requests of the
+/// deterministic workload with arrival offsets from `profile`. Both
+/// halves derive from the same `(cfg, seed)`, so the whole trace is
+/// reproducible from the config alone — the trace *file* exists so an
+/// incident can be replayed after the fact or hand-edited.
+pub fn recorded_workload(
+    cfg: &ServeConfig,
+    profile: &TrafficProfile,
+    seed: u64,
+    n: usize,
+) -> Vec<TraceRecord> {
+    let requests = workload(cfg, seed, 0..n);
+    let arrivals = profile.schedule(seed, n);
+    arrivals
+        .into_iter()
+        .zip(requests)
+        .map(|(arrival_ns, request)| TraceRecord {
+            arrival_ns,
+            request,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[&str] = &[
+        "uniform:120",
+        "poisson:80.5",
+        "ou:60:2:15",
+        "burst:40:200:1000:100",
+        "ramp:10:90:500",
+        "sine:50:25:2000",
+    ];
+
+    #[test]
+    fn grammar_round_trips() {
+        for spec in SPECS {
+            let p = TrafficProfile::parse(spec).unwrap();
+            let rendered = p.render();
+            assert_eq!(rendered, *spec, "canonical render");
+            assert_eq!(TrafficProfile::parse(&rendered).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn parse_errors_name_the_bad_key() {
+        let cases: &[(&str, &str)] = &[
+            ("ou:8:x:2", "bad theta"),
+            ("ou:oops:1:2", "bad mean"),
+            ("burst:40:200:1000:zzz", "bad burst_ms"),
+            ("sine:50:abc:2000", "bad amp"),
+            ("warp:9", "unknown profile `warp`"),
+            ("ou:8:1", "expected `ou:MEAN:THETA:SIGMA`"),
+            ("uniform:0", "rate must be positive"),
+            ("burst:40:10:1000:100", "peak must be >= base"),
+            ("sine:50:60:2000", "amp must be in [0, base]"),
+        ];
+        for (spec, needle) in cases {
+            let err = TrafficProfile::parse(spec).unwrap_err().to_string();
+            assert!(
+                err.contains(needle) && err.contains(spec),
+                "spec `{spec}`: error `{err}` should contain `{needle}` and the spec"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_matches_closed_form_and_all_profiles_are_monotone() {
+        let uni = TrafficProfile::parse("uniform:100").unwrap();
+        let s = uni.schedule(7, 5);
+        assert_eq!(s, vec![0, 10_000_000, 20_000_000, 30_000_000, 40_000_000]);
+
+        for spec in SPECS {
+            let p = TrafficProfile::parse(spec).unwrap();
+            let s = p.schedule(42, 300);
+            assert_eq!(s.len(), 300);
+            assert!(s.windows(2).all(|w| w[0] <= w[1]), "{spec}: nondecreasing");
+            let s2 = p.schedule(42, 300);
+            assert_eq!(s, s2, "{spec}: deterministic in (spec, seed)");
+        }
+    }
+
+    #[test]
+    fn ou_path_stays_in_bounds_and_schedule_uses_it() {
+        let p = TrafficProfile::parse("ou:60:2:15").unwrap();
+        let (lo, hi) = p.ou_bounds().unwrap();
+        let trace = p.rate_trace(11, 5000);
+        assert!(trace.iter().all(|&r| (lo..=hi).contains(&r)));
+        // the path actually moves (sigma > 0)
+        assert!(trace.iter().any(|&r| (r - 60.0).abs() > 1.0));
+        // different seeds → different schedules; same seed → identical
+        assert_ne!(p.schedule(1, 200), p.schedule(2, 200));
+    }
+
+    #[test]
+    fn burst_profile_is_denser_inside_the_burst_window() {
+        // 100 ms peak @ 200/s then 900 ms base @ 40/s
+        let p = TrafficProfile::parse("burst:40:200:1000:100").unwrap();
+        let s = p.schedule(0, 56); // exactly one period: 20 peak + 36 base
+        let in_burst = s.iter().filter(|&&ns| ns < 100_000_000).count();
+        assert!(
+            in_burst >= 18,
+            "expected ~20 arrivals in the 100 ms burst, got {in_burst}"
+        );
+    }
+
+    #[test]
+    fn trace_record_round_trips_both_kinds() {
+        let recs = vec![
+            TraceRecord {
+                arrival_ns: 0,
+                request: InferenceRequest::Denoise(DenoiseRequest {
+                    id: 3,
+                    seed: u64::MAX - 1,
+                    steps: 8,
+                    priority: 1,
+                    deadline: Some(Duration::from_millis(250)),
+                }),
+            },
+            TraceRecord {
+                arrival_ns: 12_345,
+                request: InferenceRequest::Classify(ClassifyRequest {
+                    id: 4,
+                    seed: 9,
+                    model: ModelChoice::Resnet18,
+                    priority: 0,
+                    deadline: None,
+                }),
+            },
+        ];
+        let text = render_trace(&recs);
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn trace_parse_errors_carry_line_numbers() {
+        let bad = "{\"arrival_ns\":0,\"kind\":\"denoise\",\"id\":1,\"seed\":\"2\",\
+                   \"steps\":4,\"priority\":0,\"deadline_ns\":null}\n{\"nope\":1}\n";
+        let err = parse_trace(bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trace line 2"), "got: {msg}");
+        let unordered = "{\"arrival_ns\":50,\"kind\":\"denoise\",\"id\":1,\"seed\":\"2\",\
+                         \"steps\":4,\"priority\":0,\"deadline_ns\":null}\n\
+                         {\"arrival_ns\":10,\"kind\":\"denoise\",\"id\":2,\"seed\":\"3\",\
+                         \"steps\":4,\"priority\":0,\"deadline_ns\":null}\n";
+        let err = parse_trace(unordered).unwrap_err().to_string();
+        assert!(err.contains("nondecreasing"), "got: {err}");
+    }
+}

@@ -22,15 +22,30 @@
 //! Python never runs at serving time: `make artifacts` lowers everything
 //! once; the rust binary loads `artifacts/*.hlo.txt` through the PJRT C API.
 
+// The public serving surface (`coordinator`, `config`) is fully
+// documented and the CI lint job runs `cargo doc --no-deps` with
+// warnings-as-errors, so it can't rot. The simulator/runtime internals
+// are ratcheted module by module: remove an `allow` below once that
+// module's public items are documented.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod baselines;
+#[allow(missing_docs)]
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod models;
+#[allow(missing_docs)]
 pub mod quant;
+#[allow(missing_docs)]
 pub mod report;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod sim;
+#[allow(missing_docs)]
 pub mod util;
 
 /// Crate-wide result type.

@@ -15,7 +15,10 @@ use anyhow::{bail, Result};
 use sf_mmcn::baselines::mmcn;
 use sf_mmcn::compiler::analyze_graph;
 use sf_mmcn::config::{ModelChoice, RunConfig, ServeBackend, ServeConfig};
-use sf_mmcn::coordinator::{workload, AdmissionError, DiffusionServer, FaultSpec, ShardFleet};
+use sf_mmcn::coordinator::{
+    read_trace, workload, write_trace, AdmissionError, DiffusionServer, FaultSpec, ShardFleet,
+    TraceRecord, TrafficProfile,
+};
 use sf_mmcn::models::{resnet18, unet, vgg16, ModelGraph, UnetConfig};
 use sf_mmcn::report;
 use sf_mmcn::runtime::ArtifactStore;
@@ -38,7 +41,8 @@ USAGE: sf-mmcn <subcommand> [options]
             [--backend pjrt|native] [--native] [--batched] [--no-batch]
             [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
             [--queue-depth 64] [--deadline-ms 0] [--priorities 3]
-            [--open-loop [--rate 8.0]] [--config file.toml]
+            [--open-loop [--rate 8.0]] [--traffic \"ou:60:2:15\"]
+            [--trace-out FILE] [--trace-in FILE] [--config file.toml]
             [--model-mix \"unet:2,resnet18:1,vgg16:1\"]
             [--shards 1] [--heartbeat-ms 25] [--heartbeat-misses 8]
             [--fault-spec \"kill:1:5;stall:0:3:40\"] [--fault-seed N]
@@ -208,22 +212,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(_) => Some(args.get_u64("fault-seed", 0)?),
         None => None,
     };
+    if let Some(spec) = args.get("traffic") {
+        // arrival-process realism (ISSUE 8): OU / burst / ramp / sine
+        // rate profiles, e.g. "ou:60:2:15"; implies --open-loop
+        cfg.traffic = spec.to_string();
+    }
+    let trace_in = args.get("trace-in").map(std::path::PathBuf::from);
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
 
     // The fleet front door (ISSUE 6): multiple shards, or any fault
     // injection, serve through ShardFleet so failures are survivable.
     if cfg.shards > 1 || !cfg.fault_spec.is_empty() || fault_seed.is_some() {
-        if args.flag("open-loop") {
-            bail!("--open-loop serves a single session; drop it or use the failover bench scenario");
+        if args.flag("open-loop")
+            || !cfg.traffic.is_empty()
+            || trace_in.is_some()
+            || trace_out.is_some()
+        {
+            bail!(
+                "open-loop traffic (--open-loop/--traffic/--trace-in/--trace-out) serves a \
+                 single session; drop it or use the scale-sweep bench for fleet cells"
+            );
         }
         return cmd_serve_fleet(&cfg, fault_seed);
     }
 
-    if args.flag("open-loop") {
-        // Streaming session demo (ISSUE 5): requests arrive on a fixed
+    if let Some(path) = trace_in {
+        // Trace replay (ISSUE 8): the recorded file fixes both the
+        // requests and their arrival offsets, so --traffic conflicts.
+        if !cfg.traffic.is_empty() {
+            bail!("--trace-in replays a recorded arrival schedule; drop --traffic");
+        }
+        return cmd_serve_replay(&cfg, &path, trace_out.as_deref());
+    }
+
+    if args.flag("open-loop") || !cfg.traffic.is_empty() || trace_out.is_some() {
+        // Streaming session demo (ISSUE 5): requests arrive on a
         // synthetic schedule instead of being pre-staged; overload is
         // shed at the bounded admission queue instead of growing latency.
         let rate = args.get_f64("rate", 8.0)?;
-        return cmd_serve_open_loop(&cfg, rate);
+        return cmd_serve_open_loop(&cfg, rate, trace_out.as_deref());
     }
 
     let store = ArtifactStore::default_store();
@@ -282,43 +309,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Open-loop streaming client (ISSUE 5): submit `cfg.requests` requests
-/// at a fixed arrival rate through the session API, shedding overload at
-/// the bounded admission queue, then drain gracefully and report the
+/// Open-loop streaming client (ISSUE 5, traffic profiles ISSUE 8):
+/// submit `cfg.requests` requests on a synthetic arrival schedule —
+/// `serve.traffic` / `--traffic` profile if set, else the legacy fixed
+/// `--rate` interval (≡ `uniform:RATE`) — shedding overload at the
+/// bounded admission queue, then drain gracefully and report the
 /// live-session metrics (streaming latency percentiles included).
-fn cmd_serve_open_loop(cfg: &ServeConfig, rate: f64) -> Result<()> {
+/// `--trace-out` records the exact `(arrival, request)` sequence to a
+/// JSON-lines trace before serving starts.
+fn cmd_serve_open_loop(
+    cfg: &ServeConfig,
+    rate: f64,
+    trace_out: Option<&std::path::Path>,
+) -> Result<()> {
     use std::time::{Duration, Instant};
 
     if rate <= 0.0 || !rate.is_finite() {
         bail!("--rate must be a positive number of requests/s, got {rate}");
     }
+    let profile = cfg
+        .parsed_traffic()?
+        .unwrap_or(TrafficProfile::Uniform { rate });
     let store = ArtifactStore::default_store();
     let server = DiffusionServer::new(cfg.clone(), &store)?;
     println!(
-        "open-loop serving: {} requests arriving at {rate:.1} req/s ({} steps each), \
+        "open-loop serving: {} requests arriving as `{}` (mean {:.1} req/s, {} steps each), \
          {} workers, queue depth {}, {} backend …",
         cfg.requests,
+        profile.render(),
+        profile.mean_rate(),
         cfg.steps,
         cfg.workers,
         cfg.queue_depth,
         cfg.backend.name(),
     );
-    let handle = server.start();
     let reqs = workload(cfg, cfg.seed, 0..cfg.requests);
-    let interval = Duration::from_secs_f64(1.0 / rate);
+    // the synthetic arrival schedule: request i is due at arrivals[i] ns
+    let arrivals = profile.schedule(cfg.seed, cfg.requests);
+    if let Some(path) = trace_out {
+        let records: Vec<TraceRecord> = arrivals
+            .iter()
+            .zip(&reqs)
+            .map(|(&arrival_ns, r)| TraceRecord {
+                arrival_ns,
+                request: r.clone(),
+            })
+            .collect();
+        write_trace(path, &records)?;
+        println!("recorded {} arrivals to {}", records.len(), path.display());
+    }
+    let handle = server.start();
     let t0 = Instant::now();
     let mut tickets = Vec::new();
     let (mut shed, mut dead) = (0usize, 0usize);
-    for (i, req) in reqs.into_iter().enumerate() {
-        // fixed synthetic arrival schedule: request i is due at i/rate
-        if let Some(sleep) = interval.mul_f64(i as f64).checked_sub(t0.elapsed()) {
+    for (req, &due_ns) in reqs.into_iter().zip(&arrivals) {
+        if let Some(sleep) = Duration::from_nanos(due_ns).checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
         match handle.try_submit(req) {
             Ok(t) => tickets.push(t),
             Err(AdmissionError::QueueFull) => shed += 1,
             Err(AdmissionError::Deadline) => dead += 1,
-            Err(AdmissionError::ShuttingDown) => break,
+            // ShuttingDown / NoLiveShards: admission is over
+            Err(_) => break,
         }
     }
     println!(
@@ -346,6 +399,69 @@ fn cmd_serve_open_loop(cfg: &ServeConfig, rate: f64) -> Result<()> {
             rep.core_power_w * 1e3,
         );
     }
+    Ok(())
+}
+
+/// Trace replay (ISSUE 8): submit exactly the recorded requests at
+/// their recorded arrival offsets through a single session. Request
+/// execution is a pure function of `(model, seed, steps)`, so the
+/// replayed results are bit-identical to the recording run's.
+/// `--trace-out` re-emits the canonical rendering of the parsed trace
+/// (useful for normalizing a hand-edited file).
+fn cmd_serve_replay(
+    cfg: &ServeConfig,
+    path: &std::path::Path,
+    trace_out: Option<&std::path::Path>,
+) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let records = read_trace(path)?;
+    if records.is_empty() {
+        bail!("trace {} holds no records", path.display());
+    }
+    if let Some(out) = trace_out {
+        write_trace(out, &records)?;
+        println!("re-emitted {} records to {}", records.len(), out.display());
+    }
+    let store = ArtifactStore::default_store();
+    let server = DiffusionServer::new(cfg.clone(), &store)?;
+    println!(
+        "replaying {} recorded requests from {} ({} workers, queue depth {}, {} backend) …",
+        records.len(),
+        path.display(),
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.backend.name(),
+    );
+    let handle = server.start();
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    let (mut shed, mut dead) = (0usize, 0usize);
+    for rec in records {
+        if let Some(sleep) = Duration::from_nanos(rec.arrival_ns).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match handle.try_submit(rec.request) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => shed += 1,
+            Err(AdmissionError::Deadline) => dead += 1,
+            // ShuttingDown / NoLiveShards: admission is over
+            Err(_) => break,
+        }
+    }
+    let (mut completed, mut failed) = (0usize, 0usize);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let metrics = handle.shutdown()?;
+    println!("final session metrics:\n{}", metrics.render());
+    println!(
+        "replay summary: {completed} completed, {failed} failed/expired, \
+         {shed} shed at admission (QueueFull), {dead} rejected on deadline"
+    );
     Ok(())
 }
 

@@ -7,9 +7,9 @@
 //! The real PJRT executor needs the vendored `xla` crate and its
 //! `xla_extension` shared library, which the default build environment
 //! does not have — so it is gated behind the `pjrt` cargo feature and a
-//! stub with the same API takes its place otherwise (see [`stub`]). The
-//! artifact store, [`TensorBuf`], the [`pool`] buffer arena backing the
-//! zero-allocation serving hot path, and the [`native`] denoise surrogate
+//! stub with the same API takes its place otherwise (see `stub.rs`). The
+//! artifact store, [`TensorBuf`], the [`BufferPool`] arena backing the
+//! zero-allocation serving hot path, and the [`NativeDenoise`] surrogate
 //! (which lets the serving layer run offline, batched included) are
 //! backend-independent and always available.
 

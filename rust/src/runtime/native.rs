@@ -361,7 +361,7 @@ impl NativeDenoise {
 ///   fixed accumulation order, so batched and per-request execution are
 ///   bit-identical at any batch size or thread count.
 /// * **Cost-shaped like the real model** — every dispatch pays the
-///   [`param_digest`] weight-streaming term, then `passes` full sweeps
+///   `param_digest` weight-streaming term, then `passes` full sweeps
 ///   over each image. The server derives `passes` from the model graph's
 ///   MAC count, so VGG-16 requests cost proportionally more host work
 ///   than ResNet-18 requests, the way they would on the accelerator.

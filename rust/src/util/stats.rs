@@ -86,7 +86,7 @@ const LATENCY_HIST_CAP: usize = 4096;
 /// Collects latency samples and reports p50/p95/p99 — used by the
 /// coordinator's serving metrics.
 ///
-/// Memory is bounded: the first [`LATENCY_HIST_CAP`] samples are kept
+/// Memory is bounded: the first `LATENCY_HIST_CAP` (4096) samples are kept
 /// exactly; beyond that, reservoir sampling (Vitter's algorithm R, with
 /// a deterministic xorshift stream) keeps a uniform subset, so a
 /// long-running serving session's metrics — and every

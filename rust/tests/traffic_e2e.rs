@@ -1,0 +1,204 @@
+//! End-to-end tests for the traffic-realism subsystem (ISSUE 8): seeded
+//! arrival-process generators, the `serve.traffic` config grammar, and
+//! the JSON-lines trace record/replay format.
+//!
+//! Everything here runs offline on the native surrogate backend — the
+//! determinism contract (request execution is a pure function of
+//! `(model, seed, steps)`) is what makes trace replay bit-identical,
+//! and these tests are the tier-1 gate on that contract.
+
+use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::{
+    read_trace, recorded_workload, write_trace, DiffusionServer, TrafficProfile,
+};
+use sf_mmcn::runtime::ArtifactStore;
+
+fn native_cfg(steps: usize, requests: usize) -> ServeConfig {
+    ServeConfig {
+        steps,
+        requests,
+        workers: 2,
+        max_batch: 4,
+        batched: true,
+        seed: 11,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: false,
+        backend: ServeBackend::Native,
+        pipeline: true,
+        chunk: 0,
+        pooled: true,
+        ..ServeConfig::default()
+    }
+}
+
+fn all_profiles() -> Vec<TrafficProfile> {
+    vec![
+        TrafficProfile::parse("uniform:40").unwrap(),
+        TrafficProfile::parse("poisson:40").unwrap(),
+        TrafficProfile::parse("ou:40:2:10").unwrap(),
+        TrafficProfile::parse("burst:20:100:1000:100").unwrap(),
+        TrafficProfile::parse("ramp:10:50:2000").unwrap(),
+        TrafficProfile::parse("sine:40:20:1000").unwrap(),
+    ]
+}
+
+// ----------------------------------------------------- arrival schedules
+
+#[test]
+fn schedules_are_deterministic_and_monotone() {
+    for p in all_profiles() {
+        let a = p.schedule(123, 200);
+        let b = p.schedule(123, 200);
+        assert_eq!(a, b, "{}: same seed must give the same schedule", p.render());
+        assert_eq!(a.len(), 200, "{}", p.render());
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1], "{}: arrivals must be nondecreasing", p.render());
+        }
+    }
+    // stochastic profiles actually use the seed
+    for spec in ["poisson:40", "ou:40:2:10"] {
+        let p = TrafficProfile::parse(spec).unwrap();
+        assert_ne!(
+            p.schedule(1, 100),
+            p.schedule(2, 100),
+            "{spec}: different seeds must give different schedules"
+        );
+    }
+}
+
+#[test]
+fn uniform_schedule_matches_the_legacy_fixed_interval() {
+    // `--open-loop --rate R` historically placed request i at i/R; the
+    // uniform profile must reproduce that exactly so `--traffic
+    // uniform:R` is a drop-in replacement.
+    let p = TrafficProfile::parse("uniform:8").unwrap();
+    let sched = p.schedule(99, 16);
+    for (i, &ns) in sched.iter().enumerate() {
+        let expect = (i as f64 / 8.0 * 1e9).round() as u64;
+        assert_eq!(ns, expect, "request {i}");
+    }
+}
+
+#[test]
+fn ou_rate_path_reverts_to_the_mean_within_bounds() {
+    let p = TrafficProfile::parse("ou:60:2:15").unwrap();
+    let (lo, hi) = p.ou_bounds().expect("ou has clamp bounds");
+    assert!(lo > 0.0 && hi > 60.0);
+    let trace = p.rate_trace(7, 4000);
+    assert_eq!(trace, p.rate_trace(7, 4000), "rate path is seeded");
+    let mut mean = 0.0;
+    for &r in &trace {
+        assert!((lo..=hi).contains(&r), "rate {r} escaped [{lo}, {hi}]");
+        mean += r;
+    }
+    mean /= trace.len() as f64;
+    // mean reversion: the 40 s time-average stays near the long-run mean
+    assert!(
+        (mean - 60.0).abs() < 15.0,
+        "OU time-average {mean:.1} strayed from the mean 60"
+    );
+}
+
+#[test]
+fn burst_and_ramp_schedules_have_the_right_shape() {
+    // burst:20:100:1000:100 — 100 ms at 100 req/s then 900 ms at 20
+    // req/s: one period holds 10 + 18 arrivals, 10 of them in-burst.
+    let p = TrafficProfile::parse("burst:20:100:1000:100").unwrap();
+    let sched = p.schedule(0, 28);
+    let in_burst = sched.iter().filter(|&&ns| ns < 100_000_000).count();
+    assert!(
+        (9..=11).contains(&in_burst),
+        "expected ~10 of 28 arrivals inside the 100 ms burst window, got {in_burst}"
+    );
+    // ramp:10:50:2000 — the gap between consecutive arrivals shrinks
+    let p = TrafficProfile::parse("ramp:10:50:2000").unwrap();
+    let sched = p.schedule(0, 20);
+    let first_gap = sched[1] - sched[0];
+    let last_gap = sched[19] - sched[18];
+    assert!(
+        last_gap < first_gap,
+        "ramp-up must compress inter-arrival gaps ({first_gap} ns -> {last_gap} ns)"
+    );
+}
+
+// ------------------------------------------------------- config grammar
+
+#[test]
+fn traffic_grammar_errors_name_the_bad_key() {
+    let err = TrafficProfile::parse("ou:60:x:15").unwrap_err().to_string();
+    assert!(err.contains("bad theta"), "{err}");
+    let err = TrafficProfile::parse("warp:9").unwrap_err().to_string();
+    assert!(err.contains("unknown profile `warp`"), "{err}");
+    let err = TrafficProfile::parse("uniform:0").unwrap_err().to_string();
+    assert!(err.contains("rate must be positive"), "{err}");
+
+    // the config layer prefixes the offending key, like serve.fault_spec
+    let err = ServeConfig::from_toml("[serve]\ntraffic = \"sine:10:90:500\"\n")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("serve.traffic"), "{err}");
+    assert!(err.contains("amp must be in [0, base]"), "{err}");
+}
+
+#[test]
+fn traffic_specs_round_trip_through_config_and_render() {
+    for p in all_profiles() {
+        let spec = p.render();
+        let toml = format!("[serve]\ntraffic = \"{spec}\"\n");
+        let cfg = ServeConfig::from_toml(&toml).unwrap();
+        let parsed = cfg.parsed_traffic().unwrap().expect("profile set");
+        assert_eq!(parsed, p, "{spec}");
+        assert_eq!(parsed.render(), spec, "render is canonical");
+    }
+}
+
+// ------------------------------------------------- trace record / replay
+
+#[test]
+fn trace_file_round_trips_request_for_request() {
+    let mut cfg = native_cfg(3, 10);
+    // mixed traffic so the trace holds both denoise and classify records
+    cfg.model_mix = "unet:2,resnet18:1,vgg16:1".into();
+    let profile = TrafficProfile::parse("ou:200:2:50").unwrap();
+    let records = recorded_workload(&cfg, &profile, cfg.seed, 10);
+    assert_eq!(records.len(), 10);
+    for w in records.windows(2) {
+        assert!(w[0].arrival_ns <= w[1].arrival_ns);
+    }
+    let path = std::env::temp_dir().join("sf_mmcn_traffic_e2e_trace.jsonl");
+    write_trace(&path, &records).unwrap();
+    let back = read_trace(&path).unwrap();
+    assert_eq!(back, records, "parse(render(trace)) must be the identity");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trace_replay_results_are_bit_identical() {
+    let mut cfg = native_cfg(3, 8);
+    cfg.model_mix = "unet:2,resnet18:1,vgg16:1".into();
+    let profile = TrafficProfile::parse("burst:50:400:200:50").unwrap();
+    let records = recorded_workload(&cfg, &profile, cfg.seed, 8);
+    let path = std::env::temp_dir().join("sf_mmcn_traffic_e2e_replay.jsonl");
+    write_trace(&path, &records).unwrap();
+    let replayed = read_trace(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let store = ArtifactStore::new("artifacts");
+    let serve = |reqs: Vec<_>| {
+        let server = DiffusionServer::new(cfg.clone(), &store).expect("native server");
+        let (mut results, _) = server.serve(reqs).expect("serve");
+        results.sort_by_key(|r| r.id);
+        results
+    };
+    let a = serve(records.into_iter().map(|r| r.request).collect());
+    let b = serve(replayed.into_iter().map(|r| r.request).collect());
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.id, rb.id);
+        assert_eq!(ra.image.shape, rb.image.shape);
+        let bits_a: Vec<u32> = ra.image.data.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = rb.image.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "request {} replayed differently", ra.id);
+    }
+}
