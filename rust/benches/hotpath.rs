@@ -25,7 +25,9 @@ use sf_mmcn::coordinator::UnetParams;
 use sf_mmcn::models::graph::{Act, GraphBuilder, Layer, ModelGraph, Residual, TensorShape};
 use sf_mmcn::models::{resnet18, unet, vgg16, UnetConfig};
 use sf_mmcn::quant::Fixed;
-use sf_mmcn::runtime::{ArtifactStore, Executor, TensorBuf};
+use sf_mmcn::runtime::{
+    step_kernel_scalar, ArtifactStore, BatchDispatch, Executor, NativeDenoise, TensorBuf,
+};
 use sf_mmcn::sim::array::{Accelerator, AcceleratorConfig, WeightStore};
 use sf_mmcn::sim::unit::{ConvGroup, FlatServer, ServerTask, SfMmcnUnit};
 use sf_mmcn::util::bench::{
@@ -220,6 +222,177 @@ fn bench_sim_graph(
     });
 }
 
+/// ISSUE 9: the f32 step kernel in isolation — the scalar (default
+/// build) path always, plus the `--features simd` path and the widening
+/// Q8.8 dot when compiled in. The SIMD rows carry `speedup_vs_ref`
+/// against the scalar rows measured in the same process, so the ratio
+/// gates CI machine-independently.
+fn bench_step_kernel(b: &Bencher, rows: &mut Vec<JsonRow>) {
+    let n = 1usize << 16;
+    let x0: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.0137).sin() * 1.5).collect();
+    let noise: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.0071).cos() * 0.4).collect();
+    let emb: Vec<f32> = (0..32).map(|i| (i as f32) * 0.03 - 0.4).collect();
+    let mut x = x0.clone();
+    let r_scalar = b.report("step_kernel scalar (64Ki f32)", || {
+        x.copy_from_slice(&x0);
+        step_kernel_scalar(&mut x, &emb, (1.01, 0.05, 0.1), &noise, (0.9, 0.3));
+    });
+    rows.push(JsonRow {
+        name: "step_kernel_scalar_64k".into(),
+        mean_ns: r_scalar.mean_ns,
+        macs: None,
+        mac_rate: None,
+        speedup_vs_ref: None,
+    });
+    #[cfg(feature = "simd")]
+    {
+        use sf_mmcn::runtime::step_kernel_simd;
+        use sf_mmcn::util::simd;
+        let r_simd = b.report("step_kernel simd (64Ki f32)", || {
+            x.copy_from_slice(&x0);
+            step_kernel_simd(&mut x, &emb, (1.01, 0.05, 0.1), &noise, (0.9, 0.3));
+        });
+        println!(
+            "  -> simd step kernel: x{:.2} vs scalar",
+            r_scalar.mean_ns / r_simd.mean_ns
+        );
+        rows.push(JsonRow {
+            name: "step_kernel_simd_64k".into(),
+            mean_ns: r_simd.mean_ns,
+            macs: None,
+            mac_rate: None,
+            speedup_vs_ref: Some(r_scalar.mean_ns / r_simd.mean_ns),
+        });
+
+        let m = 1usize << 14;
+        let a: Vec<i16> = (0..m).map(|i| ((i * 37) % 30000) as i16 - 15000).collect();
+        let bb: Vec<i16> = (0..m).map(|i| ((i * 101) % 30000) as i16 - 15000).collect();
+        let r_dscalar = b.report("dot_wide scalar reference (16Ki i16)", || {
+            a.iter()
+                .zip(&bb)
+                .map(|(&p, &q)| (p as i32 * q as i32) as i64)
+                .sum::<i64>()
+        });
+        let r_dsimd = b.report("dot_wide simd (16Ki i16)", || simd::dot_wide_i16(&a, &bb));
+        println!(
+            "  -> simd widening dot: x{:.2} vs scalar",
+            r_dscalar.mean_ns / r_dsimd.mean_ns
+        );
+        rows.push(JsonRow {
+            name: "dot_wide_simd_16k".into(),
+            mean_ns: r_dsimd.mean_ns,
+            macs: Some(m as u64),
+            mac_rate: Some(m as f64 / (r_dsimd.mean_ns / 1e9)),
+            speedup_vs_ref: Some(r_dscalar.mean_ns / r_dsimd.mean_ns),
+        });
+    }
+}
+
+/// ISSUE 9: fused resident-x scan vs the chunked dispatch loop, at the
+/// engine layer (no serving overhead in the way). The chunked reference
+/// reproduces exactly what the serving lane does per chunk — slice the
+/// step rows, re-gather each request's noise, ping-pong two image slabs
+/// — and the resident row replaces all of it with one engine call over
+/// a single hot slab.
+fn bench_native_scan(b: &Bencher, rows: &mut Vec<JsonRow>) {
+    let (bsz, steps, n, chunk) = (8usize, 50usize, 256usize, 10usize);
+    let e = NativeDenoise::new(vec![1, 16, 16], 32);
+    let params = vec![
+        TensorBuf::new(vec![3], vec![0.1, -0.2, 0.3]).unwrap(),
+        TensorBuf::new(vec![2, 2], vec![0.05, 0.0, -0.1, 0.2]).unwrap(),
+    ];
+    let x = TensorBuf::new(
+        vec![bsz, 1, 16, 16],
+        (0..bsz * n).map(|i| (i as f32) * 0.0021 - 0.3).collect(),
+    )
+    .unwrap();
+    let t_embs = TensorBuf::new(
+        vec![steps, 32],
+        (0..steps * 32).map(|i| (i as f32) * 0.001 - 0.02).collect(),
+    )
+    .unwrap();
+    let coeffs = {
+        let mut c = Vec::new();
+        for r in 0..steps {
+            c.extend([1.002f32, 0.04, if r + 1 < steps { 0.06 } else { 0.0 }]);
+        }
+        TensorBuf::new(vec![steps, 3], c).unwrap()
+    };
+    let noises = TensorBuf::new(
+        vec![bsz, steps, 1, 16, 16],
+        (0..bsz * steps * n)
+            .map(|i| ((i % 127) as f32) * 0.0007 - 0.04)
+            .collect(),
+    )
+    .unwrap();
+
+    let r_chunked = b.report("native scan chunked b8 x 50 steps (chunk 10)", || {
+        let mut cur = x.data.clone();
+        let mut dst = vec![0.0f32; bsz * n];
+        let mut done = 0usize;
+        while done < steps {
+            let c = chunk.min(steps - done);
+            let te =
+                TensorBuf::new(vec![c, 32], t_embs.data[done * 32..(done + c) * 32].to_vec())
+                    .unwrap();
+            let co = TensorBuf::new(vec![c, 3], coeffs.data[done * 3..(done + c) * 3].to_vec())
+                .unwrap();
+            let mut nz = Vec::with_capacity(bsz * c * n);
+            for i in 0..bsz {
+                nz.extend_from_slice(
+                    &noises.data[(i * steps + done) * n..(i * steps + done + c) * n],
+                );
+            }
+            let no = TensorBuf::new(vec![bsz, c, 1, 16, 16], nz).unwrap();
+            let cur_t = TensorBuf::new(x.shape.clone(), std::mem::take(&mut cur)).unwrap();
+            let d = BatchDispatch {
+                batch: bsz,
+                steps: c,
+                x: &cur_t,
+                t_embs: &te,
+                coeffs: &co,
+                noises: &no,
+            };
+            e.run_batched_into(&d, &params, &mut dst).unwrap();
+            cur = cur_t.data;
+            std::mem::swap(&mut cur, &mut dst);
+            done += c;
+        }
+        cur
+    });
+    rows.push(JsonRow {
+        name: "native_scan_chunked_b8x50".into(),
+        mean_ns: r_chunked.mean_ns,
+        macs: None,
+        mac_rate: None,
+        speedup_vs_ref: None,
+    });
+
+    let d = BatchDispatch {
+        batch: bsz,
+        steps,
+        x: &x,
+        t_embs: &t_embs,
+        coeffs: &coeffs,
+        noises: &noises,
+    };
+    let mut out = vec![0.0f32; bsz * n];
+    let r_resident = b.report("native scan resident b8 x 50 steps (fused)", || {
+        e.run_scan_resident(&d, &params, &mut out, &|| {}).unwrap();
+    });
+    println!(
+        "  -> resident scan: x{:.2} vs chunked dispatch loop",
+        r_chunked.mean_ns / r_resident.mean_ns
+    );
+    rows.push(JsonRow {
+        name: "native_scan_resident_b8x50".into(),
+        mean_ns: r_resident.mean_ns,
+        macs: None,
+        mac_rate: None,
+        speedup_vs_ref: Some(r_chunked.mean_ns / r_resident.mean_ns),
+    });
+}
+
 fn bench_analytic(b: &Bencher, rows: &mut Vec<JsonRow>) {
     let vgg = vgg16(224, 1000);
     let rn = resnet18(224, 1000);
@@ -361,6 +534,12 @@ fn main() {
     let mut rows: Vec<JsonRow> = Vec::new();
     let b = Bencher::default();
     bench_unit_group(&b, &mut rows);
+
+    // ISSUE 9 kernel + fused-scan rows (quick included: the fused-scan
+    // speedup is the cheapest always-on evidence the resident path is
+    // actually faster, not just bit-identical).
+    bench_step_kernel(&Bencher::quick(), &mut rows);
+    bench_native_scan(&Bencher::quick(), &mut rows);
 
     // Micro-sim residual pair: fast vs reference (the §Perf acceptance
     // gate: >= 5x on this workload).

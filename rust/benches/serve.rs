@@ -1238,6 +1238,34 @@ fn main() {
     b8.max_batch = 8;
     rows.push(measure("batched_b8", &b8, iters));
 
+    // ISSUE 9: the fused resident-x scan against the chunked dispatch
+    // loop it replaces — same batching, same chunk setting, so the only
+    // difference is per-chunk noise re-gather + slab ping-pong vs one
+    // resident engine call per batch. (New rows ride along the JSON but
+    // are deliberately absent from the committed baseline until a
+    // re-baselining run records host-measured floors for them.)
+    let mut b4_chunked = base_cfg(steps, requests);
+    b4_chunked.batched = true;
+    b4_chunked.max_batch = 4;
+    b4_chunked.chunk = 4;
+    rows.push(measure("batched_b4_chunk4", &b4_chunked, iters));
+
+    let mut b4_resident = b4_chunked.clone();
+    b4_resident.resident = true;
+    rows.push(measure("batched_b4_resident", &b4_resident, iters));
+
+    {
+        let chunked = rows[rows.len() - 2].req_per_s;
+        let resident = rows[rows.len() - 1].req_per_s;
+        println!(
+            "\nresident scan vs chunked dispatch loop: x{:.2} req/s \
+             ({} -> {} dispatches)",
+            resident / chunked.max(1e-12),
+            rows[rows.len() - 2].dispatches,
+            rows[rows.len() - 1].dispatches,
+        );
+    }
+
     for i in 1..rows.len() {
         rows[i].speedup_vs_per_request = Some(rows[i].req_per_s / base_rate.max(1e-12));
     }

@@ -267,6 +267,19 @@ pub struct ServeConfig {
     /// `coordinator::traffic::TrafficProfile` for the grammar. Empty =
     /// no profile (closed-loop, or the legacy fixed `--rate` schedule).
     pub traffic: String,
+    /// Fused resident-x scan (ISSUE 9): execute a batch's *entire*
+    /// reverse trajectory in one native dispatch, keeping every image hot
+    /// in a single slab (no per-chunk noise re-gather or slab ping-pong)
+    /// while still beating the shard pulse once per step. Bit-identical
+    /// to the chunked loop; counts as a single dispatch in metrics, so
+    /// leave it off when comparing chunking strategies. Batched native
+    /// lanes only — compiled PJRT artifacts fall back to the chunk loop.
+    pub resident: bool,
+    /// Pin each worker lane (and, by mask inheritance, its fanout
+    /// threads) to one NUMA node, round-robin across nodes
+    /// (`util::affinity::CoreMap`). Best-effort: unsupported hosts and
+    /// denied syscalls leave lanes unpinned. Never changes served bits.
+    pub pin_lanes: bool,
 }
 
 impl Default for ServeConfig {
@@ -294,6 +307,8 @@ impl Default for ServeConfig {
             fault_spec: String::new(),
             model_mix: String::new(),
             traffic: String::new(),
+            resident: false,
+            pin_lanes: false,
         }
     }
 }
@@ -405,6 +420,8 @@ impl ServeConfig {
         cfg.fault_spec = doc.get_str_or("serve", "fault_spec", &cfg.fault_spec);
         cfg.model_mix = doc.get_str_or("serve", "model_mix", &cfg.model_mix);
         cfg.traffic = doc.get_str_or("serve", "traffic", &cfg.traffic);
+        cfg.resident = doc.get_bool_or("serve", "resident", cfg.resident);
+        cfg.pin_lanes = doc.get_bool_or("serve", "pin_lanes", cfg.pin_lanes);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -668,6 +685,16 @@ data_reuse = false
         assert!(ModelMix::parse("unet:0").is_err());
         assert!(ModelMix::parse("unet:65").is_err());
         assert!(ModelMix::parse("unet:x").is_err());
+    }
+
+    #[test]
+    fn serve_config_perf_keys() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert!(!cfg.resident, "chunked dispatch loop stays the default");
+        assert!(!cfg.pin_lanes, "lanes unpinned by default");
+        let cfg = ServeConfig::from_toml("[serve]\nresident = true\npin_lanes = true\n").unwrap();
+        assert!(cfg.resident);
+        assert!(cfg.pin_lanes);
     }
 
     #[test]

@@ -166,6 +166,11 @@ pub struct ServeMetrics {
     /// Batches that mixed models — the batcher invariant says this stays
     /// 0; anything else is a routing bug (rendered as a warning).
     pub cross_model_batches: usize,
+    /// Batches that mixed served-image shapes (ISSUE 9): the batch key's
+    /// shape component makes this impossible by construction, so like
+    /// `cross_model_batches` this stays 0 and anything else is a routing
+    /// bug (rendered as a warning).
+    pub cross_shape_batches: usize,
 }
 
 impl ServeMetrics {
@@ -192,6 +197,7 @@ impl ServeMetrics {
             e2e_latency: StreamingPercentiles::new(),
             per_model: ModelMetrics::rows(),
             cross_model_batches: 0,
+            cross_shape_batches: 0,
         }
     }
 
@@ -299,6 +305,12 @@ impl ServeMetrics {
             s.push_str(&format!(
                 "WARNING: {} batch(es) mixed models — batcher invariant violated\n",
                 self.cross_model_batches
+            ));
+        }
+        if self.cross_shape_batches > 0 {
+            s.push_str(&format!(
+                "WARNING: {} batch(es) mixed image shapes — batcher invariant violated\n",
+                self.cross_shape_batches
             ));
         }
         if self.requests_failed > 0 {
@@ -603,6 +615,12 @@ mod tests {
         assert!(!s.contains("WARNING"), "{s}");
         m.cross_model_batches = 1;
         assert!(m.render().contains("WARNING: 1 batch(es) mixed models"));
+        // the shape invariant renders its own warning (ISSUE 9),
+        // mirroring the cross-model one
+        m.cross_shape_batches = 2;
+        assert!(m
+            .render()
+            .contains("WARNING: 2 batch(es) mixed image shapes"));
     }
 
     #[test]

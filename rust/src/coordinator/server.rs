@@ -217,9 +217,27 @@ impl InferenceRequest {
     }
 
     /// Batch compatibility key: a batch only groups requests with the
-    /// same model and step count, so one device dispatch serves them all.
-    fn batch_key(&self) -> (ModelChoice, usize) {
-        (self.model(), self.steps())
+    /// same model, step count, and served-image shape, so one device
+    /// dispatch serves them all. The shape component (ISSUE 9) is
+    /// derived from the model — every model currently serves one
+    /// canonical shape — but keying on it makes the batcher invariant
+    /// explicit: a batch's rows must stack into one `[B, c, h, w]` slab.
+    fn batch_key(&self) -> (ModelChoice, usize, (usize, usize, usize)) {
+        (self.model(), self.steps(), img_shape_hint(self.model()))
+    }
+}
+
+/// Canonical served `[c, h, w]` shape for a model's requests: the U-net
+/// serves the diffusion image shape, the classifiers serve RGB
+/// `CLASSIFY_IMG`² inputs (see [`ClassifyModel`]). This is the batch
+/// key's shape component (ISSUE 9).
+fn img_shape_hint(model: ModelChoice) -> (usize, usize, usize) {
+    match model {
+        ModelChoice::Unet => {
+            let u = UnetConfig::default();
+            (u.img_channels, u.img, u.img)
+        }
+        ModelChoice::Resnet18 | ModelChoice::Vgg16 => (3, CLASSIFY_IMG, CLASSIFY_IMG),
     }
 }
 
@@ -877,6 +895,15 @@ struct WorkerCtx {
     pipeline: bool,
     chunk: usize,
     pooled: bool,
+    /// Fused resident-x scan (ISSUE 9): execute each batch's whole
+    /// timestep range in one engine call, the images staying hot in a
+    /// single slab — no per-chunk noise re-gather or slab ping-pong.
+    /// Bit-identical to the chunked loop; falls back to it when the
+    /// executor cannot scan natively (compiled PJRT artifacts).
+    resident: bool,
+    /// Pin each lane thread to a NUMA node round-robin at startup
+    /// (ISSUE 9, best-effort — see `util::affinity`).
+    pin_lanes: bool,
     /// Fault-injection plane shared by this session's lanes (ISSUE 6).
     /// `None` in production sessions: the only per-batch cost is an
     /// `Option` check.
@@ -913,6 +940,10 @@ struct WorkerMsg {
     /// invariant says this never happens; the collector counts
     /// violations so tests can assert zero.
     cross_model: bool,
+    /// True if the batch mixed served-image shapes (ISSUE 9) — the batch
+    /// key's shape component makes this impossible by construction; the
+    /// collector counts violations so tests can assert zero.
+    cross_shape: bool,
 }
 
 /// Lane → collector events.
@@ -987,7 +1018,11 @@ fn prepare_host_batch(
     let mut x0 = pool.lease_dirty(b * n);
     let mut noises = pool.lease_dirty(b * steps * n);
     for (i, a) in reqs.iter().enumerate() {
-        debug_assert_eq!(a.req.batch_key(), (model, steps), "batcher groups by (model, steps)");
+        debug_assert_eq!(
+            a.req.batch_key(),
+            (model, steps, img_shape_hint(model)),
+            "batcher groups by (model, steps, shape)"
+        );
         let mut rng = Rng::new(a.req.seed());
         rng.normal_fill(&mut x0[i * n..(i + 1) * n]);
         for (r, t) in (0..steps).rev().enumerate() {
@@ -1406,8 +1441,11 @@ fn execute_batch(
         prep_us,
         ..
     } = pb;
-    let cross_model =
-        reqs.iter().any(|a| a.req.batch_key() != (ModelChoice::Unet, steps));
+    let key0 = (ModelChoice::Unet, steps, img_shape_hint(ModelChoice::Unet));
+    let cross_model = reqs.iter().any(|a| a.req.batch_key() != key0);
+    let cross_shape = reqs
+        .iter()
+        .any(|a| img_shape_hint(a.req.model()) != key0.2);
     // Rotating image slabs, materialized lazily: each dispatch reads the
     // current images and writes a destination slab, then the old current
     // becomes the next destination — in-place ping-pong instead of a
@@ -1424,6 +1462,37 @@ fn execute_batch(
             let mut dispatches = 0usize;
             let mut batch_items = 0usize;
             let mut done = 0usize;
+            // Fused resident-x scan (ISSUE 9): one engine call covers
+            // every timestep, the images staying hot in a single slab —
+            // no per-chunk noise re-gather, no slab ping-pong. The
+            // engine beats the pulse per step (at least as often as the
+            // chunked loop's per-chunk beat), and deadlines are
+            // unchanged: they are only checked at batch formation, and
+            // in-flight work always ran to completion. Ok(false) means
+            // the executor cannot scan natively (a compiled PJRT
+            // artifact answers for this name) — reclaim and fall
+            // through to the chunked loop below, which is bit-identical.
+            if ctx.resident {
+                let mut dst = pool.lease_tensor_dirty(&x0.shape);
+                let d = BatchDispatch {
+                    batch: b,
+                    steps,
+                    x: &x0,
+                    t_embs: &t_embs,
+                    coeffs: &coeffs,
+                    noises: &noises,
+                };
+                if exe.run_scan_resident(&ctx.artifact, &d, prepared, &mut dst, &|| {
+                    ctx.pulse.beat()
+                })? {
+                    cur = Some(dst);
+                    dispatches = 1;
+                    batch_items = b;
+                    done = steps;
+                } else {
+                    pool.reclaim(dst);
+                }
+            }
             while done < steps {
                 let c = chunk.min(steps - done);
                 // the dispatch fully overwrites its destination, so the
@@ -1542,6 +1611,7 @@ fn execute_batch(
         pool: pool.stats(),
         model: ModelChoice::Unet,
         cross_model,
+        cross_shape,
     }));
 }
 
@@ -1569,6 +1639,9 @@ fn execute_classify_batch(
         reqs, x0, prep_us, ..
     } = pb;
     let cross_model = reqs.iter().any(|a| a.req.model() != model);
+    let cross_shape = reqs
+        .iter()
+        .any(|a| img_shape_hint(a.req.model()) != img_shape_hint(model));
     let unwound = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<TensorBuf>> {
         if let Some(msg) = &inject_panic {
             panic!("{}", msg);
@@ -1633,6 +1706,7 @@ fn execute_classify_batch(
         pool: pool.stats(),
         model,
         cross_model,
+        cross_shape,
     }));
 }
 
@@ -1941,6 +2015,7 @@ fn run_request_lane(
                         pool: PoolStats::default(),
                         model,
                         cross_model: false,
+                        cross_shape: false,
                     }));
                 }
                 Err(e) => {
@@ -1991,6 +2066,15 @@ fn worker_setup(
 }
 
 fn worker_main(ctx: WorkerCtx, queue: Arc<AdmissionQueue>, res_tx: Sender<LaneEvent>) {
+    // NUMA pinning (ISSUE 9, best-effort): pin this lane thread to a
+    // node's full CPU set, lanes spread round-robin across nodes. The
+    // mask is inherited by every thread the lane spawns afterwards —
+    // the host-prep stage and the native engine's fanout children stay
+    // on the lane's node, next to the slabs they touch. A refused mask
+    // (non-Linux, sandbox) leaves the lane unpinned; bits never change.
+    if ctx.pin_lanes {
+        let _ = crate::util::affinity::CoreMap::detect().pin_to_node(ctx.worker);
+    }
     // Setup (PJRT compilation can take seconds and varies per thread)
     // happens BEFORE the barrier; every worker then reaches the line
     // exactly once, success or not, so the barrier cannot deadlock and
@@ -2055,6 +2139,9 @@ fn collector_main(rx: Receiver<LaneEvent>, live: Arc<Mutex<SessionLive>>) {
                 }
                 if m.cross_model {
                     l.metrics.cross_model_batches += 1;
+                }
+                if m.cross_shape {
+                    l.metrics.cross_shape_batches += 1;
                 }
                 if let Some(p) = l.worker_pools.get_mut(m.worker) {
                     *p = m.pool;
@@ -2431,6 +2518,8 @@ impl DiffusionServer {
                 pipeline: cfg.pipeline,
                 chunk: cfg.chunk,
                 pooled: cfg.pooled,
+                resident: cfg.resident,
+                pin_lanes: cfg.pin_lanes,
                 faults: faults.clone(),
                 pulse: Arc::clone(&pulse),
                 classify: Arc::clone(&self.classify),
@@ -2635,7 +2724,7 @@ mod tests {
                     .collect::<std::collections::HashSet<_>>()
                     .len(),
                 1,
-                "a batch must hold exactly one (model, steps) key"
+                "a batch must hold exactly one (model, steps, shape) key"
             );
             batches.push((
                 b[0].req.model(),
@@ -2651,6 +2740,73 @@ mod tests {
             ],
             "oldest front ticket picks the lane; same-model requests coalesce"
         );
+    }
+
+    #[test]
+    fn batch_key_includes_image_shape() {
+        // ISSUE 9: the batch key is (model, steps, shape). The shape
+        // component is the canonical served [c, h, w] per model, so the
+        // U-net's diffusion images can never share a batch slab with
+        // the classifiers' RGB inputs even if the model/steps ever
+        // collided.
+        let unet: InferenceRequest = req(0, 3).into();
+        let resnet: InferenceRequest =
+            ClassifyRequest::new(1, 1, ModelChoice::Resnet18).into();
+        let vgg: InferenceRequest = ClassifyRequest::new(2, 2, ModelChoice::Vgg16).into();
+        let u = UnetConfig::default();
+        let (_, _, unet_shape) = unet.batch_key();
+        assert_eq!(unet_shape, (u.img_channels, u.img, u.img));
+        let (_, _, r_shape) = resnet.batch_key();
+        let (_, _, v_shape) = vgg.batch_key();
+        assert_eq!(r_shape, (3, CLASSIFY_IMG, CLASSIFY_IMG));
+        assert_eq!(r_shape, v_shape, "both classifiers serve the same input shape");
+        assert_ne!(
+            unet_shape, r_shape,
+            "the U-net and the classifiers serve different shapes"
+        );
+    }
+
+    #[test]
+    fn collector_counts_cross_shape_batches() {
+        // Mirrors the cross_model_batches regression (ISSUE 7 → 9): a
+        // WorkerMsg flagged cross_shape must surface in the session
+        // metrics, and unflagged ones must not.
+        let live = Arc::new(Mutex::new(SessionLive {
+            metrics: {
+                let mut m = ServeMetrics::new();
+                m.per_worker_requests = vec![0; 1];
+                m
+            },
+            worker_pools: vec![PoolStats::default(); 1],
+        }));
+        let (tx, rx) = channel::<LaneEvent>();
+        let live2 = Arc::clone(&live);
+        let collector = std::thread::spawn(move || collector_main(rx, live2));
+        for cross_shape in [false, true, true] {
+            tx.send(LaneEvent::Batch(WorkerMsg {
+                worker: 0,
+                requests: 1,
+                steps_done: 1,
+                service_us: vec![1.0],
+                e2e_us: vec![1.0],
+                step_us: vec![1.0],
+                host_prep_us: 0.0,
+                dispatches: 1,
+                batch_items: 1,
+                stalled: false,
+                pool: PoolStats::default(),
+                model: ModelChoice::Unet,
+                cross_model: false,
+                cross_shape,
+            }))
+            .unwrap();
+        }
+        drop(tx);
+        collector.join().unwrap();
+        let l = live.lock().unwrap();
+        assert_eq!(l.metrics.cross_shape_batches, 2);
+        assert_eq!(l.metrics.cross_model_batches, 0);
+        assert_eq!(l.metrics.requests_done, 3);
     }
 
     #[test]

@@ -40,6 +40,7 @@ USAGE: sf-mmcn <subcommand> [options]
   serve     [--steps 50] [--requests 8] [--workers 2] [--fused]
             [--backend pjrt|native] [--native] [--batched] [--no-batch]
             [--max-batch 4] [--chunk 0] [--no-pipeline] [--no-pool]
+            [--resident] [--pin-lanes]
             [--queue-depth 64] [--deadline-ms 0] [--priorities 3]
             [--open-loop [--rate 8.0]] [--traffic \"ou:60:2:15\"]
             [--trace-out FILE] [--trace-in FILE] [--config file.toml]
@@ -193,6 +194,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("no-pool") {
         // per-batch-allocating baseline (ISSUE 4 comparison mode)
         cfg.pooled = false;
+    }
+    if args.flag("resident") {
+        // fused resident-x scan (ISSUE 9): whole timestep range in one
+        // engine call, images hot in one slab; bit-identical to chunked
+        cfg.resident = true;
+    }
+    if args.flag("pin-lanes") {
+        // best-effort NUMA pinning of the worker lanes (ISSUE 9)
+        cfg.pin_lanes = true;
     }
     cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     cfg.default_deadline_ms = args.get_u64("deadline-ms", cfg.default_deadline_ms)?;

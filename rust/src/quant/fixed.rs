@@ -7,7 +7,13 @@ pub const ONE: i16 = 1 << FRAC_BITS;
 
 /// A Q8.8 fixed-point value stored in an `i16`, as held in the chip's
 /// input/weight registers.
+///
+/// `repr(transparent)` guarantees a `&[Fixed]` has exactly the layout of
+/// a `&[i16]`, which is what lets the explicit-SIMD dot product
+/// (`util::simd`, `--features simd`) load lanes straight from the
+/// simulator's window slabs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[repr(transparent)]
 pub struct Fixed(pub i16);
 
 impl Fixed {

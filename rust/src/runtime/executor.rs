@@ -247,6 +247,35 @@ impl Executor {
         Ok(())
     }
 
+    /// Fused resident scan (ISSUE 9): run the *entire* `steps` range of a
+    /// batched dispatch in one engine call, with `beat` invoked per step
+    /// for heartbeat liveness. Only the native surrogate can interleave
+    /// host callbacks with execution, so this returns `Ok(true)` only
+    /// when a native engine answered for `name` *and* no compiled
+    /// executable shadows it; `Ok(false)` sends the caller down the
+    /// chunked dispatch loop (which is how compiled artifacts execute).
+    /// Bit-identical to chunked execution of the same dispatch.
+    pub fn run_scan_resident(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+        out: &mut TensorBuf,
+        beat: &(dyn Fn() + Sync),
+    ) -> Result<bool> {
+        let stacked_name = format!("{name}__b{}", d.batch);
+        if self.executables.contains_key(&stacked_name) || self.executables.contains_key(name) {
+            return Ok(false);
+        }
+        if let Some(engine) = self.natives.get(name) {
+            out.shape.clone_from(&d.x.shape);
+            out.data.resize(d.x.len(), 0.0);
+            engine.run_scan_resident(d, &prepared.host, &mut out.data, beat)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
     /// Classification entry point (ISSUE 7): `B` stacked images →
     /// `[B, classes]` logits via the registered [`NativeClassify`]
     /// surrogate (always native; see [`Executor::register_classifier`]).

@@ -25,7 +25,11 @@ mod tensor_buf;
 pub use artifact::{ArtifactSpec, ArtifactStore};
 #[cfg(feature = "pjrt")]
 pub use executor::{Executor, PreparedInputs};
-pub use native::{BatchDispatch, NativeClassify, NativeDenoise};
+pub use native::{
+    classify_row_scalar, step_kernel_scalar, BatchDispatch, NativeClassify, NativeDenoise,
+};
+#[cfg(feature = "simd")]
+pub use native::{classify_row_simd, step_kernel_simd};
 pub use pool::{BufferPool, PoolStats};
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{Executor, PreparedInputs};

@@ -83,6 +83,153 @@ pub struct BatchDispatch<'a> {
     pub noises: &'a TensorBuf,
 }
 
+/// The 31-entry position table shared by every step-kernel variant.
+#[inline]
+fn step_pos_table() -> [f32; 31] {
+    let mut pos = [0.0f32; 31];
+    for (k, p) in pos.iter_mut().enumerate() {
+        *p = (k as f32) * 0.021 - 0.31;
+    }
+    pos
+}
+
+/// One reverse DDPM step, in place — the exact scalar kernel, always
+/// compiled. This is the default build's only step path and the
+/// reference the `simd` feature's property suite compares against.
+///
+/// ISSUE 4: chunked 8-wide over bounds-check-free slice pairs so the
+/// non-transcendental arithmetic autovectorizes; the per-element
+/// expression tree (and therefore every output bit) is unchanged from
+/// the original scalar loop.
+pub fn step_kernel_scalar(
+    x: &mut [f32],
+    t_emb: &[f32],
+    c: (f32, f32, f32),
+    noise: &[f32],
+    g: (f32, f32),
+) {
+    const W: usize = 8;
+    const P: usize = 31;
+    let e = t_emb.iter().copied().sum::<f32>() / t_emb.len().max(1) as f32;
+    let (c1, c2, sigma) = c;
+    let (g0, g1) = g;
+    let bias = g1 * e;
+    let pos = step_pos_table();
+    let main = x.len() / W * W;
+    let (xh, xt) = x.split_at_mut(main);
+    let (nh, nt) = noise.split_at(main);
+    for (ci, (xc, nc)) in xh
+        .chunks_exact_mut(W)
+        .zip(nh.chunks_exact(W))
+        .enumerate()
+    {
+        let base = ci * W;
+        for j in 0..W {
+            let xi = xc[j];
+            let eps = (g0 * xi + bias + pos[(base + j) % P]).tanh();
+            xc[j] = c1 * (xi - c2 * eps) + sigma * nc[j];
+        }
+    }
+    for (j, xi) in xt.iter_mut().enumerate() {
+        let v = *xi;
+        let eps = (g0 * v + bias + pos[(main + j) % P]).tanh();
+        *xi = c1 * (v - c2 * eps) + sigma * nt[j];
+    }
+}
+
+/// The `simd` build's step kernel: same preamble (`bias = g1·mean(emb)`,
+/// position table) feeding the explicit-SIMD body in
+/// [`crate::util::simd::step_kernel`]. Differs from
+/// [`step_kernel_scalar`] only through the polynomial tanh — a bounded
+/// ULP-level drift, tested by `tests/kernel_equiv.rs`.
+#[cfg(feature = "simd")]
+pub fn step_kernel_simd(
+    x: &mut [f32],
+    t_emb: &[f32],
+    c: (f32, f32, f32),
+    noise: &[f32],
+    g: (f32, f32),
+) {
+    let e = t_emb.iter().copied().sum::<f32>() / t_emb.len().max(1) as f32;
+    let (c1, c2, sigma) = c;
+    let (g0, g1) = g;
+    let bias = g1 * e;
+    let pos = step_pos_table();
+    crate::util::simd::step_kernel(x, noise, &pos, g0, bias, c1, c2, sigma);
+}
+
+/// The 31-entry rotating weight table shared by the classify kernels.
+#[inline]
+fn classify_wtab() -> [f32; 31] {
+    let mut wtab = [0.0f32; 31];
+    for (k, w) in wtab.iter_mut().enumerate() {
+        *w = (k as f32) * 0.017 - 0.26;
+    }
+    wtab
+}
+
+/// One image → `classes` logits — the exact scalar classify kernel,
+/// always compiled (see [`NativeClassify::forward_row`] for semantics).
+pub fn classify_row_scalar(
+    x: &[f32],
+    g: (f32, f32),
+    passes: usize,
+    classes: usize,
+    logits: &mut [f32],
+) {
+    const P: usize = 31;
+    let (g0, g1) = g;
+    let wtab = classify_wtab();
+    let k_n = classes;
+    let mut acc = vec![0.0f64; k_n];
+    for p in 0..passes {
+        let rot = p * 7 + 1;
+        for (i, &v) in x.iter().enumerate() {
+            let w = wtab[(i * rot + p) % P];
+            acc[(i + p) % k_n] += (v * w) as f64;
+        }
+    }
+    classify_head(&acc, x.len(), passes, g0, g1, &wtab, logits);
+}
+
+/// The `simd` build's classify kernel: vectorized products, identical
+/// f64 accumulation order — **bit-identical** to
+/// [`classify_row_scalar`] (asserted by `tests/kernel_equiv.rs`).
+#[cfg(feature = "simd")]
+pub fn classify_row_simd(
+    x: &[f32],
+    g: (f32, f32),
+    passes: usize,
+    classes: usize,
+    logits: &mut [f32],
+) {
+    let (g0, g1) = g;
+    let wtab = classify_wtab();
+    let mut acc = vec![0.0f64; classes];
+    crate::util::simd::classify_accumulate(x, &wtab, passes, classes, &mut acc);
+    classify_head(&acc, x.len(), passes, g0, g1, &wtab, logits);
+}
+
+/// The bounded tanh head shared by both classify kernels: normalize the
+/// per-class accumulators to O(1), mix with the parameter digest.
+fn classify_head(
+    acc: &[f64],
+    n: usize,
+    passes: usize,
+    g0: f32,
+    g1: f32,
+    wtab: &[f32; 31],
+    logits: &mut [f32],
+) {
+    // acc holds ~n*passes/k_n products of O(0.1) terms; normalize to
+    // O(1) before the bounded head so logits stay discriminative
+    let norm = (acc.len() as f64) / (n.max(1) as f64 * passes as f64);
+    for (k, l) in logits.iter_mut().enumerate() {
+        let a = (acc[k] * norm) as f32;
+        *l = (g0 * a * 8.0 + g1 * wtab[k % 31]).tanh();
+    }
+}
+
 /// The surrogate engine for one registered artifact name.
 #[derive(Debug, Clone)]
 pub struct NativeDenoise {
@@ -111,44 +258,15 @@ impl NativeDenoise {
     /// is bounded, so the served images stay bounded like a trained
     /// denoiser's; the update itself is the exact DDPM rule.
     ///
-    /// ISSUE 4: rewritten as a chunked 8-wide inner loop over
-    /// bounds-check-free slice pairs so the non-transcendental arithmetic
-    /// autovectorizes; the per-element expression tree (and therefore
-    /// every output bit) is unchanged from the original scalar loop —
-    /// `pos` values come from a table of the exact same
-    /// `((i % 31) as f32) * 0.021 - 0.31` expressions, and the
-    /// loop-invariant `g1 * e` product is the identical f32 op.
+    /// Default build dispatches the exact scalar kernel
+    /// ([`step_kernel_scalar`]); `--features simd` swaps in the
+    /// explicit-SIMD polynomial-tanh path ([`step_kernel_simd`], bounded
+    /// ULP drift, see EXPERIMENTS.md §Kernels).
     fn step_into(x: &mut [f32], t_emb: &[f32], c: (f32, f32, f32), noise: &[f32], g: (f32, f32)) {
-        const W: usize = 8;
-        const P: usize = 31;
-        let e = t_emb.iter().copied().sum::<f32>() / t_emb.len().max(1) as f32;
-        let (c1, c2, sigma) = c;
-        let (g0, g1) = g;
-        let bias = g1 * e;
-        let mut pos = [0.0f32; P];
-        for (k, p) in pos.iter_mut().enumerate() {
-            *p = (k as f32) * 0.021 - 0.31;
-        }
-        let main = x.len() / W * W;
-        let (xh, xt) = x.split_at_mut(main);
-        let (nh, nt) = noise.split_at(main);
-        for (ci, (xc, nc)) in xh
-            .chunks_exact_mut(W)
-            .zip(nh.chunks_exact(W))
-            .enumerate()
-        {
-            let base = ci * W;
-            for j in 0..W {
-                let xi = xc[j];
-                let eps = (g0 * xi + bias + pos[(base + j) % P]).tanh();
-                xc[j] = c1 * (xi - c2 * eps) + sigma * nc[j];
-            }
-        }
-        for (j, xi) in xt.iter_mut().enumerate() {
-            let v = *xi;
-            let eps = (g0 * v + bias + pos[(main + j) % P]).tanh();
-            *xi = c1 * (v - c2 * eps) + sigma * nt[j];
-        }
+        #[cfg(not(feature = "simd"))]
+        step_kernel_scalar(x, t_emb, c, noise, g);
+        #[cfg(feature = "simd")]
+        step_kernel_simd(x, t_emb, c, noise, g);
     }
 
     /// Step-artifact semantics: `dynamic = [x, t_emb, c1, c2, sigma, noise]`.
@@ -310,9 +428,52 @@ impl NativeDenoise {
         Ok(n)
     }
 
+    /// Fused all-timesteps resident scan (ISSUE 9): identical math to
+    /// [`NativeDenoise::run_batched_into`] — each request's image stays
+    /// hot in the `out` slab across the whole reverse trajectory, with
+    /// the full noise tensor consumed in place (no per-chunk re-gather or
+    /// slab ping-pong at the serving layer) — plus a per-step `beat`
+    /// callback so the lane keeps publishing heartbeat liveness with the
+    /// same cadence the chunked path gets from per-chunk dispatches.
+    /// Beats may arrive from any fanout thread; `ShardPulse` counts them
+    /// relaxed, so ordering is irrelevant.
+    pub fn run_scan_resident(
+        &self,
+        d: &BatchDispatch,
+        params: &[TensorBuf],
+        out: &mut [f32],
+        beat: &(dyn Fn() + Sync),
+    ) -> Result<()> {
+        let n = self.validate_batched(d)?;
+        if out.len() != d.batch * n {
+            bail!(
+                "resident scan: out slab {} != B*{n} (B = {})",
+                out.len(),
+                d.batch
+            );
+        }
+        out.copy_from_slice(&d.x.data);
+        self.denoise_rows_with(d, params, out, Some(beat));
+        Ok(())
+    }
+
     /// The batched row kernel: `out` must already be seeded with the
     /// stacked input images (validated by the entry points above).
     fn denoise_rows(&self, d: &BatchDispatch, params: &[TensorBuf], out: &mut [f32]) {
+        self.denoise_rows_with(d, params, out, None);
+    }
+
+    /// [`NativeDenoise::denoise_rows`] with an optional per-step liveness
+    /// callback (the resident scan's heartbeat). The callback sits
+    /// outside the per-element arithmetic, so `beat: None` and
+    /// `beat: Some(..)` produce bit-identical slabs.
+    fn denoise_rows_with(
+        &self,
+        d: &BatchDispatch,
+        params: &[TensorBuf],
+        out: &mut [f32],
+        beat: Option<&(dyn Fn() + Sync)>,
+    ) {
         let n = self.pixels();
         let (b, steps) = (d.batch, d.steps);
         let g = Self::digest(params);
@@ -327,6 +488,9 @@ impl NativeDenoise {
                 );
                 let noise = &d.noises.data[(i * steps + r) * n..(i * steps + r + 1) * n];
                 Self::step_into(x, emb, c, noise, g);
+                if let Some(beat) = beat {
+                    beat();
+                }
             }
         };
         let threads = fanout_threads(b, steps * n);
@@ -394,28 +558,12 @@ impl NativeClassify {
     /// accumulator then maps through a bounded tanh head mixed with the
     /// parameter digest. Fixed sequential order — bit-stable everywhere.
     fn forward_row(&self, x: &[f32], g: (f32, f32), logits: &mut [f32]) {
-        const P: usize = 31;
-        let (g0, g1) = g;
-        let mut wtab = [0.0f32; P];
-        for (k, w) in wtab.iter_mut().enumerate() {
-            *w = (k as f32) * 0.017 - 0.26;
-        }
-        let k_n = self.classes;
-        let mut acc = vec![0.0f64; k_n];
-        for p in 0..self.passes {
-            let rot = p * 7 + 1;
-            for (i, &v) in x.iter().enumerate() {
-                let w = wtab[(i * rot + p) % P];
-                acc[(i + p) % k_n] += (v * w) as f64;
-            }
-        }
-        // acc holds ~n*passes/k_n products of O(0.1) terms; normalize to
-        // O(1) before the bounded head so logits stay discriminative
-        let norm = (k_n as f64) / (x.len().max(1) as f64 * self.passes as f64);
-        for (k, l) in logits.iter_mut().enumerate() {
-            let a = (acc[k] * norm) as f32;
-            *l = (g0 * a * 8.0 + g1 * wtab[k % P]).tanh();
-        }
+        #[cfg(not(feature = "simd"))]
+        classify_row_scalar(x, g, self.passes, self.classes, logits);
+        // the simd classify path is bit-identical (same products, same
+        // accumulation order), so this dispatch never changes served bits
+        #[cfg(feature = "simd")]
+        classify_row_simd(x, g, self.passes, self.classes, logits);
     }
 
     /// Shape/size validation shared by the batched entry points; returns
@@ -499,8 +647,21 @@ impl NativeClassify {
 /// How many threads to fan a batched dispatch across: bounded by the
 /// hardware, the row count, and a minimum per-thread workload so small
 /// dispatches stay on the calling thread (spawning costs ~tens of µs).
+///
+/// `SF_MMCN_FANOUT_THREADS=<n>` overrides the policy outright (clamped
+/// to 1..=64) — the kernel-equivalence suite uses it to prove the fanout
+/// is bit-identical at forced thread counts, and operators can use it to
+/// pin a sweep's parallelism. Read per call (it's once per dispatch, not
+/// per element) so tests can vary it within one process.
 fn fanout_threads(batch: usize, work_per_row: usize) -> usize {
     const MIN_WORK_PER_THREAD: usize = 1 << 15;
+    if let Ok(v) = std::env::var("SF_MMCN_FANOUT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(64);
+            }
+        }
+    }
     if batch < 2 {
         return 1;
     }

@@ -129,6 +129,30 @@ impl Executor {
         )
     }
 
+    /// Fused resident scan (ISSUE 9): run the *entire* `steps` range of
+    /// a batched dispatch in one engine call, with `beat` invoked per
+    /// step for heartbeat liveness. Returns `Ok(true)` when a native
+    /// engine executed it; `Ok(false)` when the artifact has no native
+    /// engine, in which case the caller falls back to the chunked
+    /// dispatch loop (the PJRT artifact path). Bit-identical to chunked
+    /// execution of the same dispatch.
+    pub fn run_scan_resident(
+        &self,
+        name: &str,
+        d: &BatchDispatch,
+        prepared: &PreparedInputs,
+        out: &mut TensorBuf,
+        beat: &(dyn Fn() + Sync),
+    ) -> Result<bool> {
+        if let Some(engine) = self.natives.get(name) {
+            out.shape.clone_from(&d.x.shape);
+            out.data.resize(d.x.len(), 0.0);
+            engine.run_scan_resident(d, &prepared.tensors, &mut out.data, beat)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
     /// Classification entry point (ISSUE 7): `B` stacked images →
     /// `[B, classes]` logits via the registered [`NativeClassify`]
     /// surrogate. Classification always executes natively — there is no

@@ -24,9 +24,28 @@ pub fn count_zeros(window: &[Fixed]) -> u64 {
 /// Q8.8 x Q8.8 products summed into the Q16.16 accumulator in tap order.
 /// Zero activations contribute zero products, so the result is identical
 /// with or without the zero-gate unit.
+///
+/// The default build runs the scalar accumulator; `--features simd`
+/// dispatches the explicit 8-lane path (`util::simd::dot_wide_fixed`).
+/// Integer addition is associative, so both are **bit-exact** — the
+/// simulator's goldens never move (asserted by `tests/kernel_equiv.rs`).
 #[inline]
 pub fn dot_wide(window: &[Fixed], weights: &[Fixed]) -> i64 {
     debug_assert_eq!(window.len(), weights.len());
+    #[cfg(feature = "simd")]
+    {
+        crate::util::simd::dot_wide_fixed(window, weights)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        dot_wide_scalar(window, weights)
+    }
+}
+
+/// The scalar reference accumulator behind [`dot_wide`], kept public so
+/// the kernel-equivalence suite can pin the SIMD path against it.
+#[inline]
+pub fn dot_wide_scalar(window: &[Fixed], weights: &[Fixed]) -> i64 {
     let mut acc = 0i64;
     for (&x, &w) in window.iter().zip(weights) {
         acc += x.mul_wide(w) as i64;

@@ -1,0 +1,217 @@
+//! Best-effort NUMA/affinity-aware lane pinning (ISSUE 9).
+//!
+//! The serving lanes (`coordinator/server.rs`) and their `fanout_threads`
+//! children are plain OS threads; on multi-socket hosts the scheduler is
+//! free to bounce a lane — and the image slab it keeps resident — across
+//! NUMA nodes between timesteps, which costs remote-memory latency
+//! exactly on the hot path the resident scan just made contiguous.
+//!
+//! [`CoreMap`] reads the host's node → CPU topology from
+//! `/sys/devices/system/node/node*/cpulist` (falling back to one node
+//! spanning every CPU when the sysfs tree is absent), and
+//! [`CoreMap::pin_to_node`] pins the *calling thread* to a node's full
+//! CPU set via `sched_setaffinity(2)`. Pinning to the whole node — not a
+//! single CPU — matters: the lane's fanout children inherit the mask, so
+//! they still spread across the node's cores instead of serializing on
+//! one.
+//!
+//! Everything here is best-effort by contract: on non-Linux hosts, in
+//! restricted sandboxes (seccomp denying the syscall), or on malformed
+//! sysfs, every call degrades to a no-op `false` and serving proceeds
+//! unpinned. Affinity never changes served bits — it only moves threads.
+
+/// Maximum CPUs representable in the affinity mask (16 × 64 = 1024).
+const MASK_WORDS: usize = 16;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// glibc wrapper for the Linux syscall; the crate already links libc
+    /// through std, so no new dependency is involved.
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+}
+
+/// The host's node → CPU-list topology, used to spread serving lanes
+/// round-robin across NUMA nodes.
+#[derive(Debug, Clone)]
+pub struct CoreMap {
+    /// CPU ids per node, in node order. Never empty (fallback: one node
+    /// holding `0..available_parallelism`).
+    nodes: Vec<Vec<usize>>,
+}
+
+impl CoreMap {
+    /// Detect the host topology. Infallible: absent/odd sysfs degrades to
+    /// a single node covering every schedulable CPU.
+    pub fn detect() -> Self {
+        Self::from_sysfs("/sys/devices/system/node")
+    }
+
+    /// Detection against an arbitrary sysfs root (tests point this at a
+    /// fixture directory).
+    pub fn from_sysfs(root: &str) -> Self {
+        let mut nodes = Vec::new();
+        // node directories are not guaranteed to list in numeric order
+        let mut ids = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(root) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if let Some(id) = name
+                    .strip_prefix("node")
+                    .and_then(|s| s.parse::<usize>().ok())
+                {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        for id in ids {
+            let path = format!("{root}/node{id}/cpulist");
+            if let Ok(list) = std::fs::read_to_string(&path) {
+                let cpus = parse_cpulist(&list);
+                if !cpus.is_empty() {
+                    nodes.push(cpus);
+                }
+            }
+        }
+        if nodes.is_empty() {
+            let n = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1);
+            nodes.push((0..n).collect());
+        }
+        Self { nodes }
+    }
+
+    /// Number of NUMA nodes detected (≥ 1).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The CPU ids of node `node % node_count` (round-robin indexing, so
+    /// callers can pass a raw lane index).
+    pub fn node_cpus(&self, node: usize) -> &[usize] {
+        &self.nodes[node % self.nodes.len()]
+    }
+
+    /// Pin the calling thread (and, by mask inheritance, every thread it
+    /// spawns afterwards) to the full CPU set of node
+    /// `node % node_count`. Returns whether the kernel accepted the mask;
+    /// `false` (unsupported OS, denied syscall, out-of-range CPUs) means
+    /// the thread simply stays unpinned.
+    pub fn pin_to_node(&self, node: usize) -> bool {
+        pin_to_cpus(self.node_cpus(node))
+    }
+}
+
+/// Parse a sysfs `cpulist` string (`"0-15,32-47"`) into CPU ids.
+/// Malformed segments are skipped rather than failing the whole list.
+fn parse_cpulist(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in list.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi && hi - lo < 4096 {
+                    cpus.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus
+}
+
+/// Pin the calling thread to an explicit CPU set. Best-effort: returns
+/// `false` on unsupported hosts or when the kernel rejects the mask.
+pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+    if cpus.is_empty() || cpus.iter().any(|&c| c >= MASK_WORDS * 64) {
+        return false;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; MASK_WORDS];
+        for &c in cpus {
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+        // SAFETY: mask points at MASK_WORDS u64s and cpusetsize matches;
+        // pid 0 means "calling thread" for sched_setaffinity.
+        let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+        rc == 0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_grammar() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,6-7\n"), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpulist(" 2 "), vec![2]);
+        assert!(parse_cpulist("").is_empty());
+        assert!(parse_cpulist("garbage").is_empty());
+        // malformed segments are dropped, valid ones kept
+        assert_eq!(parse_cpulist("x-y,3"), vec![3]);
+        // inverted and absurd ranges are rejected
+        assert!(parse_cpulist("7-3").is_empty());
+        assert!(parse_cpulist("0-99999999").is_empty());
+    }
+
+    #[test]
+    fn detect_always_yields_a_node() {
+        let map = CoreMap::detect();
+        assert!(map.node_count() >= 1);
+        assert!(!map.node_cpus(0).is_empty());
+        // round-robin indexing wraps instead of panicking
+        assert_eq!(map.node_cpus(map.node_count()), map.node_cpus(0));
+    }
+
+    #[test]
+    fn missing_sysfs_falls_back_to_one_full_node() {
+        let map = CoreMap::from_sysfs("/nonexistent/sysfs/root");
+        assert_eq!(map.node_count(), 1);
+        let hw = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        assert_eq!(map.node_cpus(0).len(), hw);
+    }
+
+    #[test]
+    fn fixture_sysfs_topology_parsed_in_node_order() {
+        let dir = std::env::temp_dir().join(format!("sfmmcn-affinity-{}", std::process::id()));
+        for (node, list) in [(0usize, "0-1\n"), (1usize, "2,3\n"), (10usize, "4\n")] {
+            let d = dir.join(format!("node{node}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // a non-node directory must be ignored
+        std::fs::create_dir_all(dir.join("possible")).unwrap();
+        let map = CoreMap::from_sysfs(dir.to_str().unwrap());
+        assert_eq!(map.node_count(), 3);
+        assert_eq!(map.node_cpus(0), &[0, 1]);
+        assert_eq!(map.node_cpus(1), &[2, 3]);
+        assert_eq!(map.node_cpus(2), &[4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // empty and out-of-range sets are refused without touching the OS
+        assert!(!pin_to_cpus(&[]));
+        assert!(!pin_to_cpus(&[usize::MAX]));
+        // pinning to the detected node 0 either succeeds or degrades to a
+        // no-op false — both are within contract; it must not panic
+        let map = CoreMap::detect();
+        let _ = map.pin_to_node(0);
+    }
+}

@@ -198,6 +198,26 @@ pub struct BenchRegression {
     pub ratio: f64,
 }
 
+impl BenchRegression {
+    /// One-line failure report: what regressed, by how much, and the
+    /// explicit measured-vs-baseline ratio. Absolute-rate rows only gate
+    /// once a non-provisional baseline arms them (ISSUE 9), and on an
+    /// armed gate the ratio is the first thing a triager wants — a 0.95x
+    /// is host noise to re-baseline away, a 0.3x is a real regression.
+    pub fn render(&self) -> String {
+        format!(
+            "REGRESSION {}: {} {:.3} -> {:.3} \
+             (measured/baseline ratio {:.2}x, {:.1}% of baseline)",
+            self.name,
+            self.metric,
+            self.baseline,
+            self.current,
+            self.ratio,
+            self.ratio * 100.0
+        )
+    }
+}
+
 /// Compare a fresh run against a baseline; returns (regressions, notes).
 ///
 /// * `speedup_vs_ref` columns compare directly — the ratio is measured
@@ -317,14 +337,7 @@ pub fn check_against_baseline(current: &BenchBaseline, baseline_path: &str, labe
         return;
     }
     for r in &regressions {
-        println!(
-            "REGRESSION {}: {} {:.3} -> {:.3} ({:.1}% of baseline)",
-            r.name,
-            r.metric,
-            r.baseline,
-            r.current,
-            r.ratio * 100.0
-        );
+        println!("{}", r.render());
     }
     std::process::exit(1);
 }
@@ -444,6 +457,28 @@ mod tests {
         let (regs, _) = compare_baselines(&base, &bad, 0.15);
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert_eq!(regs[0].metric, "speedup_vs_ref");
+    }
+
+    #[test]
+    fn armed_rate_gate_reports_ratio() {
+        // The absolute-rate gate only arms on non-provisional baselines
+        // (ISSUE 9 commits measured floors with provisional: false); an
+        // armed failure must carry the measured-vs-baseline ratio
+        // explicitly in its message.
+        let base = BenchBaseline::from_json(&fixture(false, 5.0, 1e9)).unwrap();
+        let bad = BenchBaseline::from_json(&fixture(false, 5.0, 2.5e8)).unwrap();
+        let (regs, _) = compare_baselines(&base, &bad, 0.15);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        let r = &regs[0];
+        assert_eq!(r.metric, "mac_rate_per_s");
+        assert!((r.ratio - 0.25).abs() < 1e-9, "ratio {}", r.ratio);
+        let msg = r.render();
+        assert!(msg.contains("measured/baseline ratio 0.25x"), "{msg}");
+        assert!(msg.contains("25.0% of baseline"), "{msg}");
+        // the identical drop against a provisional baseline stays disarmed
+        let prov = BenchBaseline::from_json(&fixture(true, 5.0, 1e9)).unwrap();
+        let (regs, _) = compare_baselines(&prov, &bad, 0.15);
+        assert!(regs.is_empty(), "{regs:?}");
     }
 
     #[test]

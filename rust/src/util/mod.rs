@@ -5,12 +5,15 @@
 //! criterion, proptest) are re-implemented here at the scale this project
 //! needs. Each submodule is small, tested, and dependency-free.
 
+pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod json_lite;
 pub mod pool;
 pub mod proptest_lite;
 pub mod rng;
+#[cfg(feature = "simd")]
+pub mod simd;
 pub mod stats;
 pub mod tensor;
 

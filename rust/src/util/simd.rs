@@ -1,0 +1,488 @@
+//! Explicit-SIMD hot-path kernels (`--features simd`).
+//!
+//! Three kernels, each with a runtime-dispatched AVX2 path (stable
+//! `std::arch` x86_64 intrinsics) and a portable 8-lane fallback:
+//!
+//! * [`step_kernel`] — the f32x8 DDPM step update with a polynomial
+//!   `tanh` (the scalar kernel's dominant op is libm `tanhf`; the
+//!   rational approximation below is the speed win). **Bounded-ULP**:
+//!   the polynomial differs from libm `tanh` by a few ULP, so outputs
+//!   differ from the default build's within the bound documented and
+//!   tested in `tests/kernel_equiv.rs` / EXPERIMENTS.md §Kernels.
+//! * [`classify_accumulate`] — the classification sweep's
+//!   product-accumulate loop, vectorizing the f32 products while keeping
+//!   every f64 accumulation in the scalar kernel's exact order.
+//!   **Bit-identical** to the scalar sweep.
+//! * [`dot_wide_fixed`] — the simulator's widening Q8.8 MAC loop.
+//!   Integer addition is associative, so any lane order is
+//!   **bit-exact** with the scalar accumulator.
+//!
+//! The AVX2 and portable paths of the f32 kernels perform the *same*
+//! IEEE operations in the same per-lane order (explicit mul+add, no FMA
+//! contraction), so they are bit-identical to each other — "same build,
+//! different host" never changes served bits; only the default↔`simd`
+//! build boundary carries the ULP bound, and only for the step kernel.
+
+// The tanh coefficients are f64-precision literals rounded to f32 at
+// compile time (the standard Eigen/XLA constants); keep them verbatim so
+// the approximation is recognizable.
+#![allow(clippy::excessive_precision)]
+
+use crate::quant::Fixed;
+
+/// Clamp bound of the rational tanh approximation: beyond ±8 the f32
+/// tanh is exactly ±1 anyway, and the polynomial would diverge.
+const CLAMP: f32 = 7.99881172180175781;
+/// Below this magnitude the approximation returns `x` itself (tanh(x) ≈ x
+/// to f32 precision, and p/q loses accuracy in the denormal tail).
+const TINY: f32 = 0.0004;
+const A1: f32 = 4.89352455891786e-03;
+const A3: f32 = 6.37261928875436e-04;
+const A5: f32 = 1.48572235717979e-05;
+const A7: f32 = 5.12229709037114e-08;
+const A9: f32 = -8.60467152213735e-11;
+const A11: f32 = 2.00018790482477e-13;
+const A13: f32 = -2.76076847742355e-16;
+const B0: f32 = 4.89352518554385e-03;
+const B2: f32 = 2.26843463243900e-03;
+const B4: f32 = 1.18534705686654e-04;
+const B6: f32 = 1.19825839466702e-06;
+
+/// Cached AVX2 runtime detection (one CPUID, then an atomic load).
+#[cfg(target_arch = "x86_64")]
+fn avx2() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+/// Rational polynomial `tanh` (the Eigen/XLA f32 approximation): clamp
+/// to ±[`CLAMP`], odd 13th-order numerator over even 6th-order
+/// denominator, identity below [`TINY`]. Explicit mul+add (no FMA), so
+/// the AVX2 vector version computes bit-identical lanes.
+///
+/// Accuracy vs libm `tanhf`: within a few ULP everywhere (measured and
+/// asserted ≤ 8 ULP by the `kernel_equiv` property suite).
+#[inline]
+pub fn tanh_poly(x: f32) -> f32 {
+    let xc = x.min(CLAMP).max(-CLAMP);
+    let x2 = xc * xc;
+    let mut p = A13;
+    p = p * x2 + A11;
+    p = p * x2 + A9;
+    p = p * x2 + A7;
+    p = p * x2 + A5;
+    p = p * x2 + A3;
+    p = p * x2 + A1;
+    p *= xc;
+    let mut q = B6;
+    q = q * x2 + B4;
+    q = q * x2 + B2;
+    q = q * x2 + B0;
+    let r = p / q;
+    if xc.abs() < TINY {
+        xc
+    } else {
+        r
+    }
+}
+
+/// One DDPM reverse step over `x` in place, polynomial-tanh SIMD path:
+/// `x[i] = c1 * (x[i] - c2 * tanh_poly(g0 * x[i] + bias + pos[i % 31]))
+/// + sigma * noise[i]`. `bias = g1 * mean(t_emb)` is computed by the
+/// caller exactly as in the scalar kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn step_kernel(
+    x: &mut [f32],
+    noise: &[f32],
+    pos: &[f32; 31],
+    g0: f32,
+    bias: f32,
+    c1: f32,
+    c2: f32,
+    sigma: f32,
+) {
+    debug_assert_eq!(x.len(), noise.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: avx2() verified the CPU supports every intrinsic the
+        // target_feature fn uses; slices are plain &[f32]s of equal len.
+        unsafe { step_kernel_avx2(x, noise, pos, g0, bias, c1, c2, sigma) };
+        return;
+    }
+    step_kernel_portable(x, noise, pos, g0, bias, c1, c2, sigma);
+}
+
+/// Portable lane-wise body of [`step_kernel`]: 8-wide chunks of the
+/// exact per-lane IEEE ops the AVX2 path performs (autovectorizable),
+/// plus the scalar tail. Public so the equivalence suite can pin
+/// portable ≡ AVX2 bit-identity on hosts that have both.
+#[allow(clippy::too_many_arguments)]
+pub fn step_kernel_portable(
+    x: &mut [f32],
+    noise: &[f32],
+    pos: &[f32; 31],
+    g0: f32,
+    bias: f32,
+    c1: f32,
+    c2: f32,
+    sigma: f32,
+) {
+    const W: usize = 8;
+    const P: usize = 31;
+    let main = x.len() / W * W;
+    let (xh, xt) = x.split_at_mut(main);
+    let (nh, nt) = noise.split_at(main);
+    for (ci, (xc, nc)) in xh.chunks_exact_mut(W).zip(nh.chunks_exact(W)).enumerate() {
+        let base = ci * W;
+        for j in 0..W {
+            let xi = xc[j];
+            let eps = tanh_poly(g0 * xi + bias + pos[(base + j) % P]);
+            xc[j] = c1 * (xi - c2 * eps) + sigma * nc[j];
+        }
+    }
+    for (j, xi) in xt.iter_mut().enumerate() {
+        let v = *xi;
+        let eps = tanh_poly(g0 * v + bias + pos[(main + j) % P]);
+        *xi = c1 * (v - c2 * eps) + sigma * nt[j];
+    }
+}
+
+/// AVX2 vector tanh: the same clamp/poly/div/tiny-select sequence as
+/// [`tanh_poly`], eight lanes at a time, explicit mul+add (no FMA) so
+/// lanes match the portable path bit for bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tanh_avx2(x: std::arch::x86_64::__m256) -> std::arch::x86_64::__m256 {
+    use std::arch::x86_64::*;
+    let xc = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(CLAMP)), _mm256_set1_ps(-CLAMP));
+    let x2 = _mm256_mul_ps(xc, xc);
+    let mut p = _mm256_set1_ps(A13);
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A11));
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A9));
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A7));
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A5));
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A3));
+    p = _mm256_add_ps(_mm256_mul_ps(p, x2), _mm256_set1_ps(A1));
+    p = _mm256_mul_ps(p, xc);
+    let mut q = _mm256_set1_ps(B6);
+    q = _mm256_add_ps(_mm256_mul_ps(q, x2), _mm256_set1_ps(B4));
+    q = _mm256_add_ps(_mm256_mul_ps(q, x2), _mm256_set1_ps(B2));
+    q = _mm256_add_ps(_mm256_mul_ps(q, x2), _mm256_set1_ps(B0));
+    let r = _mm256_div_ps(p, q);
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let ax = _mm256_and_ps(xc, abs_mask);
+    let tiny = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, _mm256_set1_ps(TINY));
+    _mm256_blendv_ps(r, xc, tiny)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step_kernel_avx2(
+    x: &mut [f32],
+    noise: &[f32],
+    pos: &[f32; 31],
+    g0: f32,
+    bias: f32,
+    c1: f32,
+    c2: f32,
+    sigma: f32,
+) {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    const P: usize = 31;
+    let n = x.len();
+    let main = n / W * W;
+    let vg0 = _mm256_set1_ps(g0);
+    let vbias = _mm256_set1_ps(bias);
+    let vc1 = _mm256_set1_ps(c1);
+    let vc2 = _mm256_set1_ps(c2);
+    let vsigma = _mm256_set1_ps(sigma);
+    let mut base = 0usize;
+    while base < main {
+        // the 31-entry position table has no power-of-two period, so
+        // each 8-wide chunk gathers its lane constants scalar-side
+        let mut pl = [0.0f32; W];
+        for (j, p) in pl.iter_mut().enumerate() {
+            *p = pos[(base + j) % P];
+        }
+        let xv = _mm256_loadu_ps(x.as_ptr().add(base));
+        let nv = _mm256_loadu_ps(noise.as_ptr().add(base));
+        let t = _mm256_add_ps(
+            _mm256_add_ps(_mm256_mul_ps(vg0, xv), vbias),
+            _mm256_loadu_ps(pl.as_ptr()),
+        );
+        let eps = tanh_avx2(t);
+        let upd = _mm256_add_ps(
+            _mm256_mul_ps(vc1, _mm256_sub_ps(xv, _mm256_mul_ps(vc2, eps))),
+            _mm256_mul_ps(vsigma, nv),
+        );
+        _mm256_storeu_ps(x.as_mut_ptr().add(base), upd);
+        base += W;
+    }
+    for j in main..n {
+        let v = x[j];
+        let eps = tanh_poly(g0 * v + bias + pos[j % P]);
+        x[j] = c1 * (v - c2 * eps) + sigma * noise[j];
+    }
+}
+
+/// The classification sweep's accumulate loops with vectorized products:
+/// for every pass `p`, `acc[(i + p) % k_n] += (x[i] * wtab[(i * rot + p)
+/// % 31]) as f64` in increasing-`i` order — exactly the scalar kernel's
+/// products and accumulation order, so the result is **bit-identical**.
+/// The weight-table lookup is hoisted into a per-pass periodic sequence
+/// (`(i * rot + p) % 31` depends only on `i % 31`) and the f32 products
+/// are computed 8 lanes at a time.
+pub fn classify_accumulate(
+    x: &[f32],
+    wtab: &[f32; 31],
+    passes: usize,
+    k_n: usize,
+    acc: &mut [f64],
+) {
+    debug_assert_eq!(acc.len(), k_n);
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: avx2() verified CPU support; slices are plain f32/f64.
+        unsafe { classify_accumulate_avx2(x, wtab, passes, k_n, acc) };
+        return;
+    }
+    classify_accumulate_portable(x, wtab, passes, k_n, acc);
+}
+
+/// Per-pass periodic weight sequence: `wtab[(i * rot + p) % 31]` as a
+/// function of `i % 31`.
+fn pass_weights(wtab: &[f32; 31], p: usize) -> [f32; 31] {
+    let rot = p * 7 + 1;
+    let mut seq = [0.0f32; 31];
+    for (m, w) in seq.iter_mut().enumerate() {
+        *w = wtab[(m * rot + p) % 31];
+    }
+    seq
+}
+
+/// Portable body of [`classify_accumulate`] (public for the equivalence
+/// suite): identical products and accumulation order as the AVX2 path.
+pub fn classify_accumulate_portable(
+    x: &[f32],
+    wtab: &[f32; 31],
+    passes: usize,
+    k_n: usize,
+    acc: &mut [f64],
+) {
+    const W: usize = 8;
+    for p in 0..passes {
+        let seq = pass_weights(wtab, p);
+        let main = x.len() / W * W;
+        for (ci, xc) in x[..main].chunks_exact(W).enumerate() {
+            let base = ci * W;
+            let mut prod = [0.0f32; W];
+            for j in 0..W {
+                prod[j] = xc[j] * seq[(base + j) % 31];
+            }
+            for (j, &pr) in prod.iter().enumerate() {
+                acc[(base + j + p) % k_n] += pr as f64;
+            }
+        }
+        for (i, &v) in x.iter().enumerate().skip(main) {
+            acc[(i + p) % k_n] += (v * seq[i % 31]) as f64;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn classify_accumulate_avx2(
+    x: &[f32],
+    wtab: &[f32; 31],
+    passes: usize,
+    k_n: usize,
+    acc: &mut [f64],
+) {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    for p in 0..passes {
+        let seq = pass_weights(wtab, p);
+        let main = x.len() / W * W;
+        let mut base = 0usize;
+        while base < main {
+            let mut wl = [0.0f32; W];
+            for (j, w) in wl.iter_mut().enumerate() {
+                *w = seq[(base + j) % 31];
+            }
+            let prod = _mm256_mul_ps(
+                _mm256_loadu_ps(x.as_ptr().add(base)),
+                _mm256_loadu_ps(wl.as_ptr()),
+            );
+            let mut pr = [0.0f32; W];
+            _mm256_storeu_ps(pr.as_mut_ptr(), prod);
+            for (j, &v) in pr.iter().enumerate() {
+                acc[(base + j + p) % k_n] += v as f64;
+            }
+            base += W;
+        }
+        for (i, &v) in x.iter().enumerate().skip(main) {
+            acc[(i + p) % k_n] += (v * seq[i % 31]) as f64;
+        }
+    }
+}
+
+/// Widening Q8.8 dot product over [`Fixed`] slices: i16×i16 → i32
+/// products summed into i64. Integer addition is associative, so the
+/// SIMD lane order is **bit-exact** with the scalar MAC accumulator at
+/// every length.
+#[inline]
+pub fn dot_wide_fixed(window: &[Fixed], weights: &[Fixed]) -> i64 {
+    let n = window.len().min(weights.len());
+    // SAFETY: Fixed is repr(transparent) over i16, so a &[Fixed] prefix
+    // reinterprets as a &[i16] of the same length and alignment.
+    let a = unsafe { std::slice::from_raw_parts(window.as_ptr() as *const i16, n) };
+    let b = unsafe { std::slice::from_raw_parts(weights.as_ptr() as *const i16, n) };
+    dot_wide_i16(a, b)
+}
+
+/// [`dot_wide_fixed`] over raw i16 slices (equal lengths).
+#[inline]
+pub fn dot_wide_i16(a: &[i16], b: &[i16]) -> i64 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: avx2() verified CPU support; slices are equal-length.
+        return unsafe { dot_wide_avx2(a, b) };
+    }
+    dot_wide_portable(a, b)
+}
+
+/// Portable 8-lane body of [`dot_wide_i16`] (public for the equivalence
+/// suite): per-lane i64 partials summed at the end — autovectorizable,
+/// and exact regardless of order.
+pub fn dot_wide_portable(a: &[i16], b: &[i16]) -> i64 {
+    const W: usize = 8;
+    let main = a.len() / W * W;
+    let mut lanes = [0i64; W];
+    for (ca, cb) in a[..main].chunks_exact(W).zip(b[..main].chunks_exact(W)) {
+        for j in 0..W {
+            lanes[j] += (ca[j] as i32 * cb[j] as i32) as i64;
+        }
+    }
+    let mut acc: i64 = lanes.iter().sum();
+    for i in main..a.len() {
+        acc += (a[i] as i32 * b[i] as i32) as i64;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_wide_avx2(a: &[i16], b: &[i16]) -> i64 {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    let n = a.len();
+    let main = n / W * W;
+    // i32 products are widened to i64 lanes before accumulating:
+    // _mm256_madd_epi16 would be faster but pairs adjacent products in
+    // i32, and (i16::MIN)^2 * 2 overflows i32 — correctness first.
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i < main {
+        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        let prod = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(va), _mm256_cvtepi16_epi32(vb));
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+        acc = _mm256_add_epi64(acc, _mm256_add_epi64(lo, hi));
+        i += W;
+    }
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    while i < n {
+        s += (a[i] as i32 * b[i] as i32) as i64;
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ulp_diff(a: f32, b: f32) -> u32 {
+        let ia = a.to_bits() as i32;
+        let ib = b.to_bits() as i32;
+        // map to a monotonic integer line (sign-magnitude → offset)
+        let ma = if ia < 0 { i32::MIN.wrapping_sub(ia) } else { ia };
+        let mb = if ib < 0 { i32::MIN.wrapping_sub(ib) } else { ib };
+        ma.wrapping_sub(mb).unsigned_abs()
+    }
+
+    #[test]
+    fn tanh_poly_close_to_libm_on_a_dense_grid() {
+        let mut max_ulp = 0u32;
+        for i in -4000..=4000 {
+            let x = i as f32 * 0.0025; // [-10, 10]
+            let d = ulp_diff(tanh_poly(x), x.tanh());
+            max_ulp = max_ulp.max(d);
+        }
+        assert!(max_ulp <= 8, "tanh_poly drifted to {max_ulp} ULP from libm");
+        // saturation and symmetry
+        assert_eq!(tanh_poly(50.0), tanh_poly(CLAMP));
+        assert_eq!(tanh_poly(-50.0), -tanh_poly(50.0));
+        assert_eq!(tanh_poly(0.0), 0.0);
+        assert_eq!(tanh_poly(1e-5), 1e-5, "tiny inputs return x");
+    }
+
+    #[test]
+    fn dot_wide_matches_scalar_at_awkward_lengths() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 257] {
+            let a: Vec<Fixed> = (0..n).map(|i| Fixed((i as i32 * 37 - 900) as i16)).collect();
+            let b: Vec<Fixed> = (0..n).map(|i| Fixed((i as i32 * 61 - 700) as i16)).collect();
+            let mut want = 0i64;
+            for (x, w) in a.iter().zip(&b) {
+                want += x.mul_wide(*w) as i64;
+            }
+            assert_eq!(dot_wide_fixed(&a, &b), want, "n = {n}");
+            let ar: Vec<i16> = a.iter().map(|f| f.0).collect();
+            let br: Vec<i16> = b.iter().map(|f| f.0).collect();
+            assert_eq!(dot_wide_portable(&ar, &br), want, "portable n = {n}");
+        }
+    }
+
+    #[test]
+    fn dot_wide_extreme_values_do_not_overflow_lanes() {
+        // i16::MIN * i16::MIN is the worst single product; 1024 of them
+        // must survive (this is what rules out _mm256_madd_epi16)
+        let a = vec![Fixed(i16::MIN); 1024];
+        let b = vec![Fixed(i16::MIN); 1024];
+        let want = 1024i64 * (i16::MIN as i32 * i16::MIN as i32) as i64;
+        assert_eq!(dot_wide_fixed(&a, &b), want);
+    }
+
+    #[test]
+    fn step_kernel_auto_matches_portable_bitwise() {
+        let pos: [f32; 31] = std::array::from_fn(|k| (k as f32) * 0.021 - 0.31);
+        for n in [0usize, 1, 7, 8, 9, 31, 100] {
+            let x0: Vec<f32> = (0..n).map(|i| (i as f32) * 0.013 - 0.6).collect();
+            let noise: Vec<f32> = (0..n).map(|i| (i as f32) * 0.003 - 0.1).collect();
+            let mut a = x0.clone();
+            let mut b = x0.clone();
+            step_kernel(&mut a, &noise, &pos, 0.8, 0.05, 1.01, 0.05, 0.1);
+            step_kernel_portable(&mut b, &noise, &pos, 0.8, 0.05, 1.01, 0.05, 0.1);
+            assert_eq!(a, b, "AVX2 and portable lanes diverged at n = {n}");
+        }
+    }
+
+    #[test]
+    fn classify_accumulate_auto_matches_portable_bitwise() {
+        let wtab: [f32; 31] = std::array::from_fn(|k| (k as f32) * 0.017 - 0.26);
+        for n in [0usize, 1, 7, 8, 9, 31, 200] {
+            let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.11).sin() * 0.5).collect();
+            let mut a = vec![0.0f64; 10];
+            let mut b = vec![0.0f64; 10];
+            classify_accumulate(&x, &wtab, 3, 10, &mut a);
+            classify_accumulate_portable(&x, &wtab, 3, 10, &mut b);
+            assert_eq!(a, b, "classify accumulate diverged at n = {n}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! ISSUE 9 property suite: exactness contracts between the `--features
+//! simd` kernels and the always-compiled scalar references, at the
+//! awkward lengths where lane math goes wrong (empty, sub-width, one
+//! past a width boundary, the 31-entry table period, and page-scale
+//! slabs straddling the 8-wide main/tail split).
+//!
+//! The contracts under test (see docs/ARCHITECTURE.md exactness tiers):
+//!
+//! * step kernel — **bounded-ULP**: the polynomial tanh is the only
+//!   divergence from libm, so outputs agree within a small absolute
+//!   bound, and agree *bit for bit* when the tanh term is multiplied
+//!   out (`c2 = 0`), pinning every non-transcendental op to the same
+//!   IEEE expression tree.
+//! * classify kernel — **bit-identical**: vectorized products, scalar
+//!   accumulation order.
+//! * widening Q8.8 dot — **bit-exact**: integer addition is associative.
+//! * dispatch vs portable — the runtime-dispatched entry points must
+//!   match their portable bodies bit for bit on every host (on AVX2
+//!   machines this pins the intrinsics path; elsewhere it is trivially
+//!   the same code).
+//!
+//! The companion fanout thread-count suite lives in
+//! `tests/resident_e2e.rs` so it also runs in default (non-simd) builds.
+
+#![cfg(feature = "simd")]
+
+use sf_mmcn::quant::Fixed;
+use sf_mmcn::runtime::{
+    classify_row_scalar, classify_row_simd, step_kernel_scalar, step_kernel_simd,
+};
+use sf_mmcn::util::simd;
+
+/// Lengths that stress every lane-handling edge: empty, scalar tail
+/// only, exactly one 8-wide chunk, chunk+1, the 31-entry table period,
+/// and large slabs around the 8-wide boundary (4096 = 512 chunks).
+const LENS: &[usize] = &[0, 1, 7, 8, 9, 31, 4095, 4096, 4097];
+
+/// Deterministic pseudo-image covering both signs and magnitudes O(1).
+fn image(n: usize, seed: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| seed + ((i as f32) * 0.0137).sin() * 1.7)
+        .collect()
+}
+
+fn noise(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32) * 0.0071).cos() * 0.4).collect()
+}
+
+fn t_emb() -> Vec<f32> {
+    (0..8).map(|i| (i as f32) * 0.1 - 0.25).collect()
+}
+
+/// Monotone integer ordering of f32s (negative values map below
+/// positives, ±0 coincide) so ULP distance is a subtraction.
+fn ord(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7fff_ffff) as i64)
+    } else {
+        b as i64
+    }
+}
+
+fn ulps(a: f32, b: f32) -> i64 {
+    (ord(a) - ord(b)).abs()
+}
+
+#[test]
+fn tanh_poly_within_8_ulp_of_libm() {
+    // Dense sweep across the full useful range (the approximation clamps
+    // near ±8, where f32 tanh is within a few ULP of ±1 anyway), plus
+    // the branch-boundary specials.
+    let mut worst = 0i64;
+    for i in -16000..=16000i32 {
+        let x = i as f32 * 0.00125;
+        let d = ulps(simd::tanh_poly(x), x.tanh());
+        worst = worst.max(d);
+        assert!(d <= 8, "tanh_poly({x}) off by {d} ULP");
+    }
+    for &x in &[
+        0.0f32,
+        -0.0,
+        1e-8,
+        -1e-8,
+        3e-4,
+        -3e-4,
+        5e-4,
+        7.99,
+        -7.99,
+        8.0,
+        -8.0,
+        20.0,
+        -20.0,
+        f32::MIN_POSITIVE,
+    ] {
+        let d = ulps(simd::tanh_poly(x), x.tanh());
+        assert!(d <= 8, "tanh_poly({x}) off by {d} ULP");
+    }
+    // the approximation is actually good, not just barely passing
+    assert!(worst <= 8, "worst-case drift {worst} ULP");
+}
+
+#[test]
+fn step_kernel_scalar_vs_simd_bounded_at_awkward_lengths() {
+    let emb = t_emb();
+    let c = (1.01f32, 0.4, 0.1);
+    let g = (0.9f32, 0.3);
+    for &n in LENS {
+        let nz = noise(n);
+        let mut a = image(n, 0.2);
+        let mut b = a.clone();
+        step_kernel_scalar(&mut a, &emb, c, &nz, g);
+        step_kernel_simd(&mut b, &emb, c, &nz, g);
+        assert_eq!(a.len(), b.len());
+        for (i, (&va, &vb)) in a.iter().zip(&b).enumerate() {
+            assert!(va.is_finite() && vb.is_finite(), "n={n} elem {i} not finite");
+            // the only divergence is the polynomial tanh (≤ 8 ULP of a
+            // value in [-1, 1]), scaled by c1*c2 — comfortably under
+            // 1e-5 in absolute terms for O(1) coefficients
+            assert!(
+                (va - vb).abs() <= 1e-5,
+                "n={n} elem {i}: scalar {va} vs simd {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn step_kernel_bit_identical_when_tanh_term_vanishes() {
+    // With c2 = 0 the tanh output is multiplied away and every remaining
+    // op (g0*x + bias + pos, c1*(x - 0) + sigma*noise) must follow the
+    // exact same IEEE expression tree in both builds — any reassociation
+    // or FMA contraction in the SIMD path shows up here as a bit flip.
+    let emb = t_emb();
+    let c = (1.01f32, 0.0, 0.1);
+    let g = (0.9f32, 0.3);
+    for &n in LENS {
+        let nz = noise(n);
+        let mut a = image(n, -0.3);
+        let mut b = a.clone();
+        step_kernel_scalar(&mut a, &emb, c, &nz, g);
+        step_kernel_simd(&mut b, &emb, c, &nz, g);
+        assert_eq!(a, b, "n={n}: non-tanh ops diverged between builds");
+    }
+}
+
+#[test]
+fn step_dispatch_matches_portable_bitwise() {
+    // The runtime-dispatched step_kernel (AVX2 where available) must be
+    // bit-identical to its portable body — "same build, different host"
+    // never changes served bits.
+    let pos = {
+        let mut p = [0.0f32; 31];
+        for (k, v) in p.iter_mut().enumerate() {
+            *v = (k as f32) * 0.021 - 0.31;
+        }
+        p
+    };
+    for &n in LENS {
+        let nz = noise(n);
+        let mut a = image(n, 0.45);
+        let mut b = a.clone();
+        simd::step_kernel(&mut a, &nz, &pos, 0.9, 0.12, 1.01, 0.4, 0.1);
+        simd::step_kernel_portable(&mut b, &nz, &pos, 0.9, 0.12, 1.01, 0.4, 0.1);
+        assert_eq!(a, b, "n={n}: dispatch and portable step paths diverged");
+    }
+}
+
+#[test]
+fn classify_scalar_vs_simd_bit_identical_at_awkward_lengths() {
+    let g = (0.9f32, 0.3);
+    for &n in LENS {
+        let x = image(n, 0.1);
+        for &passes in &[1usize, 3] {
+            let mut la = vec![0.0f32; 10];
+            let mut lb = vec![0.0f32; 10];
+            classify_row_scalar(&x, g, passes, 10, &mut la);
+            classify_row_simd(&x, g, passes, 10, &mut lb);
+            assert_eq!(la, lb, "n={n} passes={passes}: classify diverged");
+        }
+    }
+}
+
+#[test]
+fn classify_dispatch_matches_portable_bitwise() {
+    let wtab = {
+        let mut w = [0.0f32; 31];
+        for (k, v) in w.iter_mut().enumerate() {
+            *v = (k as f32) * 0.017 - 0.26;
+        }
+        w
+    };
+    for &n in LENS {
+        let x = image(n, -0.2);
+        let mut acc_a = vec![0.0f64; 10];
+        let mut acc_b = vec![0.0f64; 10];
+        simd::classify_accumulate(&x, &wtab, 3, 10, &mut acc_a);
+        simd::classify_accumulate_portable(&x, &wtab, 3, 10, &mut acc_b);
+        assert_eq!(acc_a, acc_b, "n={n}: classify accumulate paths diverged");
+    }
+}
+
+/// Deterministic i16 vector touching the overflow-critical extremes: an
+/// all-`i16::MIN` pair per 8-wide chunk would overflow a pairwise-i32
+/// reduction (`_mm256_madd_epi16`), so keeping extremes in the data
+/// pins the widening accumulation.
+fn ivec(n: usize, salt: i32) -> Vec<i16> {
+    (0..n)
+        .map(|i| match i % 11 {
+            0 => i16::MIN,
+            1 => i16::MAX,
+            _ => ((i as i32)
+                .wrapping_mul(2654435761u32 as i32)
+                .wrapping_add(salt)
+                % 30000) as i16,
+        })
+        .collect()
+}
+
+#[test]
+fn dot_wide_exact_at_awkward_lengths() {
+    for &n in LENS {
+        let a = ivec(n, 17);
+        let b = ivec(n, -5);
+        // ground truth: plain widening scalar accumulation
+        let want: i64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| (x as i32 * y as i32) as i64)
+            .sum();
+        assert_eq!(simd::dot_wide_portable(&a, &b), want, "n={n} portable");
+        assert_eq!(simd::dot_wide_i16(&a, &b), want, "n={n} dispatch");
+        let fa: Vec<Fixed> = a.iter().map(|&v| Fixed(v)).collect();
+        let fb: Vec<Fixed> = b.iter().map(|&v| Fixed(v)).collect();
+        assert_eq!(simd::dot_wide_fixed(&fa, &fb), want, "n={n} fixed");
+    }
+    // extreme square at every lane: (i16::MIN)^2 * 8 per chunk must not
+    // saturate anything on the way to i64
+    let worst = vec![i16::MIN; 4096];
+    let want = (i16::MIN as i32 * i16::MIN as i32) as i64 * 4096;
+    assert_eq!(simd::dot_wide_i16(&worst, &worst), want);
+}

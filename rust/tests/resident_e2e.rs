@@ -1,0 +1,333 @@
+//! ISSUE 9: fused resident-x scan equivalence and fanout thread-count
+//! bit-identity, in the **default build** (no features) so tier-1 proves
+//! the perf paths never change served bits.
+//!
+//! Engine level: [`NativeDenoise::run_scan_resident`] must match
+//! [`NativeDenoise::run_batched_into`] bit for bit while beating the
+//! liveness callback once per (row, step). Serving level: a
+//! `resident = true` session must produce bit-identical images to the
+//! chunked rotating-slab loop and to the per-request path, in exactly
+//! one dispatch per batch.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::{DenoiseRequest, DenoiseResult, DiffusionServer};
+use sf_mmcn::runtime::{ArtifactStore, BatchDispatch, NativeDenoise, TensorBuf};
+
+// ---------------------------------------------------------------- engine
+
+fn params() -> Vec<TensorBuf> {
+    vec![
+        TensorBuf::new(vec![3], vec![0.1, -0.2, 0.3]).unwrap(),
+        TensorBuf::new(vec![2, 2], vec![0.05, 0.0, -0.1, 0.2]).unwrap(),
+    ]
+}
+
+/// A (B=4, C=steps) dispatch over 1×4×4 images with descending-t rows.
+struct Fixture {
+    x: TensorBuf,
+    t_embs: TensorBuf,
+    coeffs: TensorBuf,
+    noises: TensorBuf,
+    b: usize,
+    steps: usize,
+}
+
+impl Fixture {
+    fn new(b: usize, steps: usize) -> Self {
+        let n = 16;
+        let x: Vec<f32> = (0..b * n).map(|i| (i as f32) * 0.017 - 0.3).collect();
+        let t_embs: Vec<f32> = (0..steps * 8).map(|i| (i as f32) * 0.04 - 0.1).collect();
+        let mut coeffs = Vec::new();
+        for r in 0..steps {
+            coeffs.extend([1.004, 0.05, if r + 1 < steps { 0.07 } else { 0.0 }]);
+        }
+        let noises: Vec<f32> = (0..b * steps * n)
+            .map(|i| ((i % 101) as f32) * 0.0009 - 0.04)
+            .collect();
+        Fixture {
+            x: TensorBuf::new(vec![b, 1, 4, 4], x).unwrap(),
+            t_embs: TensorBuf::new(vec![steps, 8], t_embs).unwrap(),
+            coeffs: TensorBuf::new(vec![steps, 3], coeffs).unwrap(),
+            noises: TensorBuf::new(vec![b, steps, 1, 4, 4], noises).unwrap(),
+            b,
+            steps,
+        }
+    }
+
+    fn dispatch(&self) -> BatchDispatch {
+        BatchDispatch {
+            batch: self.b,
+            steps: self.steps,
+            x: &self.x,
+            t_embs: &self.t_embs,
+            coeffs: &self.coeffs,
+            noises: &self.noises,
+        }
+    }
+}
+
+#[test]
+fn resident_scan_bit_identical_with_per_step_beats() {
+    let e = NativeDenoise::new(vec![1, 4, 4], 8);
+    let p = params();
+    let f = Fixture::new(4, 5);
+    let d = f.dispatch();
+    let mut chunked = vec![0.0f32; f.b * 16];
+    e.run_batched_into(&d, &p, &mut chunked).unwrap();
+    let beats = AtomicUsize::new(0);
+    let mut resident = vec![0.0f32; f.b * 16];
+    e.run_scan_resident(&d, &p, &mut resident, &|| {
+        beats.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(resident, chunked, "resident scan changed the math");
+    // liveness contract: one beat per (row, step) — at least as frequent
+    // as the chunked loop's per-chunk pulse
+    assert_eq!(beats.load(Ordering::Relaxed), f.b * f.steps);
+    // wrong-sized slab rejected
+    let mut short = vec![0.0f32; f.b * 16 - 1];
+    assert!(e.run_scan_resident(&d, &p, &mut short, &|| {}).is_err());
+}
+
+#[test]
+fn resident_scan_matches_manual_chunked_loop() {
+    // Re-create the serving layer's chunked dispatch by hand (per-chunk
+    // t_emb/coeff rows, per-request noise re-gather, image ping-pong)
+    // and pin the resident scan to it bit for bit — the exact cross-
+    // chunk-boundary equivalence the serving path relies on.
+    let e = NativeDenoise::new(vec![1, 4, 4], 8);
+    let p = params();
+    let (b, steps, n, chunk) = (3usize, 5usize, 16usize, 2usize);
+    let f = Fixture::new(b, steps);
+    let beats = AtomicUsize::new(0);
+    let mut resident = vec![0.0f32; b * n];
+    e.run_scan_resident(&f.dispatch(), &p, &mut resident, &|| {
+        beats.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(beats.load(Ordering::Relaxed), b * steps);
+
+    let mut cur = f.x.clone();
+    let mut done = 0;
+    while done < steps {
+        let c = chunk.min(steps - done);
+        let t_embs =
+            TensorBuf::new(vec![c, 8], f.t_embs.data[done * 8..(done + c) * 8].to_vec()).unwrap();
+        let coeffs =
+            TensorBuf::new(vec![c, 3], f.coeffs.data[done * 3..(done + c) * 3].to_vec()).unwrap();
+        let mut nz = Vec::with_capacity(b * c * n);
+        for i in 0..b {
+            nz.extend_from_slice(
+                &f.noises.data[(i * steps + done) * n..(i * steps + done + c) * n],
+            );
+        }
+        let noises = TensorBuf::new(vec![b, c, 1, 4, 4], nz).unwrap();
+        let d = BatchDispatch {
+            batch: b,
+            steps: c,
+            x: &cur,
+            t_embs: &t_embs,
+            coeffs: &coeffs,
+            noises: &noises,
+        };
+        let mut out = vec![0.0f32; b * n];
+        e.run_batched_into(&d, &p, &mut out).unwrap();
+        cur = TensorBuf::new(cur.shape.clone(), out).unwrap();
+        done += c;
+    }
+    assert_eq!(resident, cur.data, "resident scan diverged across chunk boundaries");
+}
+
+#[test]
+fn fanout_bit_identical_at_forced_thread_counts() {
+    // ISSUE 9 property: `SF_MMCN_FANOUT_THREADS` forces the row fanout
+    // to an exact thread count; rows are independent, so 1, 2, 3
+    // (non-dividing) and 8 threads must reproduce the same bits. All
+    // env mutation happens serially inside this one test.
+    let e = NativeDenoise::new(vec![1, 16, 16], 8);
+    let p = params();
+    let n = 256;
+    let (b, steps) = (8usize, 4usize);
+    let x: Vec<f32> = (0..b * n).map(|i| ((i % 89) as f32) * 0.012 - 0.5).collect();
+    let t_embs: Vec<f32> = (0..steps * 8).map(|i| (i as f32) * 0.03 - 0.09).collect();
+    let mut coeffs = Vec::new();
+    for r in 0..steps {
+        coeffs.extend([1.002, 0.04, if r + 1 < steps { 0.05 } else { 0.0 }]);
+    }
+    let noises: Vec<f32> = (0..b * steps * n)
+        .map(|i| ((i % 97) as f32) * 0.0011 - 0.05)
+        .collect();
+    let x_t = TensorBuf::new(vec![b, 1, 16, 16], x).unwrap();
+    let te_t = TensorBuf::new(vec![steps, 8], t_embs).unwrap();
+    let co_t = TensorBuf::new(vec![steps, 3], coeffs).unwrap();
+    let no_t = TensorBuf::new(vec![b, steps, 1, 16, 16], noises).unwrap();
+    let d = BatchDispatch {
+        batch: b,
+        steps,
+        x: &x_t,
+        t_embs: &te_t,
+        coeffs: &co_t,
+        noises: &no_t,
+    };
+    let run_with = |threads: &str| {
+        std::env::set_var("SF_MMCN_FANOUT_THREADS", threads);
+        let mut out = vec![0.0f32; b * n];
+        let r = e.run_batched_into(&d, &p, &mut out);
+        std::env::remove_var("SF_MMCN_FANOUT_THREADS");
+        r.unwrap();
+        out
+    };
+    let baseline = run_with("1");
+    for t in ["2", "3", "8"] {
+        assert_eq!(
+            run_with(t),
+            baseline,
+            "fanout at {t} threads diverged from single-threaded"
+        );
+    }
+    // the resident scan fans out through the same row kernel
+    std::env::set_var("SF_MMCN_FANOUT_THREADS", "3");
+    let beats = AtomicUsize::new(0);
+    let mut resident = vec![0.0f32; b * n];
+    let res = e.run_scan_resident(&d, &p, &mut resident, &|| {
+        beats.fetch_add(1, Ordering::Relaxed);
+    });
+    std::env::remove_var("SF_MMCN_FANOUT_THREADS");
+    res.unwrap();
+    assert_eq!(resident, baseline, "resident fanout at 3 threads diverged");
+    assert_eq!(beats.load(Ordering::Relaxed), b * steps, "beats from all shards");
+}
+
+// ---------------------------------------------------------------- serving
+
+fn native_cfg(steps: usize, resident: bool, chunk: usize) -> ServeConfig {
+    ServeConfig {
+        steps,
+        workers: 1,
+        max_batch: 4,
+        batched: true,
+        requests: 0,
+        seed: 11,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: false,
+        backend: ServeBackend::Native,
+        pipeline: true,
+        chunk,
+        pooled: true,
+        resident,
+        ..ServeConfig::default()
+    }
+}
+
+fn native_server(cfg: ServeConfig) -> DiffusionServer {
+    let store = ArtifactStore::new("artifacts");
+    DiffusionServer::new(cfg, &store).expect("native backend needs no artifacts")
+}
+
+fn reqs(n: u64, steps: usize) -> Vec<DenoiseRequest> {
+    (0..n)
+        .map(|i| DenoiseRequest::new(i, 500 + i, steps))
+        .collect()
+}
+
+fn by_id(mut results: Vec<DenoiseResult>) -> Vec<DenoiseResult> {
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+#[test]
+fn resident_serve_bit_identical_in_one_dispatch_per_batch() {
+    // 4 requests, one worker, max_batch 4 → exactly one batch. The
+    // chunked session dispatches ceil(5/2) = 3 times; the resident
+    // session must produce the same bits in a single engine call.
+    let (r_chunk, m_chunk) = native_server(native_cfg(5, false, 2)).serve(reqs(4, 5)).unwrap();
+    let (r_res, m_res) = native_server(native_cfg(5, true, 2)).serve(reqs(4, 5)).unwrap();
+    let (r_seq, _) = {
+        let mut cfg = native_cfg(5, false, 0);
+        cfg.batched = false;
+        cfg.max_batch = 1;
+        native_server(cfg).serve(reqs(4, 5)).unwrap()
+    };
+    let (r_chunk, r_res, r_seq) = (by_id(r_chunk), by_id(r_res), by_id(r_seq));
+    for ((c, r), s) in r_chunk.iter().zip(&r_res).zip(&r_seq) {
+        assert_eq!(c.id, r.id);
+        assert_eq!(
+            c.image.data, r.image.data,
+            "request {} diverged between chunked and resident serving",
+            c.id
+        );
+        assert_eq!(
+            s.image.data, r.image.data,
+            "request {} diverged between per-request and resident serving",
+            s.id
+        );
+    }
+    assert_eq!(m_res.requests_done, 4);
+    assert_eq!(m_res.steps_done, 20, "metrics cadence unchanged");
+    assert_eq!(m_res.dispatches, 1, "resident batch is one engine call");
+    assert_eq!(m_res.batch_items, 4);
+    assert!(
+        m_chunk.dispatches > m_res.dispatches,
+        "chunked loop must dispatch more often ({} vs {})",
+        m_chunk.dispatches,
+        m_res.dispatches
+    );
+    // the resident flag must not leak into the batcher invariants
+    assert_eq!(m_res.cross_model_batches, 0);
+    assert_eq!(m_res.cross_shape_batches, 0);
+}
+
+#[test]
+fn resident_serve_handles_mixed_step_counts() {
+    // Mixed per-request steps form separate (model, steps, shape)
+    // batches; each resident batch is still a single dispatch and still
+    // bit-identical to its chunked counterpart.
+    let mixed = |resident: bool| {
+        let mut all = reqs(3, 6);
+        all.extend((3..6).map(|i| DenoiseRequest::new(i, 500 + i, 2)));
+        let (results, m) = native_server(native_cfg(6, resident, 2)).serve(all).unwrap();
+        (by_id(results), m)
+    };
+    let (r_res, m_res) = mixed(true);
+    let (r_chunk, m_chunk) = mixed(false);
+    for (r, c) in r_res.iter().zip(&r_chunk) {
+        assert_eq!(r.id, c.id);
+        assert_eq!(r.steps, c.steps);
+        assert_eq!(
+            r.image.data, c.image.data,
+            "request {} diverged under mixed step counts",
+            r.id
+        );
+    }
+    assert_eq!(m_res.requests_done, 6);
+    assert!(
+        m_res.dispatches < m_chunk.dispatches,
+        "resident sessions collapse per-chunk dispatches ({} vs {})",
+        m_res.dispatches,
+        m_chunk.dispatches
+    );
+}
+
+#[test]
+fn resident_serve_under_load_with_deadlines_intact() {
+    // A larger run through the admission queue: resident serving must
+    // preserve the exactly-once resolution contract and drain cleanly.
+    let mut cfg = native_cfg(4, true, 0);
+    cfg.workers = 2;
+    let s = native_server(cfg);
+    let (results, m) = s.serve(reqs(12, 4)).unwrap();
+    assert_eq!(results.len(), 12);
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (0..12).collect::<Vec<_>>());
+    assert_eq!(m.requests_done, 12);
+    assert_eq!(m.steps_done, 48);
+    assert_eq!(m.batch_items, 12, "each request in exactly one dispatch");
+    assert_eq!(m.admission.admitted, 12);
+    assert_eq!(m.admission.queue_depth, 0, "drained at shutdown");
+    // every batch was a single resident dispatch
+    assert!(m.dispatches <= 12 && m.dispatches >= 3);
+}
