@@ -1,0 +1,384 @@
+//! Bench: multi-process cluster serving throughput (ISSUE 10).
+//!
+//! Spawns real `shard-worker` child processes of this crate's own binary
+//! and drives the `ClusterFleet` front door over the Unix-socket wire
+//! protocol — the full process-supervision path, nothing mocked. Two
+//! scenario kinds per process count:
+//!
+//! * `burst`   — closed-loop saturation: the whole workload submitted at
+//!               once, aggregate req/s measured client-side from first
+//!               submit to last delivery. This is the near-linear scaling
+//!               measurement: with one single-lane session per process,
+//!               N processes should approach N x the 1-process rate until
+//!               the host runs out of cores.
+//! * `nominal` — open-loop at 0.4 x the calibrated 1-process capacity
+//!               per process, queue sized to the workload: the cluster
+//!               must admit and deliver everything (zero shed).
+//!
+//! One mixed multi-mode cell rides along (ISSUE 10 satellite): the
+//! 2-process nominal scenario under `model_mix = unet:2,resnet18:1,vgg16:1`,
+//! exercising all three model kinds across the wire; its per-model rows
+//! land in the JSON.
+//!
+//! Run: `cargo bench --bench cluster` (1/2/4/8 processes) or `-- --quick`
+//! (CI profile: 1/2 processes, smaller workloads). Results go to
+//! `BENCH_cluster.json` (written before any gate can fire). Always-on
+//! gates, quick included:
+//!
+//! * every nominal cell delivers its whole workload with zero shed and
+//!   zero failures;
+//! * the 2-process burst rate sustains >= 1.5x the 1-process burst rate
+//!   (the scaling floor from the ISSUE 10 acceptance criteria);
+//! * no cell records a failover (no worker process may die under a
+//!   clean bench load).
+
+#[cfg(unix)]
+mod bench {
+    use std::path::Path;
+    use std::time::{Duration, Instant};
+
+    use sf_mmcn::config::{ServeBackend, ServeConfig};
+    use sf_mmcn::coordinator::{workload, AdmissionError, ClusterFleet, FleetMetrics};
+
+    /// Per-mode slice of a mixed cell (model name, delivered, failed).
+    struct ModelRow {
+        model: &'static str,
+        done: usize,
+        failed: usize,
+    }
+
+    struct Cell {
+        name: String,
+        procs: usize,
+        scenario: &'static str,
+        model_mix: String,
+        target_rps: Option<f64>,
+        offered: usize,
+        delivered: u64,
+        failed: u64,
+        shed: u64,
+        failovers: u64,
+        req_per_s: f64,
+        scaling_vs_1p: Option<f64>,
+        p50_ms: f64,
+        p95_ms: f64,
+        p99_ms: f64,
+        wall_s: f64,
+        per_model: Vec<ModelRow>,
+    }
+
+    fn json_f64(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v:.3}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    fn opt_f64(v: Option<f64>) -> String {
+        v.map_or("null".to_string(), json_f64)
+    }
+
+    fn cluster_cfg(procs: usize, steps: usize, queue_depth: usize) -> ServeConfig {
+        ServeConfig {
+            steps,
+            requests: 0,
+            workers: 1,
+            max_batch: 2,
+            seed: 7,
+            artifact: "unet_denoise_16".into(),
+            cosim: false,
+            fused: false,
+            backend: ServeBackend::Native,
+            batched: true,
+            pipeline: false,
+            chunk: 1,
+            pooled: true,
+            queue_depth,
+            priorities: 2,
+            shards: 1,
+            cluster: procs,
+            heartbeat_ms: 10,
+            heartbeat_misses: 8,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn exe() -> &'static Path {
+        Path::new(env!("CARGO_BIN_EXE_sf-mmcn"))
+    }
+
+    /// Drive one cluster cell. `rate` None = closed-loop burst (submit
+    /// everything at once); Some = fixed open-loop arrival schedule via
+    /// `try_submit` (overload shed, counted, never parked). The req/s
+    /// figure is measured client-side from first submit to last
+    /// delivery, so worker spawn and drain time never pollute it.
+    fn run_cell(
+        name: &str,
+        procs: usize,
+        steps: usize,
+        n: usize,
+        rate: Option<f64>,
+        model_mix: &str,
+    ) -> Cell {
+        let mut cfg = cluster_cfg(procs, steps, n.max(8));
+        cfg.model_mix = model_mix.to_string();
+        let fleet = ClusterFleet::start(cfg.clone(), exe())
+            .expect("cluster start (spawning shard-worker processes)");
+        let reqs = workload(&cfg, cfg.seed, 0..n);
+        let t0 = Instant::now();
+        let mut tickets = Vec::with_capacity(n);
+        let mut shed = 0u64;
+        for (i, req) in reqs.into_iter().enumerate() {
+            if let Some(rate) = rate {
+                // fixed synthetic arrival schedule: request i is due at i/rate
+                let due = Duration::from_secs_f64(i as f64 / rate.max(1e-9));
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+                match fleet.try_submit(req) {
+                    Ok(t) => tickets.push(t),
+                    Err(AdmissionError::QueueFull) => shed += 1,
+                    Err(e) => panic!("unexpected admission error: {e}"),
+                }
+            } else {
+                tickets.push(fleet.submit(req).expect("burst workload admitted"));
+            }
+        }
+        let mut delivered = 0u64;
+        let mut failed = 0u64;
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => delivered += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m: FleetMetrics = fleet.shutdown().expect("cluster shutdown");
+        let per_model = m
+            .per_model
+            .iter()
+            .filter(|r| r.requests_done + r.requests_failed > 0)
+            .map(|r| ModelRow {
+                model: r.model.name(),
+                done: r.requests_done,
+                failed: r.requests_failed,
+            })
+            .collect();
+        let cell = Cell {
+            name: name.to_string(),
+            procs,
+            scenario: if rate.is_some() { "nominal" } else { "burst" },
+            model_mix: model_mix.to_string(),
+            target_rps: rate,
+            offered: n,
+            delivered,
+            failed,
+            shed,
+            failovers: m.stats.failovers,
+            req_per_s: delivered as f64 / wall.max(1e-9),
+            scaling_vs_1p: None,
+            p50_ms: m.e2e_latency.p50_us() / 1e3,
+            p95_ms: m.e2e_latency.p95_us() / 1e3,
+            p99_ms: m.e2e_latency.p99_us() / 1e3,
+            wall_s: wall,
+            per_model,
+        };
+        println!(
+            "bench cluster::{:<18} {} proc  offered {:>3}  delivered {:>3}  shed {:>3}  \
+             {:>8.1} req/s  e2e p50 {:.2} ms  p95 {:.2}  p99 {:.2}  wall {:.3}s",
+            cell.name,
+            cell.procs,
+            cell.offered,
+            cell.delivered,
+            cell.shed,
+            cell.req_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.wall_s,
+        );
+        cell
+    }
+
+    /// `BENCH_cluster.json`: the per-cell scaling artifact CI uploads
+    /// (written before any gate can fire).
+    fn write_json(mode: &str, capacity_1p: f64, cells: &[Cell]) {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"bench\": \"cluster\",\n");
+        s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+        s.push_str(&format!(
+            "  \"capacity_1p_rps\": {},\n",
+            json_f64(capacity_1p)
+        ));
+        s.push_str("  \"results\": [\n");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"name\": \"{}\", ", c.name));
+            s.push_str(&format!("\"procs\": {}, ", c.procs));
+            s.push_str(&format!("\"scenario\": \"{}\", ", c.scenario));
+            s.push_str(&format!("\"model_mix\": \"{}\", ", c.model_mix));
+            s.push_str(&format!("\"target_rps\": {}, ", opt_f64(c.target_rps)));
+            s.push_str(&format!("\"offered\": {}, ", c.offered));
+            s.push_str(&format!("\"delivered\": {}, ", c.delivered));
+            s.push_str(&format!("\"failed\": {}, ", c.failed));
+            s.push_str(&format!("\"shed\": {}, ", c.shed));
+            s.push_str(&format!("\"failovers\": {}, ", c.failovers));
+            s.push_str(&format!("\"req_per_s\": {}, ", json_f64(c.req_per_s)));
+            s.push_str(&format!(
+                "\"scaling_vs_1p\": {}, ",
+                opt_f64(c.scaling_vs_1p)
+            ));
+            s.push_str(&format!("\"p50_ms\": {}, ", json_f64(c.p50_ms)));
+            s.push_str(&format!("\"p95_ms\": {}, ", json_f64(c.p95_ms)));
+            s.push_str(&format!("\"p99_ms\": {}, ", json_f64(c.p99_ms)));
+            s.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
+            s.push_str("\"per_model\": [");
+            for (j, r) in c.per_model.iter().enumerate() {
+                s.push_str(&format!(
+                    "{{\"model\": \"{}\", \"requests_done\": {}, \"requests_failed\": {}}}",
+                    r.model, r.done, r.failed
+                ));
+                if j + 1 < c.per_model.len() {
+                    s.push_str(", ");
+                }
+            }
+            s.push_str("]}");
+            if i + 1 < cells.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        match std::fs::write("BENCH_cluster.json", &s) {
+            Ok(()) => println!("\nwrote BENCH_cluster.json ({} cells)", cells.len()),
+            Err(e) => println!("\nWARNING: could not write BENCH_cluster.json: {e}"),
+        }
+    }
+
+    /// Always-on gates (quick included). Returns true when all pass.
+    fn check_gates(cells: &[Cell]) -> bool {
+        let mut ok = true;
+        for c in cells {
+            if c.scenario == "nominal"
+                && (c.shed > 0 || c.failed > 0 || c.delivered != c.offered as u64)
+            {
+                println!(
+                    "CLUSTER GATE FAILED: {} delivered {}/{} with {} shed / {} failed — \
+                     nominal cells must admit and deliver the whole workload",
+                    c.name, c.delivered, c.offered, c.shed, c.failed
+                );
+                ok = false;
+            }
+            if c.failovers > 0 {
+                println!(
+                    "CLUSTER GATE FAILED: {} recorded {} failovers — no worker process \
+                     may die under a clean bench load",
+                    c.name, c.failovers
+                );
+                ok = false;
+            }
+        }
+        let burst_rate = |procs: usize| -> Option<f64> {
+            cells
+                .iter()
+                .find(|c| c.scenario == "burst" && c.procs == procs)
+                .map(|c| c.req_per_s)
+        };
+        if let (Some(r1), Some(r2)) = (burst_rate(1), burst_rate(2)) {
+            let scaling = r2 / r1.max(1e-9);
+            if scaling < 1.5 {
+                println!(
+                    "CLUSTER GATE FAILED: 2-process aggregate {r2:.1} req/s is only \
+                     x{scaling:.2} the 1-process {r1:.1} req/s — the scaling floor is x1.5"
+                );
+                ok = false;
+            } else {
+                println!("cluster scaling OK: 2 processes sustain x{scaling:.2} of 1 process");
+            }
+        }
+        if ok {
+            println!("cluster gates OK: {} cells", cells.len());
+        }
+        ok
+    }
+
+    pub fn main() {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = args.iter().any(|a| a == "--quick")
+            || std::env::var("SF_MMCN_BENCH_QUICK").is_ok();
+        let (steps, per_proc) = if quick { (2, 16) } else { (4, 24) };
+        let proc_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+
+        println!(
+            "==================== CLUSTER BENCH ({}) ====================\n\
+             shard-worker processes over the Unix-socket wire protocol, native \
+             surrogate backend, 1 lane per process, {per_proc} requests/process x \
+             {steps} steps\n",
+            if quick { "quick" } else { "full" }
+        );
+
+        let mut cells = Vec::new();
+
+        // closed-loop burst cells: the near-linear scaling measurement
+        for &procs in proc_counts {
+            let n = per_proc * procs;
+            cells.push(run_cell(
+                &format!("burst_{procs}p"),
+                procs,
+                steps,
+                n,
+                None,
+                "unet",
+            ));
+        }
+        let capacity_1p = cells[0].req_per_s.max(1e-9);
+        for c in cells.iter_mut() {
+            c.scaling_vs_1p = Some(c.req_per_s / capacity_1p);
+        }
+
+        // open-loop nominal cells: 0.4x the calibrated 1-process
+        // capacity per process; the cluster must keep up without
+        // shedding
+        for &procs in proc_counts {
+            let n = per_proc * procs;
+            let rate = 0.4 * capacity_1p * procs as f64;
+            cells.push(run_cell(
+                &format!("nominal_{procs}p"),
+                procs,
+                steps,
+                n,
+                Some(rate),
+                "unet",
+            ));
+        }
+
+        // the mixed multi-mode cell: all three model kinds on the wire
+        // at the 2-process nominal operating point
+        cells.push(run_cell(
+            "nominal_2p_mixed",
+            2,
+            steps,
+            per_proc * 2,
+            Some(0.4 * capacity_1p * 2.0),
+            "unet:2,resnet18:1,vgg16:1",
+        ));
+
+        write_json(if quick { "quick" } else { "full" }, capacity_1p, &cells);
+        if !check_gates(&cells) {
+            std::process::exit(1);
+        }
+        println!("\ncluster bench OK");
+    }
+}
+
+#[cfg(unix)]
+fn main() {
+    bench::main();
+}
+
+#[cfg(not(unix))]
+fn main() {
+    println!("cluster bench requires Unix domain sockets; skipping on this platform");
+}

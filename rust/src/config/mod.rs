@@ -5,4 +5,7 @@ mod toml_lite;
 mod types;
 
 pub use toml_lite::{parse_toml, Value};
-pub use types::{ModelChoice, ModelMix, RunConfig, ServeBackend, ServeConfig, SweepConfig};
+pub use types::{
+    default_monitor_pump_us, ModelChoice, ModelMix, RunConfig, ServeBackend, ServeConfig,
+    SweepConfig, MONITOR_PUMP_US_DEFAULT,
+};

@@ -280,6 +280,39 @@ pub struct ServeConfig {
     /// (`util::affinity::CoreMap`). Best-effort: unsupported hosts and
     /// denied syscalls leave lanes unpinned. Never changes served bits.
     pub pin_lanes: bool,
+    /// Worker *processes* in the cluster fleet (ISSUE 10): each worker is
+    /// a separate OS process running one serving session behind a Unix
+    /// socket, supervised and routed to by the `ClusterFleet` front door.
+    /// 0 = no cluster (in-process serving; the default). Mutually
+    /// exclusive with `shards > 1` — one front door at a time.
+    pub cluster: usize,
+    /// Fleet monitor pump period in microseconds: how often the
+    /// `ShardFleet` / `ClusterFleet` monitor polls tickets, samples
+    /// heartbeats, and re-admits requeued work. The compiled-in default
+    /// is 500; the `SF_MMCN_MONITOR_PUMP_US` environment variable
+    /// overrides the default (CI stress loops lengthen it to cut
+    /// busy-poll wall-clock without touching every test's config).
+    pub monitor_pump_us: u64,
+    /// Spot-interruption sentinel: when non-empty, the fleet monitor
+    /// polls this path and, on the file appearing, reads a shard/worker
+    /// index from its contents (empty file = shard 0) and drives
+    /// `begin_preempt` on it — the cloud "instance reclaim notice"
+    /// signal source. Empty = no polling.
+    pub preempt_file: String,
+}
+
+/// Compiled-in monitor pump period (µs), before the environment
+/// override in [`default_monitor_pump_us`].
+pub const MONITOR_PUMP_US_DEFAULT: u64 = 500;
+
+/// The `serve.monitor_pump_us` default: `SF_MMCN_MONITOR_PUMP_US` when
+/// set to a positive integer, else [`MONITOR_PUMP_US_DEFAULT`].
+pub fn default_monitor_pump_us() -> u64 {
+    std::env::var("SF_MMCN_MONITOR_PUMP_US")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(MONITOR_PUMP_US_DEFAULT)
 }
 
 impl Default for ServeConfig {
@@ -309,6 +342,9 @@ impl Default for ServeConfig {
             traffic: String::new(),
             resident: false,
             pin_lanes: false,
+            cluster: 0,
+            monitor_pump_us: default_monitor_pump_us(),
+            preempt_file: String::new(),
         }
     }
 }
@@ -422,8 +458,59 @@ impl ServeConfig {
         cfg.traffic = doc.get_str_or("serve", "traffic", &cfg.traffic);
         cfg.resident = doc.get_bool_or("serve", "resident", cfg.resident);
         cfg.pin_lanes = doc.get_bool_or("serve", "pin_lanes", cfg.pin_lanes);
+        cfg.cluster = doc.get_u64_or("serve", "cluster", cfg.cluster as u64)? as usize;
+        cfg.monitor_pump_us =
+            doc.get_u64_or("serve", "monitor_pump_us", cfg.monitor_pump_us)?;
+        cfg.preempt_file = doc.get_str_or("serve", "preempt_file", &cfg.preempt_file);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Render the config as TOML text that [`ServeConfig::from_toml`]
+    /// parses back to an equal config — how the cluster supervisor ships
+    /// the full serving configuration to its worker processes.
+    pub fn to_toml(&self) -> String {
+        fn quote(s: &str) -> String {
+            format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+        }
+        format!(
+            "[serve]\n\
+             steps = {}\nrequests = {}\nworkers = {}\nmax_batch = {}\n\
+             seed = {}\nartifact = {}\ncosim = {}\nfused = {}\n\
+             backend = {}\nbatched = {}\npipeline = {}\nchunk = {}\n\
+             pooled = {}\nqueue_depth = {}\ndefault_deadline_ms = {}\n\
+             priorities = {}\nshards = {}\nheartbeat_ms = {}\n\
+             heartbeat_misses = {}\nfault_spec = {}\nmodel_mix = {}\n\
+             traffic = {}\nresident = {}\npin_lanes = {}\ncluster = {}\n\
+             monitor_pump_us = {}\npreempt_file = {}\n",
+            self.steps,
+            self.requests,
+            self.workers,
+            self.max_batch,
+            self.seed,
+            quote(&self.artifact),
+            self.cosim,
+            self.fused,
+            quote(self.backend.name()),
+            self.batched,
+            self.pipeline,
+            self.chunk,
+            self.pooled,
+            self.queue_depth,
+            self.default_deadline_ms,
+            self.priorities,
+            self.shards,
+            self.heartbeat_ms,
+            self.heartbeat_misses,
+            quote(&self.fault_spec),
+            quote(&self.model_mix),
+            quote(&self.traffic),
+            self.resident,
+            self.pin_lanes,
+            self.cluster,
+            self.monitor_pump_us,
+            quote(&self.preempt_file),
+        )
     }
 
     /// The parsed traffic profile, `None` when `serve.traffic` is empty
@@ -469,6 +556,21 @@ impl ServeConfig {
         }
         if self.heartbeat_misses == 0 {
             bail!("serve.heartbeat_misses must be >= 1 (zero tolerance would declare every shard dead)");
+        }
+        if self.monitor_pump_us == 0 {
+            bail!("serve.monitor_pump_us must be >= 1 (a zero-period monitor pump would spin)");
+        }
+        if self.cluster > 64 {
+            bail!(
+                "serve.cluster must be <= 64 worker processes, got {}",
+                self.cluster
+            );
+        }
+        if self.cluster > 0 && self.shards > 1 {
+            bail!(
+                "serve.cluster and serve.shards > 1 are mutually exclusive \
+                 (one front door at a time; each cluster worker is a single-session process)"
+            );
         }
         ModelMix::parse(&self.model_mix)
             .map_err(|e| anyhow::anyhow!("serve.model_mix: {e}"))?;
@@ -637,6 +739,71 @@ data_reuse = false
             let err = cfg.validate().unwrap_err().to_string();
             assert!(err.contains(key), "error for {key} names the field: {err}");
         }
+    }
+
+    #[test]
+    fn serve_config_cluster_keys() {
+        let cfg = ServeConfig::from_toml("[serve]\n").unwrap();
+        assert_eq!(cfg.cluster, 0, "in-process serving by default");
+        assert!(cfg.preempt_file.is_empty(), "no sentinel polling by default");
+        if std::env::var("SF_MMCN_MONITOR_PUMP_US").is_err() {
+            assert_eq!(cfg.monitor_pump_us, MONITOR_PUMP_US_DEFAULT);
+        }
+        let cfg = ServeConfig::from_toml(
+            "[serve]\ncluster = 4\nmonitor_pump_us = 2000\n\
+             preempt_file = \"/tmp/reclaim\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster, 4);
+        assert_eq!(cfg.monitor_pump_us, 2000);
+        assert_eq!(cfg.preempt_file, "/tmp/reclaim");
+        assert!(ServeConfig::from_toml("[serve]\nmonitor_pump_us = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\ncluster = 65\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\ncluster = -1\n").is_err());
+        // one front door at a time: a cluster of single-session workers
+        let err = ServeConfig::from_toml("[serve]\ncluster = 2\nshards = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_toml_roundtrip() {
+        // to_toml must reproduce every field through from_toml — the
+        // supervisor ships worker configs this way, so a field that
+        // falls out of the renderer silently reverts to default in
+        // every worker process.
+        let cfg = ServeConfig {
+            steps: 6,
+            requests: 24,
+            workers: 3,
+            max_batch: 2,
+            seed: 12345,
+            artifact: "unet_denoise_16".into(),
+            cosim: false,
+            fused: true,
+            backend: ServeBackend::Native,
+            batched: true,
+            pipeline: false,
+            chunk: 3,
+            pooled: false,
+            queue_depth: 17,
+            default_deadline_ms: 250,
+            priorities: 2,
+            shards: 1,
+            heartbeat_ms: 10,
+            heartbeat_misses: 4,
+            fault_spec: "kill:1:5;stall:0:3:40".into(),
+            model_mix: "unet:2,resnet18:1,vgg16:1".into(),
+            traffic: "ou:60:2:15".into(),
+            resident: true,
+            pin_lanes: true,
+            cluster: 0,
+            monitor_pump_us: 900,
+            preempt_file: "/tmp/pre\"empt\\x".into(),
+        };
+        let back = ServeConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
     }
 
     #[test]

@@ -1,0 +1,924 @@
+//! Multi-process cluster serving front door (ISSUE 10).
+//!
+//! [`ClusterFleet`] is the process-level sibling of the in-process
+//! [`ShardFleet`](crate::coordinator::fleet::ShardFleet): N `shard-worker`
+//! child processes (spawned and supervised by [`crate::coordinator::proc`]),
+//! each wrapping one serving session behind a Unix-socket wire protocol
+//! ([`crate::coordinator::wire`]), behind one front door with the same
+//! API shape — `submit`/`try_submit` returning a
+//! [`FleetTicket`], power-of-two-choices routing, heartbeat-driven death
+//! declaration, failover re-admission, and a merged [`FleetMetrics`] at
+//! shutdown.
+//!
+//! Same determinism contract as the fleet: request execution is a pure
+//! function of `(model, seed, steps)`, so work stripped from a killed
+//! worker process and re-admitted to a survivor resolves with the
+//! bit-identical result the dead worker would have produced. On top of
+//! the fleet's failure model the cluster adds *respawn*: a dead worker
+//! slot is re-spawned (fresh process, bumped generation) with a bounded
+//! budget, after which the slot retires as `Dead`.
+//!
+//! Differences from the in-process fleet, both inherent to the process
+//! boundary:
+//!
+//! * Queue depths used for routing are *reported* (carried by heartbeat
+//!   frames) plus the front door's own count of in-flight work per
+//!   worker, rather than sampled live.
+//! * A request whose deadline has already expired is refused by the
+//!   *worker* (a `submit_err` frame), so the ticket resolves with the
+//!   deadline error instead of `submit` returning it synchronously.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::fleet::{FleetTicket, ShardState};
+use crate::coordinator::metrics::{FleetMetrics, FleetStats, ModelMetrics, ServeMetrics};
+use crate::coordinator::proc::{WorkerEvent, WorkerProc};
+use crate::coordinator::server::{AdmissionError, DenoiseResult, InferenceRequest};
+use crate::coordinator::wire::WireMsg;
+use crate::util::stats::StreamingPercentiles;
+use crate::util::Rng;
+
+/// Spawns allowed per worker slot (the initial spawn plus respawns
+/// after a death). A slot that burns the whole budget retires as
+/// [`ShardState::Dead`]; its in-flight work fails over to survivors.
+pub const SPAWNS_PER_SLOT: u32 = 3;
+
+/// How long shutdown waits for a worker to flush its final metrics
+/// frame and exit after the `shutdown` frame, before killing it.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(20);
+
+/// Monotonic disambiguator for cluster socket directories (several
+/// clusters can coexist in one process, e.g. under `cargo test`).
+static CLUSTER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One worker slot: the supervised child process (until reaped), its
+/// lifecycle state, and the monitor's view of its health.
+struct WorkerSlot {
+    proc: Option<WorkerProc>,
+    state: ShardState,
+    gen: u64,
+    spawns: u32,
+    /// Latest pulse sequence carried by a heartbeat frame.
+    cur_seq: u64,
+    /// Sequence at the last monitor sample (`u64::MAX` = never sampled,
+    /// so a fresh worker gets a full period before its first miss).
+    last_seq: u64,
+    misses: u64,
+    /// Queue depth the worker last reported.
+    reported_depth: u64,
+    /// Whether the final `shutdown` frame went out (preempt drain).
+    shutdown_sent: bool,
+    /// Most recent mid-flight metrics frame.
+    last_metrics: Option<ServeMetrics>,
+    /// The worker's final metrics (sent just before it exits).
+    final_metrics: Option<ServeMetrics>,
+}
+
+impl WorkerSlot {
+    fn routable(&self) -> bool {
+        self.state == ShardState::Live && self.proc.is_some()
+    }
+}
+
+/// One cluster-admitted request in flight. `worker` is the slot the
+/// request currently lives on; `None` means it awaits (re-)admission —
+/// parked by `submit` while every worker was full, or stripped from a
+/// dead worker.
+struct CPending {
+    req: InferenceRequest,
+    ticket: u64,
+    worker: Option<usize>,
+    tx: Sender<Result<DenoiseResult>>,
+    submitted_at: Instant,
+}
+
+struct ClusterState {
+    workers: Vec<WorkerSlot>,
+    pending: Vec<CPending>,
+    rng: Rng,
+    stats: FleetStats,
+    e2e: StreamingPercentiles,
+    per_model: Vec<ModelMetrics>,
+    queue_depth: usize,
+    draining: bool,
+}
+
+/// What the monitor needs to spawn a replacement worker.
+struct SpawnCtx {
+    exe: PathBuf,
+    cfg_path: PathBuf,
+    dir: PathBuf,
+    events: Sender<WorkerEvent>,
+}
+
+/// The multi-process cluster front door. See the module docs for the
+/// failure model; see [`ClusterFleet::start`] for construction.
+pub struct ClusterFleet {
+    state: Arc<Mutex<ClusterState>>,
+    monitor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    t0: Instant,
+    next_id: AtomicU64,
+    dir: PathBuf,
+}
+
+impl ClusterFleet {
+    /// Spawn `cfg.cluster` worker processes of the binary at `exe`
+    /// (normally `std::env::current_exe()`; tests use
+    /// `env!("CARGO_BIN_EXE_sf-mmcn")`) and start the front door.
+    /// Sockets and the worker config file live in a per-cluster temp
+    /// directory removed at shutdown.
+    pub fn start(cfg: ServeConfig, exe: &Path) -> Result<ClusterFleet> {
+        cfg.validate()?;
+        let n = cfg.cluster;
+        if n == 0 {
+            bail!("ClusterFleet::start needs serve.cluster >= 1 worker processes");
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "sf-mmcn-cluster-{}-{}",
+            std::process::id(),
+            CLUSTER_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cluster dir {}", dir.display()))?;
+        let cfg_path = dir.join("worker.toml");
+        std::fs::write(&cfg_path, cfg.to_toml())
+            .with_context(|| format!("writing {}", cfg_path.display()))?;
+
+        let (events_tx, events_rx) = channel::<WorkerEvent>();
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let proc = WorkerProc::spawn(exe, &cfg_path, &dir, w, 0, events_tx.clone())
+                .with_context(|| format!("starting cluster worker {w}"))?;
+            workers.push(WorkerSlot {
+                proc: Some(proc),
+                state: ShardState::Live,
+                gen: 0,
+                spawns: 1,
+                cur_seq: 0,
+                last_seq: u64::MAX,
+                misses: 0,
+                reported_depth: 0,
+                shutdown_sent: false,
+                last_metrics: None,
+                final_metrics: None,
+            });
+        }
+
+        let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1));
+        let misses_allowed = cfg.heartbeat_misses.max(1);
+        let pump_interval = Duration::from_micros(cfg.monitor_pump_us.max(1));
+        let preempt_file = (!cfg.preempt_file.trim().is_empty())
+            .then(|| PathBuf::from(cfg.preempt_file.trim()));
+        let state = Arc::new(Mutex::new(ClusterState {
+            workers,
+            pending: Vec::new(),
+            rng: Rng::new(cfg.seed ^ 0xc1a5_7e12),
+            stats: FleetStats::default(),
+            e2e: StreamingPercentiles::new(),
+            per_model: ModelMetrics::rows(),
+            queue_depth: cfg.queue_depth,
+            draining: false,
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let spawn_ctx = SpawnCtx {
+            exe: exe.to_path_buf(),
+            cfg_path,
+            dir: dir.clone(),
+            events: events_tx,
+        };
+        let monitor = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("cluster-monitor".into())
+                .spawn(move || {
+                    Self::monitor_main(
+                        state,
+                        stop,
+                        events_rx,
+                        spawn_ctx,
+                        heartbeat,
+                        misses_allowed,
+                        pump_interval,
+                        preempt_file,
+                    )
+                })
+                .expect("spawn cluster monitor")
+        };
+        Ok(ClusterFleet {
+            state,
+            monitor: Some(monitor),
+            stop,
+            t0: Instant::now(),
+            next_id: AtomicU64::new(0),
+            dir,
+        })
+    }
+
+    /// Worker slots the cluster was started with (regardless of state).
+    pub fn workers(&self) -> usize {
+        self.state.lock().unwrap().workers.len()
+    }
+
+    /// Instantaneous per-worker lifecycle states, in slot order.
+    pub fn worker_states(&self) -> Vec<ShardState> {
+        let st = self.state.lock().unwrap();
+        st.workers.iter().map(|w| w.state).collect()
+    }
+
+    /// Cluster counters plus the instantaneous worker census.
+    pub fn stats(&self) -> FleetStats {
+        Self::census(&self.state.lock().unwrap())
+    }
+
+    /// Admit a request; never sheds. If every live worker is at
+    /// capacity the request parks front-door-side and the monitor
+    /// admits it when room frees up. Fails only when no live worker
+    /// exists (or the cluster is shutting down).
+    pub fn submit(
+        &self,
+        req: impl Into<InferenceRequest>,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        self.admit(req.into(), true)
+    }
+
+    /// Admit without parking: a cluster where every live worker is at
+    /// capacity returns [`AdmissionError::QueueFull`] immediately.
+    pub fn try_submit(
+        &self,
+        req: impl Into<InferenceRequest>,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        self.admit(req.into(), false)
+    }
+
+    fn admit(
+        &self,
+        req: InferenceRequest,
+        park: bool,
+    ) -> std::result::Result<FleetTicket, AdmissionError> {
+        let mut st = self.state.lock().unwrap();
+        if st.draining {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let entry = match Self::assign(&mut st, id, &req) {
+            Ok(worker) => CPending {
+                req,
+                ticket: id,
+                worker: Some(worker),
+                tx,
+                submitted_at: now,
+            },
+            Err(AdmissionError::QueueFull) if park => CPending {
+                req,
+                ticket: id,
+                worker: None,
+                tx,
+                submitted_at: now,
+            },
+            Err(e) => return Err(e),
+        };
+        st.pending.push(entry);
+        st.stats.submitted += 1;
+        Ok(FleetTicket::new(id, rx))
+    }
+
+    /// Power-of-two-choices admission on (reported queue depth + local
+    /// in-flight count): pick the lighter of two distinct eligible
+    /// workers, then fall through the rest of the eligible set. The
+    /// front door caps in-flight work per worker at the configured
+    /// queue depth, so a routed `submit` frame is never shed worker-side
+    /// (a racing `submit_err` is handled as a requeue regardless).
+    fn assign(
+        st: &mut ClusterState,
+        ticket: u64,
+        req: &InferenceRequest,
+    ) -> std::result::Result<usize, AdmissionError> {
+        loop {
+            let mut inflight = vec![0usize; st.workers.len()];
+            for p in &st.pending {
+                if let Some(w) = p.worker {
+                    inflight[w] += 1;
+                }
+            }
+            let any_live = st.workers.iter().any(WorkerSlot::routable);
+            if !any_live {
+                return Err(AdmissionError::NoLiveShards);
+            }
+            let eligible: Vec<usize> = st
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(i, w)| w.routable() && inflight[*i] < st.queue_depth)
+                .map(|(i, _)| i)
+                .collect();
+            if eligible.is_empty() {
+                return Err(AdmissionError::QueueFull);
+            }
+            let (ai, bi) = Self::p2c_candidates(&mut st.rng, eligible.len());
+            let (a, b) = (eligible[ai], eligible[bi]);
+            let score = |i: usize| st.workers[i].reported_depth as usize + inflight[i];
+            let first = if score(a) <= score(b) { a } else { b };
+            let order: Vec<usize> = std::iter::once(first)
+                .chain(eligible.into_iter().filter(|&i| i != first))
+                .collect();
+            let mut sent = None;
+            for i in order {
+                let Some(p) = st.workers[i].proc.as_mut() else {
+                    continue;
+                };
+                let msg = WireMsg::Submit {
+                    ticket,
+                    req: req.clone(),
+                };
+                if p.send(&msg).is_ok() {
+                    sent = Some(i);
+                    break;
+                }
+                // the socket is down: the worker is dead, retire it and
+                // keep trying the rest
+                Self::declare_dead(st, i);
+            }
+            match sent {
+                Some(i) => return Ok(i),
+                None => continue, // every candidate died mid-send; re-evaluate
+            }
+        }
+    }
+
+    /// The two distinct p2c candidate slots out of `n` (see the fleet's
+    /// equivalent: distinct draws avoid silently degrading to
+    /// single-choice routing).
+    fn p2c_candidates(rng: &mut Rng, n: usize) -> (usize, usize) {
+        let a = rng.below(n as u64) as usize;
+        if n < 2 {
+            return (a, a);
+        }
+        let mut b = rng.below(n as u64 - 1) as usize;
+        if b >= a {
+            b += 1;
+        }
+        (a, b)
+    }
+
+    /// Operational hard kill: SIGKILL the worker process. Death then
+    /// flows through the real wire path — the reader thread sees EOF,
+    /// the monitor declares the slot dead, strips and re-admits its
+    /// work, and (budget permitting) respawns the slot.
+    pub fn kill_worker(&self, worker: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.workers.len();
+        if worker >= n {
+            bail!("kill_worker: worker {worker} out of range ({n} workers)");
+        }
+        if let Some(p) = st.workers[worker].proc.as_mut() {
+            p.kill();
+        }
+        Ok(())
+    }
+
+    /// Preemption notice: stop routing to `worker` and drain it — every
+    /// request already on it resolves normally, then the process exits
+    /// and the slot parks as [`ShardState::Drained`] (no respawn).
+    pub fn begin_preempt(&self, worker: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.workers.len();
+        if worker >= n {
+            bail!("begin_preempt: worker {worker} out of range ({n} workers)");
+        }
+        match st.workers[worker].state {
+            ShardState::Live => {
+                Self::start_preempt(&mut st, worker);
+                Ok(())
+            }
+            other => bail!("begin_preempt: worker {worker} is {other:?}, not Live"),
+        }
+    }
+
+    fn start_preempt(st: &mut ClusterState, worker: usize) {
+        st.workers[worker].state = ShardState::Preempting;
+        let died = match st.workers[worker].proc.as_mut() {
+            Some(p) => p.send(&WireMsg::Drain).is_err(),
+            None => false,
+        };
+        if died {
+            Self::declare_dead(st, worker);
+        }
+    }
+
+    /// Live snapshot of cluster counters, per-worker metrics (the most
+    /// recent wire snapshot each worker reported), and the front-door
+    /// e2e percentiles.
+    pub fn metrics_snapshot(&self) -> FleetMetrics {
+        let st = self.state.lock().unwrap();
+        let per_shard = Self::per_worker_metrics(&st);
+        let per_model = Self::cluster_per_model(&st, &per_shard);
+        FleetMetrics {
+            stats: Self::census(&st),
+            per_shard,
+            e2e_latency: st.e2e.clone(),
+            per_model,
+            wall: self.t0.elapsed(),
+        }
+    }
+
+    /// Graceful cluster shutdown: close the front door, drain every
+    /// worker (failing over any that die on the way out), collect each
+    /// worker's final metrics frame, reap the processes, and return the
+    /// merged metrics. Every admitted ticket resolves before this
+    /// returns.
+    pub fn shutdown(mut self) -> Result<FleetMetrics> {
+        self.close();
+        let mut st = self.state.lock().unwrap();
+        for w in st.workers.iter_mut() {
+            if let Some(p) = w.proc.take() {
+                p.reap(SHUTDOWN_GRACE);
+            }
+        }
+        let per_shard = Self::per_worker_metrics(&st);
+        let per_model = Self::cluster_per_model(&st, &per_shard);
+        let metrics = FleetMetrics {
+            stats: Self::census(&st),
+            per_shard,
+            e2e_latency: st.e2e.clone(),
+            per_model,
+            wall: self.t0.elapsed(),
+        };
+        drop(st);
+        let _ = std::fs::remove_dir_all(&self.dir);
+        Ok(metrics)
+    }
+
+    /// Close admission, start draining every live worker, and join the
+    /// monitor (which exits only once every ticket has resolved and the
+    /// workers were told to shut down).
+    fn close(&mut self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.draining = true;
+            for i in 0..st.workers.len() {
+                if st.workers[i].state == ShardState::Live {
+                    let died = match st.workers[i].proc.as_mut() {
+                        Some(p) => p.send(&WireMsg::Drain).is_err(),
+                        None => false,
+                    };
+                    if died {
+                        Self::declare_dead(&mut st, i);
+                    }
+                }
+            }
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+    }
+
+    fn census(st: &ClusterState) -> FleetStats {
+        let mut s = st.stats;
+        s.shards = st.workers.len();
+        for w in &st.workers {
+            match w.state {
+                ShardState::Live => s.live += 1,
+                ShardState::Preempting => s.preempting += 1,
+                ShardState::Dead => s.dead += 1,
+                ShardState::Drained => s.drained += 1,
+            }
+        }
+        s
+    }
+
+    /// Cluster per-model rows: front-door delivered/failed counts and
+    /// e2e percentiles plus executed steps summed over the workers
+    /// (retries included, same as the fleet).
+    fn cluster_per_model(st: &ClusterState, per_shard: &[ServeMetrics]) -> Vec<ModelMetrics> {
+        let mut rows = st.per_model.clone();
+        for m in per_shard {
+            for (row, sm) in rows.iter_mut().zip(&m.per_model) {
+                row.steps_done += sm.steps_done;
+            }
+        }
+        rows
+    }
+
+    fn per_worker_metrics(st: &ClusterState) -> Vec<ServeMetrics> {
+        st.workers
+            .iter()
+            .map(|w| match (&w.final_metrics, &w.last_metrics) {
+                (Some(m), _) => m.clone(),
+                (None, Some(m)) => m.clone(),
+                (None, None) => ServeMetrics::new(),
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------ monitor
+
+    #[allow(clippy::too_many_arguments)] // mirrors the fleet monitor's signature
+    fn monitor_main(
+        state: Arc<Mutex<ClusterState>>,
+        stop: Arc<AtomicBool>,
+        events: Receiver<WorkerEvent>,
+        spawn_ctx: SpawnCtx,
+        heartbeat: Duration,
+        misses_allowed: u64,
+        pump_interval: Duration,
+        preempt_file: Option<PathBuf>,
+    ) {
+        let mut last_hb = Instant::now();
+        let mut preempt_armed = preempt_file.is_some();
+        loop {
+            let mut respawn: Vec<(usize, u64)> = Vec::new();
+            let done = {
+                let mut st = state.lock().unwrap();
+                while let Ok(ev) = events.try_recv() {
+                    Self::on_event(&mut st, ev);
+                }
+                if last_hb.elapsed() >= heartbeat {
+                    last_hb = Instant::now();
+                    Self::sample_heartbeats(&mut st, misses_allowed);
+                    Self::request_metrics(&mut st);
+                    if preempt_armed {
+                        if let Some(path) = preempt_file.as_deref() {
+                            if Self::poll_preempt_sentinel(&mut st, path) {
+                                preempt_armed = false;
+                            }
+                        }
+                    }
+                }
+                let draining = st.draining;
+                Self::pump(&mut st, draining);
+                Self::finish_drained(&mut st);
+                if !draining {
+                    for (i, w) in st.workers.iter().enumerate() {
+                        if w.state == ShardState::Dead
+                            && w.proc.is_none()
+                            && w.spawns < SPAWNS_PER_SLOT
+                        {
+                            respawn.push((i, w.gen + 1));
+                        }
+                    }
+                }
+                stop.load(Ordering::Relaxed) && st.pending.is_empty()
+            };
+            // Respawns happen outside the state lock: a spawn blocks on
+            // process startup and the handshake, and admission must not
+            // stall behind it.
+            for (i, gen) in respawn {
+                let spawned = WorkerProc::spawn(
+                    &spawn_ctx.exe,
+                    &spawn_ctx.cfg_path,
+                    &spawn_ctx.dir,
+                    i,
+                    gen,
+                    spawn_ctx.events.clone(),
+                );
+                let mut st = state.lock().unwrap();
+                let w = &mut st.workers[i];
+                // only install into a slot still waiting for this spawn
+                if w.state == ShardState::Dead && w.proc.is_none() {
+                    w.spawns += 1;
+                    if let Ok(p) = spawned {
+                        w.proc = Some(p);
+                        w.state = ShardState::Live;
+                        w.gen = gen;
+                        w.cur_seq = 0;
+                        w.last_seq = u64::MAX;
+                        w.misses = 0;
+                        w.reported_depth = 0;
+                    }
+                }
+            }
+            if done {
+                Self::shutdown_workers(&state, &events, pump_interval);
+                break;
+            }
+            std::thread::sleep(pump_interval);
+        }
+    }
+
+    /// Apply one wire event. Events carry the spawn generation they
+    /// arrived on; anything from a generation the slot already replaced
+    /// is stale and ignored.
+    fn on_event(st: &mut ClusterState, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Msg { worker, gen, msg } => {
+                if st.workers[worker].gen != gen {
+                    return;
+                }
+                Self::on_msg(st, worker, msg);
+            }
+            WorkerEvent::Gone { worker, gen } => {
+                if st.workers[worker].gen != gen {
+                    return;
+                }
+                Self::declare_dead(st, worker);
+            }
+        }
+    }
+
+    fn on_msg(st: &mut ClusterState, worker: usize, msg: WireMsg) {
+        match msg {
+            WireMsg::Heartbeat { seq, queue_depth } => {
+                let w = &mut st.workers[worker];
+                w.cur_seq = w.cur_seq.max(seq);
+                w.reported_depth = queue_depth;
+            }
+            WireMsg::TicketResult { ticket, result } => {
+                // an absent ticket is a stale duplicate (the request
+                // failed over and already resolved) — drop it
+                if let Some(i) = st.pending.iter().position(|p| p.ticket == ticket) {
+                    let p = st.pending.swap_remove(i);
+                    Self::deliver(st, p, result.map_err(|e| anyhow!(e)));
+                }
+            }
+            WireMsg::SubmitErr { ticket, error } => {
+                let Some(i) = st.pending.iter().position(|p| p.ticket == ticket) else {
+                    return;
+                };
+                match error {
+                    // terminal: the deadline had already expired when the
+                    // worker saw the request
+                    AdmissionError::Deadline => {
+                        let p = st.pending.swap_remove(i);
+                        let req_id = p.req.id();
+                        Self::deliver(st, p, Err(anyhow!("request {req_id}: {error}")));
+                    }
+                    // transient (race against a fill-up or a drain):
+                    // strip the assignment; the pump re-admits
+                    _ => {
+                        st.pending[i].worker = None;
+                        st.stats.requeued += 1;
+                    }
+                }
+            }
+            WireMsg::Metrics { last, snapshot } => {
+                let w = &mut st.workers[worker];
+                let m = snapshot.to_metrics();
+                if last {
+                    w.final_metrics = Some(m);
+                    // a final metrics frame means an orderly exit: park
+                    // the slot now, so the connection-closed event right
+                    // behind this frame cannot read as a death
+                    if matches!(w.state, ShardState::Live | ShardState::Preempting) {
+                        w.state = ShardState::Drained;
+                    }
+                } else {
+                    w.last_metrics = Some(m);
+                }
+            }
+            // workers never originate the remaining frame types
+            _ => {}
+        }
+    }
+
+    /// Resolve one cluster ticket (single-shot) and account for it, on
+    /// the cluster aggregate and the request's per-model row.
+    fn deliver(st: &mut ClusterState, p: CPending, r: Result<DenoiseResult>) {
+        let row = &mut st.per_model[p.req.model().index()];
+        match r {
+            Ok(res) => {
+                st.stats.delivered += 1;
+                row.requests_done += 1;
+                let us = p.submitted_at.elapsed().as_micros() as f64;
+                row.e2e_latency.record_us(us);
+                st.e2e.record_us(us);
+                let _ = p.tx.send(Ok(res));
+            }
+            Err(e) => {
+                st.stats.failed += 1;
+                row.requests_failed += 1;
+                let _ = p.tx.send(Err(e));
+            }
+        }
+    }
+
+    /// Declare a worker dead: drop the supervised process (killing it if
+    /// needed), and strip its in-flight requests for re-admission. Any
+    /// result the worker flushed before dying was already applied — the
+    /// event channel is processed in arrival order — so nothing resolved
+    /// re-executes.
+    fn declare_dead(st: &mut ClusterState, worker: usize) {
+        if !matches!(
+            st.workers[worker].state,
+            ShardState::Live | ShardState::Preempting
+        ) {
+            return;
+        }
+        st.workers[worker].state = ShardState::Dead;
+        st.stats.failovers += 1;
+        drop(st.workers[worker].proc.take());
+        for p in st.pending.iter_mut() {
+            if p.worker == Some(worker) {
+                p.worker = None;
+                st.stats.requeued += 1;
+            }
+        }
+    }
+
+    /// One monitor pass: (re-)admit unassigned requests onto live
+    /// workers; during a drain, requests that can no longer be placed
+    /// resolve with an error (same contract as the fleet).
+    fn pump(st: &mut ClusterState, draining: bool) {
+        let mut i = 0;
+        while i < st.pending.len() {
+            if st.pending[i].worker.is_some() {
+                i += 1;
+                continue;
+            }
+            let req = st.pending[i].req.clone();
+            let ticket = st.pending[i].ticket;
+            match Self::assign(st, ticket, &req) {
+                Ok(worker) => {
+                    st.pending[i].worker = Some(worker);
+                    i += 1;
+                }
+                Err(AdmissionError::QueueFull) if !draining => i += 1,
+                Err(e) => {
+                    let p = st.pending.swap_remove(i);
+                    let req_id = p.req.id();
+                    Self::deliver(
+                        st,
+                        p,
+                        Err(anyhow!("request {req_id}: not re-admittable after failover ({e})")),
+                    );
+                }
+            }
+        }
+    }
+
+    /// A `Preempting` worker with no in-flight requests has finished its
+    /// drain: tell it to exit (once). The slot parks as `Drained` when
+    /// its final metrics frame arrives.
+    fn finish_drained(st: &mut ClusterState) {
+        for i in 0..st.workers.len() {
+            if st.workers[i].state != ShardState::Preempting || st.workers[i].shutdown_sent {
+                continue;
+            }
+            let busy = st.pending.iter().any(|p| p.worker == Some(i));
+            if busy {
+                continue;
+            }
+            st.workers[i].shutdown_sent = true;
+            let died = match st.workers[i].proc.as_mut() {
+                Some(p) => p.send(&WireMsg::Shutdown).is_err(),
+                None => false,
+            };
+            if died {
+                Self::declare_dead(st, i);
+            }
+        }
+    }
+
+    /// Sample every routable worker's heartbeat sequence (as carried by
+    /// its heartbeat frames); a sequence frozen for `allowed`
+    /// consecutive samples retires the worker. Covers both a wedged
+    /// worker process (frames stop, sequence freezes) and a wedged lane
+    /// inside a live process (frames continue, sequence freezes).
+    fn sample_heartbeats(st: &mut ClusterState, allowed: u64) {
+        let mut retire: Vec<usize> = Vec::new();
+        for (i, w) in st.workers.iter_mut().enumerate() {
+            if !matches!(w.state, ShardState::Live | ShardState::Preempting) {
+                continue;
+            }
+            if w.last_seq == u64::MAX {
+                w.last_seq = w.cur_seq; // first sample: no miss yet
+                continue;
+            }
+            if w.cur_seq == w.last_seq {
+                w.misses += 1;
+                if w.misses >= allowed {
+                    retire.push(i);
+                }
+            } else {
+                w.last_seq = w.cur_seq;
+                w.misses = 0;
+            }
+        }
+        for i in retire {
+            Self::declare_dead(st, i);
+        }
+    }
+
+    /// Ask every routable worker for a metrics snapshot (refreshes the
+    /// per-worker view returned by [`ClusterFleet::metrics_snapshot`]).
+    fn request_metrics(st: &mut ClusterState) {
+        let mut died: Vec<usize> = Vec::new();
+        for (i, w) in st.workers.iter_mut().enumerate() {
+            if !matches!(w.state, ShardState::Live | ShardState::Preempting) {
+                continue;
+            }
+            if let Some(p) = w.proc.as_mut() {
+                if p.send(&WireMsg::MetricsReq).is_err() {
+                    died.push(i);
+                }
+            }
+        }
+        for i in died {
+            Self::declare_dead(st, i);
+        }
+    }
+
+    /// Spot-interruption sentinel, identical protocol to the fleet's:
+    /// when `serve.preempt_file` appears, drain the worker index it
+    /// names (empty file = worker 0). Fires at most once.
+    fn poll_preempt_sentinel(st: &mut ClusterState, path: &Path) -> bool {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return false;
+        };
+        let trimmed = text.trim();
+        let worker = if trimmed.is_empty() {
+            0
+        } else {
+            match trimmed.parse::<usize>() {
+                Ok(s) => s,
+                Err(_) => return true, // malformed: consume, no action
+            }
+        };
+        if worker < st.workers.len() && st.workers[worker].state == ShardState::Live {
+            Self::start_preempt(st, worker);
+        }
+        true
+    }
+
+    /// Orderly end-of-life for the worker processes, run by the monitor
+    /// just before it exits (every ticket has already resolved): send
+    /// each remaining worker the `shutdown` frame, then keep applying
+    /// events until each has delivered its final metrics frame (or its
+    /// connection closed), bounded by [`SHUTDOWN_GRACE`].
+    fn shutdown_workers(
+        state: &Arc<Mutex<ClusterState>>,
+        events: &Receiver<WorkerEvent>,
+        pump_interval: Duration,
+    ) {
+        {
+            let mut st = state.lock().unwrap();
+            for i in 0..st.workers.len() {
+                if !matches!(
+                    st.workers[i].state,
+                    ShardState::Live | ShardState::Preempting
+                ) || st.workers[i].shutdown_sent
+                {
+                    continue;
+                }
+                st.workers[i].shutdown_sent = true;
+                let died = match st.workers[i].proc.as_mut() {
+                    Some(p) => p.send(&WireMsg::Shutdown).is_err(),
+                    None => false,
+                };
+                if died {
+                    Self::declare_dead(&mut st, i);
+                }
+            }
+        }
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        loop {
+            let open = {
+                let mut st = state.lock().unwrap();
+                while let Ok(ev) = events.try_recv() {
+                    Self::on_event(&mut st, ev);
+                }
+                // a live worker that sent its final metrics counts as
+                // drained even outside the preempt path
+                for w in st.workers.iter_mut() {
+                    if w.state == ShardState::Live && w.final_metrics.is_some() {
+                        w.state = ShardState::Drained;
+                    }
+                }
+                st.workers
+                    .iter()
+                    .any(|w| matches!(w.state, ShardState::Live | ShardState::Preempting))
+            };
+            if !open || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(pump_interval);
+        }
+    }
+}
+
+impl Drop for ClusterFleet {
+    fn drop(&mut self) {
+        if self.monitor.is_some() {
+            self.close();
+        }
+        let mut st = self.state.lock().unwrap();
+        for w in st.workers.iter_mut() {
+            // WorkerProc::drop kills and reaps anything still running
+            drop(w.proc.take());
+        }
+        drop(st);
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}

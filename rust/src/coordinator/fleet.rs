@@ -52,6 +52,7 @@
 //! * Shard sessions run with co-simulation off (fleet metrics are about
 //!   delivery robustness; PPA co-sim belongs to single-session runs).
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -71,9 +72,10 @@ use crate::runtime::ArtifactStore;
 use crate::util::stats::StreamingPercentiles;
 use crate::util::Rng;
 
-/// Monitor pump interval: how often pending tickets are polled. Distinct
-/// from (and much shorter than) the heartbeat sampling period.
-const PUMP_INTERVAL: Duration = Duration::from_micros(500);
+// The monitor pump interval (how often pending tickets are polled,
+// distinct from and much shorter than the heartbeat sampling period)
+// comes from `serve.monitor_pump_us` — see `ServeConfig::monitor_pump_us`
+// and the `SF_MMCN_MONITOR_PUMP_US` default override.
 
 /// Lifecycle of one shard inside the fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +139,14 @@ pub struct FleetTicket {
 }
 
 impl FleetTicket {
+    /// Front-door constructor, shared with the multi-process
+    /// [`crate::coordinator::cluster::ClusterFleet`] (same single-shot
+    /// delivery contract; the receiver is fed by whichever monitor owns
+    /// the request).
+    pub(crate) fn new(id: u64, rx: Receiver<Result<DenoiseResult>>) -> Self {
+        FleetTicket { id, rx, done: false }
+    }
+
     /// Fleet-unique ticket id (monotonic front-door admission order).
     pub fn id(&self) -> u64 {
         self.id
@@ -210,6 +220,9 @@ impl ShardFleet {
         let n = cfg.shards;
         let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1));
         let misses_allowed = cfg.heartbeat_misses.max(1);
+        let pump_interval = Duration::from_micros(cfg.monitor_pump_us.max(1));
+        let preempt_file = (!cfg.preempt_file.trim().is_empty())
+            .then(|| PathBuf::from(cfg.preempt_file.trim()));
         let mut shards = Vec::with_capacity(n);
         for s in 0..n {
             let mut shard_cfg = cfg.clone();
@@ -245,7 +258,16 @@ impl ShardFleet {
             let stop = Arc::clone(&stop);
             std::thread::Builder::new()
                 .name("fleet-monitor".into())
-                .spawn(move || Self::monitor_main(state, stop, heartbeat, misses_allowed))
+                .spawn(move || {
+                    Self::monitor_main(
+                        state,
+                        stop,
+                        heartbeat,
+                        misses_allowed,
+                        pump_interval,
+                        preempt_file,
+                    )
+                })
                 .expect("spawn fleet monitor")
         };
         Ok(ShardFleet {
@@ -529,14 +551,25 @@ impl ShardFleet {
         stop: Arc<AtomicBool>,
         heartbeat: Duration,
         misses_allowed: u64,
+        pump_interval: Duration,
+        preempt_file: Option<PathBuf>,
     ) {
         let mut last_hb = Instant::now();
+        // the sentinel fires at most once per fleet lifetime
+        let mut preempt_armed = preempt_file.is_some();
         loop {
             let done = {
                 let mut st = state.lock().unwrap();
                 if last_hb.elapsed() >= heartbeat {
                     last_hb = Instant::now();
                     Self::sample_heartbeats(&mut st, misses_allowed);
+                    if preempt_armed {
+                        if let Some(path) = preempt_file.as_deref() {
+                            if Self::poll_preempt_sentinel(&mut st, path) {
+                                preempt_armed = false;
+                            }
+                        }
+                    }
                 }
                 let draining = st.draining;
                 Self::pump(&mut st, draining);
@@ -546,8 +579,37 @@ impl ShardFleet {
             if done {
                 break;
             }
-            std::thread::sleep(PUMP_INTERVAL);
+            std::thread::sleep(pump_interval);
         }
+    }
+
+    /// Spot-interruption sentinel (ISSUE 10): when `serve.preempt_file`
+    /// appears, read the target shard index from its contents (an empty
+    /// or whitespace file means shard 0) and begin a preemption drain on
+    /// it — the file-based analogue of a cloud instance reclaim notice.
+    /// Returns true once the sentinel has been consumed (the file fires
+    /// at most once; malformed contents or an out-of-range / non-Live
+    /// shard consume it without action).
+    fn poll_preempt_sentinel(st: &mut FleetState, path: &std::path::Path) -> bool {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return false; // not present (or unreadable) yet
+        };
+        let trimmed = text.trim();
+        let shard = if trimmed.is_empty() {
+            0
+        } else {
+            match trimmed.parse::<usize>() {
+                Ok(s) => s,
+                Err(_) => return true, // malformed: consume, no action
+            }
+        };
+        if shard < st.shards.len() && st.shards[shard].state == ShardState::Live {
+            st.shards[shard].state = ShardState::Preempting;
+            if let Some(h) = st.shards[shard].handle.as_ref() {
+                h.begin_shutdown();
+            }
+        }
+        true
     }
 
     /// One monitor pass over the pending set: deliver resolved tickets,

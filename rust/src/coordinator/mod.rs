@@ -36,6 +36,15 @@
 //!   the `serve.traffic` grammar, plus the JSON-lines trace
 //!   record/replay format that makes any open-loop incident reproduce
 //!   bit-for-bit from a seed or a trace file.
+//! * [`wire`] / [`proc`] / [`cluster`] — multi-process cluster serving
+//!   (ISSUE 10): a length-prefixed, versioned frame protocol over Unix
+//!   domain sockets ([`wire`]), a process supervisor that spawns and
+//!   health-checks `shard-worker` child processes ([`proc`]), and the
+//!   [`cluster::ClusterFleet`] front door that mirrors the in-process
+//!   [`fleet::ShardFleet`] API across process boundaries — p2c routing
+//!   on reported queue depth, wire heartbeat monitoring,
+//!   respawn-or-retire on worker death, and deterministic failover
+//!   re-admission (same bit-identical contract as the fleet).
 //! * [`metrics`] — latency histograms, fixed-memory streaming
 //!   percentiles, admission/batching/pipeline counters, fleet-level
 //!   failover counters, and simulated PPA aggregation.
@@ -44,14 +53,21 @@
 //! the PJRT C API (or the offline native surrogate — see
 //! `crate::runtime::NativeDenoise`).
 
+#[cfg(unix)]
+pub mod cluster;
 pub mod ddpm;
 pub mod faults;
 pub mod fleet;
 pub mod metrics;
 pub mod params;
+#[cfg(unix)]
+pub mod proc;
 pub mod server;
 pub mod traffic;
+pub mod wire;
 
+#[cfg(unix)]
+pub use cluster::ClusterFleet;
 pub use ddpm::DdpmSchedule;
 pub use faults::{FaultAction, FaultEvent, FaultKind, FaultPlane, FaultSpec};
 pub use fleet::{FleetTicket, ShardFleet, ShardState};

@@ -1,0 +1,487 @@
+//! Process supervision for cluster serving (ISSUE 10).
+//!
+//! Two halves of the same boundary:
+//!
+//! * **Worker side** — [`run_worker`] is the body of the hidden
+//!   `shard-worker` CLI subcommand: bind a Unix socket, accept exactly
+//!   one front-door connection, handshake (version-checked, refusals
+//!   answered with [`WireMsg::Reject`]), then wrap one in-process
+//!   serving session ([`ServerHandle`]) behind the wire — submits map
+//!   to `try_submit`, resolved tickets stream back as `TicketResult`
+//!   frames, and a heartbeat frame carrying the lane-pulse sequence and
+//!   queue depth goes out every `serve.heartbeat_ms`.
+//! * **Supervisor side** — [`WorkerProc`] spawns one `shard-worker`
+//!   child on the `sf-mmcn` binary, connects, handshakes, and pumps
+//!   every inbound frame into a shared [`WorkerEvent`] channel that the
+//!   `ClusterFleet` monitor drains. Killing the child (or the child
+//!   dying) surfaces as [`WorkerEvent::Gone`] via socket EOF.
+//!
+//! The worker process runs exactly one session: its config is the fleet
+//! config with `cluster`/`shards` forced to a single session and the
+//! fault/preempt planes cleared (those belong to the front door).
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::server::{DiffusionServer, Ticket, TicketPoll};
+use crate::coordinator::wire::{
+    write_frame, FrameReader, WireMetrics, WireMsg, WIRE_VERSION,
+};
+use crate::runtime::ArtifactStore;
+
+/// How long the supervisor waits for a fresh child to bind its socket
+/// and complete the handshake. Generous: debug-build workers pay
+/// process startup plus session construction.
+pub const SPAWN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long an accepted worker waits for the front door to connect
+/// before concluding it was orphaned and exiting.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One frame (or loss) from one worker connection, tagged with the
+/// worker slot and spawn generation so the monitor can ignore stale
+/// events from a connection it already replaced.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// A frame arrived from worker `worker` (spawn generation `gen`).
+    Msg {
+        /// Worker slot index.
+        worker: usize,
+        /// Spawn generation of the connection the frame arrived on.
+        gen: u64,
+        /// The frame.
+        msg: WireMsg,
+    },
+    /// The connection reached EOF or a wire error: the worker process
+    /// died or went unreadable.
+    Gone {
+        /// Worker slot index.
+        worker: usize,
+        /// Spawn generation of the lost connection.
+        gen: u64,
+    },
+}
+
+// ---------------------------------------------------------------------
+// Supervisor side
+// ---------------------------------------------------------------------
+
+/// Supervisor handle on one spawned `shard-worker` process: the child,
+/// the write half of its socket, and the reader thread feeding
+/// [`WorkerEvent`]s to the fleet monitor.
+#[derive(Debug)]
+pub struct WorkerProc {
+    /// Worker slot index.
+    pub worker: usize,
+    /// Spawn generation (0 for the original spawn, +1 per respawn).
+    pub gen: u64,
+    /// Child process id, as reported by the handshake.
+    pub pid: u64,
+    child: Child,
+    writer: UnixStream,
+    reader: Option<JoinHandle<()>>,
+    socket: PathBuf,
+}
+
+impl WorkerProc {
+    /// Spawn one `shard-worker` child of `exe`, connect to its socket,
+    /// and complete the version handshake. `cfg_path` is the worker
+    /// config TOML written by the cluster; `dir` hosts the per-cluster
+    /// sockets; every inbound frame is forwarded to `events`.
+    pub fn spawn(
+        exe: &Path,
+        cfg_path: &Path,
+        dir: &Path,
+        worker: usize,
+        gen: u64,
+        events: Sender<WorkerEvent>,
+    ) -> Result<WorkerProc> {
+        let socket = dir.join(format!("w{worker}-g{gen}.sock"));
+        let _ = std::fs::remove_file(&socket);
+        let mut child = Command::new(exe)
+            .arg("shard-worker")
+            .arg("--config")
+            .arg(cfg_path)
+            .arg("--socket")
+            .arg(&socket)
+            .arg("--worker")
+            .arg(worker.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning shard-worker {worker} from {}", exe.display()))?;
+
+        let deadline = Instant::now() + SPAWN_TIMEOUT;
+        let stream = loop {
+            match UnixStream::connect(&socket) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        bail!("shard-worker {worker} exited during startup ({status})");
+                    }
+                    if Instant::now() >= deadline {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        bail!(
+                            "shard-worker {worker}: socket {} never came up ({e})",
+                            socket.display()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+
+        // Handshake under a read timeout; the timeout is a property of
+        // the shared socket description, so clear it before the reader
+        // thread takes over with blocking reads.
+        let mut writer = stream.try_clone().context("cloning worker socket")?;
+        let mut reader = FrameReader::new(stream.try_clone().context("cloning worker socket")?);
+        write_frame(
+            &mut writer,
+            &WireMsg::Hello {
+                version: WIRE_VERSION,
+                worker,
+            },
+        )
+        .context("sending hello")?;
+        stream.set_read_timeout(Some(SPAWN_TIMEOUT))?;
+        let pid = match reader.next_msg() {
+            Ok(Some(WireMsg::HelloAck {
+                version,
+                worker: w,
+                pid,
+            })) => {
+                if version != WIRE_VERSION || w != worker {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    bail!(
+                        "shard-worker {worker}: bad hello_ack (version {version}, worker {w})"
+                    );
+                }
+                pid
+            }
+            Ok(Some(WireMsg::Reject { reason })) => {
+                let _ = child.wait();
+                bail!("shard-worker {worker} refused the handshake: {reason}");
+            }
+            Ok(other) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("shard-worker {worker}: unexpected handshake frame {other:?}");
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e.context(format!("shard-worker {worker}: handshake read")));
+            }
+        };
+        stream.set_read_timeout(None)?;
+
+        let reader_thread = std::thread::Builder::new()
+            .name(format!("cluster-w{worker}-g{gen}-reader"))
+            .spawn(move || {
+                let mut reader = reader;
+                loop {
+                    match reader.next_msg() {
+                        Ok(Some(msg)) => {
+                            if events.send(WorkerEvent::Msg { worker, gen, msg }).is_err() {
+                                break; // monitor gone; stop reading
+                            }
+                        }
+                        Ok(None) | Err(_) => {
+                            let _ = events.send(WorkerEvent::Gone { worker, gen });
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker reader thread");
+
+        Ok(WorkerProc {
+            worker,
+            gen,
+            pid,
+            child,
+            writer,
+            reader: Some(reader_thread),
+            socket,
+        })
+    }
+
+    /// Send one frame to the worker. An error means the connection is
+    /// down — the caller treats the worker as dead.
+    pub fn send(&mut self, msg: &WireMsg) -> Result<()> {
+        write_frame(&mut self.writer, msg)
+    }
+
+    /// Hard-kill the child process (SIGKILL) and reap it. The reader
+    /// thread sees EOF and emits [`WorkerEvent::Gone`].
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Reap a worker expected to exit on its own (after `Shutdown`):
+    /// wait for the child, join the reader, remove the socket file.
+    /// Falls back to a kill if the child outlives `grace`.
+    pub fn reap(mut self, grace: Duration) {
+        let deadline = Instant::now() + grace;
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                _ => {
+                    let _ = self.child.kill();
+                    let _ = self.child.wait();
+                    break;
+                }
+            }
+        }
+        if let Some(jh) = self.reader.take() {
+            let _ = jh.join();
+        }
+        let _ = std::fs::remove_file(&self.socket);
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        // never leak a child process: anything still running when the
+        // handle drops gets killed and reaped
+        if let Ok(None) = self.child.try_wait() {
+            let _ = self.child.kill();
+        }
+        let _ = self.child.wait();
+        if let Some(jh) = self.reader.take() {
+            let _ = jh.join();
+        }
+        let _ = std::fs::remove_file(&self.socket);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// The config one worker process actually runs: a single in-process
+/// session, with the cluster/fault/preempt planes stripped (they belong
+/// to the front door, not the worker).
+pub fn worker_session_config(cfg: &ServeConfig) -> ServeConfig {
+    let mut wcfg = cfg.clone();
+    wcfg.cluster = 0;
+    wcfg.shards = 1;
+    wcfg.cosim = false;
+    wcfg.fault_spec = String::new();
+    wcfg.preempt_file = String::new();
+    wcfg
+}
+
+/// Body of the hidden `shard-worker` subcommand: serve one session
+/// behind `socket` until the front door shuts the connection down.
+/// Exits cleanly after sending the final `Metrics { last: true }`
+/// frame; an orphaned worker (front door vanished) also exits instead
+/// of lingering.
+pub fn run_worker(cfg: &ServeConfig, socket: &Path, worker: usize) -> Result<()> {
+    let listener =
+        UnixListener::bind(socket).with_context(|| format!("binding {}", socket.display()))?;
+    listener.set_nonblocking(true)?;
+    let accept_deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let stream = loop {
+        match listener.accept() {
+            Ok((s, _)) => break s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= accept_deadline {
+                    bail!("shard-worker {worker}: front door never connected");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting front-door connection"),
+        }
+    };
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream.try_clone()?);
+
+    // Handshake: require a version-matching Hello for this slot before
+    // starting the session; refuse anything else with a Reject frame.
+    match reader.next_msg() {
+        Ok(Some(WireMsg::Hello { version, worker: w })) => {
+            if version != WIRE_VERSION {
+                let reason = format!(
+                    "version mismatch: front door speaks {version}, worker speaks {WIRE_VERSION}"
+                );
+                let _ = write_frame(&mut writer, &WireMsg::Reject { reason: reason.clone() });
+                bail!("shard-worker {worker}: {reason}");
+            }
+            if w != worker {
+                let reason = format!("worker slot mismatch: addressed {w}, running as {worker}");
+                let _ = write_frame(&mut writer, &WireMsg::Reject { reason: reason.clone() });
+                bail!("shard-worker {worker}: {reason}");
+            }
+            write_frame(
+                &mut writer,
+                &WireMsg::HelloAck {
+                    version: WIRE_VERSION,
+                    worker,
+                    pid: std::process::id() as u64,
+                },
+            )?;
+        }
+        Ok(other) => {
+            let _ = write_frame(
+                &mut writer,
+                &WireMsg::Reject {
+                    reason: "expected hello as the first frame".into(),
+                },
+            );
+            bail!("shard-worker {worker}: bad handshake opener {other:?}");
+        }
+        Err(e) => return Err(e.context("reading handshake")),
+    }
+
+    let wcfg = worker_session_config(cfg);
+    let store = ArtifactStore::new("artifacts");
+    let handle = DiffusionServer::new(wcfg.clone(), &store)
+        .with_context(|| format!("starting shard-worker {worker} session"))?
+        .start();
+    let pulse = handle.pulse();
+
+    // Reader thread: frames -> channel, so the serve loop never blocks
+    // on the socket.
+    let (tx, rx) = std::sync::mpsc::channel::<WireMsg>();
+    let reader_thread = std::thread::Builder::new()
+        .name(format!("shard-worker-{worker}-reader"))
+        .spawn(move || {
+            let mut reader = reader;
+            loop {
+                match reader.next_msg() {
+                    Ok(Some(msg)) => {
+                        if tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(None) | Err(_) => break, // EOF / wire error: channel drops
+                }
+            }
+        })
+        .expect("spawn shard-worker reader");
+
+    let result = worker_serve_loop(&wcfg, &handle, &mut writer, &rx, &pulse);
+    let orphaned = matches!(result, Ok(true));
+    if orphaned {
+        // front door vanished mid-session: drop the backlog and exit
+        handle.kill();
+        let _ = handle.shutdown();
+    } else {
+        let metrics = handle.shutdown()?;
+        let _ = write_frame(
+            &mut writer,
+            &WireMsg::Metrics {
+                last: true,
+                snapshot: WireMetrics::from_metrics(&metrics),
+            },
+        );
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = reader_thread.join();
+    result.map(|_| ())
+}
+
+/// The worker pump: apply control frames, flush resolved tickets,
+/// heartbeat. Returns `Ok(true)` if the front door disappeared
+/// (orphaned) and `Ok(false)` on an orderly `Shutdown`.
+fn worker_serve_loop(
+    cfg: &ServeConfig,
+    handle: &crate::coordinator::server::ServerHandle,
+    writer: &mut UnixStream,
+    rx: &Receiver<WireMsg>,
+    pulse: &crate::coordinator::server::ShardPulse,
+) -> Result<bool> {
+    let pump = Duration::from_micros(cfg.monitor_pump_us.max(1));
+    let hb_period = Duration::from_millis(cfg.heartbeat_ms.max(1));
+    let mut pending: Vec<(u64, Ticket)> = Vec::new();
+    let mut last_hb: Option<Instant> = None;
+    let mut shutdown_req = false;
+    loop {
+        // 1) control frames
+        loop {
+            match rx.try_recv() {
+                Ok(WireMsg::Submit { ticket, req }) => match handle.try_submit(req) {
+                    Ok(t) => pending.push((ticket, t)),
+                    Err(error) => {
+                        write_frame(writer, &WireMsg::SubmitErr { ticket, error })?
+                    }
+                },
+                Ok(WireMsg::Drain) => handle.begin_shutdown(),
+                Ok(WireMsg::MetricsReq) => write_frame(
+                    writer,
+                    &WireMsg::Metrics {
+                        last: false,
+                        snapshot: WireMetrics::from_metrics(&handle.metrics_snapshot()),
+                    },
+                )?,
+                Ok(WireMsg::Shutdown) => {
+                    handle.begin_shutdown();
+                    shutdown_req = true;
+                }
+                Ok(_) => {} // front-door-only frames: ignore
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Ok(true), // orphaned
+            }
+        }
+        // 2) resolved tickets
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].1.poll() {
+                TicketPoll::Pending => i += 1,
+                TicketPoll::Ready(r) => {
+                    let (ticket, _) = pending.swap_remove(i);
+                    write_frame(
+                        writer,
+                        &WireMsg::TicketResult {
+                            ticket,
+                            result: r.map_err(|e| format!("{e:#}")),
+                        },
+                    )?;
+                }
+                TicketPoll::Lost => {
+                    let (ticket, _) = pending.swap_remove(i);
+                    write_frame(
+                        writer,
+                        &WireMsg::TicketResult {
+                            ticket,
+                            result: Err("worker lane dropped the ticket".into()),
+                        },
+                    )?;
+                }
+            }
+        }
+        // 3) heartbeat
+        if last_hb.map_or(true, |t| t.elapsed() >= hb_period) {
+            last_hb = Some(Instant::now());
+            write_frame(
+                writer,
+                &WireMsg::Heartbeat {
+                    seq: pulse.seq(),
+                    queue_depth: handle.queue_depth() as u64,
+                },
+            )?;
+        }
+        // 4) orderly exit: drain finished, everything flushed
+        if shutdown_req && pending.is_empty() {
+            return Ok(false);
+        }
+        std::thread::sleep(pump);
+    }
+}

@@ -1,0 +1,859 @@
+//! Cluster wire protocol (ISSUE 10): length-prefixed, versioned frames
+//! between the `ClusterFleet` front door and its `shard-worker`
+//! processes.
+//!
+//! A frame is a 4-byte little-endian payload length followed by exactly
+//! that many bytes of UTF-8 JSON (one [`WireMsg`]), parsed with the
+//! crate's own `json_lite`. The framing layer is deliberately transport
+//! agnostic — anything `Read`/`Write` carries it — so every rejection
+//! path (truncated header, truncated payload, oversized length, garbage
+//! JSON, unknown message type) is testable without a socket.
+//!
+//! Field encoding follows the trace-file rules
+//! (`coordinator::traffic`): `u64` values that must survive exactly
+//! (seeds) travel as decimal strings, every numeric field is validated
+//! back into the 2^53 exact-integer window, and image tensors travel as
+//! hex-encoded little-endian `f32` bytes so a result delivered across
+//! the wire is bit-identical to one delivered in process.
+//!
+//! Versioning: the first frame each side sends is [`WireMsg::Hello`] /
+//! [`WireMsg::HelloAck`] carrying [`WIRE_VERSION`]; a mismatch is
+//! answered with [`WireMsg::Reject`] and the connection closes. Errors
+//! from [`FrameReader`] carry the frame index and byte offset of the
+//! failure.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelChoice;
+use crate::coordinator::metrics::{AdmissionStats, ServeMetrics};
+use crate::coordinator::server::{
+    AdmissionError, ClassifyRequest, DenoiseRequest, DenoiseResult, InferenceRequest,
+};
+use crate::runtime::TensorBuf;
+use crate::util::json_lite::Json;
+
+/// Protocol version spoken by this build. Bump on any frame or field
+/// change; the handshake refuses mismatched peers instead of
+/// misparsing them.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Ceiling on one frame's payload length. Far above any real message
+/// (a 3x32x32 result is ~25 KiB hex) — its job is to reject a
+/// corrupted length prefix before it turns into a giant allocation.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Largest integer `f64` (and so json_lite) represents exactly: 2^53.
+const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+
+/// One protocol message. Direction conventions: `Hello`, `Submit`,
+/// `Drain`, `MetricsReq`, and `Shutdown` flow front door → worker;
+/// `HelloAck`, `Reject`, `SubmitErr`, `TicketResult`, `Heartbeat`, and
+/// `Metrics` flow worker → front door.
+#[derive(Debug)]
+pub enum WireMsg {
+    /// Handshake opener (front door → worker): the version the front
+    /// door speaks and the worker slot it believes it is addressing.
+    Hello {
+        /// Sender's [`WIRE_VERSION`].
+        version: u32,
+        /// Worker slot index the connection is for.
+        worker: usize,
+    },
+    /// Handshake acceptance (worker → front door).
+    HelloAck {
+        /// Worker's [`WIRE_VERSION`] (equal, or the worker rejects).
+        version: u32,
+        /// The worker slot index the worker was started as.
+        worker: usize,
+        /// Worker process id, for supervision and diagnostics.
+        pid: u64,
+    },
+    /// Handshake refusal (worker → front door), e.g. version mismatch.
+    /// The sender closes the connection after this frame.
+    Reject {
+        /// Human-readable refusal reason.
+        reason: String,
+    },
+    /// Admit one request (front door → worker). `ticket` is the front
+    /// door's correlation id; every later message about this request
+    /// echoes it.
+    Submit {
+        /// Front-door correlation id.
+        ticket: u64,
+        /// The request, bit-exactly re-creatable on the worker.
+        req: InferenceRequest,
+    },
+    /// The worker's admission queue refused the submit (worker → front
+    /// door). `QueueFull` / `ShuttingDown` are retryable elsewhere;
+    /// `Deadline` is terminal for the request.
+    SubmitErr {
+        /// Correlation id of the refused submit.
+        ticket: u64,
+        /// Why admission refused it.
+        error: AdmissionError,
+    },
+    /// A request resolved (worker → front door): the result or a
+    /// terminal execution/expiry error message.
+    TicketResult {
+        /// Correlation id of the resolved request.
+        ticket: u64,
+        /// The delivered result, or the error text it resolved with.
+        result: std::result::Result<DenoiseResult, String>,
+    },
+    /// Periodic worker liveness (worker → front door): the lane-pulse
+    /// sequence number and the instantaneous admission queue depth (the
+    /// p2c routing signal).
+    Heartbeat {
+        /// Lane heartbeat sequence (`ShardPulse::seq`); frozen = wedged.
+        seq: u64,
+        /// Requests waiting in the worker's admission queue.
+        queue_depth: u64,
+    },
+    /// Stop admission and finish everything already admitted (front
+    /// door → worker). Every outstanding ticket still resolves.
+    Drain,
+    /// Ask for a live counters snapshot (front door → worker).
+    MetricsReq,
+    /// Counters snapshot (worker → front door); `last` marks the final
+    /// post-shutdown snapshot, after which the worker exits.
+    Metrics {
+        /// True on the final snapshot a worker emits before exiting.
+        last: bool,
+        /// The counters.
+        snapshot: WireMetrics,
+    },
+    /// Finish the session and exit (front door → worker). The worker
+    /// answers with a final `Metrics { last: true, .. }` frame.
+    Shutdown,
+}
+
+/// The counter subset of one worker's [`ServeMetrics`] that travels the
+/// wire. Latency percentiles are *not* shipped: the front door records
+/// end-to-end latency itself (submit → delivery, exactly like the
+/// in-process `ShardFleet`), so per-worker rows carry throughput,
+/// admission, and invariant counters only.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireMetrics {
+    /// Requests that resolved with a result.
+    pub requests_done: u64,
+    /// Executed steps (one per classification request).
+    pub steps_done: u64,
+    /// Device dispatches issued.
+    pub dispatches: u64,
+    /// Total request-slots across all dispatches.
+    pub batch_items: u64,
+    /// Tickets that resolved with an error.
+    pub requests_failed: u64,
+    /// Worker lanes that died during setup.
+    pub lanes_down: u64,
+    /// Batches that mixed models (invariant: stays 0).
+    pub cross_model_batches: u64,
+    /// Batches that mixed image shapes (invariant: stays 0).
+    pub cross_shape_batches: u64,
+    /// Session wall time, nanoseconds.
+    pub wall_ns: u64,
+    /// Admission counters (`AdmissionStats`, flattened).
+    pub admission: AdmissionStats,
+    /// Per-model `(done, steps, failed)` rows.
+    pub per_model: Vec<WireModelRow>,
+}
+
+/// One per-model counters row of a [`WireMetrics`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireModelRow {
+    /// The model this row covers.
+    pub model: ModelChoice,
+    /// Requests of this model that resolved with a result.
+    pub requests_done: u64,
+    /// Steps executed for this model.
+    pub steps_done: u64,
+    /// Requests of this model whose ticket resolved with an error.
+    pub requests_failed: u64,
+}
+
+impl WireMetrics {
+    /// Capture the wire-portable counter subset of a session snapshot.
+    pub fn from_metrics(m: &ServeMetrics) -> Self {
+        Self {
+            requests_done: m.requests_done as u64,
+            steps_done: m.steps_done as u64,
+            dispatches: m.dispatches as u64,
+            batch_items: m.batch_items as u64,
+            requests_failed: m.requests_failed as u64,
+            lanes_down: m.lanes_down as u64,
+            cross_model_batches: m.cross_model_batches as u64,
+            cross_shape_batches: m.cross_shape_batches as u64,
+            wall_ns: m.wall.as_nanos() as u64,
+            admission: m.admission,
+            per_model: m
+                .per_model
+                .iter()
+                .map(|r| WireModelRow {
+                    model: r.model,
+                    requests_done: r.requests_done as u64,
+                    steps_done: r.steps_done as u64,
+                    requests_failed: r.requests_failed as u64,
+                })
+                .collect(),
+        }
+    }
+
+    /// Re-inflate into a [`ServeMetrics`] whose counters match the
+    /// snapshot (histograms and percentiles stay empty — the front door
+    /// records latency itself).
+    pub fn to_metrics(&self) -> ServeMetrics {
+        let mut m = ServeMetrics::new();
+        m.requests_done = self.requests_done as usize;
+        m.steps_done = self.steps_done as usize;
+        m.dispatches = self.dispatches as usize;
+        m.batch_items = self.batch_items as usize;
+        m.requests_failed = self.requests_failed as usize;
+        m.lanes_down = self.lanes_down as usize;
+        m.cross_model_batches = self.cross_model_batches as usize;
+        m.cross_shape_batches = self.cross_shape_batches as usize;
+        m.wall = Duration::from_nanos(self.wall_ns);
+        m.admission = self.admission;
+        for row in &self.per_model {
+            let slot = &mut m.per_model[row.model.index()];
+            slot.requests_done = row.requests_done as usize;
+            slot.steps_done = row.steps_done as usize;
+            slot.requests_failed = row.requests_failed as usize;
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rendering (struct -> JSON payload)
+// ---------------------------------------------------------------------
+
+/// Escape a string for embedding in a JSON payload.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn deadline_json(d: Option<Duration>) -> String {
+    match d {
+        Some(d) => format!("{}", d.as_nanos()),
+        None => "null".into(),
+    }
+}
+
+/// Stable wire code of an admission error.
+fn admission_code(e: AdmissionError) -> &'static str {
+    match e {
+        AdmissionError::QueueFull => "queue_full",
+        AdmissionError::Deadline => "deadline",
+        AdmissionError::ShuttingDown => "shutting_down",
+        AdmissionError::NoLiveShards => "no_live_shards",
+    }
+}
+
+fn parse_admission_code(s: &str) -> Result<AdmissionError> {
+    Ok(match s {
+        "queue_full" => AdmissionError::QueueFull,
+        "deadline" => AdmissionError::Deadline,
+        "shutting_down" => AdmissionError::ShuttingDown,
+        "no_live_shards" => AdmissionError::NoLiveShards,
+        other => bail!("unknown admission error code `{other}`"),
+    })
+}
+
+/// Hex-encode `f32` data as little-endian bytes — exact bit round-trip,
+/// NaN payloads and signed zeros included.
+fn hex_of_f32(data: &[f32]) -> String {
+    let mut out = String::with_capacity(data.len() * 8);
+    for v in data {
+        for b in v.to_le_bytes() {
+            out.push_str(&format!("{b:02x}"));
+        }
+    }
+    out
+}
+
+fn f32_of_hex(s: &str) -> Result<Vec<f32>> {
+    if s.len() % 8 != 0 {
+        bail!("image hex length {} is not a multiple of 8", s.len());
+    }
+    if !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        bail!("image hex contains a non-hex character");
+    }
+    let mut out = Vec::with_capacity(s.len() / 8);
+    let bytes = s.as_bytes();
+    for chunk in bytes.chunks_exact(8) {
+        let mut le = [0u8; 4];
+        for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            let hi = (pair[0] as char).to_digit(16).unwrap() as u8;
+            let lo = (pair[1] as char).to_digit(16).unwrap() as u8;
+            le[i] = (hi << 4) | lo;
+        }
+        out.push(f32::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+/// Render one request as a JSON object, the trace-record field rules
+/// (`kind` / `id` / `seed`-as-string / `steps` or `model` / `priority`
+/// / `deadline_ns`).
+fn render_request(req: &InferenceRequest) -> String {
+    match req {
+        InferenceRequest::Denoise(r) => format!(
+            "{{\"kind\":\"denoise\",\"id\":{},\"seed\":\"{}\",\"steps\":{},\
+             \"priority\":{},\"deadline_ns\":{}}}",
+            r.id,
+            r.seed,
+            r.steps,
+            r.priority,
+            deadline_json(r.deadline)
+        ),
+        InferenceRequest::Classify(r) => format!(
+            "{{\"kind\":\"classify\",\"id\":{},\"seed\":\"{}\",\"model\":\"{}\",\
+             \"priority\":{},\"deadline_ns\":{}}}",
+            r.id,
+            r.seed,
+            r.model.name(),
+            r.priority,
+            deadline_json(r.deadline)
+        ),
+    }
+}
+
+fn render_result(r: &DenoiseResult) -> String {
+    let shape = r
+        .image
+        .shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\":{},\"shape\":[{}],\"image\":\"{}\",\"latency_ns\":{},\
+         \"steps\":{},\"model\":\"{}\"}}",
+        r.id,
+        shape,
+        hex_of_f32(&r.image.data),
+        r.latency.as_nanos(),
+        r.steps,
+        r.model.name()
+    )
+}
+
+fn render_wire_metrics(m: &WireMetrics) -> String {
+    let rows = m
+        .per_model
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"model\":\"{}\",\"done\":{},\"steps\":{},\"failed\":{}}}",
+                r.model.name(),
+                r.requests_done,
+                r.steps_done,
+                r.requests_failed
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let a = &m.admission;
+    format!(
+        "{{\"done\":{},\"steps\":{},\"dispatches\":{},\"batch_items\":{},\
+         \"failed\":{},\"lanes_down\":{},\"cross_model\":{},\"cross_shape\":{},\
+         \"wall_ns\":{},\"offered\":{},\"admitted\":{},\"rej_full\":{},\
+         \"rej_deadline\":{},\"rej_shutdown\":{},\"expired\":{},\
+         \"queue_depth\":{},\"per_model\":[{}]}}",
+        m.requests_done,
+        m.steps_done,
+        m.dispatches,
+        m.batch_items,
+        m.requests_failed,
+        m.lanes_down,
+        m.cross_model_batches,
+        m.cross_shape_batches,
+        m.wall_ns,
+        a.offered,
+        a.admitted,
+        a.rejected_queue_full,
+        a.rejected_deadline,
+        a.rejected_shutdown,
+        a.expired,
+        a.queue_depth,
+        rows
+    )
+}
+
+impl WireMsg {
+    /// Render the message as its JSON payload (no frame header).
+    pub fn render(&self) -> String {
+        match self {
+            WireMsg::Hello { version, worker } => {
+                format!("{{\"type\":\"hello\",\"version\":{version},\"worker\":{worker}}}")
+            }
+            WireMsg::HelloAck {
+                version,
+                worker,
+                pid,
+            } => format!(
+                "{{\"type\":\"hello_ack\",\"version\":{version},\"worker\":{worker},\
+                 \"pid\":{pid}}}"
+            ),
+            WireMsg::Reject { reason } => {
+                format!("{{\"type\":\"reject\",\"reason\":\"{}\"}}", esc(reason))
+            }
+            WireMsg::Submit { ticket, req } => format!(
+                "{{\"type\":\"submit\",\"ticket\":{ticket},\"req\":{}}}",
+                render_request(req)
+            ),
+            WireMsg::SubmitErr { ticket, error } => format!(
+                "{{\"type\":\"submit_err\",\"ticket\":{ticket},\"error\":\"{}\"}}",
+                admission_code(*error)
+            ),
+            WireMsg::TicketResult { ticket, result } => match result {
+                Ok(r) => format!(
+                    "{{\"type\":\"result\",\"ticket\":{ticket},\"ok\":{}}}",
+                    render_result(r)
+                ),
+                Err(e) => format!(
+                    "{{\"type\":\"result\",\"ticket\":{ticket},\"err\":\"{}\"}}",
+                    esc(e)
+                ),
+            },
+            WireMsg::Heartbeat { seq, queue_depth } => format!(
+                "{{\"type\":\"heartbeat\",\"seq\":{seq},\"queue_depth\":{queue_depth}}}"
+            ),
+            WireMsg::Drain => "{\"type\":\"drain\"}".into(),
+            WireMsg::MetricsReq => "{\"type\":\"metrics_req\"}".into(),
+            WireMsg::Metrics { last, snapshot } => format!(
+                "{{\"type\":\"metrics\",\"last\":{last},\"snapshot\":{}}}",
+                render_wire_metrics(snapshot)
+            ),
+            WireMsg::Shutdown => "{\"type\":\"shutdown\"}".into(),
+        }
+    }
+
+    /// Parse a frame payload back into a message. Errors name the bad
+    /// or missing field; [`FrameReader`] adds the frame/byte position.
+    pub fn parse(payload: &str) -> Result<WireMsg> {
+        let v = Json::parse(payload).context("payload is not valid JSON")?;
+        let ty = field_str(&v, "type")?;
+        Ok(match ty {
+            "hello" => WireMsg::Hello {
+                version: field_u64(&v, "version")? as u32,
+                worker: field_u64(&v, "worker")? as usize,
+            },
+            "hello_ack" => WireMsg::HelloAck {
+                version: field_u64(&v, "version")? as u32,
+                worker: field_u64(&v, "worker")? as usize,
+                pid: field_u64(&v, "pid")?,
+            },
+            "reject" => WireMsg::Reject {
+                reason: field_str(&v, "reason")?.to_string(),
+            },
+            "submit" => WireMsg::Submit {
+                ticket: field_u64(&v, "ticket")?,
+                req: parse_request(
+                    v.get("req").ok_or_else(|| anyhow!("missing `req`"))?,
+                )?,
+            },
+            "submit_err" => WireMsg::SubmitErr {
+                ticket: field_u64(&v, "ticket")?,
+                error: parse_admission_code(field_str(&v, "error")?)?,
+            },
+            "result" => {
+                let ticket = field_u64(&v, "ticket")?;
+                let result = match (v.get("ok"), v.get("err")) {
+                    (Some(ok), None) => Ok(parse_result(ok)?),
+                    (None, Some(e)) => Err(e
+                        .as_str()
+                        .ok_or_else(|| anyhow!("`err` must be a string"))?
+                        .to_string()),
+                    _ => bail!("result frame needs exactly one of `ok` / `err`"),
+                };
+                WireMsg::TicketResult { ticket, result }
+            }
+            "heartbeat" => WireMsg::Heartbeat {
+                seq: field_u64(&v, "seq")?,
+                queue_depth: field_u64(&v, "queue_depth")?,
+            },
+            "drain" => WireMsg::Drain,
+            "metrics_req" => WireMsg::MetricsReq,
+            "metrics" => WireMsg::Metrics {
+                last: v
+                    .get("last")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing or non-boolean `last`"))?,
+                snapshot: parse_wire_metrics(
+                    v.get("snapshot")
+                        .ok_or_else(|| anyhow!("missing `snapshot`"))?,
+                )?,
+            },
+            "shutdown" => WireMsg::Shutdown,
+            other => bail!("unknown message type `{other}`"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing helpers (JSON -> struct)
+// ---------------------------------------------------------------------
+
+/// Exact-integer numeric field: rejects negatives, fractions, and
+/// values beyond 2^53 (where `f64` stops being exact).
+fn field_u64(v: &Json, key: &str) -> Result<u64> {
+    let f = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing or non-numeric `{key}`"))?;
+    if !(0.0..=MAX_EXACT).contains(&f) || f.fract() != 0.0 {
+        bail!("`{key}` out of exact-integer range: {f}");
+    }
+    Ok(f as u64)
+}
+
+fn field_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing or non-string `{key}`"))
+}
+
+fn parse_request(v: &Json) -> Result<InferenceRequest> {
+    let id = field_u64(v, "id")?;
+    let seed: u64 = field_str(v, "seed")?
+        .parse()
+        .map_err(|_| anyhow!("bad `seed` (expected a decimal u64 string)"))?;
+    let priority_raw = field_u64(v, "priority")?;
+    if priority_raw > u8::MAX as u64 {
+        bail!("`priority` out of range: {priority_raw}");
+    }
+    let priority = priority_raw as u8;
+    let deadline = match v.get("deadline_ns") {
+        None | Some(Json::Null) => None,
+        Some(_) => Some(Duration::from_nanos(field_u64(v, "deadline_ns")?)),
+    };
+    Ok(match field_str(v, "kind")? {
+        "denoise" => {
+            let steps = field_u64(v, "steps")? as usize;
+            if steps == 0 {
+                bail!("`steps` must be >= 1");
+            }
+            InferenceRequest::Denoise(DenoiseRequest {
+                id,
+                seed,
+                steps,
+                priority,
+                deadline,
+            })
+        }
+        "classify" => InferenceRequest::Classify(ClassifyRequest {
+            id,
+            seed,
+            model: ModelChoice::parse(field_str(v, "model")?).context("bad `model`")?,
+            priority,
+            deadline,
+        }),
+        other => bail!("unknown `kind` `{other}` (expected denoise | classify)"),
+    })
+}
+
+fn parse_result(v: &Json) -> Result<DenoiseResult> {
+    let shape: Vec<usize> = v
+        .get("shape")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("missing or non-array `shape`"))?
+        .iter()
+        .map(|d| {
+            d.as_f64()
+                .filter(|f| (0.0..=MAX_EXACT).contains(f) && f.fract() == 0.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| anyhow!("bad `shape` element"))
+        })
+        .collect::<Result<_>>()?;
+    let data = f32_of_hex(field_str(v, "image")?)?;
+    let image = TensorBuf::new(shape, data).context("inconsistent `shape` / `image`")?;
+    Ok(DenoiseResult {
+        id: field_u64(v, "id")?,
+        image,
+        latency: Duration::from_nanos(field_u64(v, "latency_ns")?),
+        steps: field_u64(v, "steps")? as usize,
+        model: ModelChoice::parse(field_str(v, "model")?).context("bad `model`")?,
+    })
+}
+
+fn parse_wire_metrics(v: &Json) -> Result<WireMetrics> {
+    let mut per_model = Vec::new();
+    for row in v
+        .get("per_model")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("missing or non-array `per_model`"))?
+    {
+        per_model.push(WireModelRow {
+            model: ModelChoice::parse(field_str(row, "model")?).context("bad `model`")?,
+            requests_done: field_u64(row, "done")?,
+            steps_done: field_u64(row, "steps")?,
+            requests_failed: field_u64(row, "failed")?,
+        });
+    }
+    Ok(WireMetrics {
+        requests_done: field_u64(v, "done")?,
+        steps_done: field_u64(v, "steps")?,
+        dispatches: field_u64(v, "dispatches")?,
+        batch_items: field_u64(v, "batch_items")?,
+        requests_failed: field_u64(v, "failed")?,
+        lanes_down: field_u64(v, "lanes_down")?,
+        cross_model_batches: field_u64(v, "cross_model")?,
+        cross_shape_batches: field_u64(v, "cross_shape")?,
+        wall_ns: field_u64(v, "wall_ns")?,
+        admission: AdmissionStats {
+            offered: field_u64(v, "offered")?,
+            admitted: field_u64(v, "admitted")?,
+            rejected_queue_full: field_u64(v, "rej_full")?,
+            rejected_deadline: field_u64(v, "rej_deadline")?,
+            rejected_shutdown: field_u64(v, "rej_shutdown")?,
+            expired: field_u64(v, "expired")?,
+            queue_depth: field_u64(v, "queue_depth")? as usize,
+        },
+        per_model,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// Write one message as a frame: 4-byte little-endian payload length,
+/// then the JSON payload. Flushes, so a frame is visible to the peer as
+/// soon as this returns.
+pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> Result<()> {
+    let payload = msg.render();
+    let len = payload.len();
+    if len as u64 > MAX_FRAME as u64 {
+        bail!("refusing to send oversized frame ({len} bytes > max {MAX_FRAME})");
+    }
+    w.write_all(&(len as u32).to_le_bytes())
+        .context("writing frame header")?;
+    w.write_all(payload.as_bytes())
+        .context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Reads frames off any byte stream, tracking the frame index and byte
+/// offset so every rejection (truncation, oversized length, garbage
+/// payload) reports *where* the stream went bad.
+#[derive(Debug)]
+pub struct FrameReader<R: Read> {
+    inner: R,
+    /// Frames fully consumed so far; the next frame is index `frames`.
+    frames: u64,
+    /// Bytes consumed so far (frame headers included).
+    offset: u64,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a byte stream at position 0.
+    pub fn new(inner: R) -> Self {
+        Self {
+            inner,
+            frames: 0,
+            offset: 0,
+        }
+    }
+
+    /// Frames fully read so far.
+    pub fn frames_read(&self) -> u64 {
+        self.frames
+    }
+
+    /// Read into `buf` until full. Returns bytes read, which is short
+    /// only at EOF.
+    fn fill(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut got = 0;
+        while got < buf.len() {
+            match self.inner.read(&mut buf[got..]) {
+                Ok(0) => break,
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "frame {} at byte {}: read failed",
+                            self.frames,
+                            self.offset + got as u64
+                        )
+                    })
+                }
+            }
+        }
+        Ok(got)
+    }
+
+    /// Read the next frame. `Ok(None)` on a clean EOF at a frame
+    /// boundary; every other shortfall is an error carrying the frame
+    /// index and byte offset.
+    pub fn next_msg(&mut self) -> Result<Option<WireMsg>> {
+        let mut header = [0u8; 4];
+        let got = self.fill(&mut header)?;
+        if got == 0 {
+            return Ok(None); // clean EOF between frames
+        }
+        if got < 4 {
+            bail!(
+                "frame {} at byte {}: truncated header ({got} of 4 bytes)",
+                self.frames,
+                self.offset
+            );
+        }
+        let len = u32::from_le_bytes(header);
+        if len > MAX_FRAME {
+            bail!(
+                "frame {} at byte {}: oversized frame ({len} bytes > max {MAX_FRAME})",
+                self.frames,
+                self.offset
+            );
+        }
+        let mut payload = vec![0u8; len as usize];
+        let got = self.fill(&mut payload)?;
+        if got < payload.len() {
+            bail!(
+                "frame {} at byte {}: truncated payload ({got} of {len} bytes)",
+                self.frames,
+                self.offset + 4
+            );
+        }
+        let text = std::str::from_utf8(&payload).map_err(|e| {
+            anyhow!(
+                "frame {} at byte {}: payload is not UTF-8 ({e})",
+                self.frames,
+                self.offset + 4
+            )
+        })?;
+        let msg = WireMsg::parse(text).with_context(|| {
+            format!(
+                "frame {} at byte {}: bad payload",
+                self.frames,
+                self.offset + 4
+            )
+        })?;
+        self.offset += 4 + len as u64;
+        self.frames += 1;
+        Ok(Some(msg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &WireMsg) -> WireMsg {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg).unwrap();
+        let mut r = FrameReader::new(&buf[..]);
+        let back = r.next_msg().unwrap().expect("one frame");
+        assert!(r.next_msg().unwrap().is_none(), "clean EOF after frame");
+        back
+    }
+
+    #[test]
+    fn result_image_bits_roundtrip_exactly() {
+        let data = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-7, 1e30];
+        let msg = WireMsg::TicketResult {
+            ticket: 9,
+            result: Ok(DenoiseResult {
+                id: 3,
+                image: TensorBuf::new(vec![2, 3], data.clone()).unwrap(),
+                latency: Duration::from_nanos(123_456),
+                steps: 4,
+                model: ModelChoice::Unet,
+            }),
+        };
+        match roundtrip(&msg) {
+            WireMsg::TicketResult {
+                ticket,
+                result: Ok(r),
+            } => {
+                assert_eq!(ticket, 9);
+                assert_eq!(r.id, 3);
+                assert_eq!(r.image.shape, vec![2, 3]);
+                let want: Vec<u32> = data.iter().map(|f| f.to_bits()).collect();
+                let got: Vec<u32> = r.image.data.iter().map(|f| f.to_bits()).collect();
+                assert_eq!(want, got, "bit-exact image transport");
+                assert_eq!(r.latency, Duration::from_nanos(123_456));
+                assert_eq!(r.steps, 4);
+                assert_eq!(r.model, ModelChoice::Unet);
+            }
+            other => panic!("wrong message back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_header_and_payload_carry_position() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &WireMsg::Drain).unwrap();
+        let whole = buf.len();
+        // cut inside the second frame's header
+        write_frame(&mut buf, &WireMsg::Shutdown).unwrap();
+        let cut = &buf[..whole + 2];
+        let mut r = FrameReader::new(cut);
+        assert!(matches!(r.next_msg().unwrap(), Some(WireMsg::Drain)));
+        let err = r.next_msg().unwrap_err().to_string();
+        assert!(err.contains("frame 1"), "{err}");
+        assert!(err.contains(&format!("byte {whole}")), "{err}");
+        assert!(err.contains("truncated header"), "{err}");
+        // cut inside the second frame's payload
+        let cut = &buf[..whole + 6];
+        let mut r = FrameReader::new(cut);
+        r.next_msg().unwrap();
+        let err = r.next_msg().unwrap_err().to_string();
+        assert!(err.contains("truncated payload"), "{err}");
+        assert!(err.contains(&format!("byte {}", whole + 4)), "{err}");
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_rejected() {
+        let mut buf = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        buf.extend_from_slice(b"xx");
+        let err = FrameReader::new(&buf[..]).next_msg().unwrap_err().to_string();
+        assert!(err.contains("oversized frame"), "{err}");
+
+        let payload = b"not json at all";
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(payload);
+        let err = FrameReader::new(&buf[..]).next_msg().unwrap_err().to_string();
+        assert!(err.contains("frame 0"), "{err}");
+        assert!(err.contains("bad payload"), "{err}");
+    }
+
+    #[test]
+    fn unknown_type_and_bad_fields_rejected() {
+        assert!(WireMsg::parse("{\"type\":\"warp\"}").is_err());
+        assert!(WireMsg::parse("{\"type\":\"hello\",\"version\":1}").is_err());
+        assert!(
+            WireMsg::parse("{\"type\":\"heartbeat\",\"seq\":-1,\"queue_depth\":0}").is_err(),
+            "negative counters rejected"
+        );
+        assert!(
+            WireMsg::parse("{\"type\":\"submit_err\",\"ticket\":1,\"error\":\"oom\"}").is_err(),
+            "unknown admission code rejected"
+        );
+    }
+
+    #[test]
+    fn hex_codec_rejects_malformed_input() {
+        assert!(f32_of_hex("0000803").is_err(), "odd length");
+        assert!(f32_of_hex("zz00803f").is_err(), "non-hex chars");
+        assert_eq!(f32_of_hex("0000803f").unwrap(), vec![1.0f32]);
+    }
+}

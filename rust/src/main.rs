@@ -9,6 +9,11 @@
 //! * `sweep`     — design-space sweep (units vs nu / power / latency).
 //! * `report`    — regenerate a paper table/figure (table1..3, fig20..25).
 //! * `artifacts` — list AOT artifacts.
+//!
+//! One hidden subcommand, `shard-worker`, is the child-process body of
+//! multi-process cluster serving (`serve --cluster N`, ISSUE 10): it
+//! wraps one serving session behind a Unix socket and is only ever
+//! spawned by the cluster front door, never by hand.
 
 use anyhow::{bail, Result};
 
@@ -27,7 +32,15 @@ use sf_mmcn::sim::energy::CAL_40NM;
 use sf_mmcn::util::cli::Args;
 use sf_mmcn::util::{Rng, Tensor};
 
-const SUBCOMMANDS: &[&str] = &["run", "simulate", "serve", "sweep", "report", "artifacts"];
+const SUBCOMMANDS: &[&str] = &[
+    "run",
+    "simulate",
+    "serve",
+    "sweep",
+    "report",
+    "artifacts",
+    "shard-worker",
+];
 
 const USAGE: &str = "\
 sf-mmcn — Server-Flow Multi-Mode CNN / diffusion accelerator
@@ -47,6 +60,7 @@ USAGE: sf-mmcn <subcommand> [options]
             [--model-mix \"unet:2,resnet18:1,vgg16:1\"]
             [--shards 1] [--heartbeat-ms 25] [--heartbeat-misses 8]
             [--fault-spec \"kill:1:5;stall:0:3:40\"] [--fault-seed N]
+            [--cluster 4] [--preempt-file FILE] [--monitor-pump-us 500]
   sweep     [--model resnet18] [--img 224]
   report    table1|table2|table3|fig20|fig21|fig22|fig23|fig24|fig25|
             headlines|all
@@ -215,6 +229,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.shards = args.get_usize("shards", cfg.shards)?;
     cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.heartbeat_misses = args.get_u64("heartbeat-misses", cfg.heartbeat_misses)?;
+    // multi-process cluster serving (ISSUE 10)
+    cfg.cluster = args.get_usize("cluster", cfg.cluster)?;
+    cfg.monitor_pump_us = args.get_u64("monitor-pump-us", cfg.monitor_pump_us)?;
+    if let Some(path) = args.get("preempt-file") {
+        // spot-interruption sentinel: when this file appears, drain the
+        // shard/worker index it names (empty file = index 0)
+        cfg.preempt_file = path.to_string();
+    }
     if let Some(spec) = args.get("fault-spec") {
         cfg.fault_spec = spec.to_string();
     }
@@ -229,6 +251,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let trace_in = args.get("trace-in").map(std::path::PathBuf::from);
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+
+    // The cluster front door (ISSUE 10): N worker *processes* behind
+    // the wire protocol. Faults are injected by killing real processes
+    // (see `tests/cluster_e2e.rs`), not by the in-process fault plane.
+    if cfg.cluster > 0 {
+        if !cfg.fault_spec.is_empty() || fault_seed.is_some() {
+            bail!(
+                "--fault-spec/--fault-seed drive the in-process fleet's fault plane; \
+                 cluster workers fail by process death (kill the worker instead)"
+            );
+        }
+        if args.flag("open-loop")
+            || !cfg.traffic.is_empty()
+            || trace_in.is_some()
+            || trace_out.is_some()
+        {
+            bail!(
+                "open-loop traffic (--open-loop/--traffic/--trace-in/--trace-out) serves a \
+                 single session; drop it or use the cluster bench for open-loop cells"
+            );
+        }
+        return cmd_serve_cluster(&cfg);
+    }
 
     // The fleet front door (ISSUE 6): multiple shards, or any fault
     // injection, serve through ShardFleet so failures are survivable.
@@ -521,6 +566,77 @@ fn cmd_serve_fleet(cfg: &ServeConfig, fault_seed: Option<u64>) -> Result<()> {
     Ok(())
 }
 
+/// Cluster serving demo (ISSUE 10): spawn `cfg.cluster` worker
+/// *processes* of this binary (hidden `shard-worker` subcommand), route
+/// the workload across them over the wire protocol, and report the
+/// merged fleet metrics. Same determinism contract as the in-process
+/// fleet: a worker process dying mid-run loses nothing.
+#[cfg(unix)]
+fn cmd_serve_cluster(cfg: &ServeConfig) -> Result<()> {
+    use sf_mmcn::coordinator::ClusterFleet;
+
+    let exe = std::env::current_exe()?;
+    println!(
+        "cluster serving: {} requests ({} steps each) over {} worker processes × {} lanes, \
+         {} backend …",
+        cfg.requests,
+        cfg.steps,
+        cfg.cluster,
+        cfg.workers,
+        cfg.backend.name(),
+    );
+    let cluster = ClusterFleet::start(cfg.clone(), &exe)?;
+    let mut tickets = Vec::new();
+    for req in workload(cfg, cfg.seed, 0..cfg.requests) {
+        match cluster.submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(e) => println!("request rejected at the front door: {e}"),
+        }
+    }
+    let (mut delivered, mut failed) = (0usize, 0usize);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => delivered += 1,
+            Err(e) => {
+                failed += 1;
+                eprintln!("{e}");
+            }
+        }
+    }
+    let metrics = cluster.shutdown()?;
+    println!("{}", metrics.render());
+    println!("cluster summary: {delivered} delivered, {failed} failed");
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_serve_cluster(_cfg: &ServeConfig) -> Result<()> {
+    bail!("--cluster needs Unix domain sockets; this platform has none")
+}
+
+/// Hidden subcommand: the body of one cluster worker process. Spawned
+/// by the cluster front door with `--config <toml> --socket <path>
+/// --worker <slot>`; never invoked by hand.
+#[cfg(unix)]
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    use sf_mmcn::coordinator::proc::run_worker;
+
+    let Some(config) = args.get("config") else {
+        bail!("shard-worker needs --config <worker.toml>");
+    };
+    let Some(socket) = args.get("socket") else {
+        bail!("shard-worker needs --socket <path>");
+    };
+    let worker = args.get_usize("worker", 0)?;
+    let cfg = ServeConfig::from_file(std::path::Path::new(config))?;
+    run_worker(&cfg, std::path::Path::new(socket), worker)
+}
+
+#[cfg(not(unix))]
+fn cmd_shard_worker(_args: &Args) -> Result<()> {
+    bail!("shard-worker needs Unix domain sockets; this platform has none")
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = ModelChoice::parse(args.get_or("model", "resnet18"))?;
     let img = args.get_usize("img", 224)?;
@@ -630,6 +746,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        Some("shard-worker") => cmd_shard_worker(&args),
         _ => {
             print!("{USAGE}");
             Ok(())

@@ -1,0 +1,223 @@
+//! Cluster serving end-to-end tests (ISSUE 10): the acceptance criteria
+//! for multi-process serving, on the offline native backend.
+//!
+//! Same central claim as the in-process fleet, now across process
+//! boundaries: request execution is a pure function of
+//! `(model, seed, steps)`, so a cluster run — including one where a
+//! worker *process* is killed mid-flight — delivers a result set
+//! byte-identical to a single-process run of the same seeded workload.
+//!
+//! Every scenario spawns real `shard-worker` child processes of this
+//! crate's own binary and talks to them over the Unix-socket wire
+//! protocol; nothing is mocked.
+
+#![cfg(unix)]
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use sf_mmcn::config::{ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::{
+    workload, ClusterFleet, DenoiseResult, DiffusionServer, FleetTicket, ShardState,
+};
+use sf_mmcn::runtime::ArtifactStore;
+
+/// Cluster config on the native surrogate: single-lane workers,
+/// per-step dispatches (chunk = 1) so pulses beat every few
+/// milliseconds — far inside the 10 ms x 8 heartbeat tolerance.
+fn cluster_cfg(workers: usize, steps: usize) -> ServeConfig {
+    ServeConfig {
+        steps,
+        requests: 0,
+        workers: 1,
+        max_batch: 2,
+        seed: 11,
+        artifact: "unet_denoise_16".into(),
+        cosim: false,
+        fused: false,
+        backend: ServeBackend::Native,
+        batched: true,
+        pipeline: false,
+        chunk: 1,
+        pooled: true,
+        queue_depth: 64,
+        priorities: 2,
+        shards: 1,
+        cluster: workers,
+        heartbeat_ms: 10,
+        heartbeat_misses: 8,
+        ..ServeConfig::default()
+    }
+}
+
+fn exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_sf-mmcn"))
+}
+
+/// The single-process reference: the same seeded workload through one
+/// plain in-process session. Results sorted by id for positional
+/// comparison.
+fn baseline(cfg: &ServeConfig, n: usize) -> Vec<DenoiseResult> {
+    let mut solo = cfg.clone();
+    solo.cluster = 0;
+    solo.shards = 1;
+    let server =
+        DiffusionServer::new(solo, &ArtifactStore::new("artifacts")).expect("baseline server");
+    let (mut r, _) = server
+        .serve(workload(cfg, cfg.seed, 0..n))
+        .expect("single-process baseline serves everything");
+    r.sort_by_key(|x| x.id);
+    r
+}
+
+fn submit_all(fleet: &ClusterFleet, cfg: &ServeConfig, n: usize) -> Vec<FleetTicket> {
+    workload(cfg, cfg.seed, 0..n)
+        .into_iter()
+        .map(|r| fleet.submit(r).expect("cluster front door admits the workload"))
+        .collect()
+}
+
+fn wait_all(tickets: Vec<FleetTicket>, what: &str) -> Vec<DenoiseResult> {
+    let mut results: Vec<DenoiseResult> = tickets
+        .into_iter()
+        .map(|t| {
+            let id = t.id();
+            t.wait()
+                .unwrap_or_else(|e| panic!("{what}: cluster ticket {id} lost or failed: {e}"))
+        })
+        .collect();
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+fn assert_bit_identical(got: &[DenoiseResult], want: &[DenoiseResult], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: delivered-set size");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id, "{what}: delivered-set ids");
+        assert_eq!(
+            g.image.data, w.image.data,
+            "{what}: request {} diverged from the single-process run — \
+             cluster serving must be bit-identical",
+            g.id
+        );
+    }
+}
+
+#[test]
+fn four_process_cluster_matches_single_process_bit_for_bit() {
+    // Acceptance (a): a 4-process cluster delivers the exact result set
+    // a single in-process session produces for the same seeded workload
+    // — the wire codec, routing, and per-process sessions are all
+    // invisible to the bits.
+    let n = 16;
+    let cfg = cluster_cfg(4, 2);
+    let want = baseline(&cfg, n);
+    let fleet = ClusterFleet::start(cfg.clone(), exe()).expect("4-process cluster starts");
+    assert_eq!(fleet.workers(), 4);
+    let tickets = submit_all(&fleet, &cfg, n);
+    let got = wait_all(tickets, "4-process cluster");
+    assert_bit_identical(&got, &want, "4-process cluster");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.submitted, n as u64);
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 0, "no worker died in a clean run");
+    assert_eq!(m.stats.drained, 4, "every worker exited orderly");
+    assert_eq!(m.e2e_latency.count(), n as u64);
+    // every worker process reported final metrics; together they
+    // executed the full workload
+    assert_eq!(m.per_shard.len(), 4);
+    let done: usize = m.per_shard.iter().map(|s| s.requests_done).sum();
+    assert_eq!(done, n, "every request executed exactly once");
+}
+
+#[test]
+fn worker_process_kill_mid_flight_loses_zero_tickets() {
+    // Acceptance (b): kill a worker *process* mid-flight. Every ticket
+    // still resolves Ok (zero lost), and every delivered image is
+    // byte-equal to the single-process run — failover re-admission is
+    // invisible except in the counters.
+    let n = 16;
+    let cfg = cluster_cfg(2, 3);
+    let want = baseline(&cfg, n);
+    let fleet = ClusterFleet::start(cfg.clone(), exe()).expect("2-process cluster starts");
+    let tickets = submit_all(&fleet, &cfg, n);
+    // p2c spreads the burst across both workers, so worker 0 holds
+    // in-flight work when the kill lands
+    fleet.kill_worker(0).expect("kill reaches the child process");
+    let got = wait_all(tickets, "worker kill");
+    assert_bit_identical(&got, &want, "worker kill");
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.submitted, n as u64);
+    assert_eq!(m.stats.delivered, n as u64, "zero lost tickets");
+    assert_eq!(m.stats.failed, 0);
+    assert!(
+        m.stats.failovers >= 1,
+        "the killed worker was declared dead"
+    );
+    assert!(
+        m.stats.requeued >= 1,
+        "the killed worker held undelivered work"
+    );
+}
+
+#[test]
+fn drain_shutdown_resolves_every_admitted_ticket() {
+    // Acceptance (c): shutdown() right after admission is a drain, not
+    // an abort — every admitted ticket resolves (here: all Ok), then
+    // the workers exit orderly. Mixed-mode traffic keeps all three
+    // model kinds on the wire during the drain.
+    let n = 12;
+    let mut cfg = cluster_cfg(2, 2);
+    cfg.model_mix = "unet:1,resnet18:1,vgg16:1".into();
+    let want = baseline(&cfg, n);
+    let fleet = ClusterFleet::start(cfg.clone(), exe()).expect("2-process cluster starts");
+    let tickets = submit_all(&fleet, &cfg, n);
+    // no waiting first: the drain itself must resolve the backlog
+    let m = fleet.shutdown().unwrap();
+    let got = wait_all(tickets, "drain shutdown");
+    assert_bit_identical(&got, &want, "drain shutdown");
+    assert_eq!(m.stats.submitted, n as u64);
+    assert_eq!(m.stats.delivered, n as u64, "drain resolved every ticket");
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 0, "a drain is not a failure");
+    assert_eq!(m.stats.drained, 2);
+    // 12 requests over a 1:1:1 mix = 4 per mode, all delivered
+    for row in &m.per_model {
+        assert_eq!(row.requests_done, 4, "{}", row.model.name());
+        assert_eq!(row.requests_failed, 0, "{}", row.model.name());
+    }
+}
+
+#[test]
+fn worker_preemption_drains_in_place() {
+    // Preempting a worker process drains it: its assigned tickets
+    // resolve in place (no requeue, no re-execution), the slot parks as
+    // Drained, and the survivor carries new work.
+    let n = 12;
+    let cfg = cluster_cfg(2, 2);
+    let want = baseline(&cfg, n);
+    let fleet = ClusterFleet::start(cfg.clone(), exe()).expect("2-process cluster starts");
+    let tickets = submit_all(&fleet, &cfg, n);
+    fleet.begin_preempt(0).expect("preempt notice accepted");
+    let got = wait_all(tickets, "worker preemption");
+    assert_bit_identical(&got, &want, "worker preemption");
+    // the monitor parks the drained worker asynchronously
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.worker_states()[0] != ShardState::Drained {
+        assert!(
+            Instant::now() < deadline,
+            "worker 0 never finished its drain: {:?}",
+            fleet.worker_states()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 0, "preemption is not a failure");
+    assert_eq!(m.stats.requeued, 0, "drain resolves work in place");
+    assert_eq!(m.stats.drained, 2, "both workers parked orderly");
+    let done: usize = m.per_shard.iter().map(|s| s.requests_done).sum();
+    assert_eq!(done, n, "every request executed exactly once");
+}

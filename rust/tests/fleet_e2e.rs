@@ -215,6 +215,48 @@ fn preemption_drain_loses_nothing_and_reexecutes_nothing() {
 }
 
 #[test]
+fn preempt_file_sentinel_drains_the_named_shard() {
+    // ISSUE 10 satellite: the spot-interruption sentinel. When
+    // `serve.preempt_file` appears, the monitor reads the shard index
+    // from its contents and begins a preemption drain — the file-based
+    // analogue of a cloud instance reclaim notice. Same guarantees as
+    // an API-driven preemption: nothing lost, nothing re-executed.
+    let n = 12;
+    let mut cfg = fleet_cfg(2, 2);
+    let sentinel = std::env::temp_dir().join(format!(
+        "sf-mmcn-preempt-{}.sentinel",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&sentinel);
+    cfg.preempt_file = sentinel.display().to_string();
+    let want = baseline(&cfg, n);
+    let fleet = ShardFleet::start(cfg.clone(), &store()).unwrap();
+    let tickets = submit_all(&fleet, &cfg, n);
+    // the reclaim notice arrives mid-flight, naming shard 1
+    std::fs::write(&sentinel, "1\n").unwrap();
+    let got = wait_all(tickets, "sentinel preemption");
+    assert_bit_identical(&got, &want, "sentinel preemption");
+    // the monitor notices the file and parks the drained shard
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.shard_states()[1] != ShardState::Drained {
+        assert!(
+            Instant::now() < deadline,
+            "sentinel never drained shard 1: {:?}",
+            fleet.shard_states()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let m = fleet.shutdown().unwrap();
+    let _ = std::fs::remove_file(&sentinel);
+    assert_eq!(m.stats.delivered, n as u64);
+    assert_eq!(m.stats.failed, 0);
+    assert_eq!(m.stats.failovers, 0, "a reclaim notice is not a failure");
+    assert_eq!(m.stats.requeued, 0, "drain resolves work in place");
+    assert_eq!(m.stats.drained, 1);
+    assert_eq!(m.stats.live, 1);
+}
+
+#[test]
 fn stalled_shard_fails_over_via_missed_heartbeats() {
     // A wedged lane never drops its tickets, so the Lost fast path stays
     // silent — only the heartbeat monitor can notice. Stall shard 0 for

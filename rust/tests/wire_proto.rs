@@ -1,0 +1,373 @@
+//! Wire-protocol coverage (ISSUE 10, satellite): every message type
+//! round-trips bit-exactly through the frame codec; malformed frames
+//! (truncated, oversized, garbage) are rejected with position-carrying
+//! errors; and a real `shard-worker` process refuses a version-mismatch
+//! handshake with a `reject` frame.
+
+use std::time::Duration;
+
+use sf_mmcn::config::{ModelChoice, ServeBackend, ServeConfig};
+use sf_mmcn::coordinator::wire::{
+    write_frame, FrameReader, WireMetrics, WireModelRow, WireMsg, MAX_FRAME, WIRE_VERSION,
+};
+use sf_mmcn::coordinator::{
+    AdmissionError, AdmissionStats, ClassifyRequest, DenoiseRequest, DenoiseResult,
+    InferenceRequest,
+};
+use sf_mmcn::runtime::TensorBuf;
+
+/// Round-trip one message through a frame and compare the re-rendered
+/// payload (the codec's canonical form, so equal rendering means equal
+/// message).
+fn roundtrip_render(msg: &WireMsg) -> String {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, msg).expect("frame writes");
+    let mut r = FrameReader::new(&buf[..]);
+    let back = r.next_msg().expect("frame reads").expect("one frame");
+    assert!(
+        r.next_msg().expect("clean tail").is_none(),
+        "clean EOF after the frame"
+    );
+    back.render()
+}
+
+fn sample_metrics() -> WireMetrics {
+    WireMetrics {
+        requests_done: 42,
+        steps_done: 84,
+        dispatches: 21,
+        batch_items: 44,
+        requests_failed: 1,
+        lanes_down: 0,
+        cross_model_batches: 0,
+        cross_shape_batches: 0,
+        wall_ns: 1_234_567_890,
+        admission: AdmissionStats {
+            offered: 50,
+            admitted: 43,
+            rejected_queue_full: 5,
+            rejected_deadline: 1,
+            rejected_shutdown: 1,
+            expired: 0,
+            queue_depth: 7,
+        },
+        per_model: vec![
+            WireModelRow {
+                model: ModelChoice::Unet,
+                requests_done: 40,
+                steps_done: 80,
+                requests_failed: 1,
+            },
+            WireModelRow {
+                model: ModelChoice::Resnet18,
+                requests_done: 2,
+                steps_done: 4,
+                requests_failed: 0,
+            },
+        ],
+    }
+}
+
+#[test]
+fn every_message_type_roundtrips() {
+    let denoise = InferenceRequest::Denoise(DenoiseRequest {
+        id: 7,
+        seed: u64::MAX, // a seed only a decimal string carries exactly
+        steps: 4,
+        priority: 2,
+        deadline: Some(Duration::from_millis(250)),
+    });
+    let classify = InferenceRequest::Classify(ClassifyRequest::new(8, 99, ModelChoice::Vgg16));
+    let result_ok = DenoiseResult {
+        id: 7,
+        image: TensorBuf::new(vec![1, 2, 2], vec![0.0, -0.0, f32::MIN_POSITIVE, -1.5e-7])
+            .unwrap(),
+        latency: Duration::from_micros(456),
+        steps: 4,
+        model: ModelChoice::Unet,
+    };
+    let msgs = vec![
+        WireMsg::Hello {
+            version: WIRE_VERSION,
+            worker: 3,
+        },
+        WireMsg::HelloAck {
+            version: WIRE_VERSION,
+            worker: 3,
+            pid: 12345,
+        },
+        WireMsg::Reject {
+            reason: "tricky \"quoted\" reason\nwith newline".into(),
+        },
+        WireMsg::Submit {
+            ticket: 11,
+            req: denoise,
+        },
+        WireMsg::Submit {
+            ticket: 12,
+            req: classify,
+        },
+        WireMsg::SubmitErr {
+            ticket: 11,
+            error: AdmissionError::QueueFull,
+        },
+        WireMsg::SubmitErr {
+            ticket: 12,
+            error: AdmissionError::Deadline,
+        },
+        WireMsg::TicketResult {
+            ticket: 11,
+            result: Ok(result_ok),
+        },
+        WireMsg::TicketResult {
+            ticket: 13,
+            result: Err("lane dropped the ticket".into()),
+        },
+        WireMsg::Heartbeat {
+            seq: 999,
+            queue_depth: 5,
+        },
+        WireMsg::Drain,
+        WireMsg::MetricsReq,
+        WireMsg::Metrics {
+            last: true,
+            snapshot: sample_metrics(),
+        },
+        WireMsg::Shutdown,
+    ];
+    for msg in &msgs {
+        assert_eq!(
+            roundtrip_render(msg),
+            msg.render(),
+            "round-trip changed {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn submit_request_fields_survive_exactly() {
+    let req = InferenceRequest::Denoise(DenoiseRequest {
+        id: 3,
+        seed: 9_007_199_254_740_993, // > 2^53: breaks if sent as a JSON number
+        steps: 6,
+        priority: 1,
+        deadline: None,
+    });
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        &WireMsg::Submit {
+            ticket: 1,
+            req: req.clone(),
+        },
+    )
+    .unwrap();
+    match FrameReader::new(&buf[..]).next_msg().unwrap().unwrap() {
+        WireMsg::Submit { ticket, req: back } => {
+            assert_eq!(ticket, 1);
+            assert_eq!(back, req, "request fields round-trip exactly");
+        }
+        other => panic!("wrong frame back: {other:?}"),
+    }
+}
+
+#[test]
+fn metrics_snapshot_reinflates_to_equal_counters() {
+    let snap = sample_metrics();
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        &WireMsg::Metrics {
+            last: false,
+            snapshot: snap.clone(),
+        },
+    )
+    .unwrap();
+    match FrameReader::new(&buf[..]).next_msg().unwrap().unwrap() {
+        WireMsg::Metrics { last, snapshot } => {
+            assert!(!last);
+            assert_eq!(snapshot, snap);
+            let m = snapshot.to_metrics();
+            assert_eq!(m.requests_done, 42);
+            assert_eq!(m.admission.queue_depth, 7);
+            assert_eq!(m.per_model[ModelChoice::Unet.index()].requests_done, 40);
+            assert_eq!(m.per_model[ModelChoice::Resnet18.index()].steps_done, 4);
+        }
+        other => panic!("wrong frame back: {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_frames_carry_frame_and_byte_position() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &WireMsg::Drain).unwrap();
+    let first = buf.len();
+    write_frame(
+        &mut buf,
+        &WireMsg::Heartbeat {
+            seq: 1,
+            queue_depth: 0,
+        },
+    )
+    .unwrap();
+
+    // cut mid-header of frame 1
+    let mut r = FrameReader::new(&buf[..first + 3]);
+    assert!(matches!(r.next_msg().unwrap(), Some(WireMsg::Drain)));
+    let err = r.next_msg().unwrap_err().to_string();
+    assert!(err.contains("frame 1"), "{err}");
+    assert!(err.contains(&format!("byte {first}")), "{err}");
+    assert!(err.contains("truncated header (3 of 4 bytes)"), "{err}");
+
+    // cut mid-payload of frame 1
+    let mut r = FrameReader::new(&buf[..first + 9]);
+    r.next_msg().unwrap();
+    let err = r.next_msg().unwrap_err().to_string();
+    assert!(err.contains("frame 1"), "{err}");
+    assert!(err.contains(&format!("byte {}", first + 4)), "{err}");
+    assert!(err.contains("truncated payload"), "{err}");
+}
+
+#[test]
+fn oversized_garbage_and_non_utf8_frames_rejected() {
+    // corrupted length prefix
+    let mut buf = (MAX_FRAME + 7).to_le_bytes().to_vec();
+    buf.extend_from_slice(b"irrelevant");
+    let err = FrameReader::new(&buf[..]).next_msg().unwrap_err().to_string();
+    assert!(err.contains("oversized frame"), "{err}");
+    assert!(err.contains("frame 0 at byte 0"), "{err}");
+
+    // valid length, garbage payload
+    let payload = b"}{ definitely not json";
+    let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+    buf.extend_from_slice(payload);
+    let err = FrameReader::new(&buf[..]).next_msg().unwrap_err().to_string();
+    assert!(err.contains("bad payload"), "{err}");
+
+    // valid length, non-UTF-8 payload
+    let payload = [0xffu8, 0xfe, 0xfd, 0xfc];
+    let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+    buf.extend_from_slice(&payload);
+    let err = FrameReader::new(&buf[..]).next_msg().unwrap_err().to_string();
+    assert!(err.contains("not UTF-8"), "{err}");
+
+    // a frame is rejected without consuming it: position stays at 0
+    let mut buf = (3u32).to_le_bytes().to_vec();
+    buf.extend_from_slice(b"{}x");
+    let mut r = FrameReader::new(&buf[..]);
+    assert!(r.next_msg().is_err());
+    assert_eq!(r.frames_read(), 0);
+}
+
+#[test]
+fn unknown_types_and_wrong_admission_codes_rejected() {
+    for bad in [
+        "{\"type\":\"warp\"}",
+        "{\"type\":\"submit_err\",\"ticket\":0,\"error\":\"oom\"}",
+        "{\"type\":\"result\",\"ticket\":0}",
+        "{\"type\":\"result\",\"ticket\":0,\"ok\":{},\"err\":\"both\"}",
+        "{\"type\":\"hello\",\"version\":-1,\"worker\":0}",
+        "{\"no_type\":true}",
+    ] {
+        let mut buf = (bad.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(bad.as_bytes());
+        assert!(
+            FrameReader::new(&buf[..]).next_msg().is_err(),
+            "accepted bad payload: {bad}"
+        );
+    }
+}
+
+/// A real `shard-worker` process must answer a version-mismatch hello
+/// with a `reject` frame (and a slot-mismatch likewise), then exit —
+/// the handshake is what keeps incompatible builds from misparsing
+/// each other.
+#[cfg(unix)]
+mod handshake {
+    use super::*;
+    use std::io::Write as _;
+    use std::os::unix::net::UnixStream;
+    use std::process::{Command, Stdio};
+    use std::time::Instant;
+
+    fn worker_cfg() -> ServeConfig {
+        ServeConfig {
+            steps: 1,
+            workers: 1,
+            max_batch: 1,
+            backend: ServeBackend::Native,
+            batched: true,
+            chunk: 1,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn connect_with_retry(path: &std::path::Path) -> UnixStream {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match UnixStream::connect(path) {
+                Ok(s) => return s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        panic!("worker socket {} never came up: {e}", path.display());
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_rejects_version_and_slot_mismatch() {
+        let dir = std::env::temp_dir().join(format!("sf-mmcn-wire-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("worker.toml");
+        std::fs::write(&cfg_path, worker_cfg().to_toml()).unwrap();
+
+        for (hello, expect) in [
+            (
+                WireMsg::Hello {
+                    version: WIRE_VERSION + 1,
+                    worker: 0,
+                },
+                "version mismatch",
+            ),
+            (
+                WireMsg::Hello {
+                    version: WIRE_VERSION,
+                    worker: 5,
+                },
+                "slot mismatch",
+            ),
+        ] {
+            let socket = dir.join(format!("handshake-{expect}.sock").replace(' ', "-"));
+            let _ = std::fs::remove_file(&socket);
+            let mut child = Command::new(env!("CARGO_BIN_EXE_sf-mmcn"))
+                .arg("shard-worker")
+                .arg("--config")
+                .arg(&cfg_path)
+                .arg("--socket")
+                .arg(&socket)
+                .arg("--worker")
+                .arg("0")
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn shard-worker");
+            let mut stream = connect_with_retry(&socket);
+            write_frame(&mut stream, &hello).unwrap();
+            stream.flush().unwrap();
+            let mut reader = FrameReader::new(stream.try_clone().unwrap());
+            match reader.next_msg().expect("reject frame reads") {
+                Some(WireMsg::Reject { reason }) => {
+                    assert!(reason.contains(expect), "reason `{reason}` for {expect}");
+                }
+                other => panic!("expected a reject frame, got {other:?}"),
+            }
+            let status = child.wait().expect("worker exits after reject");
+            assert!(!status.success(), "mismatch handshake must exit nonzero");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
