@@ -28,7 +28,10 @@
 //! * every nominal cell delivers its whole workload with zero shed and
 //!   zero failures;
 //! * the 2-process burst rate sustains >= 1.5x the 1-process burst rate
-//!   (the scaling floor from the ISSUE 10 acceptance criteria);
+//!   (the scaling floor from the ISSUE 10 acceptance criteria; the
+//!   `SF_MMCN_CLUSTER_SCALING_FLOOR` env var overrides the floor for
+//!   constrained hosts — CI keeps the 1.5 default and instead retries
+//!   the whole bench once to absorb shared-runner noise);
 //! * no cell records a failover (no worker process may die under a
 //!   clean bench load).
 
@@ -286,12 +289,20 @@ mod bench {
                 .find(|c| c.scenario == "burst" && c.procs == procs)
                 .map(|c| c.req_per_s)
         };
+        // The acceptance floor is 1.5x; SF_MMCN_CLUSTER_SCALING_FLOOR
+        // lowers (or raises) it for hosts where the measurement itself
+        // is unreliable — e.g. an oversubscribed 2-core box that cannot
+        // run two worker processes concurrently at all.
+        let floor = std::env::var("SF_MMCN_CLUSTER_SCALING_FLOOR")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(1.5);
         if let (Some(r1), Some(r2)) = (burst_rate(1), burst_rate(2)) {
             let scaling = r2 / r1.max(1e-9);
-            if scaling < 1.5 {
+            if scaling < floor {
                 println!(
                     "CLUSTER GATE FAILED: 2-process aggregate {r2:.1} req/s is only \
-                     x{scaling:.2} the 1-process {r1:.1} req/s — the scaling floor is x1.5"
+                     x{scaling:.2} the 1-process {r1:.1} req/s — the scaling floor is x{floor}"
                 );
                 ok = false;
             } else {

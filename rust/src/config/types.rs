@@ -572,6 +572,25 @@ impl ServeConfig {
                  (one front door at a time; each cluster worker is a single-session process)"
             );
         }
+        // String fields travel to cluster workers via `to_toml` /
+        // `from_toml`, and that TOML subset is line-based: a newline or
+        // other control character cannot be represented, so every
+        // worker process would fail to start (or misparse its config).
+        // Reject them here instead of shipping a malformed worker.toml.
+        for (key, val) in [
+            ("artifact", &self.artifact),
+            ("fault_spec", &self.fault_spec),
+            ("model_mix", &self.model_mix),
+            ("traffic", &self.traffic),
+            ("preempt_file", &self.preempt_file),
+        ] {
+            if val.chars().any(char::is_control) {
+                bail!(
+                    "serve.{key} must not contain control characters \
+                     (newlines cannot survive the worker config file)"
+                );
+            }
+        }
         ModelMix::parse(&self.model_mix)
             .map_err(|e| anyhow::anyhow!("serve.model_mix: {e}"))?;
         if !self.traffic.trim().is_empty() {
@@ -804,6 +823,42 @@ data_reuse = false
         };
         let back = ServeConfig::from_toml(&cfg.to_toml()).unwrap();
         assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn serve_config_rejects_control_chars_in_strings() {
+        // A newline in any shipped string field would break the
+        // line-based worker.toml the cluster supervisor writes; validate
+        // must reject it up front, naming the field.
+        for (key, cfg) in [
+            (
+                "preempt_file",
+                ServeConfig {
+                    preempt_file: "/tmp/x\ny".into(),
+                    ..ServeConfig::default()
+                },
+            ),
+            (
+                "fault_spec",
+                ServeConfig {
+                    fault_spec: "kill:1:5\r".into(),
+                    ..ServeConfig::default()
+                },
+            ),
+            (
+                "artifact",
+                ServeConfig {
+                    artifact: "unet\tdenoise".into(),
+                    ..ServeConfig::default()
+                },
+            ),
+        ] {
+            let err = cfg
+                .validate()
+                .expect_err(&format!("control char in {key} must be rejected"))
+                .to_string();
+            assert!(err.contains(key), "error names `{key}`: {err}");
+        }
     }
 
     #[test]

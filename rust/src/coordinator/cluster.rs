@@ -434,10 +434,14 @@ impl ClusterFleet {
     }
 
     /// Graceful cluster shutdown: close the front door, drain every
-    /// worker (failing over any that die on the way out), collect each
-    /// worker's final metrics frame, reap the processes, and return the
-    /// merged metrics. Every admitted ticket resolves before this
-    /// returns.
+    /// worker, collect each worker's final metrics frame, reap the
+    /// processes, and return the merged metrics. Every admitted ticket
+    /// resolves before this returns: tickets already on a worker drain
+    /// in place; a ticket that cannot be placed once the drain begins
+    /// (parked front-door-side, or stripped from a worker that dies on
+    /// the way out — the surviving workers are draining too and refuse
+    /// new work) resolves with an error, the same contract as the
+    /// in-process fleet.
     pub fn shutdown(mut self) -> Result<FleetMetrics> {
         self.close();
         let mut st = self.state.lock().unwrap();
@@ -463,19 +467,21 @@ impl ClusterFleet {
     /// Close admission, start draining every live worker, and join the
     /// monitor (which exits only once every ticket has resolved and the
     /// workers were told to shut down).
+    ///
+    /// Draining goes through [`Self::start_preempt`] so each worker
+    /// turns non-routable the moment its `Drain` frame goes out. That
+    /// is what lets the monitor terminate: a draining worker answers
+    /// any late `submit` with `SubmitErr(ShuttingDown)`, so if drained
+    /// workers stayed routable, an unplaceable ticket would ping-pong
+    /// between `pump` and the refusal forever and `pending` would never
+    /// empty.
     fn close(&mut self) {
         {
             let mut st = self.state.lock().unwrap();
             st.draining = true;
             for i in 0..st.workers.len() {
                 if st.workers[i].state == ShardState::Live {
-                    let died = match st.workers[i].proc.as_mut() {
-                        Some(p) => p.send(&WireMsg::Drain).is_err(),
-                        None => false,
-                    };
-                    if died {
-                        Self::declare_dead(&mut st, i);
-                    }
+                    Self::start_preempt(&mut st, i);
                 }
             }
         }
@@ -655,11 +661,25 @@ impl ClusterFleet {
                         let req_id = p.req.id();
                         Self::deliver(st, p, Err(anyhow!("request {req_id}: {error}")));
                     }
-                    // transient (race against a fill-up or a drain):
-                    // strip the assignment; the pump re-admits
-                    _ => {
+                    // transient (race against a fill-up or a preemption
+                    // drain): strip the assignment; the pump re-admits
+                    // on a surviving live worker
+                    _ if !st.draining => {
                         st.pending[i].worker = None;
                         st.stats.requeued += 1;
+                    }
+                    // cluster-wide drain: every worker is refusing new
+                    // work, so a refusal is terminal (requeueing would
+                    // ping-pong forever and stall shutdown) — same
+                    // contract as the in-process fleet's drain
+                    _ => {
+                        let p = st.pending.swap_remove(i);
+                        let req_id = p.req.id();
+                        Self::deliver(
+                            st,
+                            p,
+                            Err(anyhow!("request {req_id}: refused during drain ({error})")),
+                        );
                     }
                 }
             }

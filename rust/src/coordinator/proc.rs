@@ -45,6 +45,15 @@ pub const SPAWN_TIMEOUT: Duration = Duration::from_secs(30);
 /// before concluding it was orphaned and exiting.
 const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Write timeout on both halves of the worker socket. A healthy peer
+/// drains its socket within milliseconds, so a frame write that blocks
+/// this long means the peer stopped reading (wedged process, SIGSTOP) —
+/// the write errors out and the sender treats the connection as dead.
+/// Without it, `ClusterFleet` frame writes (issued under the cluster
+/// state lock) could block indefinitely on a full socket buffer and
+/// freeze admission, metrics, and the heartbeat monitor itself.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// One frame (or loss) from one worker connection, tagged with the
 /// worker slot and spawn generation so the monitor can ignore stale
 /// events from a connection it already replaced.
@@ -140,6 +149,10 @@ impl WorkerProc {
             }
         };
 
+        // Writes carry a permanent timeout (see WRITE_TIMEOUT): a worker
+        // that stops reading must surface as a send error, not a front
+        // door blocked inside the state lock.
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
         // Handshake under a read timeout; the timeout is a property of
         // the shared socket description, so clear it before the reader
         // thread takes over with blocking reads.
@@ -310,6 +323,10 @@ pub fn run_worker(cfg: &ServeConfig, socket: &Path, worker: usize) -> Result<()>
         }
     };
     stream.set_nonblocking(false)?;
+    // Same write timeout as the supervisor side: a front door that
+    // stops reading turns the next frame write into an error, and the
+    // worker exits instead of blocking forever on a full socket buffer.
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
     let mut reader = FrameReader::new(stream.try_clone()?);
 

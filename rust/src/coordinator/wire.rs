@@ -12,9 +12,11 @@
 //! Field encoding follows the trace-file rules
 //! (`coordinator::traffic`): `u64` values that must survive exactly
 //! (seeds) travel as decimal strings, every numeric field is validated
-//! back into the 2^53 exact-integer window, and image tensors travel as
-//! hex-encoded little-endian `f32` bytes so a result delivered across
-//! the wire is bit-identical to one delivered in process.
+//! back into the 2^53 exact-integer window (nanosecond durations clamp
+//! to that window at render, so no sendable frame is unreceivable), and
+//! image tensors travel as hex-encoded little-endian `f32` bytes so a
+//! result delivered across the wire is bit-identical to one delivered
+//! in process.
 //!
 //! Versioning: the first frame each side sends is [`WireMsg::Hello`] /
 //! [`WireMsg::HelloAck`] carrying [`WIRE_VERSION`]; a mismatch is
@@ -186,7 +188,7 @@ impl WireMetrics {
             lanes_down: m.lanes_down as u64,
             cross_model_batches: m.cross_model_batches as u64,
             cross_shape_batches: m.cross_shape_batches as u64,
-            wall_ns: m.wall.as_nanos() as u64,
+            wall_ns: ns_u64(m.wall),
             admission: m.admission,
             per_model: m
                 .per_model
@@ -247,9 +249,19 @@ fn esc(s: &str) -> String {
     out
 }
 
+/// A duration as nanoseconds, clamped to the 2^53 exact-integer window
+/// the wire's numeric fields accept. `field_u64` rejects anything
+/// larger on receive, so an unclamped render (a configured deadline
+/// over ~104 days) would produce a frame the peer's [`FrameReader`]
+/// refuses — killing the connection and, worse, re-killing it on every
+/// respawn that re-sends the same request.
+fn ns_u64(d: Duration) -> u64 {
+    d.as_nanos().min(MAX_EXACT as u128) as u64
+}
+
 fn deadline_json(d: Option<Duration>) -> String {
     match d {
-        Some(d) => format!("{}", d.as_nanos()),
+        Some(d) => format!("{}", ns_u64(d)),
         None => "null".into(),
     }
 }
@@ -347,7 +359,7 @@ fn render_result(r: &DenoiseResult) -> String {
         r.id,
         shape,
         hex_of_f32(&r.image.data),
-        r.latency.as_nanos(),
+        ns_u64(r.latency),
         r.steps,
         r.model.name()
     )
@@ -848,6 +860,55 @@ mod tests {
             WireMsg::parse("{\"type\":\"submit_err\",\"ticket\":1,\"error\":\"oom\"}").is_err(),
             "unknown admission code rejected"
         );
+    }
+
+    #[test]
+    fn huge_nanosecond_fields_clamp_instead_of_poisoning_the_wire() {
+        // A deadline beyond the 2^53-ns exact window (~104 days) must
+        // render as a frame the receiving FrameReader accepts — an
+        // unclamped render would kill the connection on every delivery
+        // attempt, poisoning the respawn loop.
+        let msg = WireMsg::Submit {
+            ticket: 1,
+            req: InferenceRequest::Denoise(DenoiseRequest {
+                id: 7,
+                seed: 42,
+                steps: 2,
+                priority: 0,
+                deadline: Some(Duration::MAX),
+            }),
+        };
+        match roundtrip(&msg) {
+            WireMsg::Submit { ticket, req } => {
+                assert_eq!(ticket, 1);
+                let InferenceRequest::Denoise(r) = req else {
+                    panic!("wrong request kind back");
+                };
+                assert_eq!(
+                    r.deadline,
+                    Some(Duration::from_nanos(MAX_EXACT as u64)),
+                    "deadline clamps to the 2^53-ns window"
+                );
+            }
+            other => panic!("wrong message back: {other:?}"),
+        }
+        // same clamp on the result's latency field
+        let msg = WireMsg::TicketResult {
+            ticket: 2,
+            result: Ok(DenoiseResult {
+                id: 1,
+                image: TensorBuf::new(vec![1], vec![0.5f32]).unwrap(),
+                latency: Duration::MAX,
+                steps: 1,
+                model: ModelChoice::Unet,
+            }),
+        };
+        match roundtrip(&msg) {
+            WireMsg::TicketResult { result: Ok(r), .. } => {
+                assert_eq!(r.latency, Duration::from_nanos(MAX_EXACT as u64));
+            }
+            other => panic!("wrong message back: {other:?}"),
+        }
     }
 
     #[test]
